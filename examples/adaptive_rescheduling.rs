@@ -1,0 +1,75 @@
+//! Dynamic scenario walkthrough (paper §V): run one workflow under 10%
+//! parameter deviations, once following the static schedule and once with
+//! on-the-fly recomputation; then demonstrate the retrace primitive and
+//! the AOT online predictor.
+//!
+//! Run with: `cargo run --release --example adaptive_rescheduling`
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::memory_constrained_cluster;
+use memsched::scheduler::{compute_schedule, retrace, Algorithm, EvictionPolicy};
+use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
+
+fn main() -> anyhow::Result<()> {
+    let spec = WorkloadSpec { family: "methylseq".into(), size: Some(1000), input: 3, seed: 11 };
+    let wf = spec.build()?;
+    let cluster = memory_constrained_cluster();
+
+    let schedule = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+    println!(
+        "static schedule (HEFTM-MM): valid={} makespan={:.1}s",
+        schedule.valid, schedule.makespan
+    );
+    anyhow::ensure!(schedule.valid, "static schedule must be valid for this demo");
+
+    // Retrace against the *actual* parameters (what §V's monitoring would
+    // report in one shot).
+    let dev = DeviationModel::new(0.1, 99);
+    let actual_wf = dev.deviate_workflow(&wf);
+    let r = retrace::retrace(&actual_wf, &cluster, &schedule, EvictionPolicy::LargestFirst, &[]);
+    println!(
+        "retrace under actual parameters: valid={} makespan={:.1}s{}",
+        r.valid,
+        r.makespan,
+        r.failed_task.map(|t| format!(" (first violation at task {t})")).unwrap_or_default()
+    );
+
+    // Execute both runtime modes with identical per-task deviations.
+    for (label, mode) in
+        [("without recomputation", SimMode::FollowStatic), ("with recomputation", SimMode::Recompute)]
+    {
+        let out = simulate(&wf, &cluster, &schedule, &SimConfig::new(mode, dev));
+        match (out.completed, &out.failure) {
+            (true, _) => println!(
+                "{label:<24}: completed, makespan {:.1}s, {} recomputations",
+                out.makespan, out.recomputations
+            ),
+            (false, f) => println!(
+                "{label:<24}: FAILED after {} tasks ({f:?})",
+                out.started
+            ),
+        }
+    }
+
+    // Online predictor (§V): refine estimates from observed deviations.
+    match memsched::runtime::predictor::Predictor::load_default() {
+        Ok(pred) => {
+            let mut stats = memsched::runtime::predictor::DeviationStats::default();
+            // Pretend the first 50 tasks finished and were observed.
+            for v in 0..50.min(wf.num_tasks()) {
+                let est = wf.task(v);
+                let (aw, am) = dev.actual(v, est.work, est.memory);
+                stats.observe(&est.task_type, aw / est.work, am / est.memory);
+            }
+            println!("\nonline predictor corrections (type: observed -> corrected):");
+            for ty in ["bismark_align", "methylation_extract", "fastqc"] {
+                if let Some((ow, om)) = stats.mean(ty) {
+                    let (cw, cm) = pred.correct(ow, om, 100.0)?;
+                    println!("  {ty:<22} work {ow:.3} -> {cw:.3}   mem {om:.3} -> {cm:.3}");
+                }
+            }
+        }
+        Err(e) => println!("\npredictor artifact unavailable ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! End-to-end driver: exercises the full system — workload generation,
+//! trace binding, all four schedulers on both clusters, and the dynamic
+//! runtime with deviations + recomputation — and reports the paper's
+//! headline metrics side by side with the expected values.
+//!
+//! This is the run recorded in EXPERIMENTS.md. Scale via
+//! `MEMSCHED_SUITE_SCALE=smoke|quick|full` (default quick).
+//!
+//! Run with: `cargo run --release --example end_to_end`
+
+use memsched::experiments::{self, figures, SuiteScale};
+use memsched::platform::presets::{default_cluster, memory_constrained_cluster};
+use memsched::scheduler::Algorithm;
+
+fn main() -> anyhow::Result<()> {
+    let scale: SuiteScale = std::env::var("MEMSCHED_SUITE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(SuiteScale::Quick);
+    let seed = 42;
+    let t0 = std::time::Instant::now();
+
+    // ---------------------------------------------------------------- static
+    println!("### Static evaluation (suite scale {scale:?})\n");
+    let mut all_static = Vec::new();
+    for cluster in [default_cluster(), memory_constrained_cluster()] {
+        let specs = experiments::suite(scale, seed);
+        let mut results = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            eprint!("\r{} [{}/{}] {}        ", cluster.name, i + 1, specs.len(), spec.id());
+            results.extend(experiments::run_static(spec, &cluster)?);
+        }
+        eprintln!();
+        println!("-- success rates (%), cluster `{}` --", cluster.name);
+        print!("{}", figures::success_rates(&results).to_markdown());
+        println!("-- relative makespans (vs HEFT), cluster `{}` --", cluster.name);
+        print!("{}", figures::relative_makespans(&results).to_markdown());
+        println!("-- memory usage (%), cluster `{}` --", cluster.name);
+        print!("{}", figures::memory_usage(&results, false).to_markdown());
+        println!();
+        all_static.push((cluster.name.clone(), results));
+    }
+
+    // --------------------------------------------------------------- dynamic
+    println!("### Dynamic evaluation (sigma = 10%, memory-constrained cluster)\n");
+    let cluster = memory_constrained_cluster();
+    let specs: Vec<_> = experiments::suite(scale, seed)
+        .into_iter()
+        .filter(|s| s.size.is_none_or(|n| n <= 2000))
+        .collect();
+    let mut dynamic = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        eprint!("\rdynamic [{}/{}] {}        ", i + 1, specs.len(), spec.id());
+        for algo in Algorithm::all() {
+            dynamic.push(experiments::run_dynamic(spec, &cluster, algo, 0.1)?);
+        }
+    }
+    eprintln!();
+    println!("-- validity counts (§VI-C) --");
+    print!("{}", figures::dynamic_validity(&dynamic).to_markdown());
+    println!("-- makespan improvement of recomputation (%) (Fig 8) --");
+    print!("{}", figures::dynamic_improvement(&dynamic).to_markdown());
+
+    // -------------------------------------------------------------- headline
+    println!("\n### Headline checks vs paper\n");
+    let (_, default_results) = &all_static[0];
+    let (_, constrained_results) = &all_static[1];
+    let rate = |rs: &[experiments::StaticResult], algo: Algorithm| {
+        let xs: Vec<_> = rs.iter().filter(|r| r.algo == algo).collect();
+        100.0 * xs.iter().filter(|r| r.valid).count() as f64 / xs.len().max(1) as f64
+    };
+    println!("| metric | paper | measured |");
+    println!("|---|---|---|");
+    println!(
+        "| HEFT success, default cluster | 24.2% | {:.1}% |",
+        rate(default_results, Algorithm::Heft)
+    );
+    for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm] {
+        println!(
+            "| {} success, default cluster | 100% | {:.1}% |",
+            algo.label(),
+            rate(default_results, algo)
+        );
+    }
+    println!(
+        "| HEFT success, constrained | 4.8% | {:.1}% |",
+        rate(constrained_results, Algorithm::Heft)
+    );
+    println!(
+        "| HEFTM-BL success, constrained | 38% | {:.1}% |",
+        rate(constrained_results, Algorithm::HeftmBl)
+    );
+    println!(
+        "| HEFTM-BLC success, constrained | 49% | {:.1}% |",
+        rate(constrained_results, Algorithm::HeftmBlc)
+    );
+    println!(
+        "| HEFTM-MM success, constrained | 100% | {:.1}% |",
+        rate(constrained_results, Algorithm::HeftmMm)
+    );
+    let surv = |ok: usize, total: usize| 100.0 * ok as f64 / total.max(1) as f64;
+    let no_rec_ok = dynamic.iter().filter(|r| r.static_ok).count();
+    let rec_ok = dynamic.iter().filter(|r| r.recompute_ok).count();
+    let init_ok = dynamic.iter().filter(|r| r.initially_valid).count();
+    println!(
+        "| dynamic: survive w/o recompute | 11.6% (134/1160) | {:.1}% ({}/{}) |",
+        surv(no_rec_ok, dynamic.len()),
+        no_rec_ok,
+        dynamic.len()
+    );
+    println!(
+        "| dynamic: recompute keeps valid | ~100% of initial | {:.1}% ({}/{}) |",
+        surv(rec_ok, init_ok),
+        rec_ok,
+        init_ok
+    );
+    println!("\ntotal wall time: {}", memsched::bench::fmt_duration(t0.elapsed()));
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! The three-layer stack in action: the Rust coordinator driving the
+//! AOT-compiled XLA artifact (whose inner kernels are Pallas) through the
+//! PJRT CPU client, as an alternative EFT-scoring backend for the
+//! scheduler's inner loop.
+//!
+//! Requires `make artifacts`. Run with:
+//! `cargo run --release --example xla_scoring`
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::small_cluster;
+use memsched::runtime::scorer::{NativeScorer, XlaScorer};
+use memsched::scheduler::engine::EftScorer;
+use memsched::scheduler::{Algorithm, Engine, EvictionPolicy};
+
+fn main() -> anyhow::Result<()> {
+    let xla = XlaScorer::load_default().map_err(|e| {
+        anyhow::anyhow!("failed to load artifacts ({e}); run `make artifacts` first")
+    })?;
+    println!("loaded artifacts/eft_score.hlo.txt on PJRT CPU client");
+
+    let spec = WorkloadSpec { family: "atacseq".into(), size: Some(200), input: 2, seed: 5 };
+    let wf = spec.build()?;
+    let cluster = small_cluster();
+    let order = Algorithm::HeftmBl.rank_order(&wf, &cluster);
+
+    // Schedule with each scoring backend and compare.
+    let t0 = std::time::Instant::now();
+    let native_schedule = Engine::new(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst)
+        .run(&order);
+    let t_native = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let xla_schedule = Engine::new(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst)
+        .with_scorer(&xla)
+        .run(&order);
+    let t_xla = t0.elapsed();
+
+    println!("\n{:<18} {:>10} {:>14} {:>12}", "backend", "valid", "makespan(s)", "time");
+    println!(
+        "{:<18} {:>10} {:>14.2} {:>12}",
+        "native (rust)",
+        native_schedule.valid,
+        native_schedule.makespan,
+        memsched::bench::fmt_duration(t_native)
+    );
+    println!(
+        "{:<18} {:>10} {:>14.2} {:>12}",
+        "xla (PJRT)",
+        xla_schedule.valid,
+        xla_schedule.makespan,
+        memsched::bench::fmt_duration(t_xla)
+    );
+    let rel = (native_schedule.makespan - xla_schedule.makespan).abs()
+        / native_schedule.makespan.max(1e-9);
+    println!("makespan agreement: {:.4}% difference", 100.0 * rel);
+    anyhow::ensure!(rel < 0.01, "backends diverged beyond f32 tie-breaking");
+
+    // Per-call parity spot check.
+    let q = memsched::scheduler::engine::ScoreQuery {
+        proc_ready: vec![0.0, 5.0, 2.0],
+        speeds: vec![1.0, 2.0, 4.0],
+        avail_mem: vec![100.0, 50.0, 10.0],
+        parents: vec![
+            memsched::scheduler::engine::ParentInfo { finish: 3.0, data: 10.0, proc: 0 },
+            memsched::scheduler::engine::ParentInfo { finish: 4.0, data: 20.0, proc: 1 },
+        ],
+        comm: vec![vec![0.0, 1.0, 0.0], vec![2.0, 0.0, 6.0]],
+        work: 8.0,
+        memory: 30.0,
+        out_total: 5.0,
+        bandwidth: 10.0,
+    };
+    let (nft, _) = NativeScorer.score(&q);
+    let (xft, _) = xla.score(&q);
+    println!("\nper-call parity (ft): native {nft:?} vs xla {xft:?}");
+    Ok(())
+}

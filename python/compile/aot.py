@@ -1,0 +1,102 @@
+"""AOT export: lower the L2 computations to HLO *text* artifacts that the
+Rust coordinator loads via the PJRT C API.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format: jax >= 0.5 emits protos with 64-bit
+instruction ids which the xla crate's XLA (xla_extension 0.5.1) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md and gen_hlo.py.
+
+Artifacts:
+  artifacts/eft_score.hlo.txt   fused Step 2+3 scoring (Pallas kernels)
+  artifacts/predictor.hlo.txt   online resource predictor (§V)
+  artifacts/meta.json           export shapes + provenance
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.eft import PAD_PARENTS, PAD_PROCS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_eft_score() -> str:
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.eft_score).lower(
+        spec((PAD_PROCS,), f32),              # ready
+        spec((PAD_PROCS,), f32),              # speed
+        spec((PAD_PROCS,), f32),              # avail
+        spec((PAD_PARENTS,), f32),            # pft
+        spec((PAD_PARENTS,), f32),            # pc
+        spec((PAD_PARENTS, PAD_PROCS), f32),  # comm
+        spec((PAD_PARENTS, PAD_PROCS), f32),  # mask
+        spec((4,), f32),                      # scalars
+    )
+    return to_hlo_text(lowered)
+
+
+def export_predictor(seed: int) -> str:
+    weights = model.fit_predictor(seed)
+    fn = model.make_predictor_fn(weights)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((model.PREDICTOR_FEATURES,), jnp.float32)
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    # Back-compat: allow `--out <file>` to mean the eft artifact path.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    eft_text = export_eft_score()
+    eft_path = os.path.join(out_dir, "eft_score.hlo.txt")
+    with open(eft_path, "w") as f:
+        f.write(eft_text)
+    print(f"wrote {eft_path} ({len(eft_text)} chars)")
+
+    pred_text = export_predictor(args.seed)
+    pred_path = os.path.join(out_dir, "predictor.hlo.txt")
+    with open(pred_path, "w") as f:
+        f.write(pred_text)
+    print(f"wrote {pred_path} ({len(pred_text)} chars)")
+
+    meta = {
+        "pad_procs": PAD_PROCS,
+        "pad_parents": PAD_PARENTS,
+        "predictor_features": model.PREDICTOR_FEATURES,
+        "predictor_outputs": model.PREDICTOR_OUTPUTS,
+        "jax_version": jax.__version__,
+        "seed": args.seed,
+    }
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

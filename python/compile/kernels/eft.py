@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: batched earliest-finish-time (Step 3 of §IV-B).
+
+For one task `v` and all processors `j` at once:
+
+    arrival[p, j] = mask[p, j] * (max(pft[p], comm[p, j]) + pc[p] * inv_beta)
+    st[j]         = max(ready[j], max_p arrival[p, j])
+    ft[j]         = st[j] + w / speed[j]
+
+Shapes are fixed at export time: K processors (padded), P parents (padded).
+`mask[p, j] = 1` iff parent `p` exists and is *remote* to processor `j`
+(same-processor parents contribute no communication).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): this is a VPU-bound
+masked max-reduction over a (P, K) tile. The whole tile fits VMEM
+comfortably (32×128 f32 = 16 KiB), so a single grid step with the K axis
+on lanes is the natural TPU mapping. `interpret=True` everywhere: the CPU
+PJRT client cannot execute Mosaic custom-calls (see /opt/xla-example
+README); the kernel still lowers into the same HLO module the Rust
+runtime loads.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Export-time padded shapes (must match rust/src/runtime/scorer.rs).
+PAD_PROCS = 128
+PAD_PARENTS = 32
+
+
+def _eft_kernel(ready_ref, speed_ref, pft_ref, pc_ref, comm_ref, mask_ref,
+                scalars_ref, ft_ref):
+    """Pallas kernel body: one (P, K) tile, K on the lane axis."""
+    ready = ready_ref[...]            # [K]
+    speed = speed_ref[...]            # [K]
+    pft = pft_ref[...]                # [P]
+    pc = pc_ref[...]                  # [P]
+    comm = comm_ref[...]              # [P, K]
+    mask = mask_ref[...]              # [P, K]
+    w = scalars_ref[0]
+    inv_beta = scalars_ref[3]
+
+    # Channel availability: the transfer starts when both the producer has
+    # finished and the channel is free.
+    start = jnp.maximum(pft[:, None], comm)               # [P, K]
+    arrival = start + pc[:, None] * inv_beta              # [P, K]
+    # Masked max over parents: non-remote/padded entries contribute 0
+    # (arrival times are nonnegative, ready >= 0, so 0 is neutral).
+    arrival = jnp.where(mask > 0.0, arrival, 0.0)
+    st = jnp.maximum(ready, jnp.max(arrival, axis=0))     # [K]
+    ft_ref[...] = st + w / speed
+
+
+def eft_times(ready, speed, pft, pc, comm, mask, scalars):
+    """Invoke the Pallas EFT kernel (interpret mode)."""
+    k = ready.shape[0]
+    return pl.pallas_call(
+        _eft_kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,
+    )(ready, speed, pft, pc, comm, mask, scalars)
+
+
+@partial(jax.jit, static_argnames=())
+def eft_times_jit(ready, speed, pft, pc, comm, mask, scalars):
+    return eft_times(ready, speed, pft, pc, comm, mask, scalars)

@@ -1,0 +1,36 @@
+"""Layer-1 Pallas kernel: batched memory residual (Step 2 of §IV-B).
+
+For one task `v` and all processors `j`:
+
+    rem_in[j] = sum_p mask[p, j] * pc[p]        (remote input volume)
+    res[j]    = avail[j] - m_v - rem_in[j] - out_total
+
+`res[j] < 0` means placing `v` on `p_j` requires evicting pending files
+into the communication buffer (handled exactly on the Rust side).
+
+Like `eft.py`, a single-tile VPU reduction in interpret mode.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _memres_kernel(avail_ref, pc_ref, mask_ref, scalars_ref, res_ref):
+    avail = avail_ref[...]            # [K]
+    pc = pc_ref[...]                  # [P]
+    mask = mask_ref[...]              # [P, K]
+    m_v = scalars_ref[1]
+    out_total = scalars_ref[2]
+    rem_in = jnp.sum(mask * pc[:, None], axis=0)          # [K]
+    res_ref[...] = avail - m_v - rem_in - out_total
+
+
+def mem_residuals(avail, pc, mask, scalars):
+    """Invoke the Pallas memory-residual kernel (interpret mode)."""
+    k = avail.shape[0]
+    return pl.pallas_call(
+        _memres_kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,
+    )(avail, pc, mask, scalars)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Pallas kernels (the CORE correctness signal).
+
+Deliberately written in the most direct style possible — vectorized jnp
+ops with no cleverness — so that a disagreement with the kernels indicates
+a kernel bug, not an oracle bug.
+"""
+
+import jax.numpy as jnp
+
+
+def eft_times_ref(ready, speed, pft, pc, comm, mask, scalars):
+    """Reference Step-3 finish times. Same shapes as kernels.eft."""
+    w = scalars[0]
+    inv_beta = scalars[3]
+    start = jnp.maximum(pft[:, None], comm)
+    arrival = jnp.where(mask > 0.0, start + pc[:, None] * inv_beta, 0.0)
+    st = jnp.maximum(ready, jnp.max(arrival, axis=0))
+    return st + w / speed
+
+
+def mem_residuals_ref(avail, pc, mask, scalars):
+    """Reference Step-2 memory residuals. Same shapes as kernels.memres."""
+    m_v = scalars[1]
+    out_total = scalars[2]
+    rem_in = jnp.sum(mask * pc[:, None], axis=0)
+    return avail - m_v - rem_in - out_total
+
+
+def eft_score_ref(ready, speed, avail, pft, pc, comm, mask, scalars):
+    """Reference for the fused L2 computation (model.eft_score)."""
+    return (
+        eft_times_ref(ready, speed, pft, pc, comm, mask, scalars),
+        mem_residuals_ref(avail, pc, mask, scalars),
+    )

@@ -1,0 +1,21 @@
+"""AOT export tests: the HLO text artifacts must exist after lowering and
+contain a parseable ENTRY computation (the Rust loader's contract)."""
+
+from compile import aot
+
+
+def test_eft_export_produces_hlo_text():
+    text = aot.export_eft_score()
+    assert "ENTRY" in text
+    assert "f32[128]" in text  # padded processor axis appears
+    assert len(text) > 500
+
+
+def test_predictor_export_produces_hlo_text():
+    text = aot.export_predictor(seed=0)
+    assert "ENTRY" in text
+    assert "f32[" in text
+
+
+def test_exports_are_deterministic():
+    assert aot.export_predictor(seed=0) == aot.export_predictor(seed=0)

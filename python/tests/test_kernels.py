@@ -1,0 +1,124 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps input contents and (logical) shapes; logical sizes are
+padded to the export shapes exactly as the Rust runtime does, so these
+tests also pin the padding semantics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.eft import PAD_PARENTS, PAD_PROCS, eft_times
+from compile.kernels.memres import mem_residuals
+
+
+def pad_inputs(rng, k, p):
+    """Random logical (k, p) problem padded to (PAD_PROCS, PAD_PARENTS)."""
+    ready = np.zeros(PAD_PROCS, np.float32)
+    speed = np.ones(PAD_PROCS, np.float32)
+    avail = np.full(PAD_PROCS, -1e30, np.float32)
+    ready[:k] = rng.uniform(0, 100, k)
+    ready[k:] = 1e30
+    speed[:k] = rng.uniform(0.5, 32, k)
+    avail[:k] = rng.uniform(0, 64e9, k)
+
+    pft = np.zeros(PAD_PARENTS, np.float32)
+    pc = np.zeros(PAD_PARENTS, np.float32)
+    comm = np.zeros((PAD_PARENTS, PAD_PROCS), np.float32)
+    mask = np.zeros((PAD_PARENTS, PAD_PROCS), np.float32)
+    pft[:p] = rng.uniform(0, 100, p)
+    pc[:p] = rng.uniform(0, 1e9, p)
+    comm[:p, :k] = rng.uniform(0, 100, (p, k))
+    # Each parent on a random processor -> remote mask elsewhere.
+    for i in range(p):
+        proc = rng.integers(0, k)
+        mask[i, :k] = 1.0
+        mask[i, proc] = 0.0
+
+    scalars = np.array(
+        [rng.uniform(0.1, 500), rng.uniform(0, 8e9), rng.uniform(0, 4e9), 1e-9],
+        np.float32,
+    )
+    return ready, speed, avail, pft, pc, comm, mask, scalars
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=PAD_PROCS),
+    p=st.integers(min_value=0, max_value=PAD_PARENTS),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_eft_kernel_matches_ref(k, p, seed):
+    rng = np.random.default_rng(seed)
+    ready, speed, avail, pft, pc, comm, mask, scalars = pad_inputs(rng, k, p)
+    got = eft_times(ready, speed, pft, pc, comm, mask, scalars)
+    want = ref.eft_times_ref(
+        jnp.asarray(ready), jnp.asarray(speed), jnp.asarray(pft),
+        jnp.asarray(pc), jnp.asarray(comm), jnp.asarray(mask),
+        jnp.asarray(scalars),
+    )
+    np.testing.assert_allclose(np.asarray(got)[:k], np.asarray(want)[:k],
+                               rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=PAD_PROCS),
+    p=st.integers(min_value=0, max_value=PAD_PARENTS),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_memres_kernel_matches_ref(k, p, seed):
+    rng = np.random.default_rng(seed)
+    _, _, avail, _, pc, _, mask, scalars = pad_inputs(rng, k, p)
+    got = mem_residuals(avail, pc, mask, scalars)
+    want = ref.mem_residuals_ref(
+        jnp.asarray(avail), jnp.asarray(pc), jnp.asarray(mask),
+        jnp.asarray(scalars),
+    )
+    # Magnitudes reach ~1e10; f32 tolerance scaled accordingly.
+    np.testing.assert_allclose(np.asarray(got)[:k], np.asarray(want)[:k],
+                               rtol=1e-5, atol=1e4)
+
+
+def test_eft_hand_example():
+    """The exact hand-computed example from rust scorer unit tests."""
+    ready = np.zeros(PAD_PROCS, np.float32)
+    speed = np.ones(PAD_PROCS, np.float32)
+    ready[:3] = [0.0, 5.0, 2.0]
+    ready[3:] = 1e30
+    speed[:3] = [1.0, 2.0, 4.0]
+    pft = np.zeros(PAD_PARENTS, np.float32)
+    pc = np.zeros(PAD_PARENTS, np.float32)
+    comm = np.zeros((PAD_PARENTS, PAD_PROCS), np.float32)
+    mask = np.zeros((PAD_PARENTS, PAD_PROCS), np.float32)
+    pft[:2] = [3.0, 4.0]
+    pc[:2] = [10.0, 20.0]
+    comm[0, :3] = [0.0, 1.0, 0.0]
+    comm[1, :3] = [2.0, 0.0, 6.0]
+    mask[0, :3] = [0.0, 1.0, 1.0]  # parent 0 on proc 0
+    mask[1, :3] = [1.0, 0.0, 1.0]  # parent 1 on proc 1
+    scalars = np.array([8.0, 30.0, 5.0, 0.1], np.float32)
+    ft = np.asarray(eft_times(ready, speed, pft, pc, comm, mask, scalars))
+    np.testing.assert_allclose(ft[:3], [14.0, 9.0, 10.0], rtol=1e-6)
+
+
+def test_parent_on_same_proc_contributes_nothing():
+    rng = np.random.default_rng(0)
+    ready, speed, avail, pft, pc, comm, mask, scalars = pad_inputs(rng, 4, 3)
+    # Zero the mask entirely: finish time must be ready + w/speed exactly.
+    mask[:] = 0.0
+    ft = np.asarray(eft_times(ready, speed, pft, pc, comm, mask, scalars))
+    np.testing.assert_allclose(
+        ft[:4], ready[:4] + scalars[0] / speed[:4], rtol=1e-6
+    )
+
+
+def test_padded_procs_never_win():
+    rng = np.random.default_rng(1)
+    ready, speed, avail, pft, pc, comm, mask, scalars = pad_inputs(rng, 5, 2)
+    ft = np.asarray(eft_times(ready, speed, pft, pc, comm, mask, scalars))
+    assert ft[:5].max() < ft[5:].min()

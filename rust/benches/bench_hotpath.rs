@@ -1,0 +1,86 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the scheduler's inner
+//! loops, the MemDag traversal, the runtime simulator, and the native-vs-
+//! XLA scorer comparison.
+
+mod common;
+
+use memsched::bench::{black_box, Harness};
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::{default_cluster, memory_constrained_cluster};
+use memsched::scheduler::engine::{EftScorer, ParentInfo, ScoreQuery};
+use memsched::scheduler::{compute_schedule, Algorithm, Engine, EvictionPolicy};
+use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
+
+fn score_query(k: usize, parents: usize) -> ScoreQuery {
+    ScoreQuery {
+        proc_ready: (0..k).map(|j| j as f64).collect(),
+        speeds: (0..k).map(|j| 1.0 + (j % 7) as f64).collect(),
+        avail_mem: (0..k).map(|j| 1e9 + j as f64).collect(),
+        parents: (0..parents)
+            .map(|p| ParentInfo { finish: p as f64, data: 1e6 * p as f64, proc: p % k })
+            .collect(),
+        comm: (0..parents).map(|p| (0..k).map(|j| (p * j) as f64 * 0.01).collect()).collect(),
+        work: 50.0,
+        memory: 2e8,
+        out_total: 1e7,
+        bandwidth: 1e9,
+    }
+}
+
+fn main() {
+    let mut h = Harness::from_env("hotpath");
+
+    // Scheduler end-to-end on a mid-size instance (the macro hot path).
+    let spec = WorkloadSpec { family: "eager".into(), size: Some(2000), input: 3, seed: 42 };
+    let wf = spec.build().unwrap();
+    let constrained = memory_constrained_cluster();
+    let default = default_cluster();
+    for algo in [Algorithm::Heft, Algorithm::HeftmBl, Algorithm::HeftmMm] {
+        h.bench(&format!("schedule_2k_{}", algo.label()), || {
+            black_box(compute_schedule(&wf, &constrained, algo, EvictionPolicy::LargestFirst))
+        });
+    }
+
+    // Ranking components.
+    h.bench("rank_bottom_levels_2k", || {
+        black_box(memsched::scheduler::ranking::bottom_levels(&wf, &constrained))
+    });
+    h.bench("memdag_traversal_2k", || {
+        black_box(memsched::memdag::min_memory_traversal(&wf))
+    });
+
+    // Runtime simulator (dynamic mode) on the same instance.
+    let schedule = compute_schedule(&wf, &default, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+    let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.1, 7));
+    h.bench("simulate_recompute_2k", || black_box(simulate(&wf, &default, &schedule, &cfg)));
+    let cfg2 = SimConfig::new(SimMode::FollowStatic, DeviationModel::new(0.1, 7));
+    h.bench("simulate_static_2k", || black_box(simulate(&wf, &default, &schedule, &cfg2)));
+
+    // Scorer: native vs XLA artifact (per-call and schedule-integrated).
+    let q = score_query(72, 8);
+    let native = memsched::runtime::scorer::NativeScorer;
+    h.bench("scorer_native_call", || black_box(native.score(&q)));
+    match memsched::runtime::scorer::XlaScorer::load_default() {
+        Ok(xla) => {
+            h.bench("scorer_xla_call", || black_box(xla.score(&q)));
+            let spec_small =
+                WorkloadSpec { family: "chipseq".into(), size: Some(200), input: 2, seed: 42 };
+            let wf_small = spec_small.build().unwrap();
+            let order = Algorithm::HeftmBl.rank_order(&wf_small, &default);
+            h.bench("schedule_200_native_scorer", || {
+                let engine =
+                    Engine::new(&wf_small, &default, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+                black_box(engine.run(&order))
+            });
+            h.bench("schedule_200_xla_scorer", || {
+                let engine =
+                    Engine::new(&wf_small, &default, Algorithm::HeftmBl, EvictionPolicy::LargestFirst)
+                        .with_scorer(&xla);
+                black_box(engine.run(&order))
+            });
+        }
+        Err(e) => eprintln!("XLA scorer unavailable ({e}); run `make artifacts` first"),
+    }
+
+    h.finish();
+}

@@ -1,0 +1,36 @@
+//! Figures 5–7 (paper §VI-B-2): static scheduling on the
+//! **memory-constrained** cluster (Table II memories ÷ 10).
+//!
+//! Expected shape (paper): HEFT succeeds only on tiny workflows (4.8%);
+//! HEFTM-BL ≈ 38%, HEFTM-BLC ≈ 49%, HEFTM-MM = 100% — MM's memory-minimal
+//! traversal is size-insensitive, at the price of higher makespans.
+
+mod common;
+
+use memsched::experiments::figures;
+use memsched::platform::presets::memory_constrained_cluster;
+
+fn main() {
+    let scale = common::scale_from_env();
+    let cluster = memory_constrained_cluster();
+    println!(
+        "== bench_static_constrained: suite scale {scale:?}, cluster `{}` ==",
+        cluster.name
+    );
+    let t0 = std::time::Instant::now();
+    let results = common::static_suite(scale, &cluster);
+    println!(
+        "ran {} schedules in {}\n",
+        results.len(),
+        memsched::bench::fmt_duration(t0.elapsed())
+    );
+
+    println!("-- Fig 5: success rates (%) by size group (higher is better) --");
+    print!("{}", figures::success_rates(&results).to_markdown());
+    println!();
+    println!("-- Fig 6: makespan normalized by HEFT (smaller is better) --");
+    print!("{}", figures::relative_makespans(&results).to_markdown());
+    println!();
+    println!("-- Fig 7: memory usage (%), all schedules --");
+    print!("{}", figures::memory_usage(&results, false).to_markdown());
+}

@@ -1,0 +1,40 @@
+//! Figures 1–4 (paper §VI-B-1): static scheduling on the **default**
+//! cluster — success rates, relative makespans, and memory usage.
+//!
+//! Expected shape (paper): HEFT schedules only small workflows (24.2%
+//! success overall; nothing above ~4 000 tasks), the HEFTM heuristics
+//! schedule everything; HEFTM-BL/BLC makespans within ~13–30% of HEFT's
+//! (invalid, over-optimistic) ones, HEFTM-MM worse but with a far smaller
+//! memory footprint.
+//!
+//! `MEMSCHED_SUITE_SCALE=smoke|quick|full` selects the workload sweep.
+
+mod common;
+
+use memsched::experiments::figures;
+use memsched::platform::presets::default_cluster;
+
+fn main() {
+    let scale = common::scale_from_env();
+    let cluster = default_cluster();
+    println!("== bench_static_default: suite scale {scale:?}, cluster `{}` ==", cluster.name);
+    let t0 = std::time::Instant::now();
+    let results = common::static_suite(scale, &cluster);
+    println!(
+        "ran {} schedules in {}\n",
+        results.len(),
+        memsched::bench::fmt_duration(t0.elapsed())
+    );
+
+    println!("-- Fig 1: success rates (%) by size group (higher is better) --");
+    print!("{}", figures::success_rates(&results).to_markdown());
+    println!();
+    println!("-- Fig 2: makespan normalized by HEFT (smaller is better) --");
+    print!("{}", figures::relative_makespans(&results).to_markdown());
+    println!();
+    println!("-- Fig 3: memory usage (%), all schedules incl. invalid HEFT --");
+    print!("{}", figures::memory_usage(&results, false).to_markdown());
+    println!();
+    println!("-- Fig 4: memory usage (%), valid schedules only --");
+    print!("{}", figures::memory_usage(&results, true).to_markdown());
+}

@@ -1,0 +1,48 @@
+//! Shared plumbing for the figure benches.
+#![allow(dead_code)] // each bench binary uses a subset
+
+use memsched::experiments::{self, DynamicResult, StaticResult, SuiteScale};
+use memsched::platform::Cluster;
+use memsched::scheduler::Algorithm;
+
+/// Suite scale from `MEMSCHED_SUITE_SCALE` (smoke|quick|full), default quick.
+pub fn scale_from_env() -> SuiteScale {
+    std::env::var("MEMSCHED_SUITE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(SuiteScale::Quick)
+}
+
+pub const SEED: u64 = 42;
+
+/// Run the static suite on a cluster, with progress on stderr.
+pub fn static_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<StaticResult> {
+    let specs = experiments::suite(scale, SEED);
+    let mut out = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        eprint!("\r[{}/{}] {}          ", i + 1, specs.len(), spec.id());
+        out.extend(experiments::run_static(spec, cluster).expect("suite workload builds"));
+    }
+    eprintln!();
+    out
+}
+
+/// Run the dynamic suite (≤ 2000 tasks, σ = 10%) on a cluster.
+pub fn dynamic_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<DynamicResult> {
+    let specs: Vec<_> = experiments::suite(scale, SEED)
+        .into_iter()
+        .filter(|s| s.size.is_none_or(|n| n <= 2000))
+        .collect();
+    let mut out = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        eprint!("\r[{}/{}] {}          ", i + 1, specs.len(), spec.id());
+        for algo in Algorithm::all() {
+            out.push(
+                experiments::run_dynamic(spec, cluster, algo, 0.1)
+                    .expect("suite workload builds"),
+            );
+        }
+    }
+    eprintln!();
+    out
+}

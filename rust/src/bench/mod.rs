@@ -1,0 +1,210 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is
+//! unavailable offline).
+//!
+//! Usage from a `harness = false` bench binary:
+//!
+//! ```no_run
+//! use memsched::bench::Harness;
+//! let mut h = Harness::from_env("my_bench");
+//! h.bench("fast_thing", || { /* measured work */ });
+//! h.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then sampled until both a minimum sample
+//! count and a minimum measuring time are reached. Reported statistics:
+//! mean ± stddev, median, min/max. `MEMSCHED_BENCH_FAST=1` shrinks the
+//! budget (used by `cargo test`-adjacent smoke runs).
+
+use std::time::{Duration, Instant};
+
+/// Benchmark statistics for one target.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut xs: Vec<f64>) -> Stats {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len().max(1);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let median = xs.get(n / 2).copied().unwrap_or(mean);
+        Stats {
+            name: name.to_string(),
+            samples: xs.len(),
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            median: Duration::from_secs_f64(median),
+            min: Duration::from_secs_f64(xs.first().copied().unwrap_or(0.0)),
+            max: Duration::from_secs_f64(xs.last().copied().unwrap_or(0.0)),
+        }
+    }
+}
+
+/// Pretty-print a duration with an adaptive unit.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Bench harness: collects targets, prints a report, optionally filters by
+/// the first CLI argument (like `cargo bench -- <filter>`).
+pub struct Harness {
+    suite: String,
+    filter: Option<String>,
+    min_samples: usize,
+    min_time: Duration,
+    warmup: Duration,
+    results: Vec<Stats>,
+}
+
+impl Harness {
+    pub fn new(suite: &str) -> Harness {
+        let fast = std::env::var("MEMSCHED_BENCH_FAST").ok().is_some_and(|v| v != "0");
+        Harness {
+            suite: suite.to_string(),
+            filter: None,
+            min_samples: if fast { 3 } else { 10 },
+            min_time: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
+            warmup: if fast { Duration::from_millis(10) } else { Duration::from_millis(100) },
+            results: Vec::new(),
+        }
+    }
+
+    /// Construct and pick up a name filter from `argv[1]` (skipping the
+    /// `--bench` flag cargo passes to bench binaries).
+    pub fn from_env(suite: &str) -> Harness {
+        let mut h = Harness::new(suite);
+        h.filter = std::env::args().skip(1).find(|a| a != "--bench" && !a.starts_with("--"));
+        println!("== bench suite: {suite} ==");
+        h
+    }
+
+    /// Override sampling budget (for long end-to-end targets).
+    pub fn budget(&mut self, min_samples: usize, min_time: Duration) -> &mut Self {
+        self.min_samples = min_samples;
+        self.min_time = min_time;
+        self
+    }
+
+    fn matches(&self, name: &str) -> bool {
+        self.filter.as_deref().is_none_or(|f| name.contains(f))
+    }
+
+    /// Measure a closure. The closure's return value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Option<Stats> {
+        if !self.matches(name) {
+            return None;
+        }
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Sampling.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_samples || start.elapsed() < self.min_time {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let stats = Stats::from_samples(name, samples);
+        println!(
+            "{:<44} {:>12} ± {:>10}  (median {:>12}, n={})",
+            stats.name,
+            fmt_duration(stats.mean),
+            fmt_duration(stats.stddev),
+            fmt_duration(stats.median),
+            stats.samples
+        );
+        self.results.push(stats.clone());
+        Some(stats)
+    }
+
+    /// Run a target once (for throughput-style end-to-end tables that do
+    /// their own reporting); still honors the filter.
+    pub fn once<F: FnOnce()>(&mut self, name: &str, f: F) {
+        if !self.matches(name) {
+            return;
+        }
+        println!("-- {name} --");
+        let t0 = Instant::now();
+        f();
+        println!("-- {name}: {} --", fmt_duration(t0.elapsed()));
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Print the closing banner.
+    pub fn finish(&self) {
+        println!("== {}: {} target(s) measured ==", self.suite, self.results.len());
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("MEMSCHED_BENCH_FAST", "1");
+        let mut h = Harness::new("test");
+        let s = h
+            .bench("spin", || {
+                let mut acc = 0u64;
+                for i in 0..1000 {
+                    acc = acc.wrapping_add(i);
+                }
+                acc
+            })
+            .unwrap();
+        assert!(s.samples >= 3);
+        assert!(s.mean > Duration::ZERO);
+        assert!(s.min <= s.median && s.median <= s.max);
+        h.finish();
+    }
+
+    #[test]
+    fn filter_skips() {
+        std::env::set_var("MEMSCHED_BENCH_FAST", "1");
+        let mut h = Harness::new("test");
+        h.filter = Some("match_me".to_string());
+        assert!(h.bench("other", || 1).is_none());
+        assert!(h.bench("match_me_exactly", || 1).is_some());
+        assert_eq!(h.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7.000 µs");
+        assert!(fmt_duration(Duration::from_nanos(3)).ends_with("ns"));
+    }
+}

@@ -1,0 +1,204 @@
+//! Minimal command-line argument parser (no external crates available in
+//! this offline environment).
+//!
+//! Model: `program <subcommand> [--key value]... [--flag]...`. Parsed
+//! eagerly into an [`Args`] map; typed accessors consume entries so that
+//! [`Args::finish`] can reject unknown/unused options with a helpful error.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, and positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub program: String,
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, Vec<String>>,
+    positionals: Vec<String>,
+    used: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (first item = program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut it = items.into_iter();
+        let program = it.next().unwrap_or_else(|| "memsched".to_string());
+        let mut args = Args { program, ..Default::default() };
+        let mut rest: Vec<String> = it.collect();
+        rest.reverse(); // treat as stack
+        while let Some(item) = rest.pop() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    while let Some(p) = rest.pop() {
+                        args.positionals.push(p);
+                    }
+                    break;
+                }
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let value = match inline_val {
+                    Some(v) => Some(v),
+                    None => {
+                        // Consume the next item as a value unless it looks
+                        // like another option.
+                        match rest.last() {
+                            Some(next) if !next.starts_with("--") => rest.pop(),
+                            _ => None,
+                        }
+                    }
+                };
+                args.options.entry(key).or_default().push(value.unwrap_or_default());
+            } else if args.subcommand.is_none() && args.positionals.is_empty() {
+                args.subcommand = Some(item);
+            } else {
+                args.positionals.push(item);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Result<Args> {
+        Args::parse_from(std::env::args())
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        self.used.insert(key.to_string());
+        self.options.get(key).and_then(|v| v.last().cloned())
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&mut self, key: &str) -> Option<String> {
+        self.take(key).filter(|s| !s.is_empty())
+    }
+
+    /// Required string option.
+    pub fn req_str(&mut self, key: &str) -> Result<String> {
+        self.opt_str(key).ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    /// Boolean flag (present → true). `--key=false` is honored.
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.used.insert(key.to_string());
+        match self.options.get(key).and_then(|v| v.last()) {
+            Some(v) if v == "false" || v == "0" => false,
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    /// Optional typed option.
+    pub fn opt<T: std::str::FromStr>(&mut self, key: &str) -> Result<Option<T>> {
+        match self.opt_str(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow!("invalid value `{s}` for --{key}")),
+        }
+    }
+
+    /// Typed option with a default.
+    pub fn opt_or<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T> {
+        Ok(self.opt(key)?.unwrap_or(default))
+    }
+
+    /// Required typed option.
+    pub fn req<T: std::str::FromStr>(&mut self, key: &str) -> Result<T> {
+        self.opt(key)?.ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    /// All values provided for a repeatable option.
+    pub fn multi(&mut self, key: &str) -> Vec<String> {
+        self.used.insert(key.to_string());
+        self.options.get(key).cloned().unwrap_or_default()
+    }
+
+    /// Comma-separated list option (`--sizes 200,1000,2000`).
+    pub fn list(&mut self, key: &str) -> Vec<String> {
+        self.opt_str(key)
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Error on any option never consumed by an accessor (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let unknown: Vec<&String> =
+            self.options.keys().filter(|k| !self.used.contains(*k)).collect();
+        if !unknown.is_empty() {
+            bail!(
+                "unknown option(s): {}",
+                unknown.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse_from(items.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let mut a = parse(&["prog", "schedule", "--algo", "heftm-bl", "--seed", "42"]);
+        assert_eq!(a.subcommand.as_deref(), Some("schedule"));
+        assert_eq!(a.req_str("algo").unwrap(), "heftm-bl");
+        assert_eq!(a.req::<u64>("seed").unwrap(), 42);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let mut a = parse(&["prog", "run", "--tasks=100", "--verbose", "--quiet=false"]);
+        assert_eq!(a.req::<usize>("tasks").unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let mut a = parse(&["prog", "x"]);
+        assert_eq!(a.opt_or("n", 7usize).unwrap(), 7);
+        assert!(a.req_str("missing").is_err());
+        assert!(a.opt::<usize>("absent").unwrap().is_none());
+    }
+
+    #[test]
+    fn invalid_typed_value() {
+        let mut a = parse(&["prog", "x", "--n", "abc"]);
+        assert!(a.req::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let mut a = parse(&["prog", "x", "--oops", "1", "--fine", "2"]);
+        let _ = a.opt_str("fine");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn list_and_multi() {
+        let mut a = parse(&["prog", "x", "--sizes", "200, 1000,2000", "--wf", "a", "--wf", "b"]);
+        assert_eq!(a.list("sizes"), vec!["200", "1000", "2000"]);
+        assert_eq!(a.multi("wf"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn positionals_and_terminator() {
+        let a = parse(&["prog", "cmd", "p1", "--k", "v", "--", "--not-an-option"]);
+        assert_eq!(a.positionals(), &["p1".to_string(), "--not-an-option".to_string()]);
+    }
+}

@@ -1,0 +1,236 @@
+//! Figure/table builders (§VI): aggregate experiment results into exactly
+//! the rows/series the paper reports. Shared by the bench harnesses and
+//! the `memsched experiment` CLI.
+
+use super::{DynamicResult, StaticResult};
+use crate::metrics::{cell, GroupedStat, SuccessRate};
+use crate::scheduler::Algorithm;
+use crate::ser::csv::CsvWriter;
+use crate::workflow::SizeGroup;
+
+fn algo_labels() -> [&'static str; 4] {
+    [
+        Algorithm::Heft.label(),
+        Algorithm::HeftmBl.label(),
+        Algorithm::HeftmBlc.label(),
+        Algorithm::HeftmMm.label(),
+    ]
+}
+
+/// Figs 1 / 5: success rate (%) by size group and algorithm.
+pub fn success_rates(results: &[StaticResult]) -> CsvWriter {
+    let mut sr = SuccessRate::default();
+    for r in results {
+        sr.add(r.group, r.algo.label(), r.valid);
+    }
+    let mut w = CsvWriter::new(vec!["algorithm", "tiny", "small", "middle", "big", "overall"]);
+    for label in algo_labels() {
+        let mut row = vec![label.to_string()];
+        for g in SizeGroup::all() {
+            row.push(cell(sr.rate(g, label)));
+        }
+        row.push(cell(sr.overall(label)));
+        w.row(row);
+    }
+    w
+}
+
+/// Figs 2 / 6: mean makespan normalized by HEFT's, by size group.
+/// (HEFT's own schedules are often invalid; the paper still normalizes by
+/// them as an optimistic lower bound.)
+pub fn relative_makespans(results: &[StaticResult]) -> CsvWriter {
+    let mut g = GroupedStat::default();
+    for r in results {
+        if r.algo != Algorithm::Heft && r.heft_makespan > 0.0 && r.makespan.is_finite() {
+            g.add(r.group, r.algo.label(), r.makespan / r.heft_makespan);
+        }
+    }
+    let mut w = CsvWriter::new(vec!["algorithm", "tiny", "small", "middle", "big"]);
+    for label in &algo_labels()[1..] {
+        let mut row = vec![label.to_string()];
+        for grp in SizeGroup::all() {
+            row.push(match g.mean(grp, label) {
+                Some(x) => format!("{x:.3}"),
+                None => "-".into(),
+            });
+        }
+        w.row(row);
+    }
+    w
+}
+
+/// Figs 3 / 4 / 7: mean peak memory usage (%) by size group; optionally
+/// restricted to valid schedules (Fig 4).
+pub fn memory_usage(results: &[StaticResult], valid_only: bool) -> CsvWriter {
+    let mut g = GroupedStat::default();
+    for r in results {
+        if !valid_only || r.valid {
+            g.add(r.group, r.algo.label(), 100.0 * r.mem_usage);
+        }
+    }
+    let mut w = CsvWriter::new(vec!["algorithm", "tiny", "small", "middle", "big"]);
+    for label in algo_labels() {
+        let mut row = vec![label.to_string()];
+        for grp in SizeGroup::all() {
+            row.push(cell(g.mean(grp, label)));
+        }
+        w.row(row);
+    }
+    w
+}
+
+/// Fig 9: mean scheduler running time (s) per algorithm and instance size.
+pub fn heuristic_runtimes(results: &[StaticResult]) -> CsvWriter {
+    use std::collections::BTreeMap;
+    let mut by: BTreeMap<(usize, &'static str), Vec<f64>> = BTreeMap::new();
+    let mut sizes: Vec<usize> = Vec::new();
+    for r in results {
+        by.entry((r.tasks, r.algo.label())).or_default().push(r.sched_seconds);
+        if !sizes.contains(&r.tasks) {
+            sizes.push(r.tasks);
+        }
+    }
+    sizes.sort_unstable();
+    let mut w = CsvWriter::new(vec!["tasks", "HEFT", "HEFTM-BL", "HEFTM-BLC", "HEFTM-MM"]);
+    for n in sizes {
+        let mut row = vec![n.to_string()];
+        for label in algo_labels() {
+            let val = by.get(&(n, label)).map(|xs| xs.iter().sum::<f64>() / xs.len() as f64);
+            row.push(match val {
+                Some(x) => format!("{x:.4}"),
+                None => "-".into(),
+            });
+        }
+        w.row(row);
+    }
+    w
+}
+
+/// §VI-C validity counts: initial / with recomputation / without.
+pub fn dynamic_validity(results: &[DynamicResult]) -> CsvWriter {
+    let mut w = CsvWriter::new(vec![
+        "algorithm",
+        "experiments",
+        "valid_initial",
+        "valid_with_recompute",
+        "valid_without_recompute",
+        "mean_recomputations",
+    ]);
+    for algo in Algorithm::all() {
+        let rs: Vec<&DynamicResult> = results.iter().filter(|r| r.algo == algo).collect();
+        if rs.is_empty() {
+            continue;
+        }
+        let init = rs.iter().filter(|r| r.initially_valid).count();
+        let rec = rs.iter().filter(|r| r.recompute_ok).count();
+        let sta = rs.iter().filter(|r| r.static_ok).count();
+        let mean_rc = rs.iter().map(|r| r.recomputations as f64).sum::<f64>() / rs.len() as f64;
+        w.row(vec![
+            algo.label().to_string(),
+            rs.len().to_string(),
+            init.to_string(),
+            rec.to_string(),
+            sta.to_string(),
+            format!("{mean_rc:.1}"),
+        ]);
+    }
+    w
+}
+
+/// Fig 8: self-relative makespan improvement (%) of recomputation vs no
+/// recomputation, by size group (pairs where both executions completed).
+pub fn dynamic_improvement(results: &[DynamicResult]) -> CsvWriter {
+    let mut g = GroupedStat::default();
+    for r in results {
+        if let Some(imp) = r.improvement() {
+            g.add(r.group, r.algo.label(), imp);
+        }
+    }
+    let mut w = CsvWriter::new(vec!["algorithm", "tiny", "small", "middle", "big"]);
+    for label in algo_labels() {
+        let mut row = vec![label.to_string()];
+        for grp in SizeGroup::all() {
+            row.push(cell(g.mean(grp, label)));
+        }
+        w.row(row);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn static_result(
+        group: SizeGroup,
+        algo: Algorithm,
+        valid: bool,
+        makespan: f64,
+    ) -> StaticResult {
+        StaticResult {
+            spec_id: "x".into(),
+            group,
+            tasks: 100,
+            algo,
+            valid,
+            makespan,
+            mem_usage: 0.5,
+            heft_makespan: 10.0,
+            sched_seconds: 0.01,
+        }
+    }
+
+    #[test]
+    fn success_rate_table_shape() {
+        let rs = vec![
+            static_result(SizeGroup::Tiny, Algorithm::Heft, true, 10.0),
+            static_result(SizeGroup::Tiny, Algorithm::Heft, false, 10.0),
+            static_result(SizeGroup::Tiny, Algorithm::HeftmBl, true, 12.0),
+        ];
+        let t = success_rates(&rs);
+        let csv = t.to_csv();
+        assert!(csv.contains("HEFT,50.0"));
+        assert!(csv.contains("HEFTM-BL,100.0"));
+        assert_eq!(t.len(), 4); // one row per algorithm
+    }
+
+    #[test]
+    fn relative_makespan_normalized() {
+        let rs = vec![
+            static_result(SizeGroup::Small, Algorithm::Heft, false, 10.0),
+            static_result(SizeGroup::Small, Algorithm::HeftmBl, true, 12.0),
+        ];
+        let t = relative_makespans(&rs);
+        assert!(t.to_csv().contains("HEFTM-BL,-,1.200"));
+    }
+
+    #[test]
+    fn memory_usage_valid_only_filters() {
+        let mut bad = static_result(SizeGroup::Tiny, Algorithm::Heft, false, 1.0);
+        bad.mem_usage = 2.0; // 200%
+        let ok = static_result(SizeGroup::Tiny, Algorithm::HeftmBl, true, 1.0);
+        let all = memory_usage(&[bad.clone(), ok.clone()], false);
+        assert!(all.to_csv().contains("HEFT,200.0"));
+        let valid = memory_usage(&[bad, ok], true);
+        assert!(valid.to_csv().contains("HEFT,-"));
+    }
+
+    #[test]
+    fn dynamic_tables() {
+        let r = DynamicResult {
+            spec_id: "x".into(),
+            group: SizeGroup::Tiny,
+            algo: Algorithm::HeftmMm,
+            initially_valid: true,
+            recompute_ok: true,
+            recompute_makespan: 80.0,
+            recomputations: 3,
+            static_ok: true,
+            static_makespan: 100.0,
+        };
+        let v = dynamic_validity(&[r.clone()]);
+        assert!(v.to_csv().contains("HEFTM-MM,1,1,1,1,3.0"));
+        let imp = dynamic_improvement(&[r]);
+        assert!(imp.to_csv().contains("HEFTM-MM,20.0"));
+    }
+}

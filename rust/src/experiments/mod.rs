@@ -1,0 +1,300 @@
+//! Experiment harness (§VI): builds the paper's workload suite and runs
+//! the static and dynamic evaluations whose aggregates regenerate every
+//! figure (see DESIGN.md's per-experiment index).
+//!
+//! Suite (§VI-A-1): the five real-workflow models at native (tiny) size
+//! plus size-scaled variants of the four scalable families, each bound
+//! with historical weights at five input sizes. The full paper sweep
+//! (up to 30 000 tasks) is behind [`SuiteScale::Full`]; the default
+//! [`SuiteScale::Quick`] covers all four size groups with a budget that
+//! fits CI.
+
+pub mod figures;
+
+use crate::generator::{self, models};
+use crate::platform::Cluster;
+use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy, Schedule};
+use crate::simulator::{simulate, DeviationModel, SimConfig, SimMode, SimOutcome};
+use crate::traces::{self, HistoricalData, TraceConfig};
+use crate::workflow::{SizeGroup, Workflow};
+
+/// How large a suite to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SuiteScale {
+    /// Sizes {200, 1k, 2k, 4k, 10k, 20k}, 2 input sizes: every size group
+    /// populated, minutes of runtime.
+    Quick,
+    /// Tiny-only (unit/integration tests): native workflows, 2 inputs.
+    Smoke,
+    /// The paper's full sweep: 11 sizes × 5 inputs (tens of minutes).
+    Full,
+}
+
+impl SuiteScale {
+    pub fn sizes(self) -> Vec<usize> {
+        match self {
+            SuiteScale::Smoke => vec![],
+            SuiteScale::Quick => vec![200, 1000, 2000, 4000, 10000, 20000],
+            SuiteScale::Full => models::PAPER_SIZES.to_vec(),
+        }
+    }
+
+    pub fn inputs(self) -> Vec<usize> {
+        match self {
+            SuiteScale::Smoke | SuiteScale::Quick => vec![2, 4],
+            SuiteScale::Full => vec![0, 1, 2, 3, 4],
+        }
+    }
+}
+
+impl std::str::FromStr for SuiteScale {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "smoke" => Ok(SuiteScale::Smoke),
+            "quick" => Ok(SuiteScale::Quick),
+            "full" => Ok(SuiteScale::Full),
+            other => anyhow::bail!("unknown suite scale `{other}`"),
+        }
+    }
+}
+
+/// One workload instance of the suite.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Family (model workflow name).
+    pub family: String,
+    /// Target size; `None` = the native (tiny) expansion.
+    pub size: Option<usize>,
+    /// Input-size index (0..5).
+    pub input: usize,
+    /// Seed for generator + trace synthesis.
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn id(&self) -> String {
+        match self.size {
+            Some(s) => format!("{}_{s}_in{}", self.family, self.input),
+            None => format!("{}_native_in{}", self.family, self.input),
+        }
+    }
+
+    /// Materialize: generate the graph and bind trace weights.
+    pub fn build(&self) -> anyhow::Result<Workflow> {
+        let model = models::by_name(&self.family)
+            .ok_or_else(|| anyhow::anyhow!("unknown model `{}`", self.family))?;
+        let graph = match self.size {
+            Some(s) => generator::scale_to(&model, s, self.seed)?,
+            None => generator::expand(&model, 12)?,
+        };
+        let types = traces::task_types(&graph);
+        // Per-family trace tables: same types → same table across sizes.
+        let data = HistoricalData::synthesize(
+            &types,
+            &TraceConfig::default(),
+            self.seed ^ fxhash(&self.family),
+        );
+        Ok(traces::bind_weights(&graph, &data, self.input))
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+    })
+}
+
+/// The workload suite at the given scale.
+pub fn suite(scale: SuiteScale, seed: u64) -> Vec<WorkloadSpec> {
+    let mut specs = Vec::new();
+    // Native (tiny) instances: all five models.
+    for model in models::all_models() {
+        for &input in &scale.inputs() {
+            specs.push(WorkloadSpec { family: model.name.clone(), size: None, input, seed });
+        }
+    }
+    // Size-scaled instances: four scalable families.
+    for model in models::scalable_models() {
+        for &size in &scale.sizes() {
+            for &input in &scale.inputs() {
+                specs.push(WorkloadSpec {
+                    family: model.name.clone(),
+                    size: Some(size),
+                    input,
+                    seed: seed ^ (size as u64),
+                });
+            }
+        }
+    }
+    specs
+}
+
+/// Result of one static scheduling run.
+#[derive(Debug, Clone)]
+pub struct StaticResult {
+    pub spec_id: String,
+    pub group: SizeGroup,
+    /// Actual number of tasks in the instance.
+    pub tasks: usize,
+    pub algo: Algorithm,
+    pub valid: bool,
+    pub makespan: f64,
+    pub mem_usage: f64,
+    /// HEFT's makespan on the same instance (for Figs 2/6 normalization).
+    pub heft_makespan: f64,
+    /// Scheduler wall time, seconds (Fig 9).
+    pub sched_seconds: f64,
+}
+
+/// Run the static evaluation of one workload against all four algorithms.
+pub fn run_static(spec: &WorkloadSpec, cluster: &Cluster) -> anyhow::Result<Vec<StaticResult>> {
+    let wf = spec.build()?;
+    let group = SizeGroup::of(wf.num_tasks());
+    let mut results = Vec::with_capacity(4);
+    let mut heft_makespan = f64::NAN;
+    for algo in Algorithm::all() {
+        let t0 = std::time::Instant::now();
+        let s = compute_schedule(&wf, cluster, algo, EvictionPolicy::LargestFirst);
+        let dt = t0.elapsed().as_secs_f64();
+        if algo == Algorithm::Heft {
+            heft_makespan = s.makespan;
+        }
+        results.push(StaticResult {
+            spec_id: spec.id(),
+            group,
+            tasks: wf.num_tasks(),
+            algo,
+            valid: s.valid,
+            makespan: s.makespan,
+            mem_usage: s.mean_mem_usage(),
+            heft_makespan,
+            sched_seconds: dt,
+        });
+    }
+    Ok(results)
+}
+
+/// Result of one dynamic experiment (one workload × one algorithm).
+#[derive(Debug, Clone)]
+pub struct DynamicResult {
+    pub spec_id: String,
+    pub group: SizeGroup,
+    pub algo: Algorithm,
+    /// Static schedule was valid to begin with.
+    pub initially_valid: bool,
+    /// Execution with recomputation completed.
+    pub recompute_ok: bool,
+    pub recompute_makespan: f64,
+    pub recomputations: usize,
+    /// Execution without recomputation completed.
+    pub static_ok: bool,
+    pub static_makespan: f64,
+}
+
+impl DynamicResult {
+    /// Fig 8 metric: makespan improvement (%) of recomputation vs not,
+    /// where both executions completed.
+    pub fn improvement(&self) -> Option<f64> {
+        if self.recompute_ok && self.static_ok && self.static_makespan > 0.0 {
+            Some(100.0 * (self.static_makespan - self.recompute_makespan) / self.static_makespan)
+        } else {
+            None
+        }
+    }
+}
+
+/// Run the dynamic evaluation (paper §VI-C): both execution modes under
+/// the 10% deviation model.
+pub fn run_dynamic(
+    spec: &WorkloadSpec,
+    cluster: &Cluster,
+    algo: Algorithm,
+    sigma: f64,
+) -> anyhow::Result<DynamicResult> {
+    let wf = spec.build()?;
+    let group = SizeGroup::of(wf.num_tasks());
+    let schedule: Schedule = compute_schedule(&wf, cluster, algo, EvictionPolicy::LargestFirst);
+    let dev = DeviationModel::new(sigma, spec.seed ^ 0xdeu64);
+    let (rec, stat): (SimOutcome, SimOutcome) = if schedule.valid {
+        (
+            simulate(&wf, cluster, &schedule, &SimConfig::new(SimMode::Recompute, dev)),
+            simulate(&wf, cluster, &schedule, &SimConfig::new(SimMode::FollowStatic, dev)),
+        )
+    } else {
+        // Invalid initial schedule: executions are not attempted.
+        let nan = SimOutcome {
+            completed: false,
+            makespan: f64::NAN,
+            failure: None,
+            recomputations: 0,
+            started: 0,
+            finish_times: vec![],
+        };
+        (nan.clone(), nan)
+    };
+    Ok(DynamicResult {
+        spec_id: spec.id(),
+        group,
+        algo,
+        initially_valid: schedule.valid,
+        recompute_ok: rec.completed,
+        recompute_makespan: rec.makespan,
+        recomputations: rec.recomputations,
+        static_ok: stat.completed,
+        static_makespan: stat.makespan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets;
+
+    #[test]
+    fn suite_composition() {
+        let smoke = suite(SuiteScale::Smoke, 1);
+        // 5 models × 2 inputs, no scaled sizes.
+        assert_eq!(smoke.len(), 10);
+        let quick = suite(SuiteScale::Quick, 1);
+        // 10 native + 4 families × 6 sizes × 2 inputs.
+        assert_eq!(quick.len(), 10 + 4 * 6 * 2);
+        let full = suite(SuiteScale::Full, 1);
+        // 25 native + 4 × 11 × 5 = 245 (the paper's suite scale).
+        assert_eq!(full.len(), 25 + 220);
+    }
+
+    #[test]
+    fn spec_build_is_deterministic() {
+        let spec = WorkloadSpec { family: "eager".into(), size: Some(200), input: 1, seed: 5 };
+        let a = spec.build().unwrap();
+        let b = spec.build().unwrap();
+        assert_eq!(a.num_tasks(), b.num_tasks());
+        assert_eq!(a.task(3).work, b.task(3).work);
+        let group = SizeGroup::of(a.num_tasks());
+        assert_eq!(group, SizeGroup::Tiny);
+    }
+
+    #[test]
+    fn static_run_produces_all_algorithms() {
+        let spec = WorkloadSpec { family: "bacass".into(), size: None, input: 0, seed: 2 };
+        let cluster = presets::small_cluster();
+        let rs = run_static(&spec, &cluster).unwrap();
+        assert_eq!(rs.len(), 4);
+        assert!(rs.iter().any(|r| r.algo == Algorithm::Heft));
+        // HEFT makespan recorded for normalization on every row.
+        assert!(rs.iter().all(|r| r.heft_makespan > 0.0));
+    }
+
+    #[test]
+    fn dynamic_run_smoke() {
+        let spec = WorkloadSpec { family: "chipseq".into(), size: None, input: 0, seed: 3 };
+        let cluster = presets::small_cluster();
+        let r = run_dynamic(&spec, &cluster, Algorithm::HeftmBl, 0.1).unwrap();
+        assert!(r.initially_valid);
+        assert!(r.recompute_ok);
+        if let Some(imp) = r.improvement() {
+            assert!(imp.abs() < 100.0);
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Workflow generation (paper §VI-A-1a).
+//!
+//! The paper evaluates on five real nf-core workflows (atacseq, bacass,
+//! chipseq, eager, methylseq) plus size-scaled variants produced by the
+//! WfGen/WfCommons generator. Neither the nextflow DAG dumps nor WfGen are
+//! available offline, so this module provides:
+//!
+//! - [`models`]: structural *model workflows* for the five pipelines —
+//!   stage-structured DAGs (per-sample chains, scatter fan-outs, gather
+//!   joins) with task types mirroring the published pipeline stages;
+//! - [`expand`]: instantiation of a model for a number of samples;
+//! - [`scale_to`]: WfGen-like scaling of a model to a target task count.
+//!
+//! Weights (work/memory/file sizes) are *not* assigned here; they are bound
+//! from historical traces by [`crate::traces::bind_weights`], exactly as in
+//! the paper.
+
+pub mod models;
+
+use crate::util::rng::Rng;
+use crate::workflow::{Workflow, WorkflowBuilder};
+use anyhow::{bail, Result};
+
+/// How a stage's tasks are instantiated and wired to the previous stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StageKind {
+    /// One task per sample, connected to the same sample's previous tasks.
+    PerSample,
+    /// `width` tasks per sample (fan-out within the sample lane).
+    Scatter(usize),
+    /// A single task joining *all* tasks of the previous stage.
+    Gather,
+    /// A fixed number of tasks independent of the sample count; previous
+    /// tasks are distributed round-robin over them.
+    Fixed(usize),
+}
+
+/// One pipeline stage: a task type and an instantiation rule.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    /// Task type (binds to historical trace rows), e.g. `bwa_align`.
+    pub task_type: String,
+    pub kind: StageKind,
+}
+
+impl Stage {
+    pub fn new(task_type: &str, kind: StageKind) -> Stage {
+        Stage { task_type: task_type.to_string(), kind }
+    }
+}
+
+/// A model workflow: an ordered list of stages.
+#[derive(Debug, Clone)]
+pub struct ModelWorkflow {
+    pub name: String,
+    pub stages: Vec<Stage>,
+}
+
+impl ModelWorkflow {
+    /// Tasks produced per sample lane (scatter widths included).
+    pub fn tasks_per_sample(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| match s.kind {
+                StageKind::PerSample => 1,
+                StageKind::Scatter(w) => w,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Tasks independent of the sample count.
+    pub fn fixed_tasks(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| match s.kind {
+                StageKind::Gather => 1,
+                StageKind::Fixed(c) => c,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total tasks for `samples` lanes.
+    pub fn total_tasks(&self, samples: usize) -> usize {
+        self.tasks_per_sample() * samples + self.fixed_tasks()
+    }
+}
+
+/// Instantiate a model for `samples` sample lanes. Deterministic: no
+/// randomness is used for the base expansion (jitter belongs to
+/// [`scale_to`]).
+pub fn expand(model: &ModelWorkflow, samples: usize) -> Result<Workflow> {
+    expand_named(model, samples, &model.name)
+}
+
+fn expand_named(model: &ModelWorkflow, samples: usize, name: &str) -> Result<Workflow> {
+    if samples == 0 {
+        bail!("cannot expand model `{}` with zero samples", model.name);
+    }
+    if model.stages.is_empty() {
+        bail!("model `{}` has no stages", model.name);
+    }
+    let mut b = WorkflowBuilder::new(name);
+    // prev_per_sample[s] = the sample-lane frontier tasks of lane s;
+    // prev_global = frontier tasks of the last global (gather/fixed) stage.
+    let mut prev_per_sample: Vec<Vec<usize>> = vec![Vec::new(); samples];
+    let mut prev_global: Vec<usize> = Vec::new();
+    let mut lanes_active = false; // are per-sample frontiers current?
+
+    for (si, stage) in model.stages.iter().enumerate() {
+        match stage.kind {
+            StageKind::PerSample | StageKind::Scatter(_) => {
+                let width = match stage.kind {
+                    StageKind::Scatter(w) => w.max(1),
+                    _ => 1,
+                };
+                for s in 0..samples {
+                    let mut new_frontier = Vec::with_capacity(width);
+                    for w in 0..width {
+                        let tname = if width == 1 {
+                            format!("{}_{}", stage.task_type, s)
+                        } else {
+                            format!("{}_{}_{}", stage.task_type, s, w)
+                        };
+                        let id = b.task(tname, &stage.task_type, 0.0, 0.0);
+                        if lanes_active {
+                            for &p in &prev_per_sample[s] {
+                                b.edge(p, id, 0.0);
+                            }
+                        } else {
+                            // First stage, or following a global stage.
+                            for &p in &prev_global {
+                                b.edge(p, id, 0.0);
+                            }
+                        }
+                        new_frontier.push(id);
+                    }
+                    prev_per_sample[s] = new_frontier;
+                }
+                lanes_active = true;
+            }
+            StageKind::Gather | StageKind::Fixed(_) => {
+                let count = match stage.kind {
+                    StageKind::Fixed(c) => c.max(1),
+                    _ => 1,
+                };
+                let sources: Vec<usize> = if lanes_active {
+                    prev_per_sample.iter().flatten().copied().collect()
+                } else {
+                    prev_global.clone()
+                };
+                let mut new_global = Vec::with_capacity(count);
+                for c in 0..count {
+                    let tname = if count == 1 {
+                        format!("{}_s{}", stage.task_type, si)
+                    } else {
+                        format!("{}_s{}_{}", stage.task_type, si, c)
+                    };
+                    let id = b.task(tname, &stage.task_type, 0.0, 0.0);
+                    if count == 1 {
+                        for &p in &sources {
+                            b.edge(p, id, 0.0);
+                        }
+                    } else {
+                        // Round-robin distribution over the fixed tasks.
+                        for (i, &p) in sources.iter().enumerate() {
+                            if i % count == c {
+                                b.edge(p, id, 0.0);
+                            }
+                        }
+                    }
+                    new_global.push(id);
+                }
+                prev_global = new_global;
+                lanes_active = false;
+            }
+        }
+    }
+    b.build()
+}
+
+/// WfGen-like scaling: produce a variant of `model` with approximately
+/// `target_tasks` tasks. Mirrors the paper's generator behaviour: the
+/// sample count is derived from the target, and scatter widths receive a
+/// small seeded jitter so that different sizes are not exact photocopies
+/// (§VI-A-1a notes the generator's "varying nature").
+pub fn scale_to(model: &ModelWorkflow, target_tasks: usize, seed: u64) -> Result<Workflow> {
+    if target_tasks == 0 {
+        bail!("target task count must be positive");
+    }
+    let mut rng = Rng::new(seed ^ 0x7767_656e); // "wgen"
+    // Jitter scatter widths by -1/0/+1 (clamped to >= 1).
+    let mut jittered = model.clone();
+    for st in &mut jittered.stages {
+        if let StageKind::Scatter(w) = st.kind {
+            let delta = rng.range_inclusive(0, 2) as i64 - 1;
+            st.kind = StageKind::Scatter(((w as i64 + delta).max(1)) as usize);
+        }
+    }
+    let per_sample = jittered.tasks_per_sample().max(1);
+    let fixed = jittered.fixed_tasks();
+    let samples = ((target_tasks.saturating_sub(fixed)) as f64 / per_sample as f64)
+        .round()
+        .max(1.0) as usize;
+    let name = format!("{}_{}", model.name, target_tasks);
+    expand_named(&jittered, samples, &name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::models::*;
+
+    #[test]
+    fn expand_produces_valid_dag() {
+        for model in all_models() {
+            let wf = expand(&model, 4).unwrap();
+            assert!(wf.num_tasks() > 0, "{}", model.name);
+            let order = wf.topological_order();
+            assert!(wf.is_topological_order(&order), "{}", model.name);
+            // Connected enough: exactly the first stage's tasks are sources.
+            assert!(!wf.sources().is_empty());
+        }
+    }
+
+    #[test]
+    fn task_count_formula_matches() {
+        for model in all_models() {
+            for samples in [1, 3, 10] {
+                let wf = expand(&model, samples).unwrap();
+                assert_eq!(
+                    wf.num_tasks(),
+                    model.total_tasks(samples),
+                    "{} samples={samples}",
+                    model.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gather_joins_all_lanes() {
+        let model = ModelWorkflow {
+            name: "g".into(),
+            stages: vec![
+                Stage::new("a", StageKind::PerSample),
+                Stage::new("join", StageKind::Gather),
+            ],
+        };
+        let wf = expand(&model, 5).unwrap();
+        assert_eq!(wf.num_tasks(), 6);
+        let gather = wf.sinks()[0];
+        assert_eq!(wf.in_degree(gather), 5);
+    }
+
+    #[test]
+    fn per_sample_after_gather_fans_out_from_it() {
+        let model = ModelWorkflow {
+            name: "g2".into(),
+            stages: vec![
+                Stage::new("a", StageKind::PerSample),
+                Stage::new("join", StageKind::Gather),
+                Stage::new("b", StageKind::PerSample),
+            ],
+        };
+        let wf = expand(&model, 3).unwrap();
+        // join has out-degree 3 (one per sample lane).
+        let join = (0..wf.num_tasks()).find(|&u| wf.task(u).task_type == "join").unwrap();
+        assert_eq!(wf.out_degree(join), 3);
+    }
+
+    #[test]
+    fn scatter_width_multiplies_tasks() {
+        let model = ModelWorkflow {
+            name: "sc".into(),
+            stages: vec![
+                Stage::new("a", StageKind::PerSample),
+                Stage::new("b", StageKind::Scatter(3)),
+                Stage::new("c", StageKind::PerSample),
+            ],
+        };
+        let wf = expand(&model, 2).unwrap();
+        assert_eq!(wf.num_tasks(), 2 * (1 + 3 + 1));
+        // Each c task joins its sample's 3 scatter tasks.
+        let c0 = (0..wf.num_tasks()).find(|&u| wf.task(u).name == "c_0").unwrap();
+        assert_eq!(wf.in_degree(c0), 3);
+    }
+
+    #[test]
+    fn fixed_distributes_round_robin() {
+        let model = ModelWorkflow {
+            name: "fx".into(),
+            stages: vec![
+                Stage::new("a", StageKind::PerSample),
+                Stage::new("b", StageKind::Fixed(2)),
+            ],
+        };
+        let wf = expand(&model, 4).unwrap();
+        let sinks = wf.sinks();
+        assert_eq!(sinks.len(), 2);
+        assert_eq!(wf.in_degree(sinks[0]), 2);
+        assert_eq!(wf.in_degree(sinks[1]), 2);
+    }
+
+    #[test]
+    fn scale_hits_target_approximately() {
+        for model in scalable_models() {
+            for target in [200usize, 1000, 4000] {
+                let wf = scale_to(&model, target, 11).unwrap();
+                let n = wf.num_tasks();
+                let err = (n as f64 - target as f64).abs() / target as f64;
+                assert!(err < 0.25, "{}: target {target}, got {n}", model.name);
+                assert!(wf.is_topological_order(&wf.topological_order()));
+            }
+        }
+    }
+
+    #[test]
+    fn scale_is_deterministic_per_seed() {
+        let model = &scalable_models()[0];
+        let a = scale_to(model, 1000, 5).unwrap();
+        let b = scale_to(model, 1000, 5).unwrap();
+        assert_eq!(a.num_tasks(), b.num_tasks());
+        assert_eq!(a.num_edges(), b.num_edges());
+    }
+
+    #[test]
+    fn zero_inputs_rejected() {
+        let model = &all_models()[0];
+        assert!(expand(model, 0).is_err());
+        assert!(scale_to(model, 0, 1).is_err());
+    }
+}

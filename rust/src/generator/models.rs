@@ -1,0 +1,154 @@
+//! Model workflows for the five nf-core pipelines used in the paper
+//! (§VI-A-1a): atacseq, bacass, chipseq, eager, methylseq.
+//!
+//! Each model encodes the pipeline's published stage structure: per-sample
+//! processing chains, within-sample scatter (e.g. per-replicate or
+//! per-context analysis), and global gather/report stages. Task type names
+//! follow the nf-core process names so that historical trace tables key
+//! naturally.
+
+use super::{ModelWorkflow, Stage, StageKind};
+use StageKind::{Fixed, Gather, PerSample, Scatter};
+
+/// nf-core/atacseq: ATAC-seq peak calling.
+pub fn atacseq() -> ModelWorkflow {
+    ModelWorkflow {
+        name: "atacseq".into(),
+        stages: vec![
+            Stage::new("fastqc", PerSample),
+            Stage::new("trim_galore", PerSample),
+            Stage::new("bwa_mem", PerSample),
+            Stage::new("samtools_filter", Scatter(2)),
+            Stage::new("picard_merge", PerSample),
+            Stage::new("macs2_callpeak", PerSample),
+            Stage::new("consensus_peaks", Gather),
+            Stage::new("homer_annotate", Fixed(2)),
+            Stage::new("multiqc", Gather),
+        ],
+    }
+}
+
+/// nf-core/bacass: bacterial assembly. Short pipeline; the paper's
+/// generator failed on it, so it is only used at its native (tiny) size.
+pub fn bacass() -> ModelWorkflow {
+    ModelWorkflow {
+        name: "bacass".into(),
+        stages: vec![
+            Stage::new("fastqc", PerSample),
+            Stage::new("skewer_trim", PerSample),
+            Stage::new("unicycler", PerSample),
+            Stage::new("prokka", PerSample),
+            Stage::new("quast", Gather),
+            Stage::new("multiqc", Gather),
+        ],
+    }
+}
+
+/// nf-core/chipseq: ChIP-seq analysis.
+pub fn chipseq() -> ModelWorkflow {
+    ModelWorkflow {
+        name: "chipseq".into(),
+        stages: vec![
+            Stage::new("fastqc", PerSample),
+            Stage::new("trim_galore", PerSample),
+            Stage::new("bwa_mem", PerSample),
+            Stage::new("picard_markdup", PerSample),
+            Stage::new("phantompeakqualtools", Scatter(2)),
+            Stage::new("macs2_callpeak", PerSample),
+            Stage::new("homer_annotatepeaks", PerSample),
+            Stage::new("igv_session", Gather),
+            Stage::new("multiqc", Gather),
+        ],
+    }
+}
+
+/// nf-core/eager: ancient DNA analysis (the longest per-sample chain).
+pub fn eager() -> ModelWorkflow {
+    ModelWorkflow {
+        name: "eager".into(),
+        stages: vec![
+            Stage::new("fastqc", PerSample),
+            Stage::new("adapter_removal", PerSample),
+            Stage::new("bwa_aln", PerSample),
+            Stage::new("samtools_filter", PerSample),
+            Stage::new("dedup", PerSample),
+            Stage::new("damageprofiler", Scatter(2)),
+            Stage::new("angsd_contamination", PerSample),
+            Stage::new("qualimap", PerSample),
+            Stage::new("genotyping_hc", PerSample),
+            Stage::new("mixemt", Gather),
+            Stage::new("multiqc", Gather),
+        ],
+    }
+}
+
+/// nf-core/methylseq: bisulfite sequencing (wide methylation scatter).
+pub fn methylseq() -> ModelWorkflow {
+    ModelWorkflow {
+        name: "methylseq".into(),
+        stages: vec![
+            Stage::new("fastqc", PerSample),
+            Stage::new("trim_galore", PerSample),
+            Stage::new("bismark_align", PerSample),
+            Stage::new("bismark_deduplicate", PerSample),
+            Stage::new("methylation_extract", Scatter(3)),
+            Stage::new("bismark_report", PerSample),
+            Stage::new("qualimap", PerSample),
+            Stage::new("preseq", Gather),
+            Stage::new("multiqc", Gather),
+        ],
+    }
+}
+
+/// All five real-workflow models.
+pub fn all_models() -> Vec<ModelWorkflow> {
+    vec![atacseq(), bacass(), chipseq(), eager(), methylseq()]
+}
+
+/// The four models used for size-scaled variants (bacass excluded, as in
+/// the paper: it "leads to errors in the generator").
+pub fn scalable_models() -> Vec<ModelWorkflow> {
+    vec![atacseq(), chipseq(), eager(), methylseq()]
+}
+
+/// Look up a model by name.
+pub fn by_name(name: &str) -> Option<ModelWorkflow> {
+    all_models().into_iter().find(|m| m.name == name)
+}
+
+/// The paper's size sweep for generated workflows (§VI-A-1a).
+pub const PAPER_SIZES: [usize; 11] =
+    [200, 1000, 2000, 4000, 8000, 10000, 15000, 18000, 20000, 25000, 30000];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_models_exist() {
+        let names: Vec<String> = all_models().into_iter().map(|m| m.name).collect();
+        assert_eq!(names, vec!["atacseq", "bacass", "chipseq", "eager", "methylseq"]);
+    }
+
+    #[test]
+    fn scalable_excludes_bacass() {
+        assert!(scalable_models().iter().all(|m| m.name != "bacass"));
+        assert_eq!(scalable_models().len(), 4);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("eager").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn native_sizes_are_tiny() {
+        // Real workflows in the paper are the "tiny" group (≤ 200 tasks):
+        // with a realistic sample count they stay under 200.
+        for m in all_models() {
+            let wf = super::super::expand(&m, 12).unwrap();
+            assert!(wf.num_tasks() <= 200, "{}: {}", m.name, wf.num_tasks());
+        }
+    }
+}

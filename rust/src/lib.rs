@@ -1,0 +1,42 @@
+//! memsched: memory-aware adaptive scheduling of scientific workflows on
+//! heterogeneous architectures.
+//!
+//! Reproduction of S. Kulagina, A. Benoit, H. Meyerhenke, *"Memory-aware
+//! Adaptive Scheduling of Scientific Workflows on Heterogeneous
+//! Architectures"* (CCGrid 2025).
+//!
+//! # Architecture
+//!
+//! - [`workflow`]: the DAG substrate (tasks `w_u`, `m_u`; edges `c_{u,v}`).
+//! - [`platform`]: heterogeneous clusters (speed, memory, comm buffer).
+//! - [`traces`]: synthetic Lotaru-like historical task data + weight binding.
+//! - [`generator`]: nf-core-like model workflows, WfGen-like size scaling.
+//! - [`memdag`]: series-parallelization + min-peak-memory traversal ([19]).
+//! - [`scheduler`]: HEFT baseline and the three memory-aware HEFTM variants
+//!   with eviction into communication buffers, plus schedule retracing.
+//! - [`simulator`]: the runtime system — discrete-event execution with
+//!   parameter deviations and on-the-fly schedule recomputation.
+//! - [`runtime`]: PJRT bridge running the AOT-compiled XLA scoring/predictor
+//!   artifacts from `artifacts/*.hlo.txt` (built once by `make artifacts`).
+//! - [`experiments`], [`metrics`]: the harness regenerating every figure of
+//!   the paper's evaluation (see DESIGN.md for the experiment index).
+//! - [`ser`], [`cli`], [`bench`], [`testing`]: in-tree substrates (JSON,
+//!   arg parsing, bench statistics, property testing) — the build
+//!   environment is offline, so these common utilities are implemented
+//!   here rather than pulled from crates.io.
+
+pub mod bench;
+pub mod cli;
+pub mod experiments;
+pub mod generator;
+pub mod memdag;
+pub mod metrics;
+pub mod platform;
+pub mod runtime;
+pub mod scheduler;
+pub mod ser;
+pub mod simulator;
+pub mod testing;
+pub mod traces;
+pub mod util;
+pub mod workflow;

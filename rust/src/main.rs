@@ -1,0 +1,385 @@
+//! `memsched` — memory-aware adaptive workflow scheduling CLI.
+//!
+//! Subcommands:
+//!
+//! - `generate`      synthesize a workflow (model + size) to JSON
+//! - `info`          print workflow statistics
+//! - `cluster-info`  print a cluster configuration (Table II presets)
+//! - `schedule`      compute a static schedule and report it
+//! - `simulate`      run the dynamic runtime system on a schedule
+//! - `experiment`    run an evaluation suite and print a figure's table
+//!
+//! Run `memsched help` for the full usage text.
+
+use anyhow::{bail, Result};
+use memsched::cli::Args;
+use memsched::experiments::{self, figures, SuiteScale};
+use memsched::platform::Cluster;
+use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
+use memsched::workflow;
+
+const USAGE: &str = "\
+memsched — memory-aware adaptive scheduling of scientific workflows
+
+USAGE:
+  memsched <command> [options]
+
+COMMANDS:
+  generate      --model <name> [--tasks N] [--seed S] [--input 0..4] --out wf.json
+  info          --workflow <file.json|.dot>
+  cluster-info  [--cluster default|memory-constrained|file.json]
+  schedule      --workflow <file> [--cluster C] [--algo heft|heftm-bl|heftm-blc|heftm-mm]
+                [--eviction largest|smallest] [--scorer native|xla] [--out schedule.json]
+  simulate      --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
+                [--no-recompute]
+  retrace       --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
+                [--lose-proc J]...   assess deviation impact on a schedule (§V)
+  experiment    --figure fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|validity
+                [--scale smoke|quick|full] [--seed S] [--markdown]
+  help          print this text
+
+Models: atacseq, bacass, chipseq, eager, methylseq.";
+
+fn main() {
+    // Die quietly when piped into `head` etc. (default SIGPIPE behaviour).
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    match args.subcommand.clone().as_deref() {
+        Some("generate") => cmd_generate(&mut args),
+        Some("info") => cmd_info(&mut args),
+        Some("cluster-info") => cmd_cluster_info(&mut args),
+        Some("schedule") => cmd_schedule(&mut args),
+        Some("simulate") => cmd_simulate(&mut args),
+        Some("retrace") => cmd_retrace(&mut args),
+        Some("experiment") => cmd_experiment(&mut args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn load_workflow(args: &mut Args) -> Result<workflow::Workflow> {
+    let path = args.req_str("workflow")?;
+    workflow::io::load(std::path::Path::new(&path))
+}
+
+fn load_cluster(args: &mut Args) -> Result<Cluster> {
+    Cluster::load(&args.opt_str("cluster").unwrap_or_else(|| "default".into()))
+}
+
+fn cmd_generate(args: &mut Args) -> Result<()> {
+    let model_name = args.req_str("model")?;
+    let model = memsched::generator::models::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{model_name}`"))?;
+    let seed: u64 = args.opt_or("seed", 42)?;
+    let input: usize = args.opt_or("input", 2)?;
+    let graph = match args.opt::<usize>("tasks")? {
+        Some(n) => memsched::generator::scale_to(&model, n, seed)?,
+        None => memsched::generator::expand(&model, 12)?,
+    };
+    let types = memsched::traces::task_types(&graph);
+    let data = memsched::traces::HistoricalData::synthesize(
+        &types,
+        &memsched::traces::TraceConfig::default(),
+        seed,
+    );
+    let wf = memsched::traces::bind_weights(&graph, &data, input);
+    let out = args.req_str("out")?;
+    args.finish()?;
+    workflow::io::save(&wf, std::path::Path::new(&out))?;
+    println!("wrote {} ({} tasks, {} edges)", out, wf.num_tasks(), wf.num_edges());
+    Ok(())
+}
+
+fn cmd_info(args: &mut Args) -> Result<()> {
+    let wf = load_workflow(args)?;
+    args.finish()?;
+    let s = wf.stats();
+    println!("workflow: {}", wf.name);
+    println!("  tasks:        {}", s.tasks);
+    println!("  edges:        {}", s.edges);
+    println!("  sources:      {}", s.sources);
+    println!("  sinks:        {}", s.sinks);
+    println!("  depth:        {}", s.depth);
+    println!("  max in/out:   {}/{}", s.max_in_degree, s.max_out_degree);
+    println!("  total work:   {:.3e}", s.total_work);
+    println!("  total data:   {:.3e} bytes", s.total_data);
+    println!("  max r_u:      {:.3e} bytes", s.max_memory_requirement);
+    println!("  size group:   {}", workflow::SizeGroup::of(s.tasks).label());
+    Ok(())
+}
+
+fn cmd_cluster_info(args: &mut Args) -> Result<()> {
+    let cluster = load_cluster(args)?;
+    args.finish()?;
+    println!(
+        "cluster: {} ({} processors, β = {:.3e} B/s)",
+        cluster.name,
+        cluster.len(),
+        cluster.bandwidth
+    );
+    // Aggregate per kind (Table II).
+    let mut kinds: Vec<&str> = cluster.processors.iter().map(|p| p.kind.as_str()).collect();
+    kinds.sort_unstable();
+    kinds.dedup();
+    println!(
+        "{:<8} {:>6} {:>12} {:>14} {:>14}",
+        "kind", "count", "speed", "memory(GB)", "buffer(GB)"
+    );
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    for kind in kinds {
+        let ps: Vec<_> = cluster.processors.iter().filter(|p| p.kind == kind).collect();
+        println!(
+            "{:<8} {:>6} {:>12.1} {:>14.1} {:>14.1}",
+            kind,
+            ps.len(),
+            ps[0].speed,
+            ps[0].memory / GB,
+            ps[0].comm_buffer / GB
+        );
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &mut Args) -> Result<()> {
+    let wf = load_workflow(args)?;
+    let cluster = load_cluster(args)?;
+    let algo: Algorithm = args.opt_or("algo", Algorithm::HeftmBl)?;
+    let policy: EvictionPolicy = args.opt_or("eviction", EvictionPolicy::LargestFirst)?;
+    let scorer_kind = args.opt_str("scorer").unwrap_or_else(|| "native".into());
+    let out = args.opt_str("out");
+    args.finish()?;
+
+    let t0 = std::time::Instant::now();
+    let schedule = match scorer_kind.as_str() {
+        "native" => compute_schedule(&wf, &cluster, algo, policy),
+        "xla" => {
+            let scorer = memsched::runtime::scorer::XlaScorer::load_default()?;
+            let order = algo.rank_order(&wf, &cluster);
+            memsched::scheduler::Engine::new(&wf, &cluster, algo, policy)
+                .with_scorer(&scorer)
+                .run(&order)
+        }
+        other => bail!("unknown scorer `{other}` (native, xla)"),
+    };
+    let dt = t0.elapsed();
+
+    println!("algorithm:   {}", algo.label());
+    println!("valid:       {}", schedule.valid);
+    println!("makespan:    {:.3}", schedule.makespan);
+    println!(
+        "mem usage:   {:.1}% (mean peak over used processors)",
+        100.0 * schedule.mean_mem_usage()
+    );
+    println!("procs used:  {}/{}", schedule.procs_used(), cluster.len());
+    println!("evictions:   {}", schedule.tasks.iter().map(|t| t.evicted.len()).sum::<usize>());
+    println!("sched time:  {}", memsched::bench::fmt_duration(dt));
+    if !schedule.valid {
+        println!(
+            "failures:    {} (first: {:?})",
+            schedule.failures.len(),
+            schedule.failures.first()
+        );
+    }
+    if let Some(path) = out {
+        let json = schedule_json(&wf, &schedule);
+        std::fs::write(&path, json.to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn schedule_json(
+    wf: &workflow::Workflow,
+    s: &memsched::scheduler::Schedule,
+) -> memsched::ser::json::Value {
+    use memsched::ser::json::{obj, Value};
+    let tasks: Vec<Value> = s
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(v, t)| {
+            obj(vec![
+                ("task", wf.task(v).name.as_str().into()),
+                ("proc", t.proc.into()),
+                ("start", t.start.into()),
+                ("finish", t.finish.into()),
+                ("evictions", t.evicted.len().into()),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("workflow", wf.name.as_str().into()),
+        ("algorithm", s.algorithm.label().into()),
+        ("valid", s.valid.into()),
+        ("makespan", s.makespan.into()),
+        ("tasks", Value::Array(tasks)),
+    ])
+}
+
+fn cmd_simulate(args: &mut Args) -> Result<()> {
+    let wf = load_workflow(args)?;
+    let cluster = load_cluster(args)?;
+    let algo: Algorithm = args.opt_or("algo", Algorithm::HeftmBl)?;
+    let sigma: f64 = args.opt_or("sigma", 0.1)?;
+    let seed: u64 = args.opt_or("seed", 42)?;
+    let no_recompute = args.flag("no-recompute");
+    args.finish()?;
+
+    let schedule = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+    println!("static schedule: valid={} makespan={:.3}", schedule.valid, schedule.makespan);
+    if !schedule.valid {
+        println!("initial schedule invalid; execution not attempted");
+        return Ok(());
+    }
+    let mode = if no_recompute { SimMode::FollowStatic } else { SimMode::Recompute };
+    let cfg = SimConfig::new(mode, DeviationModel::new(sigma, seed));
+    let out = simulate(&wf, &cluster, &schedule, &cfg);
+    println!("mode:            {mode:?}");
+    println!("completed:       {}", out.completed);
+    println!("makespan:        {:.3}", out.makespan);
+    println!("recomputations:  {}", out.recomputations);
+    println!("tasks started:   {}/{}", out.started, wf.num_tasks());
+    if let Some(f) = out.failure {
+        println!("failure:         {f:?}");
+    }
+    Ok(())
+}
+
+/// §V: compute a schedule, apply a deviation, and retrace it — reporting
+/// whether the schedule survives and the updated makespan.
+fn cmd_retrace(args: &mut Args) -> Result<()> {
+    let wf = load_workflow(args)?;
+    let cluster = load_cluster(args)?;
+    let algo: Algorithm = args.opt_or("algo", Algorithm::HeftmBl)?;
+    let sigma: f64 = args.opt_or("sigma", 0.1)?;
+    let seed: u64 = args.opt_or("seed", 42)?;
+    let lost: Vec<usize> = args
+        .multi("lose-proc")
+        .iter()
+        .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --lose-proc `{s}`")))
+        .collect::<Result<_>>()?;
+    args.finish()?;
+
+    let schedule = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+    println!("static schedule: valid={} makespan={:.3}", schedule.valid, schedule.makespan);
+    if !schedule.valid {
+        anyhow::bail!("initial schedule invalid; nothing to retrace");
+    }
+    let actual = DeviationModel::new(sigma, seed).deviate_workflow(&wf);
+    let r = memsched::scheduler::retrace::retrace(
+        &actual,
+        &cluster,
+        &schedule,
+        EvictionPolicy::LargestFirst,
+        &lost,
+    );
+    println!("deviation:       sigma={sigma} seed={seed} lost_procs={lost:?}");
+    println!("still valid:     {}", r.valid);
+    if r.valid {
+        println!(
+            "new makespan:    {:.3} ({:+.1}% vs plan)",
+            r.makespan,
+            100.0 * (r.makespan - schedule.makespan) / schedule.makespan
+        );
+    }
+    if let Some(t) = r.failed_task {
+        println!("first violation: task {t} (`{}`): {:?}", wf.task(t).name, r.failure);
+        println!("(a dynamic run would recompute here: `memsched simulate ...`)");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &mut Args) -> Result<()> {
+    let figure = args.req_str("figure")?;
+    let scale: SuiteScale = args.opt_or("scale", SuiteScale::Quick)?;
+    let seed: u64 = args.opt_or("seed", 42)?;
+    let markdown = args.flag("markdown");
+    args.finish()?;
+
+    let table = match figure.as_str() {
+        "fig1" | "fig2" | "fig3" | "fig4" => {
+            let cluster = memsched::platform::presets::default_cluster();
+            let results = run_static_suite(scale, seed, &cluster)?;
+            match figure.as_str() {
+                "fig1" => figures::success_rates(&results),
+                "fig2" => figures::relative_makespans(&results),
+                "fig3" => figures::memory_usage(&results, false),
+                _ => figures::memory_usage(&results, true),
+            }
+        }
+        "fig5" | "fig6" | "fig7" | "fig9" => {
+            let cluster = memsched::platform::presets::memory_constrained_cluster();
+            let results = run_static_suite(scale, seed, &cluster)?;
+            match figure.as_str() {
+                "fig5" => figures::success_rates(&results),
+                "fig6" => figures::relative_makespans(&results),
+                "fig7" => figures::memory_usage(&results, false),
+                _ => figures::heuristic_runtimes(&results),
+            }
+        }
+        "fig8" | "validity" => {
+            let cluster = memsched::platform::presets::memory_constrained_cluster();
+            let results = run_dynamic_suite(scale, seed, &cluster)?;
+            if figure == "fig8" {
+                figures::dynamic_improvement(&results)
+            } else {
+                figures::dynamic_validity(&results)
+            }
+        }
+        other => bail!("unknown figure `{other}`"),
+    };
+    print!("{}", if markdown { table.to_markdown() } else { table.to_csv() });
+    Ok(())
+}
+
+/// Run the static suite (all four algorithms on every workload).
+fn run_static_suite(
+    scale: SuiteScale,
+    seed: u64,
+    cluster: &Cluster,
+) -> Result<Vec<experiments::StaticResult>> {
+    let specs = experiments::suite(scale, seed);
+    let mut results = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        eprintln!("[{}/{}] {}", i + 1, specs.len(), spec.id());
+        results.extend(experiments::run_static(spec, cluster)?);
+    }
+    Ok(results)
+}
+
+/// Run the dynamic suite (sizes ≤ 2000, as in the paper's Fig 8).
+fn run_dynamic_suite(
+    scale: SuiteScale,
+    seed: u64,
+    cluster: &Cluster,
+) -> Result<Vec<experiments::DynamicResult>> {
+    let specs: Vec<_> = experiments::suite(scale, seed)
+        .into_iter()
+        .filter(|s| s.size.is_none_or(|n| n <= 2000))
+        .collect();
+    let mut results = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        eprintln!("[{}/{}] {}", i + 1, specs.len(), spec.id());
+        for algo in Algorithm::all() {
+            results.push(experiments::run_dynamic(spec, cluster, algo, 0.1)?);
+        }
+    }
+    Ok(results)
+}

@@ -1,0 +1,353 @@
+//! Two-terminal series-parallel (TTSP) recognition and decomposition.
+//!
+//! A virtual source/sink is attached to the workflow, then the classic
+//! reduction procedure runs to a fixed point:
+//!
+//! - **series**: an internal vertex `v` with in-degree = out-degree = 1 is
+//!   spliced out, `(u→v) + (v→w)  ⇒  (u→w)` recording `Series(A, v, B)`;
+//! - **parallel**: two edges with identical endpoints merge into one,
+//!   recording `Parallel(A, B)`.
+//!
+//! The graph is TTSP iff the fixed point is a single `src→sink` edge; its
+//! recorded [`SpNode`] is the decomposition tree. The reduction is
+//! worklist-driven and runs in near-linear time.
+
+use crate::workflow::{TaskId, Workflow};
+use std::collections::HashMap;
+
+/// Decomposition-tree node. `Vertex` leaves carry the tasks; edges that
+/// never swallowed a vertex are `Empty`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpNode {
+    Empty,
+    Vertex(TaskId),
+    Series(Vec<SpNode>),
+    Parallel(Vec<SpNode>),
+}
+
+impl SpNode {
+    /// Number of `Vertex` leaves.
+    pub fn num_vertices(&self) -> usize {
+        match self {
+            SpNode::Empty => 0,
+            SpNode::Vertex(_) => 1,
+            SpNode::Series(cs) | SpNode::Parallel(cs) => {
+                cs.iter().map(SpNode::num_vertices).sum()
+            }
+        }
+    }
+
+    fn series(a: SpNode, v: TaskId, b: SpNode) -> SpNode {
+        let mut parts = Vec::new();
+        match a {
+            SpNode::Empty => {}
+            SpNode::Series(mut cs) => parts.append(&mut cs),
+            other => parts.push(other),
+        }
+        parts.push(SpNode::Vertex(v));
+        match b {
+            SpNode::Empty => {}
+            SpNode::Series(mut cs) => parts.append(&mut cs),
+            other => parts.push(other),
+        }
+        if parts.len() == 1 {
+            parts.pop().unwrap()
+        } else {
+            SpNode::Series(parts)
+        }
+    }
+
+    fn parallel(a: SpNode, b: SpNode) -> SpNode {
+        let mut parts = Vec::new();
+        for x in [a, b] {
+            match x {
+                SpNode::Parallel(mut cs) => parts.append(&mut cs),
+                other => parts.push(other),
+            }
+        }
+        SpNode::Parallel(parts)
+    }
+}
+
+/// A successful decomposition.
+#[derive(Debug, Clone)]
+pub struct SpTree {
+    pub root: SpNode,
+}
+
+struct EdgeRec {
+    from: usize,
+    to: usize,
+    node: SpNode,
+    alive: bool,
+}
+
+/// Attempt the TTSP decomposition of `wf` (with virtual terminals).
+/// Returns `None` if the graph is not series-parallel.
+pub fn decompose(wf: &Workflow) -> Option<SpTree> {
+    let n = wf.num_tasks();
+    let src = n;
+    let sink = n + 1;
+
+    let mut edges: Vec<EdgeRec> = Vec::with_capacity(wf.num_edges() + 2 * n);
+    // live edge per endpoint pair (the parallel-merge invariant).
+    let mut by_pair: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut in_deg = vec![0usize; n + 2];
+    let mut out_deg = vec![0usize; n + 2];
+    // Incident live-edge lookup: for series reduction we need *the* single
+    // in/out edge of a vertex; store per-vertex edge lists, lazily pruned.
+    let mut in_edges: Vec<Vec<usize>> = vec![Vec::new(); n + 2];
+    let mut out_edges: Vec<Vec<usize>> = vec![Vec::new(); n + 2];
+
+    let add_edge = |edges: &mut Vec<EdgeRec>,
+                        by_pair: &mut HashMap<(usize, usize), usize>,
+                        in_deg: &mut Vec<usize>,
+                        out_deg: &mut Vec<usize>,
+                        in_edges: &mut Vec<Vec<usize>>,
+                        out_edges: &mut Vec<Vec<usize>>,
+                        from: usize,
+                        to: usize,
+                        node: SpNode|
+     -> usize {
+        if let Some(&eid) = by_pair.get(&(from, to)) {
+            if edges[eid].alive {
+                // Merge as parallel into the existing live edge.
+                let old = std::mem::replace(&mut edges[eid].node, SpNode::Empty);
+                edges[eid].node = SpNode::parallel(old, node);
+                return eid;
+            }
+        }
+        let eid = edges.len();
+        edges.push(EdgeRec { from, to, node, alive: true });
+        by_pair.insert((from, to), eid);
+        in_deg[to] += 1;
+        out_deg[from] += 1;
+        in_edges[to].push(eid);
+        out_edges[from].push(eid);
+        eid
+    };
+
+    for e in wf.edges() {
+        add_edge(
+            &mut edges,
+            &mut by_pair,
+            &mut in_deg,
+            &mut out_deg,
+            &mut in_edges,
+            &mut out_edges,
+            e.src,
+            e.dst,
+            SpNode::Empty,
+        );
+    }
+    for u in 0..n {
+        if wf.in_degree(u) == 0 {
+            add_edge(
+                &mut edges,
+                &mut by_pair,
+                &mut in_deg,
+                &mut out_deg,
+                &mut in_edges,
+                &mut out_edges,
+                src,
+                u,
+                SpNode::Empty,
+            );
+        }
+        if wf.out_degree(u) == 0 {
+            add_edge(
+                &mut edges,
+                &mut by_pair,
+                &mut in_deg,
+                &mut out_deg,
+                &mut in_edges,
+                &mut out_edges,
+                u,
+                sink,
+                SpNode::Empty,
+            );
+        }
+    }
+
+    // Worklist of vertices to try for series reduction.
+    let mut work: Vec<usize> = (0..n).collect();
+    let live_edge = |list: &mut Vec<usize>, edges: &[EdgeRec]| -> Option<usize> {
+        list.retain(|&e| edges[e].alive);
+        if list.len() == 1 {
+            Some(list[0])
+        } else {
+            None
+        }
+    };
+
+    while let Some(v) = work.pop() {
+        if v >= n || in_deg[v] != 1 || out_deg[v] != 1 {
+            continue;
+        }
+        let (Some(ein), Some(eout)) = (
+            live_edge(&mut in_edges[v], &edges),
+            live_edge(&mut out_edges[v], &edges),
+        ) else {
+            continue;
+        };
+        let u = edges[ein].from;
+        let w = edges[eout].to;
+        if u == w {
+            // Would create a self-loop; only possible on non-DAG input.
+            return None;
+        }
+        // Kill both edges.
+        edges[ein].alive = false;
+        edges[eout].alive = false;
+        if by_pair.get(&(u, v)) == Some(&ein) {
+            by_pair.remove(&(u, v));
+        }
+        if by_pair.get(&(v, w)) == Some(&eout) {
+            by_pair.remove(&(v, w));
+        }
+        in_deg[v] = 0;
+        out_deg[v] = 0;
+        out_deg[u] -= 1;
+        in_deg[w] -= 1;
+        let a = std::mem::replace(&mut edges[ein].node, SpNode::Empty);
+        let b = std::mem::replace(&mut edges[eout].node, SpNode::Empty);
+        let merged = SpNode::series(a, v, b);
+        let had_parallel = by_pair.contains_key(&(u, w))
+            && edges[by_pair[&(u, w)]].alive;
+        add_edge(
+            &mut edges,
+            &mut by_pair,
+            &mut in_deg,
+            &mut out_deg,
+            &mut in_edges,
+            &mut out_edges,
+            u,
+            w,
+            merged,
+        );
+        if had_parallel {
+            // Degrees shrank at u/w; they may now be series-reducible.
+            work.push(u);
+            work.push(w);
+        }
+        // u and w might have become reducible regardless (degree changed).
+        work.push(u);
+        work.push(w);
+    }
+
+    // TTSP iff exactly one live edge remains: src -> sink.
+    let mut live = edges.iter().filter(|e| e.alive);
+    let (first, second) = (live.next(), live.next());
+    match (first, second) {
+        (Some(e), None) if e.from == src && e.to == sink => {
+            debug_assert_eq!(e.node.num_vertices(), n);
+            Some(SpTree { root: e.node.clone() })
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::WorkflowBuilder;
+
+    fn wf(edges: &[(usize, usize)], n: usize) -> Workflow {
+        let mut b = WorkflowBuilder::new("t");
+        for i in 0..n {
+            b.task(format!("t{i}"), "t", 1.0, 1.0);
+        }
+        for &(s, d) in edges {
+            b.edge(s, d, 1.0);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn single_task() {
+        let tree = decompose(&wf(&[], 1)).unwrap();
+        assert_eq!(tree.root, SpNode::Vertex(0));
+    }
+
+    #[test]
+    fn chain_is_series() {
+        let tree = decompose(&wf(&[(0, 1), (1, 2)], 3)).unwrap();
+        assert_eq!(
+            tree.root,
+            SpNode::Series(vec![SpNode::Vertex(0), SpNode::Vertex(1), SpNode::Vertex(2)])
+        );
+    }
+
+    #[test]
+    fn diamond_is_sp() {
+        let tree = decompose(&wf(&[(0, 1), (0, 2), (1, 3), (2, 3)], 4)).unwrap();
+        assert_eq!(tree.root.num_vertices(), 4);
+        // Root should be Series(0, Parallel(1, 2), 3).
+        match &tree.root {
+            SpNode::Series(cs) => {
+                assert_eq!(cs.len(), 3);
+                assert_eq!(cs[0], SpNode::Vertex(0));
+                assert!(matches!(cs[1], SpNode::Parallel(_)));
+                assert_eq!(cs[2], SpNode::Vertex(3));
+            }
+            other => panic!("unexpected root {other:?}"),
+        }
+    }
+
+    #[test]
+    fn independent_tasks_are_parallel() {
+        let tree = decompose(&wf(&[], 3)).unwrap();
+        match &tree.root {
+            SpNode::Parallel(cs) => assert_eq!(cs.len(), 3),
+            other => panic!("unexpected root {other:?}"),
+        }
+    }
+
+    #[test]
+    fn n_graph_is_not_sp() {
+        // a->c, a->d, b->d: the classic non-SP "N".
+        assert!(decompose(&wf(&[(0, 2), (0, 3), (1, 3)], 4)).is_none());
+    }
+
+    #[test]
+    fn crossing_bipartite_not_sp() {
+        // K_{2,2} minus nothing is SP (parallel of ...) — actually
+        // 0->{2,3}, 1->{2,3} is NOT SP (it contains the N as a minor).
+        assert!(decompose(&wf(&[(0, 2), (0, 3), (1, 2), (1, 3)], 4)).is_none());
+    }
+
+    #[test]
+    fn nested_sp() {
+        // 0 -> (1 -> (2 || 3) -> 4 || 5) -> 6
+        let tree = decompose(&wf(
+            &[(0, 1), (1, 2), (1, 3), (2, 4), (3, 4), (0, 5), (4, 6), (5, 6)],
+            7,
+        ))
+        .unwrap();
+        assert_eq!(tree.root.num_vertices(), 7);
+    }
+
+    #[test]
+    fn all_generator_models_are_sp() {
+        for model in crate::generator::models::all_models() {
+            for samples in [1, 4, 9] {
+                let wf = crate::generator::expand(&model, samples).unwrap();
+                let tree = decompose(&wf);
+                assert!(tree.is_some(), "{} samples={samples}", model.name);
+                assert_eq!(tree.unwrap().root.num_vertices(), wf.num_tasks());
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_fan_in_wide() {
+        // Star: 0 -> 1..=20 -> 21.
+        let mut edges = Vec::new();
+        for i in 1..=20 {
+            edges.push((0, i));
+            edges.push((i, 21));
+        }
+        let tree = decompose(&wf(&edges, 22)).unwrap();
+        assert_eq!(tree.root.num_vertices(), 22);
+    }
+}

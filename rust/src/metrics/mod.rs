@@ -1,0 +1,135 @@
+//! Aggregation helpers for the experimental evaluation (§VI): success
+//! rates, relative makespans, and memory usage, grouped by workflow size
+//! as in the paper's figures.
+
+use crate::workflow::SizeGroup;
+use std::collections::BTreeMap;
+
+/// Accumulates (group, label) → values and reports means/rates.
+#[derive(Debug, Default, Clone)]
+pub struct GroupedStat {
+    values: BTreeMap<(SizeGroup, String), Vec<f64>>,
+}
+
+impl GroupedStat {
+    pub fn add(&mut self, group: SizeGroup, label: &str, value: f64) {
+        self.values.entry((group, label.to_string())).or_default().push(value);
+    }
+
+    pub fn mean(&self, group: SizeGroup, label: &str) -> Option<f64> {
+        let xs = self.values.get(&(group, label.to_string()))?;
+        if xs.is_empty() {
+            return None;
+        }
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+
+    pub fn count(&self, group: SizeGroup, label: &str) -> usize {
+        self.values.get(&(group, label.to_string())).map_or(0, Vec::len)
+    }
+
+    /// All labels seen (sorted).
+    pub fn labels(&self) -> Vec<String> {
+        let mut l: Vec<String> = self.values.keys().map(|(_, s)| s.clone()).collect();
+        l.sort();
+        l.dedup();
+        l
+    }
+}
+
+/// Success-rate tracker: (group, label) → (successes, total).
+#[derive(Debug, Default, Clone)]
+pub struct SuccessRate {
+    counts: BTreeMap<(SizeGroup, String), (usize, usize)>,
+}
+
+impl SuccessRate {
+    pub fn add(&mut self, group: SizeGroup, label: &str, success: bool) {
+        let e = self.counts.entry((group, label.to_string())).or_insert((0, 0));
+        e.1 += 1;
+        if success {
+            e.0 += 1;
+        }
+    }
+
+    /// Success rate in percent; None if no samples.
+    pub fn rate(&self, group: SizeGroup, label: &str) -> Option<f64> {
+        let &(s, t) = self.counts.get(&(group, label.to_string()))?;
+        if t == 0 {
+            return None;
+        }
+        Some(100.0 * s as f64 / t as f64)
+    }
+
+    /// Overall success rate across all groups for a label, in percent.
+    pub fn overall(&self, label: &str) -> Option<f64> {
+        let (mut s, mut t) = (0usize, 0usize);
+        for ((_, l), &(cs, ct)) in &self.counts {
+            if l == label {
+                s += cs;
+                t += ct;
+            }
+        }
+        if t == 0 {
+            None
+        } else {
+            Some(100.0 * s as f64 / t as f64)
+        }
+    }
+
+    pub fn totals(&self, label: &str) -> (usize, usize) {
+        let (mut s, mut t) = (0usize, 0usize);
+        for ((_, l), &(cs, ct)) in &self.counts {
+            if l == label {
+                s += cs;
+                t += ct;
+            }
+        }
+        (s, t)
+    }
+}
+
+/// Format an optional mean/rate for a report cell.
+pub fn cell(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.1}"),
+        None => "-".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_means() {
+        let mut g = GroupedStat::default();
+        g.add(SizeGroup::Tiny, "a", 1.0);
+        g.add(SizeGroup::Tiny, "a", 3.0);
+        g.add(SizeGroup::Big, "a", 10.0);
+        assert_eq!(g.mean(SizeGroup::Tiny, "a"), Some(2.0));
+        assert_eq!(g.mean(SizeGroup::Big, "a"), Some(10.0));
+        assert_eq!(g.mean(SizeGroup::Small, "a"), None);
+        assert_eq!(g.count(SizeGroup::Tiny, "a"), 2);
+        assert_eq!(g.labels(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn success_rates() {
+        let mut s = SuccessRate::default();
+        s.add(SizeGroup::Tiny, "heft", true);
+        s.add(SizeGroup::Tiny, "heft", false);
+        s.add(SizeGroup::Small, "heft", false);
+        assert_eq!(s.rate(SizeGroup::Tiny, "heft"), Some(50.0));
+        assert_eq!(s.rate(SizeGroup::Small, "heft"), Some(0.0));
+        assert!((s.overall("heft").unwrap() - 33.3).abs() < 0.1);
+        assert_eq!(s.totals("heft"), (1, 3));
+        assert_eq!(s.rate(SizeGroup::Big, "heft"), None);
+    }
+
+    #[test]
+    fn cell_formatting() {
+        assert_eq!(cell(Some(12.34)), "12.3");
+        assert_eq!(cell(None), "-");
+    }
+}

@@ -1,0 +1,247 @@
+//! Heterogeneous target platform (paper §III-B, Table II).
+//!
+//! A [`Cluster`] is a set of processors, each with an individual speed
+//! `s_j`, memory `M_j`, and communication buffer `MC_j`; all pairs are
+//! connected with a uniform bandwidth `β`. The two paper configurations
+//! (default and memory-constrained) are provided as presets.
+
+pub mod presets;
+
+use crate::ser::json::{obj, Value};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Index of a processor within its [`Cluster`].
+pub type ProcId = usize;
+
+/// One processor `p_j`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Processor {
+    /// Human-readable name, e.g. `C2-03`.
+    pub name: String,
+    /// Machine kind (Table II row), e.g. `C2`.
+    pub kind: String,
+    /// Speed `s_j` in normalized operations per second (Table II: GHz).
+    pub speed: f64,
+    /// Memory size `M_j` in bytes.
+    pub memory: f64,
+    /// Communication buffer size `MC_j` in bytes.
+    pub comm_buffer: f64,
+}
+
+/// A heterogeneous cluster `S` with `k` processors and uniform bandwidth β.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    pub name: String,
+    pub processors: Vec<Processor>,
+    /// Interconnect bandwidth β in bytes per second.
+    pub bandwidth: f64,
+}
+
+impl Cluster {
+    /// Validate invariants (non-empty, positive speeds/memories/bandwidth).
+    pub fn validate(&self) -> Result<()> {
+        if self.processors.is_empty() {
+            bail!("cluster `{}` has no processors", self.name);
+        }
+        if !(self.bandwidth.is_finite() && self.bandwidth > 0.0) {
+            bail!("cluster `{}` has invalid bandwidth {}", self.name, self.bandwidth);
+        }
+        for p in &self.processors {
+            if !(p.speed.is_finite() && p.speed > 0.0) {
+                bail!("processor `{}` has invalid speed {}", p.name, p.speed);
+            }
+            if !(p.memory.is_finite() && p.memory > 0.0) {
+                bail!("processor `{}` has invalid memory {}", p.name, p.memory);
+            }
+            if !(p.comm_buffer.is_finite() && p.comm_buffer >= 0.0) {
+                bail!("processor `{}` has invalid comm buffer {}", p.name, p.comm_buffer);
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of processors `k`.
+    pub fn len(&self) -> usize {
+        self.processors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.processors.is_empty()
+    }
+
+    pub fn proc(&self, j: ProcId) -> &Processor {
+        &self.processors[j]
+    }
+
+    /// Execution time of `work` operations on processor `j`.
+    pub fn exec_time(&self, work: f64, j: ProcId) -> f64 {
+        work / self.processors[j].speed
+    }
+
+    /// Transfer time of `data` bytes between two distinct processors.
+    /// Same-processor transfers are free.
+    pub fn comm_time(&self, data: f64, from: ProcId, to: ProcId) -> f64 {
+        if from == to {
+            0.0
+        } else {
+            data / self.bandwidth
+        }
+    }
+
+    /// Largest processor memory (used for schedulability screening).
+    pub fn max_memory(&self) -> f64 {
+        self.processors.iter().map(|p| p.memory).fold(0.0, f64::max)
+    }
+
+    /// Mean processor speed (used by rank computations that average costs).
+    pub fn mean_speed(&self) -> f64 {
+        self.processors.iter().map(|p| p.speed).sum::<f64>() / self.len() as f64
+    }
+
+    /// Derive a memory-scaled variant: memories (and buffers) ×`factor`.
+    /// The paper's memory-constrained cluster uses `factor = 0.1`.
+    pub fn scale_memory(&self, factor: f64, name: &str) -> Cluster {
+        let mut c = self.clone();
+        c.name = name.to_string();
+        for p in &mut c.processors {
+            p.memory *= factor;
+            p.comm_buffer *= factor;
+        }
+        c
+    }
+
+    pub fn to_json(&self) -> Value {
+        let procs: Vec<Value> = self
+            .processors
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("name", p.name.as_str().into()),
+                    ("kind", p.kind.as_str().into()),
+                    ("speed", p.speed.into()),
+                    ("memory", p.memory.into()),
+                    ("comm_buffer", p.comm_buffer.into()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("bandwidth", self.bandwidth.into()),
+            ("processors", Value::Array(procs)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Cluster> {
+        let name = v.req_str("name")?.to_string();
+        let bandwidth = v.req_f64("bandwidth")?;
+        let mut processors = Vec::new();
+        for (i, p) in v.req_array("processors")?.iter().enumerate() {
+            let pname = p.req_str("name").with_context(|| format!("processor #{i}"))?;
+            processors.push(Processor {
+                name: pname.to_string(),
+                kind: p.get("kind").and_then(Value::as_str).unwrap_or(pname).to_string(),
+                speed: p.req_f64("speed")?,
+                memory: p.req_f64("memory")?,
+                comm_buffer: p.req_f64("comm_buffer")?,
+            });
+        }
+        let c = Cluster { name, processors, bandwidth };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load a cluster from a JSON file or a preset name
+    /// (`default`, `memory-constrained`).
+    pub fn load(spec: &str) -> Result<Cluster> {
+        match spec {
+            "default" => Ok(presets::default_cluster()),
+            "memory-constrained" | "constrained" => Ok(presets::memory_constrained_cluster()),
+            path => {
+                let text = std::fs::read_to_string(Path::new(path))
+                    .with_context(|| format!("reading cluster file {path}"))?;
+                let v = Value::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("parsing cluster file {path}: {e}"))?;
+                Cluster::from_json(&v)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cluster {
+        Cluster {
+            name: "tiny".into(),
+            processors: vec![
+                Processor {
+                    name: "p0".into(),
+                    kind: "A".into(),
+                    speed: 2.0,
+                    memory: 100.0,
+                    comm_buffer: 1000.0,
+                },
+                Processor {
+                    name: "p1".into(),
+                    kind: "B".into(),
+                    speed: 4.0,
+                    memory: 50.0,
+                    comm_buffer: 500.0,
+                },
+            ],
+            bandwidth: 10.0,
+        }
+    }
+
+    #[test]
+    fn exec_and_comm_times() {
+        let c = tiny();
+        assert_eq!(c.exec_time(8.0, 0), 4.0);
+        assert_eq!(c.exec_time(8.0, 1), 2.0);
+        assert_eq!(c.comm_time(20.0, 0, 1), 2.0);
+        assert_eq!(c.comm_time(20.0, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn memory_scaling() {
+        let c = tiny().scale_memory(0.1, "scaled");
+        assert_eq!(c.name, "scaled");
+        assert_eq!(c.proc(0).memory, 10.0);
+        assert_eq!(c.proc(0).comm_buffer, 100.0);
+        assert_eq!(c.proc(0).speed, 2.0); // speeds unchanged
+    }
+
+    #[test]
+    fn validation_rejects_bad_clusters() {
+        let mut c = tiny();
+        c.processors.clear();
+        assert!(c.validate().is_err());
+        let mut c = tiny();
+        c.bandwidth = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = tiny();
+        c.processors[0].speed = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = tiny();
+        c.processors[1].memory = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = tiny();
+        let c2 = Cluster::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn load_presets() {
+        let d = Cluster::load("default").unwrap();
+        let m = Cluster::load("memory-constrained").unwrap();
+        assert_eq!(d.len(), 72);
+        assert_eq!(m.len(), 72);
+        assert!(Cluster::load("/nonexistent/file.json").is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Paper cluster presets (Table II, §VI-A-2).
+//!
+//! Six machine kinds, 12 nodes each (72 processors). Speeds are the
+//! normalized CPU speeds from Table II; memories are in bytes. The
+//! communication buffer is 10× the node memory (§VI-A-2). The
+//! memory-constrained cluster divides every memory (and buffer) by 10.
+
+use super::{Cluster, Processor};
+
+/// Gigabyte in bytes.
+pub const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+/// Megabyte in bytes.
+pub const MB: f64 = 1024.0 * 1024.0;
+/// Kilobyte in bytes.
+pub const KB: f64 = 1024.0;
+
+/// Table II rows: (kind, speed, memory in GB).
+pub const MACHINE_KINDS: [(&str, f64, f64); 6] = [
+    ("local", 4.0, 16.0),
+    ("A1", 32.0, 32.0),
+    ("A2", 6.0, 64.0),
+    ("N1", 12.0, 16.0),
+    ("N2", 8.0, 8.0),
+    ("C2", 32.0, 192.0),
+];
+
+/// Nodes of each kind in the paper's clusters.
+pub const NODES_PER_KIND: usize = 12;
+
+/// Communication buffer factor: `MC_j = 10 × M_j` (§VI-A-2).
+pub const COMM_BUFFER_FACTOR: f64 = 10.0;
+
+/// Interconnect bandwidth β. The paper does not publish its value; we use
+/// 1 GB/s (a typical cluster Ethernet/IB-FDR effective rate) and expose it
+/// via cluster JSON for sensitivity studies.
+pub const DEFAULT_BANDWIDTH: f64 = 1.0 * GB;
+
+/// Build a cluster with `nodes_per_kind` nodes of each Table II kind.
+pub fn cluster_with(nodes_per_kind: usize, name: &str) -> Cluster {
+    let mut processors = Vec::with_capacity(MACHINE_KINDS.len() * nodes_per_kind);
+    for (kind, speed, mem_gb) in MACHINE_KINDS {
+        for i in 0..nodes_per_kind {
+            processors.push(Processor {
+                name: format!("{kind}-{i:02}"),
+                kind: kind.to_string(),
+                speed,
+                memory: mem_gb * GB,
+                comm_buffer: COMM_BUFFER_FACTOR * mem_gb * GB,
+            });
+        }
+    }
+    let c = Cluster { name: name.to_string(), processors, bandwidth: DEFAULT_BANDWIDTH };
+    debug_assert!(c.validate().is_ok());
+    c
+}
+
+/// The default cluster: 72 nodes, Table II memories.
+pub fn default_cluster() -> Cluster {
+    cluster_with(NODES_PER_KIND, "default")
+}
+
+/// The memory-constrained cluster: same 72 nodes with 10× less memory
+/// (buffers scale along, keeping `MC = 10 × M`).
+pub fn memory_constrained_cluster() -> Cluster {
+    default_cluster().scale_memory(0.1, "memory-constrained")
+}
+
+/// A small cluster for unit tests and the quickstart example: one node of
+/// each kind (6 processors).
+pub fn small_cluster() -> Cluster {
+    cluster_with(1, "small")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cluster_matches_table_ii() {
+        let c = default_cluster();
+        assert_eq!(c.len(), 72);
+        // 12 of each kind.
+        for (kind, speed, mem_gb) in MACHINE_KINDS {
+            let nodes: Vec<_> = c.processors.iter().filter(|p| p.kind == kind).collect();
+            assert_eq!(nodes.len(), 12, "{kind}");
+            for p in nodes {
+                assert_eq!(p.speed, speed);
+                assert_eq!(p.memory, mem_gb * GB);
+                assert_eq!(p.comm_buffer, 10.0 * mem_gb * GB);
+            }
+        }
+    }
+
+    #[test]
+    fn constrained_cluster_is_tenth() {
+        let d = default_cluster();
+        let m = memory_constrained_cluster();
+        assert_eq!(m.len(), d.len());
+        for (pd, pm) in d.processors.iter().zip(&m.processors) {
+            assert!((pm.memory - pd.memory / 10.0).abs() < 1.0);
+            assert_eq!(pm.speed, pd.speed);
+        }
+        // C2 goes from 192 GB to 19.2 GB (Table II).
+        let c2 = m.processors.iter().find(|p| p.kind == "C2").unwrap();
+        assert!((c2.memory - 19.2 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn unique_names() {
+        let c = default_cluster();
+        let mut names: Vec<&str> = c.processors.iter().map(|p| p.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 72);
+    }
+}

@@ -1,0 +1,112 @@
+//! PJRT runtime bridge: loads the AOT-compiled XLA artifacts produced by
+//! `make artifacts` (`python/compile/aot.py` → `artifacts/*.hlo.txt`) and
+//! executes them from the Rust request path.
+//!
+//! Python never runs at schedule time: the artifacts are compiled once and
+//! the `xla` crate's PJRT CPU client executes them. Two computations are
+//! exported:
+//!
+//! - `eft_score`: batched tentative-assignment scoring — for one task and
+//!   all processors at once, the earliest finish time and memory residual
+//!   (Steps 2–3 of §IV-B) as a fused XLA computation whose inner kernels
+//!   are Pallas (see `python/compile/kernels/`);
+//! - `predictor`: the online resource-estimate refiner (§V): a ridge
+//!   regression mapping (estimate, observed deviation statistics) to a
+//!   corrected estimate.
+
+pub mod predictor;
+pub mod scorer;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve an artifact path: explicit dir via `MEMSCHED_ARTIFACTS`, else
+/// `./artifacts`.
+pub fn artifact_path(name: &str) -> PathBuf {
+    let dir = std::env::var("MEMSCHED_ARTIFACTS").unwrap_or_else(|_| ARTIFACTS_DIR.to_string());
+    Path::new(&dir).join(name)
+}
+
+/// A compiled XLA computation on the PJRT CPU client.
+pub struct Computation {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Computation {
+    /// Load HLO text and compile it on a fresh CPU client.
+    pub fn load(path: &Path) -> Result<Computation> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO module")?;
+        Ok(Computation { client, exe })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with f32 vector inputs of the given shapes; returns the
+    /// flattened f32 outputs of the result tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input to {shape:?}"))?;
+            literals.push(lit);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let elems = result.decompose_tuple().context("decomposing result tuple")?;
+        elems
+            .into_iter()
+            .map(|lit| {
+                let lit = lit.convert(xla::PrimitiveType::F32)?;
+                lit.to_vec::<f32>().context("reading f32 output")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_present() -> bool {
+        artifact_path("eft_score.hlo.txt").exists()
+    }
+
+    #[test]
+    fn artifact_path_env_override() {
+        std::env::set_var("MEMSCHED_ARTIFACTS", "/tmp/xyz");
+        assert_eq!(artifact_path("a.txt"), PathBuf::from("/tmp/xyz/a.txt"));
+        std::env::remove_var("MEMSCHED_ARTIFACTS");
+        assert_eq!(artifact_path("a.txt"), PathBuf::from("artifacts/a.txt"));
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        assert!(Computation::load(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+
+    #[test]
+    fn execute_eft_artifact_if_built() {
+        // Full numeric check lives in rust/tests/pjrt_integration.rs; this
+        // is a smoke test that only runs when artifacts exist.
+        if !artifacts_present() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let c = Computation::load(&artifact_path("eft_score.hlo.txt")).unwrap();
+        assert_eq!(c.platform(), "cpu");
+    }
+}

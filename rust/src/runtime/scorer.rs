@@ -1,0 +1,235 @@
+//! Batched tentative-assignment scoring (the scheduler's inner loop) —
+//! native Rust reference and the XLA/PJRT-accelerated implementation.
+//!
+//! For one task `v` and all processors at once, compute:
+//!
+//! - `ft[j]`  — the Step-3 finish time of `v` on `p_j`;
+//! - `res[j]` — the Step-2 memory residual (before eviction).
+//!
+//! The XLA path executes the AOT artifact `eft_score.hlo.txt`, whose inner
+//! kernel is a Pallas kernel (`python/compile/kernels/eft.py`) lowered in
+//! interpret mode. Shapes are fixed at export time (`PAD_PROCS` ×
+//! `PAD_PARENTS`); queries are padded.
+//!
+//! The engine consumes either implementation through
+//! [`crate::scheduler::engine::EftScorer`]: scores order the processors;
+//! exact Rust bookkeeping (Step 1, eviction, commit) then validates the
+//! winner, so f32 rounding in the XLA path can only affect tie-breaks.
+
+use super::Computation;
+use crate::scheduler::engine::{EftScorer, ScoreQuery};
+use anyhow::Result;
+use std::cell::RefCell;
+
+/// Padded processor-axis length of the AOT artifact.
+pub const PAD_PROCS: usize = 128;
+/// Padded parent-axis length of the AOT artifact.
+pub const PAD_PARENTS: usize = 32;
+
+/// Pure-Rust scorer (the default hot path; also the parity oracle).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeScorer;
+
+impl EftScorer for NativeScorer {
+    fn score(&self, q: &ScoreQuery) -> (Vec<f64>, Vec<f64>) {
+        let k = q.proc_ready.len();
+        let mut ft = vec![0.0f64; k];
+        let mut res = vec![0.0f64; k];
+        for j in 0..k {
+            let mut st = q.proc_ready[j];
+            let mut remote_in = 0.0f64;
+            for (p, par) in q.parents.iter().enumerate() {
+                if par.proc != j {
+                    let arrival = par.finish.max(q.comm[p][j]) + par.data / q.bandwidth;
+                    st = st.max(arrival);
+                    remote_in += par.data;
+                }
+            }
+            ft[j] = st + q.work / q.speeds[j];
+            res[j] = q.avail_mem[j] - q.memory - remote_in - q.out_total;
+        }
+        (ft, res)
+    }
+}
+
+/// XLA-backed scorer executing the PJRT artifact.
+pub struct XlaScorer {
+    comp: Computation,
+    /// Scratch buffers (the scorer is used single-threaded in the engine).
+    scratch: RefCell<Scratch>,
+}
+
+struct Scratch {
+    ready: Vec<f32>,
+    speed: Vec<f32>,
+    avail: Vec<f32>,
+    pft: Vec<f32>,
+    pc: Vec<f32>,
+    comm: Vec<f32>,
+    mask: Vec<f32>,
+    scalars: Vec<f32>,
+}
+
+impl XlaScorer {
+    /// Load `eft_score.hlo.txt` from the artifacts directory.
+    pub fn load_default() -> Result<XlaScorer> {
+        Self::load(&super::artifact_path("eft_score.hlo.txt"))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<XlaScorer> {
+        Ok(XlaScorer {
+            comp: Computation::load(path)?,
+            scratch: RefCell::new(Scratch {
+                ready: vec![0.0; PAD_PROCS],
+                speed: vec![1.0; PAD_PROCS],
+                avail: vec![0.0; PAD_PROCS],
+                pft: vec![0.0; PAD_PARENTS],
+                pc: vec![0.0; PAD_PARENTS],
+                comm: vec![0.0; PAD_PARENTS * PAD_PROCS],
+                mask: vec![0.0; PAD_PARENTS * PAD_PROCS],
+                scalars: vec![0.0; 4],
+            }),
+        })
+    }
+
+    fn fill(&self, q: &ScoreQuery) -> Result<()> {
+        let k = q.proc_ready.len();
+        anyhow::ensure!(k <= PAD_PROCS, "cluster too large for artifact ({k} > {PAD_PROCS})");
+        anyhow::ensure!(
+            q.parents.len() <= PAD_PARENTS,
+            "too many parents for artifact ({} > {PAD_PARENTS})",
+            q.parents.len()
+        );
+        let mut s = self.scratch.borrow_mut();
+        // Padded processors get an enormous ready time so they never win.
+        for j in 0..PAD_PROCS {
+            s.ready[j] = if j < k { q.proc_ready[j] as f32 } else { 1e30 };
+            s.speed[j] = if j < k { q.speeds[j] as f32 } else { 1.0 };
+            s.avail[j] = if j < k { q.avail_mem[j] as f32 } else { -1e30 };
+        }
+        for p in 0..PAD_PARENTS {
+            if let Some(par) = q.parents.get(p) {
+                s.pft[p] = par.finish as f32;
+                s.pc[p] = par.data as f32;
+                for j in 0..PAD_PROCS {
+                    let idx = p * PAD_PROCS + j;
+                    if j < k {
+                        s.comm[idx] = q.comm[p][j] as f32;
+                        s.mask[idx] = if par.proc == j { 0.0 } else { 1.0 };
+                    } else {
+                        s.comm[idx] = 0.0;
+                        s.mask[idx] = 0.0;
+                    }
+                }
+            } else {
+                s.pft[p] = 0.0;
+                s.pc[p] = 0.0;
+                for j in 0..PAD_PROCS {
+                    let idx = p * PAD_PROCS + j;
+                    s.comm[idx] = 0.0;
+                    s.mask[idx] = 0.0;
+                }
+            }
+        }
+        s.scalars[0] = q.work as f32;
+        s.scalars[1] = q.memory as f32;
+        s.scalars[2] = q.out_total as f32;
+        s.scalars[3] = (1.0 / q.bandwidth) as f32;
+        Ok(())
+    }
+
+    /// Raw padded scores (used by tests and benches).
+    pub fn score_padded(&self, q: &ScoreQuery) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.fill(q)?;
+        let s = self.scratch.borrow();
+        let outs = self.comp.run_f32(&[
+            (&s.ready, &[PAD_PROCS]),
+            (&s.speed, &[PAD_PROCS]),
+            (&s.avail, &[PAD_PROCS]),
+            (&s.pft, &[PAD_PARENTS]),
+            (&s.pc, &[PAD_PARENTS]),
+            (&s.comm, &[PAD_PARENTS, PAD_PROCS]),
+            (&s.mask, &[PAD_PARENTS, PAD_PROCS]),
+            (&s.scalars, &[4]),
+        ])?;
+        anyhow::ensure!(outs.len() == 2, "expected (ft, res) outputs");
+        Ok((outs[0].clone(), outs[1].clone()))
+    }
+}
+
+impl EftScorer for XlaScorer {
+    fn score(&self, q: &ScoreQuery) -> (Vec<f64>, Vec<f64>) {
+        let k = q.proc_ready.len();
+        match self.score_padded(q) {
+            Ok((ft, res)) => (
+                ft[..k].iter().map(|&x| x as f64).collect(),
+                res[..k].iter().map(|&x| x as f64).collect(),
+            ),
+            Err(e) => {
+                // Defensive: fall back to the native scorer rather than
+                // aborting a schedule mid-flight.
+                log::warn!("XLA scorer failed ({e}); falling back to native");
+                NativeScorer.score(q)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::engine::ParentInfo;
+
+    fn query() -> ScoreQuery {
+        ScoreQuery {
+            proc_ready: vec![0.0, 5.0, 2.0],
+            speeds: vec![1.0, 2.0, 4.0],
+            avail_mem: vec![100.0, 50.0, 10.0],
+            parents: vec![
+                ParentInfo { finish: 3.0, data: 10.0, proc: 0 },
+                ParentInfo { finish: 4.0, data: 20.0, proc: 1 },
+            ],
+            comm: vec![vec![0.0, 1.0, 0.0], vec![2.0, 0.0, 6.0]],
+            work: 8.0,
+            memory: 30.0,
+            out_total: 5.0,
+            bandwidth: 10.0,
+        }
+    }
+
+    #[test]
+    fn native_scorer_matches_hand_computation() {
+        let q = query();
+        let (ft, res) = NativeScorer.score(&q);
+        // Proc 0: remote parent 1 (on proc 1): arrival = max(4, 2) + 2 = 6;
+        // st = max(0, 6) = 6; ft = 6 + 8/1 = 14.
+        assert!((ft[0] - 14.0).abs() < 1e-9);
+        // res[0] = 100 - 30 - 20 - 5 = 45.
+        assert!((res[0] - 45.0).abs() < 1e-9);
+        // Proc 1: remote parent 0 (on 0): arrival = max(3, 1) + 1 = 4;
+        // st = max(5, 4) = 5; ft = 5 + 4 = 9. res = 50 - 30 - 10 - 5 = 5.
+        assert!((ft[1] - 9.0).abs() < 1e-9);
+        assert!((res[1] - 5.0).abs() < 1e-9);
+        // Proc 2: both parents remote: arrivals max(3,0)+1=4, max(4,6)+2=8;
+        // st = max(2, 8) = 8; ft = 8 + 2 = 10. res = 10 - 30 - 30 - 5 = -55.
+        assert!((ft[2] - 10.0).abs() < 1e-9);
+        assert!((res[2] + 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn xla_scorer_parity_if_artifact_built() {
+        let path = crate::runtime::artifact_path("eft_score.hlo.txt");
+        if !path.exists() {
+            eprintln!("artifact missing; skipping XLA parity test");
+            return;
+        }
+        let xs = XlaScorer::load(&path).unwrap();
+        let q = query();
+        let (nft, nres) = NativeScorer.score(&q);
+        let (xft, xres) = xs.score(&q);
+        for j in 0..3 {
+            assert!((nft[j] - xft[j]).abs() < 1e-3, "ft[{j}]: {} vs {}", nft[j], xft[j]);
+            assert!((nres[j] - xres[j]).abs() < 1e-3, "res[{j}]");
+        }
+    }
+}

@@ -1,0 +1,744 @@
+//! Phase 2 of HEFT/HEFTM: greedy task-to-processor assignment with memory
+//! bookkeeping and eviction (paper §IV-A, §IV-B).
+//!
+//! The [`Engine`] walks tasks in rank order. For each task it *tentatively*
+//! assigns it to every processor (Steps 1–3 of §IV-B), keeps the
+//! assignment minimizing the finish time, and *commits* it, updating the
+//! platform state (ready times, memories, pending-data sets, channel
+//! ready times).
+//!
+//! The same engine serves four roles:
+//! - the HEFT baseline (`memory_aware = false`): memory feasibility is
+//!   *tracked* but never enforced, so the schedule may overcommit —
+//!   exactly the paper's invalid-schedule measurements (Figs 1, 3);
+//! - the HEFTM variants (`memory_aware = true`): Steps 1–3 enforced;
+//! - suffix rescheduling in the dynamic scenario (constructed via
+//!   [`Engine::resume`] from a mid-execution platform state);
+//! - as the oracle inside [`super::retrace`].
+
+use super::state::{EvictionPolicy, PlatformState};
+use super::Algorithm;
+use crate::platform::{Cluster, ProcId};
+use crate::workflow::{EdgeId, TaskId, Workflow};
+
+/// One parent's data for batched EFT scoring.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParentInfo {
+    pub finish: f64,
+    pub data: f64,
+    pub proc: ProcId,
+}
+
+/// Inputs for scoring one task against every processor at once (the
+/// engine's inner loop, offloadable to the XLA runtime — see
+/// `runtime::scorer`).
+#[derive(Debug, Clone)]
+pub struct ScoreQuery {
+    pub proc_ready: Vec<f64>,
+    pub speeds: Vec<f64>,
+    pub avail_mem: Vec<f64>,
+    pub parents: Vec<ParentInfo>,
+    /// Per parent: channel ready times `rt_{proc(u), j}` for all `j`.
+    pub comm: Vec<Vec<f64>>,
+    pub work: f64,
+    pub memory: f64,
+    pub out_total: f64,
+    pub bandwidth: f64,
+}
+
+/// Batched EFT scorer: finish times and memory residuals per processor.
+/// Implemented natively (`runtime::scorer::NativeScorer`) and via the AOT
+/// XLA artifact (`runtime::scorer::XlaScorer`).
+pub trait EftScorer {
+    fn score(&self, q: &ScoreQuery) -> (Vec<f64>, Vec<f64>);
+}
+
+/// Committed placement of one task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSchedule {
+    pub proc: ProcId,
+    pub start: f64,
+    pub finish: f64,
+    /// Files evicted from memory into the comm buffer to fit this task.
+    pub evicted: Vec<EdgeId>,
+    /// Whether `Res ≥ 0` held *without* eviction (needed by retrace §V).
+    pub res_nonneg: bool,
+}
+
+/// Why a schedule is invalid.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Failure {
+    /// No processor could satisfy the memory constraint for `task`.
+    OutOfMemory { task: TaskId },
+    /// Memory constraint violated on the chosen processor (baseline HEFT
+    /// tracking: `Res < 0` at `task` on `proc`).
+    Overcommit { task: TaskId, proc: ProcId },
+}
+
+/// A complete (possibly invalid) schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub algorithm: Algorithm,
+    pub policy: EvictionPolicy,
+    /// The rank order used for assignment (topological).
+    pub rank_order: Vec<TaskId>,
+    /// Per-task placements (indexed by task id).
+    pub tasks: Vec<TaskSchedule>,
+    /// True iff every task was placed without violating memory/buffers.
+    pub valid: bool,
+    /// All recorded violations (empty iff `valid`).
+    pub failures: Vec<Failure>,
+    /// Total execution time (max finish time).
+    pub makespan: f64,
+    /// Per-processor peak memory usage as a fraction of its capacity
+    /// (can exceed 1.0 for the HEFT baseline).
+    pub mem_peak_frac: Vec<f64>,
+}
+
+impl Schedule {
+    /// Mean peak memory usage over processors that received ≥1 task.
+    pub fn mean_mem_usage(&self) -> f64 {
+        let mut used: Vec<bool> = vec![false; self.mem_peak_frac.len()];
+        for t in &self.tasks {
+            used[t.proc] = true;
+        }
+        let (sum, cnt) = self
+            .mem_peak_frac
+            .iter()
+            .zip(&used)
+            .filter(|(_, &u)| u)
+            .fold((0.0, 0usize), |(s, c), (f, _)| (s + f, c + 1));
+        if cnt == 0 {
+            0.0
+        } else {
+            sum / cnt as f64
+        }
+    }
+
+    /// Number of distinct processors used.
+    pub fn procs_used(&self) -> usize {
+        let mut used: Vec<bool> = vec![false; self.mem_peak_frac.len()];
+        for t in &self.tasks {
+            used[t.proc] = true;
+        }
+        used.iter().filter(|&&u| u).count()
+    }
+}
+
+/// Result of a tentative assignment (Steps 1–3).
+#[derive(Debug, Clone)]
+struct Tentative {
+    start: f64,
+    finish: f64,
+    evictions: Vec<(EdgeId, f64)>,
+    /// `Res` before eviction (memory slack; negative → eviction needed).
+    res: f64,
+    /// Absolute memory usage during execution, bytes (post-eviction).
+    used: f64,
+}
+
+/// The assignment engine. See module docs.
+pub struct Engine<'a> {
+    wf: &'a Workflow,
+    cluster: &'a Cluster,
+    pub state: PlatformState,
+    memory_aware: bool,
+    policy: EvictionPolicy,
+    algorithm: Algorithm,
+    /// Placements (None = not yet assigned).
+    placed: Vec<Option<TaskSchedule>>,
+    failures: Vec<Failure>,
+    /// Optional batched scorer: pre-orders processors by finish time so
+    /// the exact per-processor check can stop at the first feasible one.
+    scorer: Option<&'a dyn EftScorer>,
+    /// Per-processor cache of eviction candidates sorted by policy.
+    /// `PD_j` only changes on commits, while tentative assignment consults
+    /// the sorted view once per (task, processor) — caching turns
+    /// O(tasks · procs · |PD| log |PD|) sorting into O(commits · |PD| log |PD|).
+    evict_cache: std::cell::RefCell<Vec<Option<std::rc::Rc<Vec<(EdgeId, f64)>>>>>,
+}
+
+impl<'a> Engine<'a> {
+    /// Fresh engine over an idle platform.
+    pub fn new(
+        wf: &'a Workflow,
+        cluster: &'a Cluster,
+        algorithm: Algorithm,
+        policy: EvictionPolicy,
+    ) -> Engine<'a> {
+        Engine {
+            wf,
+            cluster,
+            state: PlatformState::new(cluster),
+            memory_aware: algorithm.memory_aware(),
+            policy,
+            algorithm,
+            placed: vec![None; wf.num_tasks()],
+            failures: Vec::new(),
+            scorer: None,
+            evict_cache: std::cell::RefCell::new(vec![None; cluster.len()]),
+        }
+    }
+
+    /// Attach a batched EFT scorer (e.g. the XLA/PJRT artifact).
+    pub fn with_scorer(mut self, scorer: &'a dyn EftScorer) -> Engine<'a> {
+        self.scorer = Some(scorer);
+        self
+    }
+
+    /// Resume from a mid-execution platform state with some tasks already
+    /// placed (dynamic rescheduling, §V). `fixed` entries are kept as-is.
+    pub fn resume(
+        wf: &'a Workflow,
+        cluster: &'a Cluster,
+        algorithm: Algorithm,
+        policy: EvictionPolicy,
+        state: PlatformState,
+        fixed: Vec<Option<TaskSchedule>>,
+    ) -> Engine<'a> {
+        assert_eq!(fixed.len(), wf.num_tasks());
+        Engine {
+            wf,
+            cluster,
+            state,
+            memory_aware: algorithm.memory_aware(),
+            policy,
+            algorithm,
+            placed: fixed,
+            failures: Vec::new(),
+            scorer: None,
+            evict_cache: std::cell::RefCell::new(vec![None; cluster.len()]),
+        }
+    }
+
+    /// Sorted eviction candidates of `p_j` (cached until the next commit
+    /// touching `p_j`).
+    fn sorted_candidates(&self, j: ProcId) -> std::rc::Rc<Vec<(EdgeId, f64)>> {
+        let mut cache = self.evict_cache.borrow_mut();
+        if let Some(c) = &cache[j] {
+            return c.clone();
+        }
+        let c = std::rc::Rc::new(self.state.procs[j].pending.candidates(self.policy));
+        cache[j] = Some(c.clone());
+        c
+    }
+
+    /// Build the batched-scoring query for task `v` (see [`ScoreQuery`]).
+    fn score_query(&self, v: TaskId) -> ScoreQuery {
+        let k = self.cluster.len();
+        let parents: Vec<ParentInfo> = self
+            .wf
+            .in_edge_ids(v)
+            .iter()
+            .map(|&e| {
+                let edge = self.wf.edge(e);
+                ParentInfo {
+                    finish: self.ft(edge.src),
+                    data: edge.data,
+                    proc: self.proc_of(edge.src),
+                }
+            })
+            .collect();
+        let comm: Vec<Vec<f64>> = parents
+            .iter()
+            .map(|p| (0..k).map(|j| self.state.comm_ready(p.proc, j)).collect())
+            .collect();
+        ScoreQuery {
+            proc_ready: self.state.procs.iter().map(|p| p.ready_time).collect(),
+            speeds: self.cluster.processors.iter().map(|p| p.speed).collect(),
+            avail_mem: self.state.procs.iter().map(|p| p.avail_mem).collect(),
+            parents,
+            comm,
+            work: self.wf.task(v).work,
+            memory: self.wf.task(v).memory,
+            out_total: self.wf.total_out_data(v),
+            bandwidth: self.cluster.bandwidth,
+        }
+    }
+
+    /// Current placements (None = not yet assigned).
+    pub fn placements(&self) -> &[Option<TaskSchedule>] {
+        &self.placed
+    }
+
+    /// Finish time of an already-placed task (must exist).
+    fn ft(&self, u: TaskId) -> f64 {
+        self.placed[u].as_ref().expect("rank order is topological").finish
+    }
+
+    fn proc_of(&self, u: TaskId) -> ProcId {
+        self.placed[u].as_ref().expect("rank order is topological").proc
+    }
+
+    /// Steps 1–3 (§IV-B): tentatively assign `v` to `p_j`.
+    /// Returns `None` if the placement is invalid (memory or buffer).
+    fn tentative(&self, v: TaskId, j: ProcId) -> Option<Tentative> {
+        let ps = &self.state.procs[j];
+        let mem_j = self.cluster.proc(j).memory;
+
+        // Partition v's inputs into same-proc and remote.
+        let mut local_in_pending = 0.0f64; // v's inputs resident in PD_j
+        let mut remote_in = 0.0f64;
+        for &e in self.wf.in_edge_ids(v) {
+            let edge = self.wf.edge(e);
+            if self.proc_of(edge.src) == j {
+                // Step 1: the file must still be pending in p_j's memory.
+                if self.memory_aware && !ps.pending.contains(e) {
+                    return None;
+                }
+                local_in_pending += edge.data;
+            } else {
+                remote_in += edge.data;
+            }
+        }
+        let out: f64 = self.wf.total_out_data(v);
+        let m_v = self.wf.task(v).memory;
+
+        // Step 2: memory residual.
+        let res = ps.avail_mem - m_v - remote_in - out;
+        let mut evictions: Vec<(EdgeId, f64)> = Vec::new();
+        let mut avail_after_evict = ps.avail_mem;
+        if res < 0.0 {
+            if self.memory_aware {
+                // Fast infeasibility bounds before touching the sorted
+                // candidate list: the evictable volume excludes v's own
+                // inputs, and whatever is evicted must fit in the buffer.
+                let need = -res;
+                let max_evictable = ps.pending.total_size() - local_in_pending;
+                if need > max_evictable + 1e-9 || need > ps.avail_buf + 1e-9 {
+                    return None;
+                }
+                // Evict pending files (largest/smallest first) until the
+                // deficit is covered; the task's own inputs are not
+                // candidates, and everything must fit in the comm buffer.
+                let mut need = need;
+                let mut buf_left = ps.avail_buf;
+                let inputs: Vec<EdgeId> = self
+                    .wf
+                    .in_edge_ids(v)
+                    .iter()
+                    .copied()
+                    .filter(|&e| self.proc_of(self.wf.edge(e).src) == j)
+                    .collect();
+                for &(e, size) in self.sorted_candidates(j).iter() {
+                    if need <= 0.0 {
+                        break;
+                    }
+                    if inputs.contains(&e) {
+                        continue;
+                    }
+                    if size > buf_left {
+                        // Buffer exceeded while evicting: invalid (§IV-B).
+                        return None;
+                    }
+                    buf_left -= size;
+                    need -= size;
+                    avail_after_evict += size;
+                    evictions.push((e, size));
+                }
+                if need > 0.0 {
+                    return None; // not enough evictable data
+                }
+            }
+            // Baseline HEFT: tracked but not enforced.
+        }
+
+        // Step 3: start/finish times.
+        let mut st = ps.ready_time;
+        for &e in self.wf.in_edge_ids(v) {
+            let edge = self.wf.edge(e);
+            let pu = self.proc_of(edge.src);
+            if pu != j {
+                let arrival =
+                    self.ft(edge.src).max(self.state.comm_ready(pu, j)) + edge.data / self.cluster.bandwidth;
+                st = st.max(arrival);
+            }
+        }
+        let ft = st + self.cluster.exec_time(self.wf.task(v).work, j);
+        let used = mem_j - (avail_after_evict - m_v - remote_in - out);
+        Some(Tentative { start: st, finish: ft, evictions, res, used })
+    }
+
+    /// Commit `v` on `j` (the paper's "assignment of task v" bullets).
+    fn commit(&mut self, v: TaskId, j: ProcId, t: Tentative) {
+        // Pending sets change below: drop the sorted-candidate caches of
+        // every touched processor (j plus all remote parents' hosts).
+        {
+            let mut cache = self.evict_cache.borrow_mut();
+            cache[j] = None;
+            for &e in self.wf.in_edge_ids(v) {
+                let pu = self.proc_of(self.wf.edge(e).src);
+                cache[pu] = None;
+            }
+        }
+        // 1. Evict files into the communication buffer.
+        let mut evicted_ids = Vec::with_capacity(t.evictions.len());
+        for &(e, size) in &t.evictions {
+            let removed = self.state.procs[j].pending.remove(e);
+            debug_assert_eq!(removed, Some(size));
+            self.state.procs[j].avail_mem += size;
+            self.state.procs[j].buffered.insert(e, size);
+            self.state.procs[j].avail_buf -= size;
+            evicted_ids.push(e);
+        }
+
+        // 2. Record the transient usage high-water mark.
+        self.state.note_usage(j, t.used);
+
+        // 3. Inputs: same-proc files leave PD_j (freed once v completes);
+        //    remote files are consumed on their producer's side, and the
+        //    channel ready time advances.
+        for &e in self.wf.in_edge_ids(v) {
+            let edge = self.wf.edge(e);
+            let pu = self.proc_of(edge.src);
+            if pu == j {
+                if let Some(size) = self.state.procs[j].pending.remove(e) {
+                    self.state.procs[j].avail_mem += size;
+                }
+            } else {
+                self.state.consume_remote(pu, e);
+                self.state.push_comm(pu, j, edge.data / self.cluster.bandwidth);
+            }
+        }
+
+        // 4. Outputs join PD_j, reducing available memory.
+        for &e in self.wf.out_edge_ids(v) {
+            let size = self.wf.edge(e).data;
+            self.state.procs[j].pending.insert(e, size);
+            self.state.procs[j].avail_mem -= size;
+        }
+
+        // 5. Processor busy until v finishes.
+        self.state.procs[j].ready_time = t.finish;
+
+        self.placed[v] = Some(TaskSchedule {
+            proc: j,
+            start: t.start,
+            finish: t.finish,
+            evicted: evicted_ids,
+            res_nonneg: t.res >= 0.0,
+        });
+    }
+
+    /// Assign one task: try all processors, commit the best.
+    /// Returns false if no feasible processor existed (memory-aware mode);
+    /// in that case a memory-oblivious fallback placement is committed so
+    /// the (invalid) schedule is still complete for reporting.
+    pub fn assign(&mut self, v: TaskId) -> bool {
+        debug_assert!(self.placed[v].is_none());
+        let k = self.cluster.len();
+        let mut best: Option<(ProcId, Tentative)> = None;
+        if let Some(scorer) = self.scorer {
+            // Accelerated path: one batched scoring call orders the
+            // processors; the exact check stops at the first feasible one
+            // (the scores are the Step-3 finish times, so the first
+            // feasible processor in score order is the argmin).
+            let (ft, _res) = scorer.score(&self.score_query(v));
+            let mut order: Vec<ProcId> = (0..k).collect();
+            order.sort_by(|&a, &b| ft[a].partial_cmp(&ft[b]).unwrap_or(std::cmp::Ordering::Equal));
+            for j in order {
+                if let Some(t) = self.tentative(v, j) {
+                    best = Some((j, t));
+                    break;
+                }
+            }
+        } else {
+            for j in 0..k {
+                if let Some(t) = self.tentative(v, j) {
+                    let better = match &best {
+                        None => true,
+                        Some((_, bt)) => t.finish < bt.finish,
+                    };
+                    if better {
+                        best = Some((j, t));
+                    }
+                }
+            }
+        }
+        match best {
+            Some((j, t)) => {
+                if t.res < 0.0 && !self.memory_aware {
+                    // Baseline HEFT exceeded the memory: record and go on.
+                    self.failures.push(Failure::Overcommit { task: v, proc: j });
+                }
+                self.commit(v, j, t);
+                true
+            }
+            None => {
+                // Memory-aware and no processor fits: invalid schedule.
+                self.failures.push(Failure::OutOfMemory { task: v });
+                // Fallback: place memory-obliviously to complete the
+                // schedule (reported makespans of invalid schedules).
+                let saved = self.memory_aware;
+                self.memory_aware = false;
+                let (mut bj, mut bt): (ProcId, Option<Tentative>) = (0, None);
+                for j in 0..k {
+                    if let Some(t) = self.tentative(v, j) {
+                        if bt.as_ref().is_none_or(|b| t.finish < b.finish) {
+                            bj = j;
+                            bt = Some(t);
+                        }
+                    }
+                }
+                self.memory_aware = saved;
+                let t = bt.expect("memory-oblivious tentative always succeeds");
+                self.commit(v, bj, t);
+                false
+            }
+        }
+    }
+
+    /// Force `v` onto processor `j` (schedule retracing, §V). With
+    /// `allow_new_eviction = false`, a placement that *newly* requires
+    /// eviction (`Res < 0`) is rejected — the paper's rule that an
+    /// originally-nonnegative residual must stay nonnegative.
+    /// Returns the committed placement or the failure.
+    pub fn place_forced(
+        &mut self,
+        v: TaskId,
+        j: ProcId,
+        allow_new_eviction: bool,
+    ) -> Result<TaskSchedule, Failure> {
+        match self.tentative(v, j) {
+            Some(t) if t.res >= 0.0 || allow_new_eviction => {
+                self.commit(v, j, t);
+                Ok(self.placed[v].clone().unwrap())
+            }
+            _ => Err(Failure::OutOfMemory { task: v }),
+        }
+    }
+
+    /// Run phase 2 over the given rank order and produce the schedule.
+    pub fn run(mut self, order: &[TaskId]) -> Schedule {
+        debug_assert!(self.wf.is_topological_order(order));
+        for &v in order {
+            if self.placed[v].is_none() {
+                self.assign(v);
+            }
+        }
+        self.into_schedule(order.to_vec())
+    }
+
+    /// Finalize into a [`Schedule`].
+    pub fn into_schedule(self, rank_order: Vec<TaskId>) -> Schedule {
+        let tasks: Vec<TaskSchedule> = self
+            .placed
+            .into_iter()
+            .map(|p| p.expect("all tasks placed"))
+            .collect();
+        let makespan = tasks.iter().map(|t| t.finish).fold(0.0, f64::max);
+        let mem_peak_frac = self
+            .state
+            .procs
+            .iter()
+            .enumerate()
+            .map(|(j, ps)| ps.peak_used / self.cluster.proc(j).memory)
+            .collect();
+        Schedule {
+            algorithm: self.algorithm,
+            policy: self.policy,
+            rank_order,
+            valid: self.failures.is_empty(),
+            failures: self.failures,
+            makespan,
+            tasks,
+            mem_peak_frac,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::{small_cluster, GB};
+    use crate::platform::Processor;
+    use crate::scheduler::{compute_schedule, Algorithm};
+    use crate::workflow::WorkflowBuilder;
+
+    fn two_proc_cluster(mem0: f64, mem1: f64, buf_factor: f64) -> Cluster {
+        Cluster {
+            name: "2p".into(),
+            processors: vec![
+                Processor {
+                    name: "p0".into(),
+                    kind: "a".into(),
+                    speed: 1.0,
+                    memory: mem0,
+                    comm_buffer: buf_factor * mem0,
+                },
+                Processor {
+                    name: "p1".into(),
+                    kind: "b".into(),
+                    speed: 2.0,
+                    memory: mem1,
+                    comm_buffer: buf_factor * mem1,
+                },
+            ],
+            bandwidth: 10.0,
+        }
+    }
+
+    fn chain3(work: f64, mem: f64, data: f64) -> Workflow {
+        let mut b = WorkflowBuilder::new("c3");
+        let a = b.task("a", "t", work, mem);
+        let c = b.task("c", "t", work, mem);
+        let d = b.task("d", "t", work, mem);
+        b.edge(a, c, data);
+        b.edge(c, d, data);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn heft_prefers_fast_processor() {
+        let cluster = two_proc_cluster(1e9, 1e9, 10.0);
+        let wf = chain3(10.0, 100.0, 1.0);
+        let s = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        // All three tasks on the fast processor (no comm needed, speed 2).
+        assert!(s.tasks.iter().all(|t| t.proc == 1), "{:?}", s.tasks);
+        assert_eq!(s.makespan, 15.0); // 3 × 10/2
+    }
+
+    #[test]
+    fn dependence_times_respected() {
+        let cluster = two_proc_cluster(1e9, 1e9, 10.0);
+        let wf = chain3(10.0, 100.0, 1.0);
+        for algo in Algorithm::all() {
+            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            // Child starts after parent finishes (+ comm if cross-proc).
+            for e in wf.edges() {
+                let (ts, td) = (&s.tasks[e.src], &s.tasks[e.dst]);
+                let comm = cluster.comm_time(e.data, ts.proc, td.proc);
+                assert!(
+                    td.start + 1e-9 >= ts.finish + comm,
+                    "{algo:?}: edge ({},{})",
+                    e.src,
+                    e.dst
+                );
+            }
+            // Processor exclusivity: tasks on one proc don't overlap.
+            let mut by_proc: std::collections::HashMap<usize, Vec<(f64, f64)>> =
+                Default::default();
+            for t in &s.tasks {
+                by_proc.entry(t.proc).or_default().push((t.start, t.finish));
+            }
+            for (_, mut iv) in by_proc {
+                iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for w in iv.windows(2) {
+                    assert!(w[0].1 <= w[1].0 + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heft_overcommits_and_is_flagged_invalid() {
+        // Tasks of 600 MB memory on processors with 1 GB: two concurrent
+        // outputs + task memory exceed capacity quickly.
+        let cluster = two_proc_cluster(1.0 * GB, 1.0 * GB, 10.0);
+        let mut b = WorkflowBuilder::new("heavy");
+        let src = b.task("src", "t", 1.0, 0.5 * GB);
+        for i in 0..6 {
+            let t = b.task(format!("x{i}"), "t", 10.0, 0.8 * GB);
+            b.edge(src, t, 0.3 * GB);
+        }
+        let wf = b.build().unwrap();
+        let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+        assert!(!heft.valid, "HEFT should overcommit");
+        assert!(heft.mem_peak_frac.iter().cloned().fold(0.0, f64::max) > 1.0);
+    }
+
+    #[test]
+    fn heftm_respects_memory_where_heft_fails() {
+        let cluster = two_proc_cluster(1.0 * GB, 1.0 * GB, 10.0);
+        let mut b = WorkflowBuilder::new("heavy");
+        let src = b.task("src", "t", 1.0, 0.5 * GB);
+        for i in 0..6 {
+            let t = b.task(format!("x{i}"), "t", 10.0, 0.8 * GB);
+            b.edge(src, t, 0.03 * GB);
+        }
+        let wf = b.build().unwrap();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(s.valid, "failures: {:?}", s.failures);
+        assert!(s.mem_peak_frac.iter().all(|&f| f <= 1.0 + 1e-9), "{:?}", s.mem_peak_frac);
+    }
+
+    #[test]
+    fn heftm_evicts_to_buffer_when_tight() {
+        // One processor; outputs accumulate; a later big task forces
+        // evicting an earlier task's output destined for... same proc —
+        // eviction would break Step 1, so instead build a case where the
+        // evicted file feeds a *remote* consumer.
+        let cluster = two_proc_cluster(1000.0, 10.0, 10.0); // p1 tiny memory
+        let mut b = WorkflowBuilder::new("evict");
+        // a produces a large file for c (contender for eviction) and a
+        // small one for d; then big task e must fit on p0.
+        let a = b.task("a", "t", 1.0, 100.0);
+        let c = b.task("c", "t", 100.0, 1.0); // will run late
+        let d = b.task("d", "t", 1.0, 10.0);
+        let e = b.task("e", "t", 1.0, 900.0); // forces eviction on p0
+        b.edge(a, c, 400.0);
+        b.edge(a, d, 10.0);
+        b.edge(d, e, 5.0);
+        let wf = b.build().unwrap();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        // Schedule must be valid; task e (id 3) must have evicted the
+        // 400-byte file if placed on p0 while it was still pending.
+        assert!(s.valid, "failures: {:?}", s.failures);
+        let total_evictions: usize = s.tasks.iter().map(|t| t.evicted.len()).sum();
+        // (e ends up wherever EFT is minimal; if on p0 with the 400-file
+        // still resident, an eviction is mandatory.)
+        if s.tasks[3].proc == 0 && s.tasks[1].proc != 0 {
+            assert!(total_evictions > 0);
+        }
+    }
+
+    #[test]
+    fn infeasible_task_marks_schedule_invalid() {
+        // Task memory exceeds every processor: even HEFTM cannot place it.
+        let cluster = two_proc_cluster(100.0, 100.0, 10.0);
+        let mut b = WorkflowBuilder::new("huge");
+        b.task("a", "t", 1.0, 500.0);
+        let wf = b.build().unwrap();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(!s.valid);
+        assert!(matches!(s.failures[0], Failure::OutOfMemory { task: 0 }));
+        // Fallback still placed it (schedule complete).
+        assert_eq!(s.tasks.len(), 1);
+    }
+
+    #[test]
+    fn makespan_monotone_under_memory_constraint() {
+        // HEFTM's makespan is ≥ HEFT's on the same instance (less freedom).
+        let cluster = small_cluster();
+        let model = crate::generator::models::chipseq();
+        let wf = crate::generator::expand(&model, 8).unwrap();
+        let data = crate::traces::HistoricalData::synthesize(
+            &crate::traces::task_types(&wf),
+            &crate::traces::TraceConfig::default(),
+            9,
+        );
+        let wf = crate::traces::bind_weights(&wf, &data, 1);
+        let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+        for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc] {
+            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            if s.valid {
+                assert!(
+                    s.makespan + 1e-6 >= heft.makespan * 0.999,
+                    "{algo:?}: {} vs {}",
+                    s.makespan,
+                    heft.makespan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_stats_helpers() {
+        let cluster = two_proc_cluster(1e9, 1e9, 10.0);
+        let wf = chain3(10.0, 100.0, 1.0);
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(s.procs_used() >= 1);
+        assert!(s.mean_mem_usage() >= 0.0);
+    }
+}

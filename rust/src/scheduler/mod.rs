@@ -1,0 +1,90 @@
+//! Scheduling heuristics (paper §IV): the memory-oblivious HEFT baseline
+//! and the three memory-aware variants HEFTM-BL, HEFTM-BLC, HEFTM-MM.
+//!
+//! All four share the two-phase list-scheduling skeleton: (1) compute a
+//! priority order over tasks ([`ranking`]), (2) greedily assign each task
+//! to the processor minimizing its finish time ([`engine`]). The HEFTM
+//! variants additionally enforce the per-processor memory constraint,
+//! evicting pending files into communication buffers when needed
+//! ([`state`]), and may declare a placement infeasible.
+//!
+//! [`retrace`] re-validates a committed schedule after task parameters
+//! deviate (paper §V).
+
+pub mod engine;
+pub mod ranking;
+pub mod retrace;
+pub mod state;
+
+pub use engine::{Engine, Failure, Schedule, TaskSchedule};
+pub use state::{EvictionPolicy, PlatformState};
+
+use crate::platform::Cluster;
+use crate::workflow::{TaskId, Workflow};
+
+/// The four scheduling algorithms of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Baseline HEFT [30]: memory-oblivious; may produce invalid schedules.
+    Heft,
+    /// HEFTM-BL: memory-aware, bottom-level ranking.
+    HeftmBl,
+    /// HEFTM-BLC: memory-aware, bottom-level-with-communication ranking.
+    HeftmBlc,
+    /// HEFTM-MM: memory-aware, MemDag minimum-memory traversal ranking.
+    HeftmMm,
+}
+
+impl Algorithm {
+    pub fn memory_aware(self) -> bool {
+        !matches!(self, Algorithm::Heft)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Algorithm::Heft => "HEFT",
+            Algorithm::HeftmBl => "HEFTM-BL",
+            Algorithm::HeftmBlc => "HEFTM-BLC",
+            Algorithm::HeftmMm => "HEFTM-MM",
+        }
+    }
+
+    pub fn all() -> [Algorithm; 4] {
+        [Algorithm::Heft, Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm]
+    }
+
+    /// Compute this algorithm's rank order (phase 1).
+    pub fn rank_order(self, wf: &Workflow, cluster: &Cluster) -> Vec<TaskId> {
+        match self {
+            Algorithm::Heft | Algorithm::HeftmBl => ranking::rank_bl(wf, cluster),
+            Algorithm::HeftmBlc => ranking::rank_blc(wf, cluster),
+            Algorithm::HeftmMm => ranking::rank_mm(wf),
+        }
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "heft" => Ok(Algorithm::Heft),
+            "heftm-bl" | "bl" => Ok(Algorithm::HeftmBl),
+            "heftm-blc" | "blc" => Ok(Algorithm::HeftmBlc),
+            "heftm-mm" | "mm" => Ok(Algorithm::HeftmMm),
+            other => anyhow::bail!(
+                "unknown algorithm `{other}` (expected heft, heftm-bl, heftm-blc, heftm-mm)"
+            ),
+        }
+    }
+}
+
+/// Compute a full static schedule (phases 1 + 2).
+pub fn compute_schedule(
+    wf: &Workflow,
+    cluster: &Cluster,
+    algo: Algorithm,
+    policy: EvictionPolicy,
+) -> Schedule {
+    let order = algo.rank_order(wf, cluster);
+    Engine::new(wf, cluster, algo, policy).run(&order)
+}

@@ -1,0 +1,206 @@
+//! Schedule retracing (paper §V): assess the impact of reported parameter
+//! changes on an existing schedule *without* re-deciding placements.
+//!
+//! Tasks are walked in the original rank order (topological). For each
+//! task the memory residual `Res` is re-evaluated on its committed
+//! processor under the updated parameters:
+//!
+//! - a task whose original placement needed no eviction (`Res ≥ 0`) must
+//!   still satisfy `Res ≥ 0` — new evictions could invalidate later tasks;
+//! - a task that originally evicted may evict again, but the files must
+//!   still fit into the communication buffer;
+//! - start/finish times are recomputed (Step 3) with the updated execution
+//!   times and channel ready times.
+//!
+//! If a processor hosting tasks was lost, the schedule is invalid
+//! immediately.
+
+use super::engine::{Engine, Failure, Schedule, TaskSchedule};
+use super::state::EvictionPolicy;
+use crate::platform::{Cluster, ProcId};
+use crate::workflow::{TaskId, Workflow};
+
+/// Outcome of retracing a schedule against updated task parameters.
+#[derive(Debug, Clone)]
+pub struct RetraceResult {
+    /// Whether the schedule survives the deviations.
+    pub valid: bool,
+    /// First violation, if any.
+    pub failure: Option<Failure>,
+    /// Task id at which retracing stopped (first violation).
+    pub failed_task: Option<TaskId>,
+    /// Updated placements (complete only if `valid`).
+    pub tasks: Vec<Option<TaskSchedule>>,
+    /// Updated makespan over the retraced prefix.
+    pub makespan: f64,
+}
+
+/// Retrace `schedule` against the (deviated) workflow `wf`.
+///
+/// `wf` must have the same DAG structure as the workflow the schedule was
+/// computed from; only the weights (`w`, `m`, `c`) may differ.
+/// `lost_procs` lists processors that terminated since scheduling.
+pub fn retrace(
+    wf: &Workflow,
+    cluster: &Cluster,
+    schedule: &Schedule,
+    policy: EvictionPolicy,
+    lost_procs: &[ProcId],
+) -> RetraceResult {
+    // Processor loss check (§V): any assigned task on a lost processor
+    // invalidates the schedule outright.
+    if !lost_procs.is_empty() {
+        for (v, t) in schedule.tasks.iter().enumerate() {
+            if lost_procs.contains(&t.proc) {
+                return RetraceResult {
+                    valid: false,
+                    failure: Some(Failure::OutOfMemory { task: v }),
+                    failed_task: Some(v),
+                    tasks: vec![None; wf.num_tasks()],
+                    makespan: 0.0,
+                };
+            }
+        }
+    }
+
+    let mut engine = Engine::new(wf, cluster, schedule.algorithm, policy);
+    let mut makespan = 0.0f64;
+    for &v in &schedule.rank_order {
+        let orig = &schedule.tasks[v];
+        // Paper rule: originally-nonnegative residual must stay so.
+        match engine.place_forced(v, orig.proc, !orig.res_nonneg) {
+            Ok(t) => makespan = makespan.max(t.finish),
+            Err(f) => {
+                return RetraceResult {
+                    valid: false,
+                    failure: Some(f),
+                    failed_task: Some(v),
+                    tasks: engine.placements().to_vec(),
+                    makespan,
+                };
+            }
+        }
+    }
+    RetraceResult {
+        valid: true,
+        failure: None,
+        failed_task: None,
+        tasks: engine.placements().to_vec(),
+        makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::small_cluster;
+    use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+    use crate::workflow::{Workflow, WorkflowBuilder};
+
+    fn sample_wf() -> Workflow {
+        let model = crate::generator::models::atacseq();
+        let wf = crate::generator::expand(&model, 6).unwrap();
+        let data = crate::traces::HistoricalData::synthesize(
+            &crate::traces::task_types(&wf),
+            &crate::traces::TraceConfig::default(),
+            3,
+        );
+        crate::traces::bind_weights(&wf, &data, 1)
+    }
+
+    /// Scale all task works by `f` (structure preserved).
+    fn scale_works(wf: &Workflow, f: f64) -> Workflow {
+        let mut b = WorkflowBuilder::new(&wf.name);
+        for t in wf.tasks() {
+            b.task(&t.name, &t.task_type, t.work * f, t.memory);
+        }
+        for e in wf.edges() {
+            b.edge(e.src, e.dst, e.data);
+        }
+        b.build().unwrap()
+    }
+
+    /// Scale all task memories by `f`.
+    fn scale_mems(wf: &Workflow, f: f64) -> Workflow {
+        let mut b = WorkflowBuilder::new(&wf.name);
+        for t in wf.tasks() {
+            b.task(&t.name, &t.task_type, t.work, t.memory * f);
+        }
+        for e in wf.edges() {
+            b.edge(e.src, e.dst, e.data);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn identity_retrace_reproduces_schedule() {
+        let wf = sample_wf();
+        let cluster = small_cluster();
+        for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm] {
+            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            assert!(s.valid, "{algo:?}");
+            let r = retrace(&wf, &cluster, &s, EvictionPolicy::LargestFirst, &[]);
+            assert!(r.valid, "{algo:?}: {:?}", r.failure);
+            assert!((r.makespan - s.makespan).abs() < 1e-6 * s.makespan.max(1.0));
+            for (v, t) in s.tasks.iter().enumerate() {
+                let rt = r.tasks[v].as_ref().unwrap();
+                assert_eq!(rt.proc, t.proc);
+                assert!((rt.finish - t.finish).abs() < 1e-9 * t.finish.max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn longer_tasks_delay_makespan_but_stay_valid() {
+        let wf = sample_wf();
+        let cluster = small_cluster();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        let slower = scale_works(&wf, 1.5);
+        let r = retrace(&slower, &cluster, &s, EvictionPolicy::LargestFirst, &[]);
+        assert!(r.valid, "{:?}", r.failure);
+        assert!(r.makespan > s.makespan);
+    }
+
+    #[test]
+    fn memory_blowup_invalidates() {
+        let wf = sample_wf();
+        let cluster = small_cluster();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        // 50× memory cannot fit anywhere.
+        let heavy = scale_mems(&wf, 50.0);
+        let r = retrace(&heavy, &cluster, &s, EvictionPolicy::LargestFirst, &[]);
+        assert!(!r.valid);
+        assert!(r.failed_task.is_some());
+    }
+
+    #[test]
+    fn lost_processor_invalidates() {
+        let wf = sample_wf();
+        let cluster = small_cluster();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let used_proc = s.tasks[0].proc;
+        let r = retrace(&wf, &cluster, &s, EvictionPolicy::LargestFirst, &[used_proc]);
+        assert!(!r.valid);
+        // A processor nobody uses does not invalidate.
+        let unused: Vec<usize> =
+            (0..cluster.len()).filter(|j| s.tasks.iter().all(|t| t.proc != *j)).collect();
+        if let Some(&j) = unused.first() {
+            let r2 = retrace(&wf, &cluster, &s, EvictionPolicy::LargestFirst, &[j]);
+            assert!(r2.valid);
+        }
+    }
+
+    #[test]
+    fn small_deviation_usually_survives() {
+        let wf = sample_wf();
+        let cluster = small_cluster();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        // ±3% memory deviation: plenty of slack on the default-ish cluster.
+        let wobble = scale_mems(&wf, 1.03);
+        let r = retrace(&wobble, &cluster, &s, EvictionPolicy::LargestFirst, &[]);
+        assert!(r.valid, "{:?}", r.failure);
+    }
+}

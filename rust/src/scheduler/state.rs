@@ -1,0 +1,251 @@
+//! Mutable platform state used during schedule construction (§III-B).
+//!
+//! Tracks, per processor `p_j`: the ready time `rt_j`, available memory
+//! `availM_j`, available communication-buffer space `availC_j`, and the
+//! pending-data set `PD_j` (files produced on `p_j` and still resident in
+//! its memory). Additionally the pairwise communication-channel ready
+//! times `rt_{j,j'}` and the set of files evicted into each processor's
+//! communication buffer.
+//!
+//! Files are identified by their [`EdgeId`]: each edge `(u, v)` is one
+//! file of size `c_{u,v}`.
+
+use crate::platform::{Cluster, ProcId};
+use crate::workflow::EdgeId;
+use std::collections::HashMap;
+
+/// Pending-data set `PD_j`: files resident in a processor's memory.
+#[derive(Debug, Clone, Default)]
+pub struct PendingSet {
+    files: HashMap<EdgeId, f64>,
+    total: f64,
+}
+
+impl PendingSet {
+    pub fn contains(&self, e: EdgeId) -> bool {
+        self.files.contains_key(&e)
+    }
+
+    /// Size of a pending file, if present.
+    pub fn get(&self, e: EdgeId) -> Option<f64> {
+        self.files.get(&e).copied()
+    }
+
+    pub fn insert(&mut self, e: EdgeId, size: f64) {
+        debug_assert!(!self.files.contains_key(&e), "file {e} already pending");
+        self.files.insert(e, size);
+        self.total += size;
+    }
+
+    /// Remove a file; returns its size if present.
+    pub fn remove(&mut self, e: EdgeId) -> Option<f64> {
+        let size = self.files.remove(&e)?;
+        self.total -= size;
+        Some(size)
+    }
+
+    pub fn total_size(&self) -> f64 {
+        self.total
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (EdgeId, f64)> + '_ {
+        self.files.iter().map(|(&e, &s)| (e, s))
+    }
+
+    /// Eviction candidates sorted by the given policy (deterministic:
+    /// size, then edge id).
+    pub fn candidates(&self, policy: EvictionPolicy) -> Vec<(EdgeId, f64)> {
+        let mut v: Vec<(EdgeId, f64)> = self.files.iter().map(|(&e, &s)| (e, s)).collect();
+        match policy {
+            EvictionPolicy::LargestFirst => {
+                v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)))
+            }
+            EvictionPolicy::SmallestFirst => {
+                v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)))
+            }
+        }
+        v
+    }
+}
+
+/// Order in which pending files are evicted when memory is short (§IV-B
+/// Step 2). The paper evaluates both and reports no significant difference;
+/// `LargestFirst` is the default used in its experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionPolicy {
+    #[default]
+    LargestFirst,
+    SmallestFirst,
+}
+
+impl std::str::FromStr for EvictionPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "largest" | "largest-first" => Ok(EvictionPolicy::LargestFirst),
+            "smallest" | "smallest-first" => Ok(EvictionPolicy::SmallestFirst),
+            other => anyhow::bail!("unknown eviction policy `{other}`"),
+        }
+    }
+}
+
+/// Per-processor state.
+#[derive(Debug, Clone)]
+pub struct ProcState {
+    /// `rt_j`: time at which the processor becomes free.
+    pub ready_time: f64,
+    /// `availM_j`: free memory. May go negative only for the
+    /// memory-oblivious HEFT baseline (used to measure its overcommit).
+    pub avail_mem: f64,
+    /// `availC_j`: free communication-buffer space.
+    pub avail_buf: f64,
+    /// `PD_j`: files resident in memory (evictable unless needed).
+    pub pending: PendingSet,
+    /// Files evicted into the communication buffer.
+    pub buffered: PendingSet,
+    /// High-water mark of memory usage (bytes, includes transients).
+    pub peak_used: f64,
+}
+
+/// Full platform state: one [`ProcState`] per processor plus the pairwise
+/// communication-channel ready times `rt_{j,j'}` (row-major `k × k`).
+#[derive(Debug, Clone)]
+pub struct PlatformState {
+    pub procs: Vec<ProcState>,
+    comm_rt: Vec<f64>,
+    k: usize,
+}
+
+impl PlatformState {
+    /// Fresh state: empty memories, all ready times zero.
+    pub fn new(cluster: &Cluster) -> PlatformState {
+        let procs = cluster
+            .processors
+            .iter()
+            .map(|p| ProcState {
+                ready_time: 0.0,
+                avail_mem: p.memory,
+                avail_buf: p.comm_buffer,
+                pending: PendingSet::default(),
+                buffered: PendingSet::default(),
+                peak_used: 0.0,
+            })
+            .collect();
+        let k = cluster.len();
+        PlatformState { procs, comm_rt: vec![0.0; k * k], k }
+    }
+
+    pub fn num_procs(&self) -> usize {
+        self.k
+    }
+
+    /// `rt_{from,to}`: ready time of the communication channel.
+    pub fn comm_ready(&self, from: ProcId, to: ProcId) -> f64 {
+        self.comm_rt[from * self.k + to]
+    }
+
+    /// Advance the channel ready time by `dt` (paper: commit bullet 3).
+    pub fn push_comm(&mut self, from: ProcId, to: ProcId, dt: f64) {
+        self.comm_rt[from * self.k + to] += dt;
+    }
+
+    /// Record a transient memory high-water mark on `j`.
+    /// `used` is the absolute usage in bytes during a task's execution.
+    pub fn note_usage(&mut self, j: ProcId, used: f64) {
+        if used > self.procs[j].peak_used {
+            self.procs[j].peak_used = used;
+        }
+    }
+
+    /// Consume an input file that resides on the *producer's* processor
+    /// `j'` (memory or buffer), freeing the corresponding space (paper:
+    /// commit bullet 3). No-op if the file is not tracked (e.g. consumed
+    /// by a second same-pair edge — cannot happen with unique EdgeIds).
+    pub fn consume_remote(&mut self, producer_proc: ProcId, e: EdgeId) {
+        let ps = &mut self.procs[producer_proc];
+        if let Some(size) = ps.pending.remove(e) {
+            ps.avail_mem += size;
+        } else if let Some(size) = ps.buffered.remove(e) {
+            ps.avail_buf += size;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::small_cluster;
+
+    #[test]
+    fn pending_set_accounting() {
+        let mut pd = PendingSet::default();
+        pd.insert(0, 10.0);
+        pd.insert(1, 30.0);
+        pd.insert(2, 20.0);
+        assert_eq!(pd.total_size(), 60.0);
+        assert!(pd.contains(1));
+        assert_eq!(pd.remove(1), Some(30.0));
+        assert_eq!(pd.remove(1), None);
+        assert_eq!(pd.total_size(), 30.0);
+        assert_eq!(pd.len(), 2);
+    }
+
+    #[test]
+    fn eviction_candidate_order() {
+        let mut pd = PendingSet::default();
+        pd.insert(0, 10.0);
+        pd.insert(1, 30.0);
+        pd.insert(2, 20.0);
+        let largest = pd.candidates(EvictionPolicy::LargestFirst);
+        assert_eq!(largest.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 2, 0]);
+        let smallest = pd.candidates(EvictionPolicy::SmallestFirst);
+        assert_eq!(smallest.iter().map(|x| x.0).collect::<Vec<_>>(), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn candidate_tie_break_by_edge_id() {
+        let mut pd = PendingSet::default();
+        pd.insert(5, 10.0);
+        pd.insert(3, 10.0);
+        let c = pd.candidates(EvictionPolicy::LargestFirst);
+        assert_eq!(c.iter().map(|x| x.0).collect::<Vec<_>>(), vec![3, 5]);
+    }
+
+    #[test]
+    fn platform_state_init_and_comm() {
+        let cluster = small_cluster();
+        let mut st = PlatformState::new(&cluster);
+        assert_eq!(st.num_procs(), 6);
+        assert_eq!(st.procs[0].avail_mem, cluster.proc(0).memory);
+        assert_eq!(st.comm_ready(0, 1), 0.0);
+        st.push_comm(0, 1, 2.5);
+        assert_eq!(st.comm_ready(0, 1), 2.5);
+        assert_eq!(st.comm_ready(1, 0), 0.0);
+    }
+
+    #[test]
+    fn consume_remote_frees_memory_or_buffer() {
+        let cluster = small_cluster();
+        let mut st = PlatformState::new(&cluster);
+        let m0 = st.procs[0].avail_mem;
+        st.procs[0].pending.insert(7, 100.0);
+        st.procs[0].avail_mem -= 100.0;
+        st.consume_remote(0, 7);
+        assert_eq!(st.procs[0].avail_mem, m0);
+        let b0 = st.procs[0].avail_buf;
+        st.procs[0].buffered.insert(9, 50.0);
+        st.procs[0].avail_buf -= 50.0;
+        st.consume_remote(0, 9);
+        assert_eq!(st.procs[0].avail_buf, b0);
+        // Unknown file: no-op.
+        st.consume_remote(0, 1234);
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny CSV writer used by the experiment harness to dump result tables.
+
+use std::fmt::Write as _;
+
+/// Accumulates rows and renders RFC-4180-style CSV text.
+#[derive(Debug, Default, Clone)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        CsvWriter { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; panics in debug builds if the width mismatches.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        debug_assert_eq!(cells.len(), self.header.len(), "CSV row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for row in &self.rows {
+            write_record(&mut out, row);
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavored markdown table (for reports).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(out, "|{}|", vec!["---"; self.header.len()].join("|"));
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+}
+
+fn write_record(out: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains([',', '"', '\n']) {
+            out.push('"');
+            out.push_str(&cell.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_rows() {
+        let mut w = CsvWriter::new(vec!["a", "b"]);
+        w.row(vec!["1", "2"]);
+        w.row(vec!["x", "y"]);
+        assert_eq!(w.to_csv(), "a,b\n1,2\nx,y\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut w = CsvWriter::new(vec!["v"]);
+        w.row(vec!["has,comma"]);
+        w.row(vec!["has\"quote"]);
+        w.row(vec!["has\nnewline"]);
+        assert_eq!(w.to_csv(), "v\n\"has,comma\"\n\"has\"\"quote\"\n\"has\nnewline\"\n");
+    }
+
+    #[test]
+    fn markdown_table() {
+        let mut w = CsvWriter::new(vec!["x", "y"]);
+        w.row(vec!["1", "2"]);
+        let md = w.to_markdown();
+        assert!(md.starts_with("| x | y |\n|---|---|\n"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained serialization substrates.
+//!
+//! The build environment is fully offline and `serde` is unavailable, so the
+//! library carries its own minimal JSON implementation ([`json`]) and a CSV
+//! writer ([`csv`]). Both are deliberately small, strict, and fully tested.
+
+pub mod csv;
+pub mod json;

@@ -1,0 +1,104 @@
+//! Task-parameter deviation model (paper §VI-A-3).
+//!
+//! The runtime system applies a normally distributed random deviation to
+//! each task's estimated execution time and memory requirement: the
+//! estimate is the mean and the relative standard deviation is `sigma`
+//! (the paper uses 10%, matching observed prediction errors [6], [8], [9]).
+//!
+//! Deviations are *per task* and deterministic in `(seed, task id)`, so
+//! the with- and without-recomputation runs of the same experiment see
+//! identical actual values.
+
+use crate::util::rng::Rng;
+use crate::workflow::{TaskId, Workflow};
+
+/// Deviation generator.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviationModel {
+    /// Relative standard deviation (0.1 = 10%).
+    pub sigma: f64,
+    pub seed: u64,
+}
+
+impl DeviationModel {
+    pub fn new(sigma: f64, seed: u64) -> DeviationModel {
+        DeviationModel { sigma, seed }
+    }
+
+    /// No deviation at all (static re-runs).
+    pub fn none(seed: u64) -> DeviationModel {
+        DeviationModel { sigma: 0.0, seed }
+    }
+
+    /// Actual (work, memory) for task `u` given estimates.
+    /// Truncated below at 1% of the estimate (resources are positive).
+    pub fn actual(&self, u: TaskId, est_work: f64, est_memory: f64) -> (f64, f64) {
+        if self.sigma == 0.0 {
+            return (est_work, est_memory);
+        }
+        let mut rng = Rng::new(self.seed ^ (u as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let w = rng.normal_with(est_work, self.sigma * est_work).max(0.01 * est_work);
+        let m = rng.normal_with(est_memory, self.sigma * est_memory).max(0.01 * est_memory);
+        (w, m)
+    }
+
+    /// Apply to a whole workflow: the "ground truth" run.
+    pub fn deviate_workflow(&self, wf: &Workflow) -> Workflow {
+        let mut out = wf.clone();
+        for u in 0..wf.num_tasks() {
+            let t = wf.task(u);
+            let (w, m) = self.actual(u, t.work, t.memory);
+            out.set_task_params(u, w, m);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::WorkflowBuilder;
+
+    #[test]
+    fn deterministic_per_task() {
+        let d = DeviationModel::new(0.1, 42);
+        let (w1, m1) = d.actual(7, 100.0, 1e9);
+        let (w2, m2) = d.actual(7, 100.0, 1e9);
+        assert_eq!(w1, w2);
+        assert_eq!(m1, m2);
+        let (w3, _) = d.actual(8, 100.0, 1e9);
+        assert_ne!(w1, w3);
+    }
+
+    #[test]
+    fn zero_sigma_is_identity() {
+        let d = DeviationModel::none(1);
+        assert_eq!(d.actual(3, 50.0, 2e9), (50.0, 2e9));
+    }
+
+    #[test]
+    fn ten_percent_sigma_statistics() {
+        let d = DeviationModel::new(0.1, 9);
+        let n = 5000;
+        let ws: Vec<f64> = (0..n).map(|u| d.actual(u, 100.0, 1.0).0).collect();
+        let mean = ws.iter().sum::<f64>() / n as f64;
+        let sd = (ws.iter().map(|w| (w - mean) * (w - mean)).sum::<f64>() / n as f64).sqrt();
+        assert!((mean - 100.0).abs() < 1.0, "mean {mean}");
+        assert!((sd - 10.0).abs() < 1.0, "sd {sd}");
+        assert!(ws.iter().all(|&w| w > 0.0));
+    }
+
+    #[test]
+    fn deviate_workflow_changes_params_only() {
+        let mut b = WorkflowBuilder::new("w");
+        let a = b.task("a", "t", 100.0, 1e9);
+        let c = b.task("c", "t", 100.0, 1e9);
+        b.edge(a, c, 5.0);
+        let wf = b.build().unwrap();
+        let d = DeviationModel::new(0.1, 3);
+        let dv = d.deviate_workflow(&wf);
+        assert_eq!(dv.num_tasks(), 2);
+        assert_eq!(dv.edge(0).data, 5.0); // edges untouched
+        assert_ne!(dv.task(0).work, 100.0);
+    }
+}

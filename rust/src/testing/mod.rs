@@ -1,0 +1,137 @@
+//! In-tree property-testing helpers (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over many seeded random cases and reports the
+//! failing seed so a failure is reproducible with a unit test. Generators
+//! for random DAG workflows and random clusters live here too; they are
+//! used by the property suites in `rust/tests/`.
+
+use crate::platform::{Cluster, Processor};
+use crate::util::rng::Rng;
+use crate::workflow::{Workflow, WorkflowBuilder};
+
+/// Run `property` over `cases` random cases derived from `seed`.
+/// Panics with the offending case seed on the first failure.
+pub fn check<F>(cases: usize, seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let case_seed = seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed on case {i} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random layered DAG: up to `max_tasks` tasks, random layer widths, edges
+/// only forward across layers (guaranteed acyclic), random weights with
+/// realistic magnitudes (work ~ seconds, memory/files ~ MB..GB).
+pub fn random_dag(rng: &mut Rng, max_tasks: usize) -> Workflow {
+    let n = rng.range_inclusive(2, max_tasks.max(2));
+    let mut b = WorkflowBuilder::new(format!("rand_{n}"));
+    // Assign each task to a layer.
+    let layers = rng.range_inclusive(2, (n / 2).clamp(2, 12));
+    let mut layer_of = Vec::with_capacity(n);
+    for i in 0..n {
+        let l = if i < layers { i } else { rng.range_inclusive(0, layers - 1) };
+        layer_of.push(l);
+        let work = rng.uniform(0.5, 300.0);
+        let memory = rng.uniform(1.0, 4096.0) * 1024.0 * 1024.0;
+        b.task(format!("t{i}"), format!("ty{}", i % 7), work, memory);
+    }
+    // Forward edges.
+    for v in 0..n {
+        if layer_of[v] == 0 {
+            continue;
+        }
+        let parents = rng.range_inclusive(1, 3);
+        for _ in 0..parents {
+            // Pick a random task in an earlier layer.
+            let candidates: Vec<usize> =
+                (0..n).filter(|&u| layer_of[u] < layer_of[v]).collect();
+            if candidates.is_empty() {
+                continue;
+            }
+            let u = candidates[rng.pick_index(&candidates)];
+            b.edge(u, v, rng.uniform(0.001, 512.0) * 1024.0 * 1024.0);
+        }
+    }
+    match b.build() {
+        Ok(wf) => wf,
+        Err(_) => {
+            // Duplicate edges cannot happen; cycles cannot happen; only
+            // pathological cases (none known) would land here.
+            let mut b = WorkflowBuilder::new("fallback");
+            let a = b.task("a", "t", 1.0, 1.0);
+            let c = b.task("c", "t", 1.0, 1.0);
+            b.edge(a, c, 1.0);
+            b.build().unwrap()
+        }
+    }
+}
+
+/// Random heterogeneous cluster: 2–8 processors, speeds 1–32, memories
+/// 1–64 GB, buffer 10× memory.
+pub fn random_cluster(rng: &mut Rng) -> Cluster {
+    let k = rng.range_inclusive(2, 8);
+    let gb = 1024.0 * 1024.0 * 1024.0;
+    let processors = (0..k)
+        .map(|j| {
+            let mem = rng.uniform(1.0, 64.0) * gb;
+            Processor {
+                name: format!("p{j}"),
+                kind: format!("k{}", j % 3),
+                speed: rng.uniform(1.0, 32.0),
+                memory: mem,
+                comm_buffer: 10.0 * mem,
+            }
+        })
+        .collect();
+    Cluster { name: "rand".into(), processors, bandwidth: rng.uniform(0.1, 2.0) * gb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(20, 1, |rng| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failures() {
+        check(5, 2, |_| Err("always fails".to_string()));
+    }
+
+    #[test]
+    fn random_dags_are_valid() {
+        check(30, 3, |rng| {
+            let wf = random_dag(rng, 60);
+            if !wf.is_topological_order(&wf.topological_order()) {
+                return Err("not a DAG".into());
+            }
+            if wf.num_tasks() < 2 {
+                return Err("too small".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_clusters_validate() {
+        check(30, 4, |rng| {
+            let c = random_cluster(rng);
+            c.validate().map_err(|e| e.to_string())
+        });
+    }
+}

@@ -1,0 +1,3 @@
+//! Small shared utilities (deterministic RNG, logging helpers).
+
+pub mod rng;

@@ -1,0 +1,551 @@
+//! Parser for the GraphViz DOT subset emitted by `nextflow -with-dag`
+//! (paper §VI-A-1a).
+//!
+//! Supported grammar (a pragmatic subset of DOT):
+//!
+//! ```text
+//! digraph NAME? {
+//!   node_id [attr=val, ...];
+//!   node_id -> node_id [label="...", ...];
+//! }
+//! ```
+//!
+//! Node attributes recognized: `type`, `work`, `memory` (also `label`, kept
+//! as the task name when present). Edge attribute recognized: `data` (or
+//! `label` if numeric). Tasks referenced only in edges are created with
+//! zero weights — the trace binder ([`crate::traces`]) fills them in, and
+//! nextflow *pseudo-tasks* (names starting with `p_` or quoted empty
+//! labels) are dropped and their edges contracted, mirroring the paper's
+//! preprocessing.
+
+use super::{Workflow, WorkflowBuilder};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parse DOT text into a workflow. `contract_pseudo` drops nextflow
+/// internal pseudo-tasks (`p_*`) and splices their edges.
+pub fn parse_dot(text: &str, contract_pseudo: bool) -> Result<Workflow> {
+    let mut lx = Lexer::new(text);
+    lx.expect_ident("digraph")?;
+    let name = match lx.peek()? {
+        Tok::Ident(_) | Tok::Quoted(_) => lx.take_name()?,
+        _ => "workflow".to_string(),
+    };
+    lx.expect(Tok::LBrace)?;
+
+    let mut nodes: Vec<RawNode> = Vec::new();
+    let mut ids: HashMap<String, usize> = HashMap::new();
+    let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+
+    loop {
+        match lx.peek()? {
+            Tok::RBrace => {
+                lx.next()?;
+                break;
+            }
+            Tok::Eof => bail!("unexpected end of DOT input (missing `}}`)"),
+            Tok::Semi => {
+                lx.next()?;
+            }
+            Tok::Ident(_) | Tok::Quoted(_) => {
+                let first = lx.take_name()?;
+                // Skip graph-level attribute statements.
+                if (first == "graph" || first == "node" || first == "edge")
+                    && matches!(lx.peek()?, Tok::LBracket)
+                {
+                    let _ = lx.attrs()?;
+                    continue;
+                }
+                if matches!(lx.peek()?, Tok::Arrow) {
+                    // Edge chain: a -> b -> c [attrs]
+                    let mut chain = vec![intern(&mut nodes, &mut ids, &first)];
+                    while matches!(lx.peek()?, Tok::Arrow) {
+                        lx.next()?;
+                        let nm = lx.take_name()?;
+                        chain.push(intern(&mut nodes, &mut ids, &nm));
+                    }
+                    let attrs = if matches!(lx.peek()?, Tok::LBracket) {
+                        lx.attrs()?
+                    } else {
+                        Vec::new()
+                    };
+                    let data = edge_data(&attrs);
+                    for w in chain.windows(2) {
+                        edges.push((w[0], w[1], data));
+                    }
+                } else {
+                    // Node statement.
+                    let id = intern(&mut nodes, &mut ids, &first);
+                    if matches!(lx.peek()?, Tok::LBracket) {
+                        let attrs = lx.attrs()?;
+                        apply_node_attrs(&mut nodes[id], &attrs);
+                    }
+                }
+            }
+            other => bail!("unexpected token {other:?} in DOT body"),
+        }
+    }
+
+    build_workflow(name, nodes, edges, contract_pseudo)
+}
+
+#[derive(Debug, Clone)]
+struct RawNode {
+    name: String,
+    task_type: String,
+    work: f64,
+    memory: f64,
+}
+
+fn intern(nodes: &mut Vec<RawNode>, ids: &mut HashMap<String, usize>, name: &str) -> usize {
+    if let Some(&id) = ids.get(name) {
+        return id;
+    }
+    let id = nodes.len();
+    nodes.push(RawNode {
+        name: name.to_string(),
+        task_type: default_type(name),
+        work: 0.0,
+        memory: 0.0,
+    });
+    ids.insert(name.to_string(), id);
+    id
+}
+
+/// Task type defaults to the name with a trailing `_<digits>` instance
+/// suffix stripped (`fastqc_12` -> `fastqc`).
+fn default_type(name: &str) -> String {
+    match name.rfind('_') {
+        Some(i) if name[i + 1..].chars().all(|c| c.is_ascii_digit()) && i > 0 => {
+            name[..i].to_string()
+        }
+        _ => name.to_string(),
+    }
+}
+
+fn apply_node_attrs(node: &mut RawNode, attrs: &[(String, String)]) {
+    for (k, v) in attrs {
+        match k.as_str() {
+            "type" => node.task_type = v.clone(),
+            "work" => {
+                if let Ok(x) = v.parse() {
+                    node.work = x;
+                }
+            }
+            "memory" => {
+                if let Ok(x) = v.parse() {
+                    node.memory = x;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn edge_data(attrs: &[(String, String)]) -> f64 {
+    for (k, v) in attrs {
+        if k == "data" {
+            if let Ok(x) = v.parse() {
+                return x;
+            }
+        }
+        if k == "label" {
+            if let Ok(x) = v.parse() {
+                return x;
+            }
+        }
+    }
+    0.0
+}
+
+/// Nextflow pseudo-tasks: internal representation nodes, not real tasks.
+fn is_pseudo(name: &str) -> bool {
+    name.starts_with("p_") || name.is_empty()
+}
+
+fn build_workflow(
+    name: String,
+    nodes: Vec<RawNode>,
+    edges: Vec<(usize, usize, f64)>,
+    contract_pseudo: bool,
+) -> Result<Workflow> {
+    if !contract_pseudo {
+        let mut b = WorkflowBuilder::new(name);
+        for nd in &nodes {
+            b.task(&nd.name, &nd.task_type, nd.work, nd.memory);
+        }
+        for (s, d, c) in edges {
+            b.edge(s, d, c);
+        }
+        return b.build().context("building workflow from DOT");
+    }
+
+    // Contract pseudo-tasks: repeatedly splice edges through them.
+    // Build adjacency over the raw indices first.
+    let n = nodes.len();
+    let keep: Vec<bool> = nodes.iter().map(|nd| !is_pseudo(&nd.name)).collect();
+    let mut out: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for &(s, d, c) in &edges {
+        out[s].push((d, c));
+    }
+    // For each kept node, walk through pseudo chains to find kept targets.
+    // The pseudo subgraph is a DAG, so a DFS with memoization terminates.
+    let mut memo: Vec<Option<Vec<(usize, f64)>>> = vec![None; n];
+    fn resolve(
+        u: usize,
+        out: &[Vec<(usize, f64)>],
+        keep: &[bool],
+        memo: &mut Vec<Option<Vec<(usize, f64)>>>,
+    ) -> Vec<(usize, f64)> {
+        if let Some(cached) = &memo[u] {
+            return cached.clone();
+        }
+        let mut targets = Vec::new();
+        for &(v, c) in &out[u] {
+            if keep[v] {
+                targets.push((v, c));
+            } else {
+                // Data carried by the edge into the pseudo node is
+                // forwarded along its out-edges.
+                for (w, c2) in resolve(v, out, keep, memo) {
+                    targets.push((w, c.max(c2)));
+                }
+            }
+        }
+        memo[u] = Some(targets.clone());
+        targets
+    }
+
+    let mut remap = vec![usize::MAX; n];
+    let mut b = WorkflowBuilder::new(name);
+    for (i, nd) in nodes.iter().enumerate() {
+        if keep[i] {
+            remap[i] = b.task(&nd.name, &nd.task_type, nd.work, nd.memory);
+        }
+    }
+    if b.num_tasks() == 0 {
+        bail!("workflow is empty after pseudo-task contraction");
+    }
+    let mut emitted: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    for u in 0..n {
+        if !keep[u] {
+            continue;
+        }
+        for &(v, c) in &out[u] {
+            let targets =
+                if keep[v] { vec![(v, c)] } else { resolve(v, &out, &keep, &mut memo) };
+            for (w, c2) in targets {
+                if emitted.insert((remap[u], remap[w])) {
+                    b.edge(remap[u], remap[w], if keep[v] { c } else { c.max(c2) });
+                }
+            }
+        }
+    }
+    b.build().context("building workflow from DOT (contracted)")
+}
+
+/// Render a workflow as DOT (inverse of [`parse_dot`], for inspection).
+pub fn to_dot(wf: &Workflow) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("digraph \"{}\" {{\n", wf.name));
+    for (id, t) in wf.tasks().iter().enumerate() {
+        s.push_str(&format!(
+            "  \"{}\" [type=\"{}\", work={}, memory={}];\n",
+            t.name, t.task_type, t.work, t.memory
+        ));
+        let _ = id;
+    }
+    for e in wf.edges() {
+        s.push_str(&format!(
+            "  \"{}\" -> \"{}\" [data={}];\n",
+            wf.task(e.src).name,
+            wf.task(e.dst).name,
+            e.data
+        ));
+    }
+    s.push_str("}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Quoted(String),
+    Arrow,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Equals,
+    Comma,
+    Semi,
+    Eof,
+}
+
+struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    peeked: Option<Tok>,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(text: &'a str) -> Self {
+        Lexer { bytes: text.as_bytes(), pos: 0, peeked: None }
+    }
+
+    fn peek(&mut self) -> Result<Tok> {
+        if self.peeked.is_none() {
+            self.peeked = Some(self.lex()?);
+        }
+        Ok(self.peeked.clone().unwrap())
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        match self.peeked.take() {
+            Some(t) => Ok(t),
+            None => self.lex(),
+        }
+    }
+
+    fn expect(&mut self, want: Tok) -> Result<()> {
+        let got = self.next()?;
+        if got != want {
+            bail!("DOT parse error: expected {want:?}, found {got:?}");
+        }
+        Ok(())
+    }
+
+    fn expect_ident(&mut self, kw: &str) -> Result<()> {
+        match self.next()? {
+            Tok::Ident(s) if s == kw => Ok(()),
+            other => bail!("DOT parse error: expected `{kw}`, found {other:?}"),
+        }
+    }
+
+    /// Take an identifier or quoted string as a name.
+    fn take_name(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) | Tok::Quoted(s) => Ok(s),
+            other => bail!("DOT parse error: expected name, found {other:?}"),
+        }
+    }
+
+    /// Parse `[k=v, k=v, ...]`.
+    fn attrs(&mut self) -> Result<Vec<(String, String)>> {
+        self.expect(Tok::LBracket)?;
+        let mut out = Vec::new();
+        loop {
+            match self.next()? {
+                Tok::RBracket => return Ok(out),
+                Tok::Comma | Tok::Semi => continue,
+                Tok::Ident(k) | Tok::Quoted(k) => {
+                    self.expect(Tok::Equals)?;
+                    let v = self.take_name()?;
+                    out.push((k, v));
+                }
+                other => bail!("DOT parse error: unexpected {other:?} in attribute list"),
+            }
+        }
+    }
+
+    fn lex(&mut self) -> Result<Tok> {
+        // Skip whitespace and // or # comments.
+        loop {
+            while matches!(self.bytes.get(self.pos), Some(b) if b.is_ascii_whitespace()) {
+                self.pos += 1;
+            }
+            match (self.bytes.get(self.pos), self.bytes.get(self.pos + 1)) {
+                (Some(b'/'), Some(b'/')) | (Some(b'#'), _) => {
+                    while !matches!(self.bytes.get(self.pos), None | Some(b'\n')) {
+                        self.pos += 1;
+                    }
+                }
+                (Some(b'/'), Some(b'*')) => {
+                    self.pos += 2;
+                    while self.pos < self.bytes.len()
+                        && !(self.bytes[self.pos] == b'*'
+                            && self.bytes.get(self.pos + 1) == Some(&b'/'))
+                    {
+                        self.pos += 1;
+                    }
+                    self.pos = (self.pos + 2).min(self.bytes.len());
+                }
+                _ => break,
+            }
+        }
+        let Some(&b) = self.bytes.get(self.pos) else {
+            return Ok(Tok::Eof);
+        };
+        self.pos += 1;
+        match b {
+            b'{' => Ok(Tok::LBrace),
+            b'}' => Ok(Tok::RBrace),
+            b'[' => Ok(Tok::LBracket),
+            b']' => Ok(Tok::RBracket),
+            b'=' => Ok(Tok::Equals),
+            b',' => Ok(Tok::Comma),
+            b';' => Ok(Tok::Semi),
+            b'-' if self.bytes.get(self.pos) == Some(&b'>') => {
+                self.pos += 1;
+                Ok(Tok::Arrow)
+            }
+            b'"' => {
+                let start = self.pos;
+                while self.pos < self.bytes.len() && self.bytes[self.pos] != b'"' {
+                    if self.bytes[self.pos] == b'\\' {
+                        self.pos += 1;
+                    }
+                    self.pos += 1;
+                }
+                if self.pos >= self.bytes.len() {
+                    bail!("DOT parse error: unterminated string");
+                }
+                let raw = std::str::from_utf8(&self.bytes[start..self.pos])
+                    .context("invalid UTF-8 in DOT string")?
+                    .replace("\\\"", "\"");
+                self.pos += 1; // closing quote
+                Ok(Tok::Quoted(raw))
+            }
+            b if b.is_ascii_alphanumeric() || b == b'_' || b == b'.' || b == b'-' => {
+                let start = self.pos - 1;
+                while matches!(self.bytes.get(self.pos),
+                    Some(&c) if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b'-')
+                {
+                    self.pos += 1;
+                }
+                Ok(Tok::Ident(
+                    std::str::from_utf8(&self.bytes[start..self.pos]).unwrap().to_string(),
+                ))
+            }
+            other => bail!("DOT parse error: unexpected character `{}`", other as char),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_simple_digraph() {
+        let wf = parse_dot(
+            r#"digraph test {
+                a [work=10, memory=100, type="prep"];
+                b [work=20, memory=200];
+                a -> b [data=5];
+            }"#,
+            false,
+        )
+        .unwrap();
+        assert_eq!(wf.num_tasks(), 2);
+        assert_eq!(wf.num_edges(), 1);
+        assert_eq!(wf.task(0).work, 10.0);
+        assert_eq!(wf.task(0).task_type, "prep");
+        assert_eq!(wf.edge(0).data, 5.0);
+    }
+
+    #[test]
+    fn parses_edge_chains_and_comments() {
+        let wf = parse_dot(
+            r#"digraph {
+                // comment
+                a -> b -> c [data=3]; # trailing
+                /* block */ a -> c;
+            }"#,
+            false,
+        )
+        .unwrap();
+        assert_eq!(wf.num_tasks(), 3);
+        assert_eq!(wf.num_edges(), 3);
+        let e: Vec<f64> = wf.edges().iter().map(|e| e.data).collect();
+        assert_eq!(e, vec![3.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn contracts_pseudo_tasks() {
+        // a -> p_1 -> b ; pseudo node p_1 must vanish, edge spliced.
+        let wf = parse_dot(
+            r#"digraph {
+                a -> p_1 [data=4];
+                p_1 -> b [data=2];
+                a -> c [data=1];
+            }"#,
+            true,
+        )
+        .unwrap();
+        assert_eq!(wf.num_tasks(), 3); // a, b, c
+        let names: Vec<&str> = wf.tasks().iter().map(|t| t.name.as_str()).collect();
+        assert!(names.contains(&"a") && names.contains(&"b") && names.contains(&"c"));
+        assert_eq!(wf.num_edges(), 2);
+        // Contracted edge carries max of the two file sizes.
+        let ab = wf.edges().iter().find(|e| wf.task(e.dst).name == "b").unwrap();
+        assert_eq!(ab.data, 4.0);
+    }
+
+    #[test]
+    fn pseudo_chain_contraction() {
+        let wf = parse_dot(
+            r#"digraph {
+                a -> p_1; p_1 -> p_2; p_2 -> b [data=9];
+            }"#,
+            true,
+        )
+        .unwrap();
+        assert_eq!(wf.num_tasks(), 2);
+        assert_eq!(wf.num_edges(), 1);
+        assert_eq!(wf.edge(0).data, 9.0);
+    }
+
+    #[test]
+    fn quoted_names_and_graph_name() {
+        let wf = parse_dot(r#"digraph "my wf" { "task one" -> "task two"; }"#, false).unwrap();
+        assert_eq!(wf.name, "my wf");
+        assert_eq!(wf.task(0).name, "task one");
+    }
+
+    #[test]
+    fn type_defaults_strip_instance_suffix() {
+        let wf = parse_dot("digraph { fastqc_12 -> align_3; }", false).unwrap();
+        assert_eq!(wf.task(0).task_type, "fastqc");
+        assert_eq!(wf.task(1).task_type, "align");
+    }
+
+    #[test]
+    fn dot_roundtrip() {
+        let wf = parse_dot(
+            r#"digraph rt { a [work=1, memory=2]; b [work=3, memory=4]; a -> b [data=7]; }"#,
+            false,
+        )
+        .unwrap();
+        let text = to_dot(&wf);
+        let wf2 = parse_dot(&text, false).unwrap();
+        assert_eq!(wf2.num_tasks(), 2);
+        assert_eq!(wf2.task(0).work, 1.0);
+        assert_eq!(wf2.edge(0).data, 7.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_dot("graph { a -- b; }", false).is_err());
+        assert!(parse_dot("digraph { a -> ; }", false).is_err());
+        assert!(parse_dot("digraph { a -> b", false).is_err());
+    }
+
+    #[test]
+    fn skips_global_attr_statements() {
+        let wf = parse_dot(
+            r#"digraph {
+                graph [rankdir=LR];
+                node [shape=box];
+                edge [color=red];
+                a -> b;
+            }"#,
+            false,
+        )
+        .unwrap();
+        assert_eq!(wf.num_tasks(), 2);
+    }
+}

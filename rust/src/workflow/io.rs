@@ -1,0 +1,194 @@
+//! JSON workflow interchange format (native format of this library).
+//!
+//! ```json
+//! {
+//!   "name": "chipseq_2000",
+//!   "tasks": [ {"name": "t0", "type": "fastqc", "work": 12.5, "memory": 5e7} ],
+//!   "edges": [ {"src": 0, "dst": 1, "data": 1024.0} ]
+//! }
+//! ```
+//!
+//! Edge endpoints may be task indices (numbers) or task names (strings).
+
+use super::{Workflow, WorkflowBuilder};
+use crate::ser::json::{obj, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Serialize a workflow to the JSON interchange format.
+pub fn to_json(wf: &Workflow) -> Value {
+    let tasks: Vec<Value> = wf
+        .tasks()
+        .iter()
+        .map(|t| {
+            obj(vec![
+                ("name", t.name.as_str().into()),
+                ("type", t.task_type.as_str().into()),
+                ("work", t.work.into()),
+                ("memory", t.memory.into()),
+            ])
+        })
+        .collect();
+    let edges: Vec<Value> = wf
+        .edges()
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("src", e.src.into()),
+                ("dst", e.dst.into()),
+                ("data", e.data.into()),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("name", wf.name.as_str().into()),
+        ("tasks", Value::Array(tasks)),
+        ("edges", Value::Array(edges)),
+    ])
+}
+
+/// Deserialize a workflow from the JSON interchange format.
+pub fn from_json(v: &Value) -> Result<Workflow> {
+    let name = v.req_str("name")?;
+    let mut b = WorkflowBuilder::new(name);
+    let mut by_name: HashMap<String, usize> = HashMap::new();
+    for (i, t) in v.req_array("tasks")?.iter().enumerate() {
+        let tname = t.req_str("name").with_context(|| format!("task #{i}"))?;
+        let ttype = t.get("type").and_then(Value::as_str).unwrap_or(tname);
+        let work = t.req_f64("work").with_context(|| format!("task `{tname}`"))?;
+        let memory = t.req_f64("memory").with_context(|| format!("task `{tname}`"))?;
+        let id = b.task(tname, ttype, work, memory);
+        by_name.insert(tname.to_string(), id);
+    }
+    let n = b.num_tasks();
+    let endpoint = |e: &Value, key: &str| -> Result<usize> {
+        match e.req(key)? {
+            Value::Number(_) => {
+                let id = e.req_usize(key)?;
+                if id >= n {
+                    bail!("edge endpoint `{key}` = {id} out of range (n = {n})");
+                }
+                Ok(id)
+            }
+            Value::String(s) => by_name
+                .get(s.as_str())
+                .copied()
+                .ok_or_else(|| anyhow!("edge endpoint `{key}` references unknown task `{s}`")),
+            _ => bail!("edge endpoint `{key}` must be an index or a task name"),
+        }
+    };
+    for (i, e) in v.req_array("edges")?.iter().enumerate() {
+        let src = endpoint(e, "src").with_context(|| format!("edge #{i}"))?;
+        let dst = endpoint(e, "dst").with_context(|| format!("edge #{i}"))?;
+        let data = e.req_f64("data").with_context(|| format!("edge #{i}"))?;
+        b.edge(src, dst, data);
+    }
+    b.build()
+}
+
+/// Load a workflow from a file, dispatching on extension:
+/// `.json` → interchange format, `.dot`/`.gv` → DOT (pseudo-tasks contracted).
+pub fn load(path: &Path) -> Result<Workflow> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading workflow file {}", path.display()))?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("json") => {
+            let v = Value::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+            from_json(&v)
+        }
+        Some("dot") | Some("gv") => super::dot::parse_dot(&text, true),
+        other => bail!(
+            "unsupported workflow file extension {:?} for {} (expected .json, .dot, .gv)",
+            other,
+            path.display()
+        ),
+    }
+}
+
+/// Save a workflow to a `.json` file (pretty-printed).
+pub fn save(wf: &Workflow, path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(wf).to_string_pretty())
+        .with_context(|| format!("writing workflow file {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::WorkflowBuilder;
+
+    fn sample() -> Workflow {
+        let mut b = WorkflowBuilder::new("sample");
+        let a = b.task("a", "prep", 10.0, 100.0);
+        let c = b.task("c", "align", 20.0, 200.0);
+        let d = b.task("d", "merge", 5.0, 50.0);
+        b.edge(a, c, 7.0);
+        b.edge(c, d, 8.0);
+        b.edge(a, d, 9.0);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let wf = sample();
+        let v = to_json(&wf);
+        let wf2 = from_json(&v).unwrap();
+        assert_eq!(wf2.name, wf.name);
+        assert_eq!(wf2.num_tasks(), wf.num_tasks());
+        assert_eq!(wf2.num_edges(), wf.num_edges());
+        assert_eq!(wf2.task(1).task_type, "align");
+        assert_eq!(wf2.edge(2).data, 9.0);
+    }
+
+    #[test]
+    fn edges_by_name() {
+        let text = r#"{
+            "name": "byname",
+            "tasks": [
+                {"name": "x", "work": 1, "memory": 1},
+                {"name": "y", "work": 1, "memory": 1}
+            ],
+            "edges": [ {"src": "x", "dst": "y", "data": 3} ]
+        }"#;
+        let wf = from_json(&Value::parse(text).unwrap()).unwrap();
+        assert_eq!(wf.num_edges(), 1);
+        assert_eq!(wf.edge(0).src, 0);
+        assert_eq!(wf.edge(0).dst, 1);
+    }
+
+    #[test]
+    fn rejects_bad_references() {
+        let text = r#"{
+            "name": "bad",
+            "tasks": [ {"name": "x", "work": 1, "memory": 1} ],
+            "edges": [ {"src": "x", "dst": "nope", "data": 3} ]
+        }"#;
+        assert!(from_json(&Value::parse(text).unwrap()).is_err());
+        let text2 = r#"{
+            "name": "bad2",
+            "tasks": [ {"name": "x", "work": 1, "memory": 1} ],
+            "edges": [ {"src": 0, "dst": 5, "data": 3} ]
+        }"#;
+        assert!(from_json(&Value::parse(text2).unwrap()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let wf = sample();
+        let dir = std::env::temp_dir().join("memsched_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wf.json");
+        save(&wf, &path).unwrap();
+        let wf2 = load(&path).unwrap();
+        assert_eq!(wf2.num_tasks(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_unknown_extension() {
+        let p = std::env::temp_dir().join("wf.xyz");
+        std::fs::write(&p, "x").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,514 @@
+//! Workflow DAG substrate (paper §III-A).
+//!
+//! A workflow is a DAG `G = (V, E)`: vertices are tasks with a work amount
+//! `w_u` (operations) and a memory requirement `m_u`; each edge `(u, v)`
+//! carries `c_{u,v}`, the size of the file task `u` produces for task `v`.
+//!
+//! The graph is stored in CSR form (both directions) for allocation-free
+//! traversal in the scheduler hot loop.
+
+pub mod dot;
+pub mod io;
+
+use anyhow::{bail, Result};
+
+/// Index of a task within its [`Workflow`].
+pub type TaskId = usize;
+
+/// A single workflow task (DAG vertex).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    /// Unique task name (e.g. `fastqc_7`).
+    pub name: String,
+    /// Task *type* label used to bind historical trace data (e.g. `fastqc`).
+    pub task_type: String,
+    /// `w_u`: number of operations (normalized work units).
+    pub work: f64,
+    /// `m_u`: memory required during execution, in bytes.
+    pub memory: f64,
+}
+
+/// A directed edge `(src, dst)` carrying `c_{src,dst}` bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: TaskId,
+    pub dst: TaskId,
+    /// `c_{u,v}`: size of the transferred file, in bytes.
+    pub data: f64,
+}
+
+/// Index of an edge within its [`Workflow`].
+pub type EdgeId = usize;
+
+/// An immutable, validated workflow DAG.
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub name: String,
+    tasks: Vec<Task>,
+    edges: Vec<Edge>,
+    // CSR over outgoing edges: for task u, edge ids are
+    // out_edges[out_start[u]..out_start[u+1]].
+    out_start: Vec<usize>,
+    out_edges: Vec<EdgeId>,
+    // CSR over incoming edges.
+    in_start: Vec<usize>,
+    in_edges: Vec<EdgeId>,
+}
+
+/// Builder that accumulates tasks/edges and validates on [`build`].
+///
+/// [`build`]: WorkflowBuilder::build
+#[derive(Debug, Default, Clone)]
+pub struct WorkflowBuilder {
+    name: String,
+    tasks: Vec<Task>,
+    edges: Vec<Edge>,
+}
+
+impl WorkflowBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        WorkflowBuilder { name: name.into(), tasks: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Add a task; returns its id. Name uniqueness is checked in [`build`].
+    ///
+    /// [`build`]: WorkflowBuilder::build
+    pub fn task(
+        &mut self,
+        name: impl Into<String>,
+        task_type: impl Into<String>,
+        work: f64,
+        memory: f64,
+    ) -> TaskId {
+        let id = self.tasks.len();
+        self.tasks.push(Task {
+            name: name.into(),
+            task_type: task_type.into(),
+            work,
+            memory,
+        });
+        id
+    }
+
+    /// Add an edge `(src, dst)` with `data` bytes transferred.
+    pub fn edge(&mut self, src: TaskId, dst: TaskId, data: f64) {
+        self.edges.push(Edge { src, dst, data });
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Validate and freeze into a [`Workflow`].
+    ///
+    /// Checks: non-empty, unique names, in-range endpoints, no self-loops,
+    /// non-negative finite weights, acyclicity.
+    pub fn build(self) -> Result<Workflow> {
+        let n = self.tasks.len();
+        if n == 0 {
+            bail!("workflow `{}` has no tasks", self.name);
+        }
+        {
+            let mut names: Vec<&str> = self.tasks.iter().map(|t| t.name.as_str()).collect();
+            names.sort_unstable();
+            if let Some(w) = names.windows(2).find(|w| w[0] == w[1]) {
+                bail!("duplicate task name `{}` in workflow `{}`", w[0], self.name);
+            }
+        }
+        for t in &self.tasks {
+            if !(t.work.is_finite() && t.work >= 0.0) {
+                bail!("task `{}` has invalid work {}", t.name, t.work);
+            }
+            if !(t.memory.is_finite() && t.memory >= 0.0) {
+                bail!("task `{}` has invalid memory {}", t.name, t.memory);
+            }
+        }
+        for e in &self.edges {
+            if e.src >= n || e.dst >= n {
+                bail!("edge ({}, {}) out of range (n = {n})", e.src, e.dst);
+            }
+            if e.src == e.dst {
+                bail!("self-loop on task `{}`", self.tasks[e.src].name);
+            }
+            if !(e.data.is_finite() && e.data >= 0.0) {
+                bail!("edge ({}, {}) has invalid data size {}", e.src, e.dst, e.data);
+            }
+        }
+
+        // CSR construction (counting sort by src / dst).
+        let m = self.edges.len();
+        let mut out_start = vec![0usize; n + 1];
+        let mut in_start = vec![0usize; n + 1];
+        for e in &self.edges {
+            out_start[e.src + 1] += 1;
+            in_start[e.dst + 1] += 1;
+        }
+        for i in 0..n {
+            out_start[i + 1] += out_start[i];
+            in_start[i + 1] += in_start[i];
+        }
+        let mut out_edges = vec![0usize; m];
+        let mut in_edges = vec![0usize; m];
+        let mut out_cursor = out_start.clone();
+        let mut in_cursor = in_start.clone();
+        for (eid, e) in self.edges.iter().enumerate() {
+            out_edges[out_cursor[e.src]] = eid;
+            out_cursor[e.src] += 1;
+            in_edges[in_cursor[e.dst]] = eid;
+            in_cursor[e.dst] += 1;
+        }
+
+        let wf = Workflow {
+            name: self.name,
+            tasks: self.tasks,
+            edges: self.edges,
+            out_start,
+            out_edges,
+            in_start,
+            in_edges,
+        };
+        // Acyclicity: Kahn's algorithm must consume every vertex.
+        if wf.topological_order().len() != n {
+            bail!("workflow `{}` contains a cycle", wf.name);
+        }
+        Ok(wf)
+    }
+}
+
+impl Workflow {
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id]
+    }
+
+    pub fn tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id]
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Ids of outgoing edges of `u`.
+    pub fn out_edge_ids(&self, u: TaskId) -> &[EdgeId] {
+        &self.out_edges[self.out_start[u]..self.out_start[u + 1]]
+    }
+
+    /// Ids of incoming edges of `u`.
+    pub fn in_edge_ids(&self, u: TaskId) -> &[EdgeId] {
+        &self.in_edges[self.in_start[u]..self.in_start[u + 1]]
+    }
+
+    /// Children of `u` with the corresponding edge data sizes.
+    pub fn children(&self, u: TaskId) -> impl Iterator<Item = (TaskId, f64)> + '_ {
+        self.out_edge_ids(u).iter().map(move |&e| (self.edges[e].dst, self.edges[e].data))
+    }
+
+    /// Parents of `u` with the corresponding edge data sizes.
+    pub fn parents(&self, u: TaskId) -> impl Iterator<Item = (TaskId, f64)> + '_ {
+        self.in_edge_ids(u).iter().map(move |&e| (self.edges[e].src, self.edges[e].data))
+    }
+
+    pub fn out_degree(&self, u: TaskId) -> usize {
+        self.out_start[u + 1] - self.out_start[u]
+    }
+
+    pub fn in_degree(&self, u: TaskId) -> usize {
+        self.in_start[u + 1] - self.in_start[u]
+    }
+
+    /// Tasks with no parents.
+    pub fn sources(&self) -> Vec<TaskId> {
+        (0..self.num_tasks()).filter(|&u| self.in_degree(u) == 0).collect()
+    }
+
+    /// Tasks with no children.
+    pub fn sinks(&self) -> Vec<TaskId> {
+        (0..self.num_tasks()).filter(|&u| self.out_degree(u) == 0).collect()
+    }
+
+    /// Sum of incoming edge sizes of `u`.
+    pub fn total_in_data(&self, u: TaskId) -> f64 {
+        self.parents(u).map(|(_, c)| c).sum()
+    }
+
+    /// Sum of outgoing edge sizes of `u`.
+    pub fn total_out_data(&self, u: TaskId) -> f64 {
+        self.children(u).map(|(_, c)| c).sum()
+    }
+
+    /// `r_u` (paper eq. 1): total memory requirement of executing `u`,
+    /// `max(m_u, sum of inputs, sum of outputs)`.
+    pub fn memory_requirement(&self, u: TaskId) -> f64 {
+        self.tasks[u]
+            .memory
+            .max(self.total_in_data(u))
+            .max(self.total_out_data(u))
+    }
+
+    /// A topological order via Kahn's algorithm (stable: ready tasks are
+    /// processed in increasing id order). Returns fewer than `n` tasks iff
+    /// the graph has a cycle (only possible pre-validation).
+    pub fn topological_order(&self) -> Vec<TaskId> {
+        let n = self.num_tasks();
+        let mut indeg: Vec<usize> = (0..n).map(|u| self.in_degree(u)).collect();
+        // Binary heap would give lexicographically-smallest order; a simple
+        // FIFO is sufficient and faster. Seed in id order for determinism.
+        let mut queue: std::collections::VecDeque<TaskId> =
+            (0..n).filter(|&u| indeg[u] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for (v, _) in self.children(u) {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        order
+    }
+
+    /// Check that `order` is a permutation of all tasks respecting edges.
+    pub fn is_topological_order(&self, order: &[TaskId]) -> bool {
+        if order.len() != self.num_tasks() {
+            return false;
+        }
+        let mut pos = vec![usize::MAX; self.num_tasks()];
+        for (i, &u) in order.iter().enumerate() {
+            if u >= self.num_tasks() || pos[u] != usize::MAX {
+                return false;
+            }
+            pos[u] = i;
+        }
+        self.edges.iter().all(|e| pos[e.src] < pos[e.dst])
+    }
+
+    /// Update a task's parameters in place (used by the runtime system
+    /// when actual values are revealed; the DAG structure is immutable).
+    pub fn set_task_params(&mut self, u: TaskId, work: f64, memory: f64) {
+        debug_assert!(work.is_finite() && work >= 0.0);
+        debug_assert!(memory.is_finite() && memory >= 0.0);
+        self.tasks[u].work = work;
+        self.tasks[u].memory = memory;
+    }
+
+    /// Total work over all tasks.
+    pub fn total_work(&self) -> f64 {
+        self.tasks.iter().map(|t| t.work).sum()
+    }
+
+    /// Summary statistics (used by `memsched info` and reports).
+    pub fn stats(&self) -> WorkflowStats {
+        let n = self.num_tasks();
+        let depth = self.critical_path_len();
+        WorkflowStats {
+            tasks: n,
+            edges: self.num_edges(),
+            sources: self.sources().len(),
+            sinks: self.sinks().len(),
+            max_in_degree: (0..n).map(|u| self.in_degree(u)).max().unwrap_or(0),
+            max_out_degree: (0..n).map(|u| self.out_degree(u)).max().unwrap_or(0),
+            total_work: self.total_work(),
+            total_data: self.edges.iter().map(|e| e.data).sum(),
+            max_memory_requirement: (0..n)
+                .map(|u| self.memory_requirement(u))
+                .fold(0.0, f64::max),
+            depth,
+        }
+    }
+
+    /// Length (in vertices) of the longest path.
+    pub fn critical_path_len(&self) -> usize {
+        let order = self.topological_order();
+        let mut depth = vec![1usize; self.num_tasks()];
+        let mut best = 0;
+        for &u in &order {
+            for (v, _) in self.children(u) {
+                depth[v] = depth[v].max(depth[u] + 1);
+            }
+            best = best.max(depth[u]);
+        }
+        best
+    }
+}
+
+/// Aggregate graph statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowStats {
+    pub tasks: usize,
+    pub edges: usize,
+    pub sources: usize,
+    pub sinks: usize,
+    pub max_in_degree: usize,
+    pub max_out_degree: usize,
+    pub total_work: f64,
+    pub total_data: f64,
+    pub max_memory_requirement: f64,
+    pub depth: usize,
+}
+
+/// Paper §VI-A-1a size groups: tiny ≤ 200, small 1 000–8 000,
+/// middle 10 000–18 000, big 20 000–30 000 tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SizeGroup {
+    Tiny,
+    Small,
+    Middle,
+    Big,
+}
+
+impl SizeGroup {
+    pub fn of(num_tasks: usize) -> SizeGroup {
+        match num_tasks {
+            0..=200 => SizeGroup::Tiny,
+            201..=8000 => SizeGroup::Small,
+            8001..=18000 => SizeGroup::Middle,
+            _ => SizeGroup::Big,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SizeGroup::Tiny => "tiny",
+            SizeGroup::Small => "small",
+            SizeGroup::Middle => "middle",
+            SizeGroup::Big => "big",
+        }
+    }
+
+    pub fn all() -> [SizeGroup; 4] {
+        [SizeGroup::Tiny, SizeGroup::Small, SizeGroup::Middle, SizeGroup::Big]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Diamond: 0 -> {1, 2} -> 3.
+    pub(crate) fn diamond() -> Workflow {
+        let mut b = WorkflowBuilder::new("diamond");
+        let a = b.task("a", "t", 10.0, 100.0);
+        let x = b.task("x", "t", 20.0, 200.0);
+        let y = b.task("y", "t", 30.0, 300.0);
+        let z = b.task("z", "t", 40.0, 400.0);
+        b.edge(a, x, 5.0);
+        b.edge(a, y, 6.0);
+        b.edge(x, z, 7.0);
+        b.edge(y, z, 8.0);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn builds_and_traverses() {
+        let wf = diamond();
+        assert_eq!(wf.num_tasks(), 4);
+        assert_eq!(wf.num_edges(), 4);
+        assert_eq!(wf.sources(), vec![0]);
+        assert_eq!(wf.sinks(), vec![3]);
+        let kids: Vec<_> = wf.children(0).collect();
+        assert_eq!(kids, vec![(1, 5.0), (2, 6.0)]);
+        let parents: Vec<_> = wf.parents(3).collect();
+        assert_eq!(parents, vec![(1, 7.0), (2, 8.0)]);
+        assert_eq!(wf.in_degree(3), 2);
+        assert_eq!(wf.out_degree(0), 2);
+    }
+
+    #[test]
+    fn topological_order_valid() {
+        let wf = diamond();
+        let order = wf.topological_order();
+        assert!(wf.is_topological_order(&order));
+        assert!(!wf.is_topological_order(&[3, 2, 1, 0]));
+        assert!(!wf.is_topological_order(&[0, 1, 2]));
+        assert!(!wf.is_topological_order(&[0, 1, 1, 3]));
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let mut b = WorkflowBuilder::new("cycle");
+        let a = b.task("a", "t", 1.0, 1.0);
+        let c = b.task("c", "t", 1.0, 1.0);
+        b.edge(a, c, 1.0);
+        b.edge(c, a, 1.0);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn rejects_self_loop_and_bad_weights() {
+        let mut b = WorkflowBuilder::new("bad");
+        let a = b.task("a", "t", 1.0, 1.0);
+        b.edge(a, a, 1.0);
+        assert!(b.build().is_err());
+
+        let mut b = WorkflowBuilder::new("bad2");
+        b.task("a", "t", -1.0, 1.0);
+        assert!(b.build().is_err());
+
+        let mut b = WorkflowBuilder::new("bad3");
+        b.task("a", "t", 1.0, f64::NAN);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names_and_empty() {
+        let mut b = WorkflowBuilder::new("dup");
+        b.task("a", "t", 1.0, 1.0);
+        b.task("a", "t", 1.0, 1.0);
+        assert!(b.build().is_err());
+        assert!(WorkflowBuilder::new("empty").build().is_err());
+    }
+
+    #[test]
+    fn memory_requirement_is_max_of_three() {
+        let wf = diamond();
+        // Task 0: m=100, in=0, out=11 -> 100.
+        assert_eq!(wf.memory_requirement(0), 100.0);
+        // Task 3: m=400, in=15, out=0 -> 400.
+        assert_eq!(wf.memory_requirement(3), 400.0);
+        // A task whose file sizes dominate.
+        let mut b = WorkflowBuilder::new("m");
+        let a = b.task("a", "t", 1.0, 1.0);
+        let c = b.task("c", "t", 1.0, 2.0);
+        let d = b.task("d", "t", 1.0, 1.0);
+        b.edge(a, c, 500.0);
+        b.edge(c, d, 300.0);
+        let wf = b.build().unwrap();
+        assert_eq!(wf.memory_requirement(1), 500.0);
+    }
+
+    #[test]
+    fn stats_sane() {
+        let wf = diamond();
+        let s = wf.stats();
+        assert_eq!(s.tasks, 4);
+        assert_eq!(s.edges, 4);
+        assert_eq!(s.depth, 3);
+        assert_eq!(s.total_work, 100.0);
+        assert_eq!(s.max_in_degree, 2);
+    }
+
+    #[test]
+    fn size_groups() {
+        assert_eq!(SizeGroup::of(100), SizeGroup::Tiny);
+        assert_eq!(SizeGroup::of(200), SizeGroup::Tiny);
+        assert_eq!(SizeGroup::of(1000), SizeGroup::Small);
+        assert_eq!(SizeGroup::of(8000), SizeGroup::Small);
+        assert_eq!(SizeGroup::of(10000), SizeGroup::Middle);
+        assert_eq!(SizeGroup::of(18000), SizeGroup::Middle);
+        assert_eq!(SizeGroup::of(20000), SizeGroup::Big);
+        assert_eq!(SizeGroup::of(30000), SizeGroup::Big);
+    }
+}

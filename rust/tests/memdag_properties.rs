@@ -1,0 +1,110 @@
+//! Property tests for the MemDag substrate: SP decomposition and the
+//! min-peak-memory traversal on random DAGs and generator models.
+
+use memsched::memdag::{greedy_min_peak, min_memory_traversal, peak_memory, sptree};
+use memsched::testing::{check, random_dag};
+
+#[test]
+fn traversals_are_topological_orders() {
+    check(80, 0x111, |rng| {
+        let wf = random_dag(rng, 100);
+        let tr = min_memory_traversal(&wf);
+        if !wf.is_topological_order(&tr.order) {
+            return Err("MemDag order not topological".into());
+        }
+        if tr.order.len() != wf.num_tasks() {
+            return Err("MemDag order incomplete".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn traversal_peak_matches_reported_peak() {
+    check(60, 0x222, |rng| {
+        let wf = random_dag(rng, 80);
+        let tr = min_memory_traversal(&wf);
+        let recomputed = peak_memory(&wf, &tr.order);
+        if (recomputed - tr.peak).abs() > 1e-6 * tr.peak.max(1.0) {
+            return Err(format!("peak mismatch: {} vs {}", tr.peak, recomputed));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn memdag_no_worse_than_greedy_on_sp_graphs() {
+    // On the SP-decomposable generator models, the Liu-style ordering must
+    // not lose to the naive topological order.
+    for model in memsched::generator::models::all_models() {
+        for samples in [3usize, 8, 15] {
+            let graph = memsched::generator::expand(&model, samples).unwrap();
+            let data = memsched::traces::HistoricalData::synthesize(
+                &memsched::traces::task_types(&graph),
+                &memsched::traces::TraceConfig::default(),
+                7,
+            );
+            let wf = memsched::traces::bind_weights(&graph, &data, 2);
+            let tr = min_memory_traversal(&wf);
+            let base = peak_memory(&wf, &wf.topological_order());
+            assert!(
+                tr.peak <= base * 1.0001,
+                "{} s={samples}: memdag {} vs topo {base}",
+                model.name,
+                tr.peak
+            );
+        }
+    }
+}
+
+#[test]
+fn greedy_fallback_is_topological_on_non_sp() {
+    check(60, 0x333, |rng| {
+        let wf = random_dag(rng, 70);
+        let order = greedy_min_peak(&wf);
+        if !wf.is_topological_order(&order) {
+            return Err("greedy order not topological".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sp_decomposition_vertex_complete_when_it_exists() {
+    check(80, 0x444, |rng| {
+        let wf = random_dag(rng, 60);
+        if let Some(tree) = sptree::decompose(&wf) {
+            if tree.root.num_vertices() != wf.num_tasks() {
+                return Err(format!(
+                    "SP tree has {} vertices, workflow {}",
+                    tree.root.num_vertices(),
+                    wf.num_tasks()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deep_chain_and_wide_fan_edge_cases() {
+    // Deep chain: 5 000 tasks (recursion depths, profile composition).
+    let mut b = memsched::workflow::WorkflowBuilder::new("chain");
+    let ids: Vec<_> = (0..5000).map(|i| b.task(format!("t{i}"), "t", 1.0, 10.0)).collect();
+    for w in ids.windows(2) {
+        b.edge(w[0], w[1], 1.0);
+    }
+    let wf = b.build().unwrap();
+    let tr = min_memory_traversal(&wf);
+    assert!(tr.used_sp);
+    assert_eq!(tr.order, (0..5000).collect::<Vec<_>>());
+
+    // Wide independent fan: 3 000 isolated tasks.
+    let mut b = memsched::workflow::WorkflowBuilder::new("fan");
+    for i in 0..3000 {
+        b.task(format!("t{i}"), "t", 1.0, (i % 17) as f64 + 1.0);
+    }
+    let wf = b.build().unwrap();
+    let tr = min_memory_traversal(&wf);
+    assert!(wf.is_topological_order(&tr.order));
+}

@@ -1,0 +1,122 @@
+//! Integration tests pinning the paper's qualitative *shapes* (§VI) at a
+//! reduced scale, so regressions in the heuristics or the workload model
+//! are caught by `cargo test`:
+//!
+//!  - HEFT overcommits and fails on large workflows; HEFTM variants stay
+//!    valid on the default cluster;
+//!  - on the memory-constrained cluster HEFTM-MM succeeds where
+//!    HEFTM-BL fails, and uses the least memory;
+//!  - dynamic: without recomputation executions die; with recomputation
+//!    HEFTM-MM survives.
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::{default_cluster, memory_constrained_cluster};
+use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
+
+fn workload(family: &str, size: usize, input: usize) -> memsched::workflow::Workflow {
+    WorkloadSpec { family: family.into(), size: Some(size), input, seed: 42 ^ size as u64 }
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn heft_fails_on_default_cluster_at_scale() {
+    let wf = workload("chipseq", 20000, 3);
+    let cluster = default_cluster();
+    let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+    assert!(!heft.valid, "HEFT should overcommit at 20k tasks");
+    assert!(
+        heft.mem_peak_frac.iter().cloned().fold(0.0, f64::max) > 1.0,
+        "HEFT peak usage must exceed 100%"
+    );
+    for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm] {
+        let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        assert!(s.valid, "{algo:?} must schedule the default cluster at 20k");
+        // Makespan within a sane band of the (invalid) HEFT bound.
+        assert!(s.makespan >= heft.makespan * 0.999);
+        assert!(s.makespan <= heft.makespan * 5.0, "{algo:?} makespan blow-up");
+    }
+}
+
+#[test]
+fn constrained_cluster_separates_the_heuristics() {
+    // chipseq @ 10k, large input: BL fails, MM succeeds (paper Fig 5).
+    let wf = workload("chipseq", 10000, 4);
+    let cluster = memory_constrained_cluster();
+    let bl = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+    let mm = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+    assert!(!bl.valid, "HEFTM-BL should fail on chipseq@10k input4 constrained");
+    assert!(mm.valid, "HEFTM-MM must always succeed (paper: 100%)");
+    // MM's memory-minimizing order uses less memory than BL's (Fig 7).
+    assert!(
+        mm.mean_mem_usage() < bl.mean_mem_usage(),
+        "MM {} vs BL {}",
+        mm.mean_mem_usage(),
+        bl.mean_mem_usage()
+    );
+}
+
+#[test]
+fn mm_memory_usage_insensitive_to_size() {
+    // Fig 7: MM's footprint stays flat with workflow size.
+    let cluster = memory_constrained_cluster();
+    let mut usages = Vec::new();
+    for size in [1000, 4000, 10000] {
+        let wf = workload("chipseq", size, 3);
+        let mm = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        assert!(mm.valid);
+        usages.push(mm.mean_mem_usage());
+    }
+    // "Flat" in the paper's sense: bounded well below capacity at every
+    // size (no growth toward 100% as for BL/BLC/HEFT).
+    let max = usages.iter().cloned().fold(0.0, f64::max);
+    assert!(max < 0.6, "MM usage must stay well below capacity: {usages:?}");
+}
+
+#[test]
+fn dynamic_recompute_rescues_constrained_executions() {
+    let wf = workload("methylseq", 1000, 3);
+    let cluster = memory_constrained_cluster();
+    let s = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+    assert!(s.valid);
+    let dev = DeviationModel::new(0.1, 1234);
+    let stat = simulate(&wf, &cluster, &s, &SimConfig::new(SimMode::FollowStatic, dev));
+    let dynr = simulate(&wf, &cluster, &s, &SimConfig::new(SimMode::Recompute, dev));
+    assert!(dynr.completed, "recompute mode must survive: {:?}", dynr.failure);
+    // The static mode typically dies here; if it survives, recompute must
+    // not be slower by more than a small factor.
+    if stat.completed {
+        assert!(dynr.makespan <= stat.makespan * 1.2);
+    }
+    assert!(dynr.recomputations > 0, "10% deviations must trigger recomputations");
+}
+
+#[test]
+fn relative_makespans_in_paper_band_small() {
+    // Fig 2 band at small scale: HEFTM-BL within ~1.0–1.6× of HEFT.
+    let wf = workload("atacseq", 2000, 2);
+    let cluster = default_cluster();
+    let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+    let bl = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+    assert!(bl.valid);
+    let rel = bl.makespan / heft.makespan;
+    assert!((0.999..=1.6).contains(&rel), "relative makespan {rel}");
+}
+
+#[test]
+fn runtimes_ordering_bl_faster_than_mm_at_scale() {
+    // Fig 9 shape: BL/BLC rank computation is cheaper than MM's MemDag.
+    let wf = workload("eager", 10000, 2);
+    let cluster = memory_constrained_cluster();
+    let t0 = std::time::Instant::now();
+    let _ = Algorithm::HeftmBl.rank_order(&wf, &cluster);
+    let t_bl = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let _ = Algorithm::HeftmMm.rank_order(&wf, &cluster);
+    let t_mm = t0.elapsed();
+    assert!(
+        t_mm >= t_bl,
+        "MemDag ranking should not be cheaper than bottom levels: {t_mm:?} vs {t_bl:?}"
+    );
+}

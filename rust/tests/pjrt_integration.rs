@@ -1,0 +1,107 @@
+//! End-to-end integration over the PJRT bridge: load both AOT artifacts,
+//! execute them, and check numerics against the native implementations.
+//! These tests require `make artifacts` (they are skipped otherwise so
+//! `cargo test` works on a fresh checkout).
+
+use memsched::runtime::{artifact_path, predictor::Predictor, scorer};
+use memsched::scheduler::engine::{EftScorer, ParentInfo, ScoreQuery};
+use memsched::scheduler::{Algorithm, Engine, EvictionPolicy};
+use memsched::testing::{check, random_cluster, random_dag};
+
+fn artifacts_built() -> bool {
+    artifact_path("eft_score.hlo.txt").exists() && artifact_path("predictor.hlo.txt").exists()
+}
+
+#[test]
+fn xla_scorer_matches_native_on_random_queries() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let xla = scorer::XlaScorer::load_default().unwrap();
+    check(25, 0x77AA, |rng| {
+        let k = rng.range_inclusive(1, 72);
+        let p = rng.range_inclusive(0, 16);
+        let parents: Vec<ParentInfo> = (0..p)
+            .map(|_| ParentInfo {
+                finish: rng.uniform(0.0, 500.0),
+                data: rng.uniform(0.0, 1e9),
+                proc: rng.range_inclusive(0, k - 1),
+            })
+            .collect();
+        let q = ScoreQuery {
+            proc_ready: (0..k).map(|_| rng.uniform(0.0, 500.0)).collect(),
+            speeds: (0..k).map(|_| rng.uniform(1.0, 32.0)).collect(),
+            avail_mem: (0..k).map(|_| rng.uniform(0.0, 64e9)).collect(),
+            comm: (0..p).map(|_| (0..k).map(|_| rng.uniform(0.0, 500.0)).collect()).collect(),
+            parents,
+            work: rng.uniform(0.1, 500.0),
+            memory: rng.uniform(0.0, 8e9),
+            out_total: rng.uniform(0.0, 4e9),
+            bandwidth: 1e9,
+        };
+        let (nft, nres) = scorer::NativeScorer.score(&q);
+        let (xft, xres) = xla.score(&q);
+        for j in 0..k {
+            // f32 artifact vs f64 native: tolerances scaled to magnitude.
+            let tol_ft = 1e-4 * nft[j].abs().max(1.0);
+            if (nft[j] - xft[j]).abs() > tol_ft {
+                return Err(format!("ft[{j}]: native {} vs xla {}", nft[j], xft[j]));
+            }
+            let tol_res = 1e-4 * nres[j].abs().max(1e4);
+            if (nres[j] - xres[j]).abs() > tol_res {
+                return Err(format!("res[{j}]: native {} vs xla {}", nres[j], xres[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_with_xla_scorer_produces_equivalent_schedules() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let xla = scorer::XlaScorer::load_default().unwrap();
+    check(8, 0x88BB, |rng| {
+        let wf = random_dag(rng, 40);
+        let cluster = random_cluster(rng);
+        let order = Algorithm::HeftmBl.rank_order(&wf, &cluster);
+        let native = Engine::new(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst)
+            .run(&order);
+        let accel = Engine::new(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst)
+            .with_scorer(&xla)
+            .run(&order);
+        if native.valid != accel.valid {
+            return Err(format!("validity diverged: {} vs {}", native.valid, accel.valid));
+        }
+        let rel = (native.makespan - accel.makespan).abs() / native.makespan.max(1e-9);
+        if rel > 0.01 {
+            return Err(format!(
+                "makespan diverged beyond tie-breaking: {} vs {}",
+                native.makespan, accel.makespan
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn predictor_shrinks_toward_observation() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let p = Predictor::load_default().unwrap();
+    // Monotone in the observed ratio; near-identity at 1.0.
+    let (w0, m0) = p.correct(1.0, 1.0, 100.0).unwrap();
+    assert!((w0 - 1.0).abs() < 0.1, "w0 = {w0}");
+    assert!((m0 - 1.0).abs() < 0.1, "m0 = {m0}");
+    let mut prev = 0.0;
+    for obs in [0.7, 0.9, 1.1, 1.3] {
+        let (w, _) = p.correct(obs, 1.0, 100.0).unwrap();
+        assert!(w > prev, "not monotone at {obs}: {w} <= {prev}");
+        prev = w;
+    }
+}

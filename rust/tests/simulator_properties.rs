@@ -1,0 +1,124 @@
+//! Property-based tests for the runtime system (discrete-event simulator).
+//!
+//! Invariants:
+//!  1. simulations terminate (complete or fail with a reason) — no stalls;
+//!  2. finish times respect dependencies when completed;
+//!  3. identical seeds → identical outcomes (both modes);
+//!  4. recompute mode completes whenever follow-static does (it only adds
+//!     options);
+//!  5. zero deviation in follow-static mode completes every valid
+//!     schedule.
+
+use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
+use memsched::testing::{check, random_cluster, random_dag};
+
+const CASES: usize = 40;
+
+#[test]
+fn simulations_always_terminate_coherently() {
+    check(CASES, 0x51A1, |rng| {
+        let wf = random_dag(rng, 60);
+        let cluster = random_cluster(rng);
+        let seed = rng.next_u64();
+        for algo in Algorithm::all() {
+            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            for mode in [SimMode::FollowStatic, SimMode::Recompute] {
+                let cfg = SimConfig::new(mode, DeviationModel::new(0.1, seed));
+                let out = simulate(&wf, &cluster, &s, &cfg);
+                if !out.completed && out.failure.is_none() {
+                    return Err(format!("{algo:?} {mode:?}: stalled without failure"));
+                }
+                if out.completed && out.started != wf.num_tasks() {
+                    return Err(format!("{algo:?} {mode:?}: completed but started {} of {}",
+                        out.started, wf.num_tasks()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn completed_runs_respect_dependencies() {
+    check(CASES, 0x52B2, |rng| {
+        let wf = random_dag(rng, 50);
+        let cluster = random_cluster(rng);
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.1, rng.next_u64()));
+        let out = simulate(&wf, &cluster, &s, &cfg);
+        if out.completed {
+            for e in wf.edges() {
+                if out.finish_times[e.dst] < out.finish_times[e.src] - 1e-6 {
+                    return Err(format!("edge ({}, {}) finished out of order", e.src, e.dst));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn identical_seeds_identical_outcomes() {
+    check(CASES, 0x53C3, |rng| {
+        let wf = random_dag(rng, 40);
+        let cluster = random_cluster(rng);
+        let seed = rng.next_u64();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBlc, EvictionPolicy::LargestFirst);
+        for mode in [SimMode::FollowStatic, SimMode::Recompute] {
+            let cfg = SimConfig::new(mode, DeviationModel::new(0.1, seed));
+            let a = simulate(&wf, &cluster, &s, &cfg);
+            let b = simulate(&wf, &cluster, &s, &cfg);
+            if a.completed != b.completed || (a.completed && a.makespan != b.makespan) {
+                return Err(format!("{mode:?}: nondeterministic outcome"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn recompute_dominates_follow_static_on_completion() {
+    check(CASES, 0x54D4, |rng| {
+        let wf = random_dag(rng, 50);
+        let cluster = random_cluster(rng);
+        let seed = rng.next_u64();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        if !s.valid {
+            return Ok(());
+        }
+        let dev = DeviationModel::new(0.1, seed);
+        let stat = simulate(&wf, &cluster, &s, &SimConfig::new(SimMode::FollowStatic, dev));
+        let dynr = simulate(&wf, &cluster, &s, &SimConfig::new(SimMode::Recompute, dev));
+        if stat.completed && !dynr.completed {
+            return Err(format!(
+                "follow-static completed but recompute failed: {:?}",
+                dynr.failure
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_deviation_completes_all_valid_schedules() {
+    check(CASES, 0x55E5, |rng| {
+        let wf = random_dag(rng, 50);
+        let cluster = random_cluster(rng);
+        for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm] {
+            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            if !s.valid {
+                continue;
+            }
+            let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::none(1));
+            let out = simulate(&wf, &cluster, &s, &cfg);
+            if !out.completed {
+                return Err(format!(
+                    "{algo:?}: zero-deviation execution failed: {:?}",
+                    out.failure
+                ));
+            }
+        }
+        Ok(())
+    });
+}
