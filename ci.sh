@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI check: tier-1 (build + tests) plus the smoke-scale suite through the
+# scheduling service's worker pool, including the byte-determinism check
+# the batch API guarantees.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+BIN=target/release/memsched
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+echo "== service: smoke suite ×2 through the pool (jobs=1 vs jobs=4) =="
+"$BIN" batch --suite smoke --repeat 2 --jobs 1 --out "$TMP/j1.jsonl"
+"$BIN" batch --suite smoke --repeat 2 --jobs 4 --out "$TMP/j4.jsonl"
+cmp "$TMP/j1.jsonl" "$TMP/j4.jsonl"
+echo "batch output byte-identical across worker counts"
+
+echo "== experiments: fig1 smoke through the pool =="
+"$BIN" experiment --figure fig1 --scale smoke --jobs 4 > /dev/null
+
+echo "ci: OK"

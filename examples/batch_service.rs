@@ -1,0 +1,67 @@
+//! Walkthrough of the parallel scheduling service: build a mixed batch of
+//! jobs (several workloads × algorithms, a simulation job, and deliberate
+//! duplicates), execute it on a multi-threaded service, and inspect the
+//! JSONL stream plus the schedule-cache counters.
+//!
+//! Run with: `cargo run --release --example batch_service`
+
+use std::sync::Arc;
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::small_cluster;
+use memsched::scheduler::Algorithm;
+use memsched::service::{
+    self, ClusterSpec, Job, JobSource, SchedulingService, SimJob,
+};
+use memsched::simulator::SimMode;
+
+fn main() -> anyhow::Result<()> {
+    // One shared platform for the whole batch (a job may also name a
+    // preset or a cluster JSON file via `ClusterSpec::Named`).
+    let cluster = ClusterSpec::Inline(Arc::new(small_cluster()));
+
+    let spec = |family: &str, size: Option<usize>, input: usize| {
+        JobSource::Generated(WorkloadSpec { family: family.into(), size, input, seed: 42 })
+    };
+
+    let mut jobs = Vec::new();
+    // All four algorithms on one 200-task chipseq instance. The four jobs
+    // share a single workflow materialization inside the service.
+    for algo in Algorithm::all() {
+        jobs.push(Job::new(spec("chipseq", Some(200), 2), cluster.clone()).with_algo(algo));
+    }
+    // A second workload family.
+    jobs.push(Job::new(spec("eager", Some(200), 3), cluster.clone()).with_algo(Algorithm::HeftmMm));
+    // A dynamic job: schedule + runtime simulation under 10% deviations.
+    jobs.push(
+        Job::new(spec("methylseq", None, 1), cluster.clone())
+            .with_algo(Algorithm::HeftmBl)
+            .with_sim(SimJob { mode: SimMode::Recompute, sigma: 0.1, seed: 7 }),
+    );
+    // Deliberate duplicates: identical requests dedupe to one computation
+    // through the content-addressed schedule cache.
+    let dup = jobs[1].clone();
+    jobs.push(dup.clone());
+    jobs.push(dup);
+
+    let service = SchedulingService::new(4);
+    println!("submitting {} jobs on {} workers...\n", jobs.len(), service.workers());
+    let results = service.run_batch(jobs);
+
+    println!("--- JSONL stream (deterministic: identical bytes for any worker count) ---");
+    print!("{}", service::to_jsonl(&results));
+
+    let stats = service.cache_stats();
+    println!("\n--- summary ---");
+    println!("jobs:               {}", results.len());
+    println!("deduped (cache_hit): {}", results.iter().filter(|r| r.cache_hit).count());
+    println!("schedules computed: {}", stats.computed);
+    println!("cache lookups/hits: {}/{}", stats.lookups, stats.hits());
+
+    anyhow::ensure!(
+        results.iter().filter(|r| r.cache_hit).count() >= 2,
+        "the duplicate jobs must be served from the cache"
+    );
+    anyhow::ensure!(results.iter().all(|r| r.error.is_none()), "all jobs must succeed");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Scheduling-service throughput benchmark: the same job batch executed
+//! with 1 worker vs all cores, plus the schedule cache's warm-path
+//! speedup. Also re-verifies the byte-identical JSONL guarantee on the
+//! bench batch itself.
+//!
+//! `MEMSCHED_SUITE_SCALE=smoke|quick` sizes the batch (default smoke, so
+//! the bench is quick by default); `MEMSCHED_JOBS` caps the parallel
+//! worker count.
+
+mod common;
+
+use memsched::experiments::{self, SuiteScale};
+use memsched::service::{self, ClusterSpec, Job, SchedulingService};
+
+fn batch(scale: SuiteScale) -> Vec<Job> {
+    // The suite grid, duplicated once: the second half exercises the
+    // batch-level dedupe exactly like repeated production requests.
+    let base = experiments::static_suite_jobs(scale, common::SEED, &ClusterSpec::Named("default".into()));
+    let mut jobs = base.clone();
+    jobs.extend(base);
+    jobs
+}
+
+fn run(jobs: Vec<Job>, workers: usize) -> (String, f64, usize) {
+    let n = jobs.len();
+    let service = SchedulingService::new(workers);
+    let t0 = std::time::Instant::now();
+    let results = service.run_batch(jobs);
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(results.len(), n);
+    assert!(results.iter().all(|r| r.error.is_none()), "bench batch must succeed");
+    (service::to_jsonl(&results), secs, service.cache_stats().computed)
+}
+
+fn main() {
+    let scale = match common::scale_from_env() {
+        SuiteScale::Full => SuiteScale::Quick, // full would take far too long here
+        s => s,
+    };
+    let workers = common::workers_from_env();
+    let jobs = batch(scale);
+    println!(
+        "== bench_service: {} jobs (suite scale {scale:?} ×2), {} parallel worker(s) ==",
+        jobs.len(),
+        workers
+    );
+
+    let (serial_out, serial_secs, serial_computed) = run(jobs.clone(), 1);
+    println!(
+        "workers=1      : {:>8.2}s  ({:.1} jobs/s, {} schedules computed)",
+        serial_secs,
+        jobs.len() as f64 / serial_secs,
+        serial_computed
+    );
+
+    let (parallel_out, parallel_secs, parallel_computed) = run(jobs.clone(), workers);
+    println!(
+        "workers={workers:<6}: {:>8.2}s  ({:.1} jobs/s, {} schedules computed)",
+        parallel_secs,
+        jobs.len() as f64 / parallel_secs,
+        parallel_computed
+    );
+    assert_eq!(serial_out, parallel_out, "JSONL must be byte-identical across worker counts");
+    assert_eq!(serial_computed, parallel_computed);
+    println!(
+        "speedup        : {:.2}x on {} workers (byte-identical output verified)",
+        serial_secs / parallel_secs,
+        workers
+    );
+
+    // Warm-cache path: a service that has already answered the batch.
+    let service = SchedulingService::new(workers);
+    let _ = service.run_batch(jobs.clone());
+    let t0 = std::time::Instant::now();
+    let warm = service.run_batch(jobs.clone());
+    let warm_secs = t0.elapsed().as_secs_f64();
+    assert!(warm.iter().all(|r| r.cache_hit), "second pass must be all cache hits");
+    println!(
+        "warm cache     : {:>8.2}s  ({:.1} jobs/s, {:.1}x vs cold serial)",
+        warm_secs,
+        jobs.len() as f64 / warm_secs,
+        serial_secs / warm_secs
+    );
+}

@@ -3,7 +3,7 @@
 
 use memsched::experiments::{self, DynamicResult, StaticResult, SuiteScale};
 use memsched::platform::Cluster;
-use memsched::scheduler::Algorithm;
+use memsched::service::pool;
 
 /// Suite scale from `MEMSCHED_SUITE_SCALE` (smoke|quick|full), default quick.
 pub fn scale_from_env() -> SuiteScale {
@@ -13,36 +13,27 @@ pub fn scale_from_env() -> SuiteScale {
         .unwrap_or(SuiteScale::Quick)
 }
 
-pub const SEED: u64 = 42;
-
-/// Run the static suite on a cluster, with progress on stderr.
-pub fn static_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<StaticResult> {
-    let specs = experiments::suite(scale, SEED);
-    let mut out = Vec::new();
-    for (i, spec) in specs.iter().enumerate() {
-        eprint!("\r[{}/{}] {}          ", i + 1, specs.len(), spec.id());
-        out.extend(experiments::run_static(spec, cluster).expect("suite workload builds"));
-    }
-    eprintln!();
-    out
+/// Worker count from `MEMSCHED_JOBS`, default all cores; 0 clamps to 1
+/// (matching the CLI's `--jobs 0` behaviour).
+pub fn workers_from_env() -> usize {
+    std::env::var("MEMSCHED_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or_else(pool::default_workers)
 }
 
-/// Run the dynamic suite (≤ 2000 tasks, σ = 10%) on a cluster.
+pub const SEED: u64 = 42;
+
+/// Run the static suite on a cluster through the scheduling-service pool
+/// (the suite runner prints its own progress line to stderr).
+pub fn static_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<StaticResult> {
+    experiments::run_static_suite(scale, SEED, cluster, workers_from_env())
+        .expect("suite workloads build")
+}
+
+/// Run the dynamic suite (≤ 2000 tasks, σ = 10%) through the pool.
 pub fn dynamic_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<DynamicResult> {
-    let specs: Vec<_> = experiments::suite(scale, SEED)
-        .into_iter()
-        .filter(|s| s.size.is_none_or(|n| n <= 2000))
-        .collect();
-    let mut out = Vec::new();
-    for (i, spec) in specs.iter().enumerate() {
-        eprint!("\r[{}/{}] {}          ", i + 1, specs.len(), spec.id());
-        for algo in Algorithm::all() {
-            out.push(
-                experiments::run_dynamic(spec, cluster, algo, 0.1)
-                    .expect("suite workload builds"),
-            );
-        }
-    }
-    eprintln!();
-    out
+    experiments::run_dynamic_suite(scale, SEED, cluster, 0.1, workers_from_env())
+        .expect("suite workloads build")
 }

@@ -75,9 +75,32 @@ impl Args {
         self.take(key).filter(|s| !s.is_empty())
     }
 
-    /// Required string option.
+    /// Optional string option that rejects a present-but-valueless key
+    /// instead of silently reading it as absent. That state arises two
+    /// ways — an explicit empty `--key=`, or a bare `--key` whose value
+    /// was swallowed because the next token starts with `--` (values
+    /// beginning with `--` are only accepted in the `=` form) — and the
+    /// diagnostic covers both.
+    pub fn opt_val(&mut self, key: &str) -> Result<Option<String>> {
+        self.used.insert(key.to_string());
+        match self.options.get(key).and_then(|v| v.last()) {
+            None => Ok(None),
+            Some(s) if s.is_empty() => bail!(
+                "missing or empty value for --{key}: pass it as --{key}=<value> \
+                 (values beginning with `--` are only accepted in that form)"
+            ),
+            Some(s) => Ok(Some(s.clone())),
+        }
+    }
+
+    /// Required string option. Distinguishes an absent option from one
+    /// whose value was swallowed: a bare `--key` followed by another
+    /// `--...` token records an empty value, because values beginning
+    /// with `--` can only be passed in the `--key=value` form (the
+    /// check itself lives in [`Args::opt_val`]).
     pub fn req_str(&mut self, key: &str) -> Result<String> {
-        self.opt_str(key).ok_or_else(|| anyhow!("missing required option --{key}"))
+        self.opt_val(key)?
+            .ok_or_else(|| anyhow!("missing required option --{key}"))
     }
 
     /// Boolean flag (present → true). `--key=false` is honored.
@@ -90,9 +113,10 @@ impl Args {
         }
     }
 
-    /// Optional typed option.
+    /// Optional typed option. A present key whose value was swallowed
+    /// (see [`Args::opt_val`]) is an error, not a silent default.
     pub fn opt<T: std::str::FromStr>(&mut self, key: &str) -> Result<Option<T>> {
-        match self.opt_str(key) {
+        match self.opt_val(key)? {
             None => Ok(None),
             Some(s) => s
                 .parse::<T>()
@@ -200,5 +224,54 @@ mod tests {
     fn positionals_and_terminator() {
         let a = parse(&["prog", "cmd", "p1", "--k", "v", "--", "--not-an-option"]);
         assert_eq!(a.positionals(), &["p1".to_string(), "--not-an-option".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax_accepts_values_beginning_with_dashes() {
+        let mut a = parse(&["prog", "x", "--key=--weird", "--num=-3"]);
+        assert_eq!(a.req_str("key").unwrap(), "--weird");
+        assert_eq!(a.req::<i64>("num").unwrap(), -3);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn swallowed_value_reports_equals_form() {
+        // `--key --other 1`: `--other` looks like an option, so --key has
+        // no value; the error must point at the --key=<value> form.
+        let mut a = parse(&["prog", "x", "--key", "--other", "1"]);
+        let err = a.req_str("key").unwrap_err().to_string();
+        assert!(err.contains("--key=<value>"), "unhelpful error: {err}");
+        // The next option still parsed normally.
+        assert_eq!(a.req::<u32>("other").unwrap(), 1);
+        // Typed accessors refuse the swallowed value too.
+        let mut b = parse(&["prog", "x", "--sigma", "--seed", "7"]);
+        let err = b.opt::<f64>("sigma").unwrap_err().to_string();
+        assert!(err.contains("--sigma=<value>"), "unhelpful error: {err}");
+        // ... and so does the checked optional-string accessor.
+        let mut c = parse(&["prog", "x", "--out", "--jobs", "4"]);
+        let err = c.opt_val("out").unwrap_err().to_string();
+        assert!(err.contains("--out=<value>"), "unhelpful error: {err}");
+        assert_eq!(c.opt_val("jobs").unwrap().as_deref(), Some("4"));
+        assert_eq!(c.opt_val("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn repeated_options_last_wins_and_multi_collects() {
+        let mut a = parse(&["prog", "x", "--n", "1", "--n", "2", "--n", "3"]);
+        assert_eq!(a.req::<u64>("n").unwrap(), 3, "scalar accessors take the last value");
+        let mut b = parse(&["prog", "x", "--n", "1", "--n", "2", "--n", "3"]);
+        assert_eq!(b.multi("n"), vec!["1", "2", "3"]);
+        b.finish().unwrap();
+    }
+
+    #[test]
+    fn repeated_flags_stay_true() {
+        let mut a = parse(&["prog", "x", "--verbose", "--verbose"]);
+        assert!(a.flag("verbose"));
+        // Last value wins for flags too: an explicit =false overrides.
+        let mut b = parse(&["prog", "x", "--verbose", "--verbose=false"]);
+        assert!(!b.flag("verbose"));
+        a.finish().unwrap();
+        b.finish().unwrap();
     }
 }

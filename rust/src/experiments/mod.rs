@@ -14,9 +14,11 @@ pub mod figures;
 use crate::generator::{self, models};
 use crate::platform::Cluster;
 use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy, Schedule};
+use crate::service::{ClusterSpec, Job, JobSource, SchedulingService, SimJob};
 use crate::simulator::{simulate, DeviationModel, SimConfig, SimMode, SimOutcome};
 use crate::traces::{self, HistoricalData, TraceConfig};
 use crate::workflow::{SizeGroup, Workflow};
+use std::sync::Arc;
 
 /// How large a suite to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -246,6 +248,160 @@ pub fn run_dynamic(
     })
 }
 
+/// Build the static-evaluation job grid (workflow × size × input ×
+/// algorithm) for submission through the scheduling service. Job order is
+/// spec-major, algorithm-minor with [`Algorithm::all`]'s ordering — the
+/// suite runners below rely on it for reassembly.
+pub fn static_suite_jobs(scale: SuiteScale, seed: u64, cluster: &ClusterSpec) -> Vec<Job> {
+    jobs_for_specs(&suite(scale, seed), cluster)
+}
+
+/// One static job per (spec, algorithm) cell, spec-major in the given
+/// spec order, algorithm-minor in [`Algorithm::all`] order.
+fn jobs_for_specs(specs: &[WorkloadSpec], cluster: &ClusterSpec) -> Vec<Job> {
+    let mut jobs = Vec::with_capacity(specs.len() * Algorithm::all().len());
+    for spec in specs {
+        for algo in Algorithm::all() {
+            jobs.push(Job {
+                source: JobSource::Generated(spec.clone()),
+                cluster: cluster.clone(),
+                algo,
+                policy: EvictionPolicy::LargestFirst,
+                sim: None,
+            });
+        }
+    }
+    jobs
+}
+
+/// Run the static suite through the scheduling service on `workers`
+/// threads. Semantically identical to looping [`run_static`] over
+/// [`suite`] (same workloads, same normalization by HEFT's makespan),
+/// but the grid executes on the work-stealing pool and identical
+/// (workflow, cluster, algorithm) cells dedupe through the schedule
+/// cache, so the Quick/Full sweeps scale with cores.
+///
+/// Caveat: `sched_seconds` (Fig 9) is wall time measured while other
+/// schedules may be computing on sibling workers; for contention-free
+/// heuristic timings, run with `workers = 1`.
+pub fn run_static_suite(
+    scale: SuiteScale,
+    seed: u64,
+    cluster: &Cluster,
+    workers: usize,
+) -> anyhow::Result<Vec<StaticResult>> {
+    let specs = suite(scale, seed);
+    let cspec = ClusterSpec::Inline(Arc::new(cluster.clone()));
+    // Jobs are built from the very `specs` vec the reassembly below
+    // indexes, so the chunk arithmetic cannot drift out of sync.
+    let jobs = jobs_for_specs(&specs, &cspec);
+    eprintln!(
+        "static suite `{}`: {} workloads × {} algorithms on {} worker(s)...",
+        cluster.name,
+        specs.len(),
+        Algorithm::all().len(),
+        workers.max(1)
+    );
+    let service = SchedulingService::new(workers);
+    let results = service.run_batch(jobs);
+    let algos = Algorithm::all();
+    let mut out = Vec::with_capacity(results.len());
+    for (si, spec) in specs.iter().enumerate() {
+        let chunk = &results[si * algos.len()..(si + 1) * algos.len()];
+        for r in chunk {
+            if let Some(e) = &r.error {
+                anyhow::bail!("suite workload `{}` failed: {e}", spec.id());
+            }
+        }
+        // Algorithm::all() leads with HEFT, whose makespan normalizes the
+        // spec's rows (Figs 2/6) exactly as in the serial `run_static`.
+        let heft_makespan = chunk[0].makespan;
+        for (ai, algo) in algos.into_iter().enumerate() {
+            let r = &chunk[ai];
+            out.push(StaticResult {
+                spec_id: spec.id(),
+                group: SizeGroup::of(r.tasks),
+                tasks: r.tasks,
+                algo,
+                valid: r.valid,
+                makespan: r.makespan,
+                mem_usage: r.mem_usage,
+                heft_makespan,
+                sched_seconds: r.seconds,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Run the dynamic suite (sizes ≤ 2000, both execution modes per
+/// workload × algorithm) through the scheduling service. The two
+/// simulation-mode jobs of each (workload, algorithm) cell share one
+/// static-schedule computation via the schedule cache.
+pub fn run_dynamic_suite(
+    scale: SuiteScale,
+    seed: u64,
+    cluster: &Cluster,
+    sigma: f64,
+    workers: usize,
+) -> anyhow::Result<Vec<DynamicResult>> {
+    let specs: Vec<WorkloadSpec> = suite(scale, seed)
+        .into_iter()
+        .filter(|s| s.size.is_none_or(|n| n <= 2000))
+        .collect();
+    let cspec = ClusterSpec::Inline(Arc::new(cluster.clone()));
+    let mut jobs = Vec::new();
+    for spec in &specs {
+        for algo in Algorithm::all() {
+            for mode in [SimMode::Recompute, SimMode::FollowStatic] {
+                jobs.push(Job {
+                    source: JobSource::Generated(spec.clone()),
+                    cluster: cspec.clone(),
+                    algo,
+                    policy: EvictionPolicy::LargestFirst,
+                    sim: Some(SimJob { mode, sigma, seed: spec.seed ^ 0xdeu64 }),
+                });
+            }
+        }
+    }
+    eprintln!(
+        "dynamic suite `{}`: {} workloads × {} algorithms × 2 modes on {} worker(s)...",
+        cluster.name,
+        specs.len(),
+        Algorithm::all().len(),
+        workers.max(1)
+    );
+    let service = SchedulingService::new(workers);
+    let results = service.run_batch(jobs);
+    let mut out = Vec::with_capacity(results.len() / 2);
+    let mut it = results.iter();
+    for spec in &specs {
+        for algo in Algorithm::all() {
+            let rec = it.next().expect("one Recompute row per (spec, algo)");
+            let stat = it.next().expect("one FollowStatic row per (spec, algo)");
+            for r in [rec, stat] {
+                if let Some(e) = &r.error {
+                    anyhow::bail!("suite workload `{}` failed: {e}", spec.id());
+                }
+            }
+            let rsim = rec.sim.as_ref().expect("dynamic jobs carry sim results");
+            let ssim = stat.sim.as_ref().expect("dynamic jobs carry sim results");
+            out.push(DynamicResult {
+                spec_id: spec.id(),
+                group: SizeGroup::of(rec.tasks),
+                algo,
+                initially_valid: rec.valid,
+                recompute_ok: rsim.completed,
+                recompute_makespan: rsim.makespan,
+                recomputations: rsim.recomputations,
+                static_ok: ssim.completed,
+                static_makespan: ssim.makespan,
+            });
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +451,50 @@ mod tests {
         assert!(r.recompute_ok);
         if let Some(imp) = r.improvement() {
             assert!(imp.abs() < 100.0);
+        }
+    }
+
+    #[test]
+    fn pooled_static_suite_matches_serial() {
+        let cluster = presets::small_cluster();
+        let pooled = run_static_suite(SuiteScale::Smoke, 1, &cluster, 4).unwrap();
+        let mut serial = Vec::new();
+        for spec in suite(SuiteScale::Smoke, 1) {
+            serial.extend(run_static(&spec, &cluster).unwrap());
+        }
+        assert_eq!(pooled.len(), serial.len());
+        for (p, s) in pooled.iter().zip(&serial) {
+            assert_eq!(p.spec_id, s.spec_id);
+            assert_eq!(p.algo, s.algo);
+            assert_eq!(p.valid, s.valid);
+            assert_eq!(p.makespan, s.makespan, "{}/{:?}", p.spec_id, p.algo);
+            assert_eq!(p.heft_makespan, s.heft_makespan);
+            assert_eq!(p.mem_usage, s.mem_usage);
+            assert_eq!(p.tasks, s.tasks);
+        }
+    }
+
+    #[test]
+    fn pooled_dynamic_suite_matches_serial() {
+        let cluster = presets::small_cluster();
+        let pooled = run_dynamic_suite(SuiteScale::Smoke, 1, &cluster, 0.1, 4).unwrap();
+        let mut serial = Vec::new();
+        for spec in suite(SuiteScale::Smoke, 1) {
+            for algo in Algorithm::all() {
+                serial.push(run_dynamic(&spec, &cluster, algo, 0.1).unwrap());
+            }
+        }
+        assert_eq!(pooled.len(), serial.len());
+        for (p, s) in pooled.iter().zip(&serial) {
+            assert_eq!(p.spec_id, s.spec_id);
+            assert_eq!(p.algo, s.algo);
+            assert_eq!(p.initially_valid, s.initially_valid);
+            assert_eq!(p.recompute_ok, s.recompute_ok);
+            assert_eq!(p.static_ok, s.static_ok);
+            // NaN markers (skipped executions) compare via bits.
+            assert_eq!(p.recompute_makespan.to_bits(), s.recompute_makespan.to_bits());
+            assert_eq!(p.static_makespan.to_bits(), s.static_makespan.to_bits());
+            assert_eq!(p.recomputations, s.recomputations);
         }
     }
 }

@@ -20,10 +20,19 @@
 //!   artifacts from `artifacts/*.hlo.txt` (built once by `make artifacts`).
 //! - [`experiments`], [`metrics`]: the harness regenerating every figure of
 //!   the paper's evaluation (see DESIGN.md for the experiment index).
+//! - [`service`]: the parallel scheduling service — batches of jobs
+//!   (workflow source + platform + algorithm config + sim mode) executed
+//!   on a sharded work-stealing `std::thread` pool, deduplicated through
+//!   a content-addressed schedule cache, and streamed as JSONL whose
+//!   bytes are identical for any worker count (DESIGN.md §Service). The
+//!   experiments suite and the `memsched batch` subcommand both run
+//!   through it.
 //! - [`ser`], [`cli`], [`bench`], [`testing`]: in-tree substrates (JSON,
 //!   arg parsing, bench statistics, property testing) — the build
 //!   environment is offline, so these common utilities are implemented
-//!   here rather than pulled from crates.io.
+//!   here rather than pulled from crates.io (the few external crate names
+//!   that remain, `anyhow`/`libc`/`log`/`xla`, resolve to vendored shims
+//!   under `rust/vendor/`).
 
 pub mod bench;
 pub mod cli;
@@ -35,6 +44,7 @@ pub mod platform;
 pub mod runtime;
 pub mod scheduler;
 pub mod ser;
+pub mod service;
 pub mod simulator;
 pub mod testing;
 pub mod traces;

@@ -7,15 +7,20 @@
 //! - `cluster-info`  print a cluster configuration (Table II presets)
 //! - `schedule`      compute a static schedule and report it
 //! - `simulate`      run the dynamic runtime system on a schedule
+//! - `batch`         run a JSONL job batch on the parallel scheduling service
 //! - `experiment`    run an evaluation suite and print a figure's table
 //!
 //! Run `memsched help` for the full usage text.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 use memsched::cli::Args;
 use memsched::experiments::{self, figures, SuiteScale};
 use memsched::platform::Cluster;
 use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::ser::json::Value;
+use memsched::service::{
+    self, ClusterSpec, Job, JobSource, SchedulingService, SimJob,
+};
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 use memsched::workflow;
 
@@ -35,11 +40,21 @@ COMMANDS:
                 [--no-recompute]
   retrace       --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
                 [--lose-proc J]...   assess deviation impact on a schedule (§V)
+  batch         --input jobs.jsonl | --suite smoke|quick|full  [--jobs N]
+                [--repeat K] [--seed S] [--cluster C] [--out results.jsonl]
+                run a job batch on the multi-threaded scheduling service;
+                results stream as JSONL, byte-identical for any --jobs
   experiment    --figure fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|validity
-                [--scale smoke|quick|full] [--seed S] [--markdown]
+                [--scale smoke|quick|full] [--seed S] [--jobs N] [--markdown]
   help          print this text
 
-Models: atacseq, bacass, chipseq, eager, methylseq.";
+Models: atacseq, bacass, chipseq, eager, methylseq.
+
+Batch job lines are JSON objects:
+  {\"model\": \"chipseq\", \"tasks\": 200, \"input\": 2, \"seed\": 42}   (generated)
+  {\"workflow\": \"wf.json\"}                                      (from file)
+with optional \"cluster\", \"algo\", \"eviction\", and
+\"sim\": {\"mode\": \"recompute\"|\"static\", \"sigma\": 0.1, \"seed\": 7}.";
 
 fn main() {
     // Die quietly when piped into `head` etc. (default SIGPIPE behaviour).
@@ -65,6 +80,7 @@ fn run() -> Result<()> {
         Some("schedule") => cmd_schedule(&mut args),
         Some("simulate") => cmd_simulate(&mut args),
         Some("retrace") => cmd_retrace(&mut args),
+        Some("batch") => cmd_batch(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("help") | None => {
             println!("{USAGE}");
@@ -80,7 +96,7 @@ fn load_workflow(args: &mut Args) -> Result<workflow::Workflow> {
 }
 
 fn load_cluster(args: &mut Args) -> Result<Cluster> {
-    Cluster::load(&args.opt_str("cluster").unwrap_or_else(|| "default".into()))
+    Cluster::load(&args.opt_val("cluster")?.unwrap_or_else(|| "default".into()))
 }
 
 fn cmd_generate(args: &mut Args) -> Result<()> {
@@ -162,8 +178,8 @@ fn cmd_schedule(args: &mut Args) -> Result<()> {
     let cluster = load_cluster(args)?;
     let algo: Algorithm = args.opt_or("algo", Algorithm::HeftmBl)?;
     let policy: EvictionPolicy = args.opt_or("eviction", EvictionPolicy::LargestFirst)?;
-    let scorer_kind = args.opt_str("scorer").unwrap_or_else(|| "native".into());
-    let out = args.opt_str("out");
+    let scorer_kind = args.opt_val("scorer")?.unwrap_or_else(|| "native".into());
+    let out = args.opt_val("out")?;
     args.finish()?;
 
     let t0 = std::time::Instant::now();
@@ -306,17 +322,35 @@ fn cmd_retrace(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// `--jobs N` (clamped to ≥ 1), defaulting to all cores.
+fn workers_arg(args: &mut Args) -> Result<usize> {
+    Ok(match args.opt::<usize>("jobs")? {
+        Some(n) => n.max(1),
+        None => memsched::service::pool::default_workers(),
+    })
+}
+
 fn cmd_experiment(args: &mut Args) -> Result<()> {
     let figure = args.req_str("figure")?;
     let scale: SuiteScale = args.opt_or("scale", SuiteScale::Quick)?;
     let seed: u64 = args.opt_or("seed", 42)?;
+    let workers = workers_arg(args)?;
     let markdown = args.flag("markdown");
     args.finish()?;
 
+    if figure == "fig9" && workers > 1 {
+        eprintln!(
+            "note: fig9 reports per-heuristic wall times; with --jobs {workers} they are \
+             measured under pool contention — pass --jobs 1 for clean timings"
+        );
+    }
+
+    // Every suite runs through the scheduling-service pool on `workers`
+    // threads (serial per-spec loops lived here before).
     let table = match figure.as_str() {
         "fig1" | "fig2" | "fig3" | "fig4" => {
             let cluster = memsched::platform::presets::default_cluster();
-            let results = run_static_suite(scale, seed, &cluster)?;
+            let results = experiments::run_static_suite(scale, seed, &cluster, workers)?;
             match figure.as_str() {
                 "fig1" => figures::success_rates(&results),
                 "fig2" => figures::relative_makespans(&results),
@@ -326,7 +360,7 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
         }
         "fig5" | "fig6" | "fig7" | "fig9" => {
             let cluster = memsched::platform::presets::memory_constrained_cluster();
-            let results = run_static_suite(scale, seed, &cluster)?;
+            let results = experiments::run_static_suite(scale, seed, &cluster, workers)?;
             match figure.as_str() {
                 "fig5" => figures::success_rates(&results),
                 "fig6" => figures::relative_makespans(&results),
@@ -336,7 +370,7 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
         }
         "fig8" | "validity" => {
             let cluster = memsched::platform::presets::memory_constrained_cluster();
-            let results = run_dynamic_suite(scale, seed, &cluster)?;
+            let results = experiments::run_dynamic_suite(scale, seed, &cluster, 0.1, workers)?;
             if figure == "fig8" {
                 figures::dynamic_improvement(&results)
             } else {
@@ -349,37 +383,186 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// Run the static suite (all four algorithms on every workload).
-fn run_static_suite(
-    scale: SuiteScale,
-    seed: u64,
-    cluster: &Cluster,
-) -> Result<Vec<experiments::StaticResult>> {
-    let specs = experiments::suite(scale, seed);
-    let mut results = Vec::new();
-    for (i, spec) in specs.iter().enumerate() {
-        eprintln!("[{}/{}] {}", i + 1, specs.len(), spec.id());
-        results.extend(experiments::run_static(spec, cluster)?);
+/// Run a batch of scheduling jobs on the multi-threaded service and
+/// stream the results as JSONL (stdout or `--out`). The output bytes are
+/// identical for any `--jobs` value; the run summary goes to stderr.
+fn cmd_batch(args: &mut Args) -> Result<()> {
+    let input = args.opt_val("input")?;
+    let suite = args.opt_val("suite")?;
+    let seed: u64 = args.opt_or("seed", 42)?;
+    let default_cluster = args.opt_val("cluster")?.unwrap_or_else(|| "default".into());
+    let workers = workers_arg(args)?;
+    let repeat: usize = args.opt_or("repeat", 1)?;
+    if repeat == 0 {
+        bail!("--repeat must be at least 1");
     }
-    Ok(results)
+    let out = args.opt_val("out")?;
+    args.finish()?;
+
+    let base: Vec<Job> = match (&input, &suite) {
+        (Some(path), None) => parse_jobs_file(path, &default_cluster, seed)?,
+        (None, Some(scale_str)) => {
+            let scale: SuiteScale = scale_str.parse()?;
+            experiments::static_suite_jobs(scale, seed, &ClusterSpec::Named(default_cluster))
+        }
+        _ => bail!("batch requires exactly one of --input <jobs.jsonl> or --suite <smoke|quick|full>"),
+    };
+    if base.is_empty() {
+        bail!("batch is empty");
+    }
+    let mut jobs = Vec::with_capacity(base.len() * repeat);
+    for _ in 0..repeat {
+        jobs.extend(base.iter().cloned());
+    }
+
+    let t0 = std::time::Instant::now();
+    let service = SchedulingService::new(workers);
+    let results = service.run_batch(jobs);
+    let text = service::to_jsonl(&results);
+    match &out {
+        Some(path) => std::fs::write(path, &text).with_context(|| format!("writing {path}"))?,
+        None => print!("{text}"),
+    }
+
+    let stats = service.cache_stats();
+    let dedup_hits = results.iter().filter(|r| r.cache_hit).count();
+    let failed = results.iter().filter(|r| r.error.is_some()).count();
+    eprintln!(
+        "batch: {} jobs ({} deduped), {} schedules computed, {} cache hits, {} workers, {}",
+        results.len(),
+        dedup_hits,
+        stats.computed,
+        stats.hits(),
+        workers,
+        memsched::bench::fmt_duration(t0.elapsed())
+    );
+    if failed > 0 {
+        bail!("{failed} of {} jobs failed (see the `error` lines)", results.len());
+    }
+    Ok(())
 }
 
-/// Run the dynamic suite (sizes ≤ 2000, as in the paper's Fig 8).
-fn run_dynamic_suite(
-    scale: SuiteScale,
-    seed: u64,
-    cluster: &Cluster,
-) -> Result<Vec<experiments::DynamicResult>> {
-    let specs: Vec<_> = experiments::suite(scale, seed)
-        .into_iter()
-        .filter(|s| s.size.is_none_or(|n| n <= 2000))
-        .collect();
-    let mut results = Vec::new();
-    for (i, spec) in specs.iter().enumerate() {
-        eprintln!("[{}/{}] {}", i + 1, specs.len(), spec.id());
-        for algo in Algorithm::all() {
-            results.push(experiments::run_dynamic(spec, cluster, algo, 0.1)?);
+/// Parse a JSONL job file (one JSON object per line; `#` comments and
+/// blank lines ignored). `default_seed` (the CLI's `--seed`) applies to
+/// generated jobs whose lines omit an explicit `seed`.
+fn parse_jobs_file(path: &str, default_cluster: &str, default_seed: u64) -> Result<Vec<Job>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v = Value::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", lineno + 1))?;
+        jobs.push(
+            parse_job(&v, default_cluster, default_seed)
+                .with_context(|| format!("{path}:{} (job {})", lineno + 1, jobs.len() + 1))?,
+        );
+    }
+    Ok(jobs)
+}
+
+fn parse_job(v: &Value, default_cluster: &str, default_seed: u64) -> Result<Job> {
+    // Mirror Args::finish's strictness: a typo'd key must error, not
+    // silently fall back to a default.
+    const JOB_KEYS: [&str; 9] =
+        ["workflow", "model", "tasks", "input", "seed", "cluster", "algo", "eviction", "sim"];
+    let fields = v.as_object().ok_or_else(|| anyhow::anyhow!("job line must be a JSON object"))?;
+    for (key, _) in fields {
+        if !JOB_KEYS.contains(&key.as_str()) {
+            bail!("unknown job field `{key}` (expected one of {})", JOB_KEYS.join(", "));
         }
     }
-    Ok(results)
+    let source = match (v.get("workflow"), v.get("model")) {
+        (Some(wf), None) => {
+            // Generator-only knobs on a file job would be silently dead;
+            // reject them like any other unusable input.
+            for generator_key in ["tasks", "input", "seed"] {
+                if v.get(generator_key).is_some() {
+                    bail!(
+                        "`{generator_key}` only applies to generated jobs (`model`), not `workflow` files"
+                    );
+                }
+            }
+            let path = wf
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("`workflow` must be a file path string"))?;
+            JobSource::File(std::path::PathBuf::from(path))
+        }
+        (None, Some(model)) => {
+            let family = model
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("`model` must be a model name string"))?
+                .to_string();
+            let size = match v.get("tasks") {
+                None => None,
+                Some(t) => Some(
+                    t.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("`tasks` must be a non-negative integer"))?,
+                ),
+            };
+            let input = match v.get("input") {
+                None => 2,
+                Some(i) => i
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("`input` must be a non-negative integer"))?,
+            };
+            let seed = match v.get("seed") {
+                None => default_seed,
+                Some(s) => s.as_u64().ok_or_else(|| anyhow::anyhow!("`seed` must be an integer"))?,
+            };
+            JobSource::Generated(experiments::WorkloadSpec { family, size, input, seed })
+        }
+        _ => bail!("a job needs exactly one of `workflow` (file) or `model` (generator)"),
+    };
+    let cluster = ClusterSpec::Named(match v.get("cluster") {
+        None => default_cluster.to_string(),
+        Some(c) => c
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("`cluster` must be a string"))?
+            .to_string(),
+    });
+    let algo: Algorithm = match v.get("algo") {
+        None => Algorithm::HeftmBl,
+        Some(a) => a
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("`algo` must be a string"))?
+            .parse()?,
+    };
+    let policy: EvictionPolicy = match v.get("eviction") {
+        None => EvictionPolicy::LargestFirst,
+        Some(p) => p
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("`eviction` must be a string"))?
+            .parse()?,
+    };
+    let sim = match v.get("sim") {
+        None => None,
+        Some(s) => {
+            const SIM_KEYS: [&str; 3] = ["mode", "sigma", "seed"];
+            let fields =
+                s.as_object().ok_or_else(|| anyhow::anyhow!("`sim` must be a JSON object"))?;
+            for (key, _) in fields {
+                if !SIM_KEYS.contains(&key.as_str()) {
+                    bail!("unknown sim field `{key}` (expected one of {})", SIM_KEYS.join(", "));
+                }
+            }
+            let mode: SimMode = s.req_str("mode")?.parse()?;
+            let sigma = match s.get("sigma") {
+                None => 0.1,
+                Some(x) => x
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("`sim.sigma` must be a number"))?,
+            };
+            let seed = match s.get("seed") {
+                None => default_seed,
+                Some(x) => x
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("`sim.seed` must be an integer"))?,
+            };
+            Some(SimJob { mode, sigma, seed })
+        }
+    };
+    Ok(Job { source, cluster, algo, policy, sim })
 }

@@ -1,0 +1,180 @@
+//! Content-addressed schedule cache.
+//!
+//! Keyed by [`schedule_fingerprint`](super::fingerprint::schedule_fingerprint):
+//! identical (workflow, platform, algorithm, policy) requests resolve to
+//! one computation. Each key holds a `OnceLock`, so when several workers
+//! race on the same key exactly one computes while the others block on
+//! the cell rather than duplicating the work — the cache is the service's
+//! cross-job sharing point (e.g. the two dynamic-mode simulations of one
+//! workload reuse a single static schedule).
+//!
+//! Counter semantics: `computed` is the number of distinct schedules
+//! actually computed (deterministic: one per unique key); `lookups` is
+//! the total number of requests — both direct [`get_or_compute`] calls
+//! and batch-level deduplicated jobs recorded via
+//! [`note_deduped`](ScheduleCache::note_deduped), which are satisfied
+//! without ever reaching the map; `hits = lookups - computed`.
+//!
+//! [`get_or_compute`]: ScheduleCache::get_or_compute
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::scheduler::Schedule;
+
+use super::fingerprint::Fingerprint;
+
+/// A cached schedule plus the wall time its computation took.
+#[derive(Debug, Clone)]
+pub struct CachedSchedule {
+    pub schedule: Arc<Schedule>,
+    /// Seconds the computing worker spent; shared verbatim with cache
+    /// hits (reports should treat it as "cost of this schedule", not
+    /// "cost of this job").
+    pub seconds: f64,
+}
+
+/// Aggregate cache counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub lookups: usize,
+    pub computed: usize,
+}
+
+impl CacheStats {
+    /// Saturating: a reader racing an in-flight computation can observe
+    /// `computed` incremented before `lookups`; between batches the two
+    /// are consistent.
+    pub fn hits(&self) -> usize {
+        self.lookups.saturating_sub(self.computed)
+    }
+}
+
+/// The cache. Cheap to share behind the service; all methods take `&self`.
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    map: Mutex<HashMap<u128, Arc<OnceLock<CachedSchedule>>>>,
+    lookups: AtomicUsize,
+    computed: AtomicUsize,
+}
+
+impl ScheduleCache {
+    pub fn new() -> ScheduleCache {
+        ScheduleCache::default()
+    }
+
+    /// Whether a schedule for `fp` has already been computed.
+    pub fn contains(&self, fp: Fingerprint) -> bool {
+        let map = self.map.lock().unwrap();
+        map.get(&fp.0).is_some_and(|cell| cell.get().is_some())
+    }
+
+    /// Number of computed entries.
+    pub fn len(&self) -> usize {
+        let map = self.map.lock().unwrap();
+        map.values().filter(|c| c.get().is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up `fp`, computing (exactly once across all threads) via
+    /// `compute` on a miss. `compute` returns the schedule and its
+    /// elapsed seconds.
+    pub fn get_or_compute<F: FnOnce() -> (Schedule, f64)>(
+        &self,
+        fp: Fingerprint,
+        compute: F,
+    ) -> CachedSchedule {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let cell = {
+            let mut map = self.map.lock().unwrap();
+            map.entry(fp.0).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+        };
+        cell.get_or_init(|| {
+            self.computed.fetch_add(1, Ordering::Relaxed);
+            let (schedule, seconds) = compute();
+            CachedSchedule { schedule: Arc::new(schedule), seconds }
+        })
+        .clone()
+    }
+
+    /// Record `n` requests satisfied upstream by batch-level
+    /// deduplication (they advance `lookups` but never compute, so they
+    /// count as hits).
+    pub fn note_deduped(&self, n: usize) {
+        self.lookups.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            lookups: self.lookups.load(Ordering::Relaxed),
+            computed: self.computed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::small_cluster;
+    use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+    use crate::service::fingerprint::schedule_fingerprint;
+    use crate::workflow::WorkflowBuilder;
+
+    fn sample() -> (crate::workflow::Workflow, crate::platform::Cluster) {
+        let mut b = WorkflowBuilder::new("w");
+        let a = b.task("a", "t", 5.0, 10.0);
+        let c = b.task("c", "t", 7.0, 20.0);
+        b.edge(a, c, 3.0);
+        (b.build().unwrap(), small_cluster())
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let (wf, cluster) = sample();
+        let cache = ScheduleCache::new();
+        let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let mut computes = 0;
+        for _ in 0..3 {
+            let cs = cache.get_or_compute(fp, || {
+                computes += 1;
+                (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.01)
+            });
+            assert!(cs.schedule.valid);
+        }
+        assert_eq!(computes, 1);
+        let stats = cache.stats();
+        assert_eq!(stats.lookups, 3);
+        assert_eq!(stats.computed, 1);
+        assert_eq!(stats.hits(), 2);
+        assert!(cache.contains(fp));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_lookups_compute_once() {
+        let (wf, cluster) = sample();
+        let cache = ScheduleCache::new();
+        let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        let computes = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    cache.get_or_compute(fp, || {
+                        computes.fetch_add(1, Ordering::Relaxed);
+                        (
+                            compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst),
+                            0.0,
+                        )
+                    });
+                });
+            }
+        });
+        assert_eq!(computes.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats().lookups, 8);
+        assert_eq!(cache.stats().hits(), 7);
+    }
+}

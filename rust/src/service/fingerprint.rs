@@ -1,0 +1,239 @@
+//! Content-addressed fingerprints for scheduling jobs.
+//!
+//! A fingerprint is a 128-bit FNV-1a hash over a canonical byte encoding
+//! of everything that determines a job's *computed* outputs:
+//!
+//! - the workflow's structure and bound weights: task count, per-task
+//!   `(w_u, m_u)` bit patterns, and every edge `(src, dst, c_{u,v})` in
+//!   builder order (the CSR is derived from it, so builder order is
+//!   canonical);
+//! - the platform: per-processor `(speed, memory, comm_buffer)` and the
+//!   interconnect bandwidth;
+//! - the algorithm configuration: algorithm and eviction policy;
+//! - for simulation jobs, the sim layer: mode, sigma, and deviation seed.
+//!
+//! Deliberately *excluded*: workflow/task/processor names and task types.
+//! None of them influence a schedule or a simulated execution, so two
+//! differently-named instances of the same weighted DAG dedupe to one
+//! computation (each job's report still carries its own names).
+//!
+//! f64 values are hashed by their IEEE-754 bit pattern: fingerprint
+//! equality then implies bit-identical inputs to the (deterministic)
+//! scheduler and simulator, which is what the schedule cache requires.
+
+use crate::platform::Cluster;
+use crate::scheduler::{Algorithm, EvictionPolicy};
+use crate::workflow::Workflow;
+
+use super::job::SimJob;
+use crate::simulator::SimMode;
+
+/// A 128-bit fingerprint, printed as 32 hex digits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u128);
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+/// Incremental FNV-1a over 128 bits.
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u128,
+}
+
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Hasher { state: FNV128_OFFSET }
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher::default()
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV128_PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Length-prefixed so adjacent fields cannot alias.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_usize(s.len());
+        self.write(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> Fingerprint {
+        Fingerprint(self.state)
+    }
+}
+
+fn algo_tag(algo: Algorithm) -> u64 {
+    match algo {
+        Algorithm::Heft => 0,
+        Algorithm::HeftmBl => 1,
+        Algorithm::HeftmBlc => 2,
+        Algorithm::HeftmMm => 3,
+    }
+}
+
+fn policy_tag(policy: EvictionPolicy) -> u64 {
+    match policy {
+        EvictionPolicy::LargestFirst => 0,
+        EvictionPolicy::SmallestFirst => 1,
+    }
+}
+
+/// Fingerprint of a *schedule computation*: workflow + platform + algo
+/// config. This keys the schedule cache.
+pub fn schedule_fingerprint(
+    wf: &Workflow,
+    cluster: &Cluster,
+    algo: Algorithm,
+    policy: EvictionPolicy,
+) -> Fingerprint {
+    let mut h = Hasher::new();
+    h.write_str("memsched/schedule/v1");
+    // Workflow structure + weights.
+    h.write_usize(wf.num_tasks());
+    for t in wf.tasks() {
+        h.write_f64(t.work);
+        h.write_f64(t.memory);
+    }
+    h.write_usize(wf.num_edges());
+    for e in wf.edges() {
+        h.write_usize(e.src);
+        h.write_usize(e.dst);
+        h.write_f64(e.data);
+    }
+    // Platform.
+    h.write_usize(cluster.len());
+    for p in &cluster.processors {
+        h.write_f64(p.speed);
+        h.write_f64(p.memory);
+        h.write_f64(p.comm_buffer);
+    }
+    h.write_f64(cluster.bandwidth);
+    // Algorithm configuration.
+    h.write_u64(algo_tag(algo));
+    h.write_u64(policy_tag(policy));
+    h.finish()
+}
+
+/// Fingerprint of a full *job*: the schedule fingerprint plus the
+/// optional simulation layer. This keys batch-level deduplication.
+pub fn job_fingerprint(schedule_fp: Fingerprint, sim: Option<&SimJob>) -> Fingerprint {
+    let mut h = Hasher::new();
+    h.write_str("memsched/job/v1");
+    h.write(&schedule_fp.0.to_le_bytes());
+    match sim {
+        None => h.write_u64(0),
+        Some(s) => {
+            h.write_u64(match s.mode {
+                SimMode::FollowStatic => 1,
+                SimMode::Recompute => 2,
+            });
+            h.write_f64(s.sigma);
+            h.write_u64(s.seed);
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::small_cluster;
+    use crate::workflow::WorkflowBuilder;
+
+    fn wf(name: &str, work0: f64) -> Workflow {
+        let mut b = WorkflowBuilder::new(name);
+        let a = b.task("a", "t", work0, 10.0);
+        let c = b.task("c", "t", 2.0, 20.0);
+        b.edge(a, c, 5.0);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn identical_inputs_identical_fingerprints() {
+        let c = small_cluster();
+        let f1 = schedule_fingerprint(&wf("x", 1.0), &c, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let f2 = schedule_fingerprint(&wf("x", 1.0), &c, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn names_do_not_matter_weights_do() {
+        let c = small_cluster();
+        let base = schedule_fingerprint(&wf("x", 1.0), &c, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let renamed =
+            schedule_fingerprint(&wf("other_name", 1.0), &c, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert_eq!(base, renamed, "names are not part of the computation");
+        let reweighted =
+            schedule_fingerprint(&wf("x", 1.5), &c, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert_ne!(base, reweighted, "weights are");
+    }
+
+    #[test]
+    fn config_changes_fingerprint() {
+        let c = small_cluster();
+        let w = wf("x", 1.0);
+        let bl = schedule_fingerprint(&w, &c, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let mm = schedule_fingerprint(&w, &c, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        let sm = schedule_fingerprint(&w, &c, Algorithm::HeftmBl, EvictionPolicy::SmallestFirst);
+        assert_ne!(bl, mm);
+        assert_ne!(bl, sm);
+        let scaled = c.scale_memory(0.5, "half");
+        let half = schedule_fingerprint(&w, &scaled, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert_ne!(bl, half);
+    }
+
+    #[test]
+    fn sim_layer_separates_jobs() {
+        let c = small_cluster();
+        let sfp = schedule_fingerprint(&wf("x", 1.0), &c, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let none = job_fingerprint(sfp, None);
+        let rec = job_fingerprint(
+            sfp,
+            Some(&SimJob { mode: SimMode::Recompute, sigma: 0.1, seed: 7 }),
+        );
+        let stat = job_fingerprint(
+            sfp,
+            Some(&SimJob { mode: SimMode::FollowStatic, sigma: 0.1, seed: 7 }),
+        );
+        let seed2 = job_fingerprint(
+            sfp,
+            Some(&SimJob { mode: SimMode::Recompute, sigma: 0.1, seed: 8 }),
+        );
+        assert_ne!(none, rec);
+        assert_ne!(rec, stat);
+        assert_ne!(rec, seed2);
+    }
+
+    #[test]
+    fn display_is_32_hex_digits() {
+        let s = Fingerprint(0xabc).to_string();
+        assert_eq!(s.len(), 32);
+        assert!(s.ends_with("abc"));
+    }
+}

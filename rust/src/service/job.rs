@@ -1,0 +1,286 @@
+//! The batch service's job and result model.
+//!
+//! A [`Job`] names everything one scheduling request needs: a workflow
+//! source (generator spec or file), a platform, the algorithm/eviction
+//! configuration, and optionally a runtime-simulation layer. A
+//! [`JobResult`] is the deterministic summary streamed back as one JSONL
+//! line — it deliberately contains no wall-clock fields, so batch output
+//! is byte-identical regardless of worker count (timings travel on the
+//! side, in [`JobResult::seconds`], for harnesses that want them).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::experiments::WorkloadSpec;
+use crate::platform::Cluster;
+use crate::scheduler::{Algorithm, EvictionPolicy};
+use crate::ser::json::{obj, Value};
+use crate::simulator::SimMode;
+use crate::workflow::Workflow;
+
+/// Where a job's workflow comes from.
+#[derive(Debug, Clone)]
+pub enum JobSource {
+    /// Generate + bind weights from a workload spec (deterministic in the
+    /// spec's seed).
+    Generated(WorkloadSpec),
+    /// Load from a `.json` / `.dot` workflow file.
+    File(PathBuf),
+}
+
+impl JobSource {
+    /// Memoization key for the service's workflow cache.
+    pub fn key(&self) -> String {
+        match self {
+            JobSource::Generated(spec) => format!("spec:{}:seed{}", spec.id(), spec.seed),
+            JobSource::File(path) => format!("file:{}", path.display()),
+        }
+    }
+
+    /// Build or load the workflow.
+    pub fn materialize(&self) -> anyhow::Result<Workflow> {
+        match self {
+            JobSource::Generated(spec) => spec.build(),
+            JobSource::File(path) => crate::workflow::io::load(path),
+        }
+    }
+}
+
+/// Platform selection: a name/path resolved via [`Cluster::load`], or a
+/// pre-built cluster shared across jobs.
+#[derive(Debug, Clone)]
+pub enum ClusterSpec {
+    Named(String),
+    Inline(Arc<Cluster>),
+}
+
+impl ClusterSpec {
+    /// Display label. Resolution itself goes through
+    /// [`SchedulingService`](super::SchedulingService), which memoizes
+    /// named/path loads once per distinct name.
+    pub fn label(&self) -> String {
+        match self {
+            ClusterSpec::Named(name) => name.clone(),
+            ClusterSpec::Inline(c) => c.name.clone(),
+        }
+    }
+}
+
+/// Optional runtime-simulation layer of a job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimJob {
+    pub mode: SimMode,
+    /// Relative deviation sigma (paper default 0.1).
+    pub sigma: f64,
+    /// Deviation seed.
+    pub seed: u64,
+}
+
+/// One scheduling request.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub source: JobSource,
+    pub cluster: ClusterSpec,
+    pub algo: Algorithm,
+    pub policy: EvictionPolicy,
+    pub sim: Option<SimJob>,
+}
+
+impl Job {
+    /// A static-scheduling job with the default algorithm configuration.
+    pub fn new(source: JobSource, cluster: ClusterSpec) -> Job {
+        Job {
+            source,
+            cluster,
+            algo: Algorithm::HeftmBl,
+            policy: EvictionPolicy::LargestFirst,
+            sim: None,
+        }
+    }
+
+    pub fn with_algo(mut self, algo: Algorithm) -> Job {
+        self.algo = algo;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: EvictionPolicy) -> Job {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_sim(mut self, sim: SimJob) -> Job {
+        self.sim = Some(sim);
+        self
+    }
+}
+
+/// Simulation outcome summary (deterministic fields only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    pub mode: SimMode,
+    pub completed: bool,
+    pub makespan: f64,
+    pub recomputations: usize,
+    pub started: usize,
+}
+
+/// One JSONL result line (also consumed structurally by the experiments
+/// harness).
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Position of the job in its batch.
+    pub id: usize,
+    /// Non-`None` iff the job failed to materialize/resolve; all other
+    /// payload fields are then meaningless.
+    pub error: Option<String>,
+    pub workflow: String,
+    pub tasks: usize,
+    pub cluster: String,
+    pub algo: Algorithm,
+    pub fingerprint: String,
+    /// True iff this job was deduplicated against an earlier identical
+    /// job of the batch, or its schedule was already cached when the
+    /// batch started. Deterministic (decided before execution).
+    pub cache_hit: bool,
+    pub valid: bool,
+    pub makespan: f64,
+    pub mem_usage: f64,
+    pub procs_used: usize,
+    pub evictions: usize,
+    /// Wall seconds of the schedule computation (shared by cache hits).
+    /// Not serialized: wall times would break byte-determinism.
+    pub seconds: f64,
+    pub sim: Option<SimResult>,
+}
+
+impl JobResult {
+    pub fn failed(id: usize, error: String) -> JobResult {
+        JobResult {
+            id,
+            error: Some(error),
+            workflow: String::new(),
+            tasks: 0,
+            cluster: String::new(),
+            algo: Algorithm::HeftmBl,
+            fingerprint: String::new(),
+            cache_hit: false,
+            valid: false,
+            makespan: f64::NAN,
+            mem_usage: f64::NAN,
+            procs_used: 0,
+            evictions: 0,
+            seconds: 0.0,
+            sim: None,
+        }
+    }
+
+    /// The deterministic JSON value of this result.
+    pub fn to_json(&self) -> Value {
+        if let Some(err) = &self.error {
+            return obj(vec![("id", self.id.into()), ("error", err.as_str().into())]);
+        }
+        let mut fields: Vec<(&str, Value)> = vec![
+            ("id", self.id.into()),
+            ("workflow", self.workflow.as_str().into()),
+            ("tasks", self.tasks.into()),
+            ("cluster", self.cluster.as_str().into()),
+            ("algorithm", self.algo.label().into()),
+            ("fingerprint", self.fingerprint.as_str().into()),
+            ("cache_hit", self.cache_hit.into()),
+            ("valid", self.valid.into()),
+            ("makespan", self.makespan.into()),
+            ("mem_usage", self.mem_usage.into()),
+            ("procs_used", self.procs_used.into()),
+            ("evictions", self.evictions.into()),
+        ];
+        if let Some(sim) = &self.sim {
+            fields.push((
+                "sim",
+                obj(vec![
+                    (
+                        "mode",
+                        match sim.mode {
+                            SimMode::FollowStatic => "static",
+                            SimMode::Recompute => "recompute",
+                        }
+                        .into(),
+                    ),
+                    ("completed", sim.completed.into()),
+                    ("makespan", sim.makespan.into()),
+                    ("recomputations", sim.recomputations.into()),
+                    ("started", sim.started.into()),
+                ]),
+            ));
+        }
+        obj(fields)
+    }
+
+    /// One compact JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_line_roundtrips_and_orders_fields() {
+        let r = JobResult {
+            id: 3,
+            error: None,
+            workflow: "wf".into(),
+            tasks: 10,
+            cluster: "default".into(),
+            algo: Algorithm::HeftmMm,
+            fingerprint: "ff".into(),
+            cache_hit: true,
+            valid: true,
+            makespan: 12.5,
+            mem_usage: 0.25,
+            procs_used: 3,
+            evictions: 1,
+            seconds: 0.5,
+            sim: Some(SimResult {
+                mode: SimMode::Recompute,
+                completed: true,
+                makespan: 13.0,
+                recomputations: 2,
+                started: 10,
+            }),
+        };
+        let line = r.to_jsonl();
+        assert!(line.starts_with("{\"id\":3,\"workflow\":\"wf\""), "{line}");
+        let v = Value::parse(&line).unwrap();
+        assert_eq!(v.req_f64("makespan").unwrap(), 12.5);
+        assert_eq!(v.get("sim").unwrap().req_usize("recomputations").unwrap(), 2);
+        // Wall time must not leak into the line.
+        assert!(!line.contains("seconds"));
+    }
+
+    #[test]
+    fn error_results_are_minimal() {
+        let r = JobResult::failed(7, "boom".into());
+        assert_eq!(r.to_jsonl(), "{\"id\":7,\"error\":\"boom\"}");
+    }
+
+    #[test]
+    fn source_keys_distinguish() {
+        let a = JobSource::Generated(WorkloadSpec {
+            family: "chipseq".into(),
+            size: Some(200),
+            input: 1,
+            seed: 5,
+        });
+        let b = JobSource::Generated(WorkloadSpec {
+            family: "chipseq".into(),
+            size: Some(200),
+            input: 1,
+            seed: 6,
+        });
+        assert_ne!(a.key(), b.key());
+        let f = JobSource::File(PathBuf::from("/tmp/x.json"));
+        assert!(f.key().starts_with("file:"));
+    }
+}

@@ -1,0 +1,443 @@
+//! Parallel scheduling service: batched jobs over a sharded
+//! work-stealing pool, with a content-addressed schedule cache and a
+//! deterministic result-ordering layer (see DESIGN.md §Service).
+//!
+//! One [`Job`] = workflow source + platform + algorithm/eviction config +
+//! optional simulation layer. [`SchedulingService::run_batch`] executes a
+//! batch on `workers` threads and returns one [`JobResult`] per job, in
+//! submission order, with **byte-identical** JSONL output regardless of
+//! the worker count:
+//!
+//! 1. *Materialize* (parallel): each job's workflow is built/loaded (memo
+//!    by source, so e.g. four algorithms on one workload share one DAG
+//!    build) and fingerprinted ([`fingerprint`]).
+//! 2. *Group* (sequential, deterministic): jobs with equal fingerprints
+//!    dedupe — the lowest-id job of each group computes, the rest are
+//!    cache hits. Pre-cached schedules (earlier batches on the same
+//!    service) are marked here too, *before* any execution, so the
+//!    `cache_hit` flags in the output never depend on thread timing.
+//! 3. *Execute* (parallel): unique jobs run on the pool ([`pool`]); the
+//!    schedule cache ([`cache`]) additionally shares identical schedule
+//!    computations *across* distinct jobs (e.g. the two simulation modes
+//!    of one workload).
+//! 4. *Assemble* (sequential): results are emitted in job order.
+//!
+//! The experiments harness submits its Quick/Full suite grids through
+//! this service (`experiments::run_static_suite` /
+//! `run_dynamic_suite`), and the `memsched batch` CLI exposes it as a
+//! JSONL-in/JSONL-out interface.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod job;
+pub mod pool;
+
+pub use cache::{CacheStats, CachedSchedule, ScheduleCache};
+pub use fingerprint::Fingerprint;
+pub use job::{ClusterSpec, Job, JobResult, JobSource, SimJob, SimResult};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::platform::Cluster;
+use crate::scheduler::compute_schedule;
+use crate::simulator::{simulate, DeviationModel, SimConfig};
+use crate::workflow::Workflow;
+
+/// Compute-once memo: per key, one `OnceLock` cell so concurrent
+/// requesters block on a single initializer instead of duplicating
+/// work. Within a batch an error is stable (every duplicate of a
+/// failing source observes the same single attempt — no re-loads, no
+/// worker-count-dependent mixed results); failed entries are pruned at
+/// batch boundaries ([`prune_errors`](Memo::prune_errors)), so a
+/// transient failure (e.g. a workflow file that appears later) can be
+/// retried by a subsequent batch rather than poisoning the key for the
+/// service's lifetime.
+#[derive(Debug)]
+struct Memo<V: Clone> {
+    map: Mutex<HashMap<String, Arc<OnceLock<Result<V, String>>>>>,
+}
+
+// Manual (a derive would needlessly bound `V: Default`).
+impl<V: Clone> Default for Memo<V> {
+    fn default() -> Self {
+        Memo { map: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl<V: Clone> Memo<V> {
+    fn get_or_try_init<F: FnOnce() -> Result<V, String>>(&self, key: &str, init: F) -> Result<V, String> {
+        let cell = {
+            let mut map = self.map.lock().unwrap();
+            map.entry(key.to_string()).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+        };
+        cell.get_or_init(init).clone()
+    }
+
+    /// Drop entries whose initialization failed (called between
+    /// batches, when no initializations are in flight).
+    fn prune_errors(&self) {
+        let mut map = self.map.lock().unwrap();
+        map.retain(|_, cell| cell.get().is_none_or(|r| r.is_ok()));
+    }
+}
+
+/// A multi-threaded scheduling service with a persistent (per-instance)
+/// schedule cache and workflow memo.
+#[derive(Debug)]
+pub struct SchedulingService {
+    workers: usize,
+    schedules: ScheduleCache,
+    workflows: Memo<Arc<Workflow>>,
+    clusters: Memo<Arc<Cluster>>,
+}
+
+impl Default for SchedulingService {
+    /// A single-worker service (same clamp as `new(0)`).
+    fn default() -> Self {
+        SchedulingService::new(1)
+    }
+}
+
+/// Phase-1 product: everything execution needs, fingerprinted.
+struct Prepared {
+    wf: Arc<Workflow>,
+    cluster: Arc<Cluster>,
+    sched_fp: Fingerprint,
+    job_fp: Fingerprint,
+}
+
+/// Phase-3 product: the deterministic result payload of one unique job.
+#[derive(Debug, Clone)]
+struct Executed {
+    valid: bool,
+    makespan: f64,
+    mem_usage: f64,
+    procs_used: usize,
+    evictions: usize,
+    seconds: f64,
+    sim: Option<SimResult>,
+}
+
+impl SchedulingService {
+    /// A service executing batches on `workers` threads (0 ⇒ 1).
+    pub fn new(workers: usize) -> SchedulingService {
+        SchedulingService {
+            workers: workers.max(1),
+            schedules: ScheduleCache::new(),
+            workflows: Memo::default(),
+            clusters: Memo::default(),
+        }
+    }
+
+    /// A service sized to the machine.
+    pub fn with_default_workers() -> SchedulingService {
+        SchedulingService::new(pool::default_workers())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Schedule-cache counters (lookups / computed / hits).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.schedules.stats()
+    }
+
+    /// Memoized workflow materialization (one build per distinct source,
+    /// even when many jobs reference it concurrently).
+    fn workflow(&self, source: &JobSource) -> Result<Arc<Workflow>, String> {
+        self.workflows.get_or_try_init(&source.key(), || {
+            source.materialize().map(Arc::new).map_err(|e| format!("{e:#}"))
+        })
+    }
+
+    /// Memoized cluster resolution: named/path specs load once per
+    /// distinct name; inline clusters pass straight through.
+    fn cluster(&self, spec: &ClusterSpec) -> Result<Arc<Cluster>, String> {
+        match spec {
+            ClusterSpec::Inline(c) => Ok(c.clone()),
+            ClusterSpec::Named(name) => self.clusters.get_or_try_init(name, || {
+                Cluster::load(name).map(Arc::new).map_err(|e| format!("{e:#}"))
+            }),
+        }
+    }
+
+    fn prepare(&self, job: &Job) -> Result<Prepared, String> {
+        let wf = self.workflow(&job.source)?;
+        let cluster = self.cluster(&job.cluster)?;
+        let sched_fp = fingerprint::schedule_fingerprint(&wf, &cluster, job.algo, job.policy);
+        let job_fp = fingerprint::job_fingerprint(sched_fp, job.sim.as_ref());
+        Ok(Prepared { wf, cluster, sched_fp, job_fp })
+    }
+
+    fn execute(&self, job: &Job, prep: &Prepared) -> Executed {
+        let cached = self.schedules.get_or_compute(prep.sched_fp, || {
+            let t0 = std::time::Instant::now();
+            let s = compute_schedule(&prep.wf, &prep.cluster, job.algo, job.policy);
+            let seconds = t0.elapsed().as_secs_f64();
+            (s, seconds)
+        });
+        let schedule = &cached.schedule;
+        let sim = job.sim.map(|sj| {
+            if !schedule.valid {
+                // Mirrors `experiments::run_dynamic`: executions of
+                // invalid schedules are not attempted.
+                SimResult {
+                    mode: sj.mode,
+                    completed: false,
+                    makespan: f64::NAN,
+                    recomputations: 0,
+                    started: 0,
+                }
+            } else {
+                let cfg = SimConfig::new(sj.mode, DeviationModel::new(sj.sigma, sj.seed));
+                let out = simulate(&prep.wf, &prep.cluster, schedule, &cfg);
+                SimResult {
+                    mode: sj.mode,
+                    completed: out.completed,
+                    makespan: out.makespan,
+                    recomputations: out.recomputations,
+                    started: out.started,
+                }
+            }
+        });
+        Executed {
+            valid: schedule.valid,
+            makespan: schedule.makespan,
+            mem_usage: schedule.mean_mem_usage(),
+            procs_used: schedule.procs_used(),
+            evictions: schedule.tasks.iter().map(|t| t.evicted.len()).sum(),
+            seconds: cached.seconds,
+            sim,
+        }
+    }
+
+    /// Execute a batch; results come back in submission order and their
+    /// JSONL rendering is byte-identical for any worker count.
+    pub fn run_batch(&self, jobs: Vec<Job>) -> Vec<JobResult> {
+        // Give previously-failed sources a fresh chance (see `Memo`).
+        self.workflows.prune_errors();
+        self.clusters.prune_errors();
+
+        // Phase 0: pre-materialize unique sources in parallel. Without
+        // this, a suite-style grid (the same workload under several
+        // algorithms, jobs adjacent in submission order) lands one job
+        // per worker and they all block on a single memo cell — phase 1
+        // would degrade to the serial sum of the workflow builds.
+        let mut seen = std::collections::HashSet::new();
+        let unique_sources: Vec<JobSource> = jobs
+            .iter()
+            .filter(|j| seen.insert(j.source.key()))
+            .map(|j| j.source.clone())
+            .collect();
+        pool::run_ordered(unique_sources, self.workers, |_, source| {
+            let _ = self.workflow(&source);
+        });
+
+        // Phase 1: materialize + fingerprint.
+        let prepared: Vec<(Job, Result<Prepared, String>)> =
+            pool::run_ordered(jobs, self.workers, |_, job| {
+                let prep = self.prepare(&job);
+                (job, prep)
+            });
+
+        // Phase 2: deterministic grouping. The lowest-id job of each
+        // fingerprint group is the computer; `cache_hit` flags are fixed
+        // here, before execution, from (group position, cache state).
+        let mut representative: HashMap<u128, usize> = HashMap::new();
+        let mut pre_cached: HashMap<u128, bool> = HashMap::new();
+        for (i, (_, prep)) in prepared.iter().enumerate() {
+            if let Ok(p) = prep {
+                representative.entry(p.job_fp.0).or_insert(i);
+                pre_cached.entry(p.job_fp.0).or_insert_with(|| self.schedules.contains(p.sched_fp));
+            }
+        }
+        let mut compute_order: Vec<usize> = Vec::new();
+        let mut deduped = 0usize;
+        for (i, (_, prep)) in prepared.iter().enumerate() {
+            if let Ok(p) = prep {
+                if representative[&p.job_fp.0] == i {
+                    compute_order.push(i);
+                } else {
+                    deduped += 1;
+                }
+            }
+        }
+        // Deduplicated jobs are cache hits that never reach the map.
+        self.schedules.note_deduped(deduped);
+
+        // Phase 3: execute unique jobs on the pool.
+        let prepared_ref = &prepared;
+        let executed: Vec<(u128, Executed)> =
+            pool::run_ordered(compute_order, self.workers, move |_, i| {
+                let (job, prep) = &prepared_ref[i];
+                let prep = prep.as_ref().expect("compute_order only holds prepared jobs");
+                (prep.job_fp.0, self.execute(job, prep))
+            });
+        let by_fp: HashMap<u128, Executed> = executed.into_iter().collect();
+
+        // Phase 4: assemble in submission order.
+        prepared
+            .into_iter()
+            .enumerate()
+            .map(|(i, (job, prep))| match prep {
+                Err(e) => JobResult::failed(i, e),
+                Ok(p) => {
+                    let ex = &by_fp[&p.job_fp.0];
+                    JobResult {
+                        id: i,
+                        error: None,
+                        workflow: p.wf.name.clone(),
+                        tasks: p.wf.num_tasks(),
+                        cluster: p.cluster.name.clone(),
+                        algo: job.algo,
+                        fingerprint: p.job_fp.to_string(),
+                        cache_hit: representative[&p.job_fp.0] != i || pre_cached[&p.job_fp.0],
+                        valid: ex.valid,
+                        makespan: ex.makespan,
+                        mem_usage: ex.mem_usage,
+                        procs_used: ex.procs_used,
+                        evictions: ex.evictions,
+                        seconds: ex.seconds,
+                        sim: ex.sim.clone(),
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// Render a batch's results as JSONL (one compact line per job, in job
+/// order). This is the byte-deterministic wire format of the service.
+pub fn to_jsonl(results: &[JobResult]) -> String {
+    let mut out = String::with_capacity(results.len() * 160);
+    for r in results {
+        out.push_str(&r.to_jsonl());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::WorkloadSpec;
+    use crate::platform::presets::small_cluster;
+    use crate::scheduler::Algorithm;
+    use crate::simulator::SimMode;
+
+    fn spec_job(family: &str, input: usize, algo: Algorithm, cluster: &Arc<Cluster>) -> Job {
+        Job::new(
+            JobSource::Generated(WorkloadSpec { family: family.into(), size: None, input, seed: 5 }),
+            ClusterSpec::Inline(cluster.clone()),
+        )
+        .with_algo(algo)
+    }
+
+    #[test]
+    fn duplicates_dedupe_to_one_computation() {
+        let cluster = Arc::new(small_cluster());
+        let job = spec_job("bacass", 1, Algorithm::HeftmBl, &cluster);
+        let svc = SchedulingService::new(2);
+        let results = svc.run_batch(vec![job.clone(), job.clone(), job]);
+        assert_eq!(results.len(), 3);
+        assert!(!results[0].cache_hit);
+        assert!(results[1].cache_hit && results[2].cache_hit);
+        assert_eq!(results[0].makespan, results[1].makespan);
+        assert_eq!(results[0].fingerprint, results[2].fingerprint);
+        assert_eq!(svc.cache_stats().computed, 1);
+    }
+
+    #[test]
+    fn second_batch_hits_the_persistent_cache() {
+        let cluster = Arc::new(small_cluster());
+        let svc = SchedulingService::new(1);
+        let r1 = svc.run_batch(vec![spec_job("bacass", 1, Algorithm::HeftmMm, &cluster)]);
+        assert!(!r1[0].cache_hit);
+        let r2 = svc.run_batch(vec![spec_job("bacass", 1, Algorithm::HeftmMm, &cluster)]);
+        assert!(r2[0].cache_hit, "pre-cached schedule must be flagged");
+        assert_eq!(svc.cache_stats().computed, 1);
+        assert_eq!(r1[0].makespan, r2[0].makespan);
+    }
+
+    #[test]
+    fn sim_modes_share_one_schedule_computation() {
+        let cluster = Arc::new(small_cluster());
+        let base = spec_job("chipseq", 0, Algorithm::HeftmBl, &cluster);
+        let rec = base.clone().with_sim(SimJob { mode: SimMode::Recompute, sigma: 0.1, seed: 9 });
+        let stat =
+            base.clone().with_sim(SimJob { mode: SimMode::FollowStatic, sigma: 0.1, seed: 9 });
+        let svc = SchedulingService::new(2);
+        let results = svc.run_batch(vec![rec, stat]);
+        assert!(results.iter().all(|r| r.error.is_none()));
+        assert!(results.iter().all(|r| r.sim.is_some()));
+        // Two distinct jobs, one underlying schedule.
+        assert_eq!(svc.cache_stats().computed, 1);
+        assert_eq!(svc.cache_stats().hits(), 1);
+        assert_eq!(results[0].makespan, results[1].makespan);
+    }
+
+    #[test]
+    fn failing_jobs_report_errors_without_poisoning_the_batch() {
+        let cluster = Arc::new(small_cluster());
+        let bad = Job::new(
+            JobSource::Generated(WorkloadSpec {
+                family: "no_such_model".into(),
+                size: None,
+                input: 0,
+                seed: 1,
+            }),
+            ClusterSpec::Inline(cluster.clone()),
+        );
+        let good = spec_job("eager", 0, Algorithm::Heft, &cluster);
+        let svc = SchedulingService::new(2);
+        let results = svc.run_batch(vec![bad, good]);
+        assert!(results[0].error.as_deref().unwrap().contains("no_such_model"));
+        assert!(results[1].error.is_none());
+        let text = to_jsonl(&results);
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().next().unwrap().contains("\"error\""));
+    }
+
+    #[test]
+    fn transient_load_failures_are_retried_across_batches() {
+        // Per-process dir: concurrent test runs must not share state.
+        let dir = std::env::temp_dir().join(format!("memsched_service_retry_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("late.json");
+        let _ = std::fs::remove_file(&path);
+        let cluster = ClusterSpec::Inline(Arc::new(small_cluster()));
+        let job = Job::new(JobSource::File(path.clone()), cluster);
+        let svc = SchedulingService::new(1);
+        let r1 = svc.run_batch(vec![job.clone()]);
+        assert!(r1[0].error.is_some(), "missing file must fail the job");
+        // The file appears later: the same service must not have
+        // poisoned the memo entry with the old error.
+        let mut b = crate::workflow::WorkflowBuilder::new("late");
+        let a = b.task("a", "t", 1.0, 10.0);
+        let c = b.task("c", "t", 2.0, 20.0);
+        b.edge(a, c, 3.0);
+        crate::workflow::io::save(&b.build().unwrap(), &path).unwrap();
+        let r2 = svc.run_batch(vec![job]);
+        assert!(r2[0].error.is_none(), "stale error: {:?}", r2[0].error);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn named_cluster_resolution() {
+        let job = Job::new(
+            JobSource::Generated(WorkloadSpec {
+                family: "methylseq".into(),
+                size: None,
+                input: 0,
+                seed: 2,
+            }),
+            ClusterSpec::Named("memory-constrained".into()),
+        );
+        let svc = SchedulingService::new(1);
+        let r = svc.run_batch(vec![job]);
+        assert!(r[0].error.is_none());
+        assert_eq!(r[0].cluster, "memory-constrained");
+    }
+}

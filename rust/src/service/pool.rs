@@ -1,0 +1,141 @@
+//! Sharded work-stealing worker pool on `std::thread` (no rayon/tokio in
+//! this offline tree).
+//!
+//! Jobs are distributed round-robin over per-worker deques ("shards").
+//! Each worker drains its own shard from the front and, when empty,
+//! steals from the *back* of the other shards — the classic deque
+//! discipline that keeps stolen work coarse and owner work cache-warm.
+//! Results are written into per-job slots, so the output vector is always
+//! in submission order regardless of worker count or steal interleaving:
+//! this is the ordering layer the batch service's byte-identical JSONL
+//! guarantee rests on.
+//!
+//! Job closures must be deterministic functions of `(index, item)`; the
+//! pool adds no other source of nondeterminism to their outputs.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Number of workers to use when the caller does not specify one.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(index, item)` over every item on `workers` threads and return
+/// the results in submission order.
+///
+/// `workers` is clamped to `[1, items.len()]`; with one worker the items
+/// run inline on the calling thread (no spawn overhead).
+pub fn run_ordered<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers == 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+
+    // Round-robin sharding over per-worker deques.
+    let mut queues: Vec<VecDeque<(usize, T)>> = (0..workers).map(|_| VecDeque::new()).collect();
+    for (i, x) in items.into_iter().enumerate() {
+        queues[i % workers].push_back((i, x));
+    }
+    let shards: Vec<Mutex<VecDeque<(usize, T)>>> = queues.into_iter().map(Mutex::new).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    // Distinct names for the borrows captured by the worker closures, so
+    // `slots` itself stays owned and can be consumed after the scope.
+    let f_ref = &f;
+    let shards_ref = &shards;
+    let slots_ref = &slots;
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            scope.spawn(move || loop {
+                // Own shard first (front), then steal from the back of the
+                // others. No shard is ever refilled, so an empty sweep
+                // means this worker is done.
+                let mut task = shards_ref[w].lock().unwrap().pop_front();
+                if task.is_none() {
+                    for off in 1..workers {
+                        let victim = (w + off) % workers;
+                        task = shards_ref[victim].lock().unwrap().pop_back();
+                        if task.is_some() {
+                            break;
+                        }
+                    }
+                }
+                match task {
+                    Some((i, x)) => {
+                        let r = f_ref(i, x);
+                        *slots_ref[i].lock().unwrap() = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every pool job produces a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_submission_order() {
+        for workers in [1, 2, 4, 7] {
+            let items: Vec<usize> = (0..100).collect();
+            let out = run_ordered(items, workers, |i, x| {
+                assert_eq!(i, x);
+                x * 10
+            });
+            assert_eq!(out, (0..100).map(|x| x * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let ran = AtomicUsize::new(0);
+        let out = run_ordered((0..257).collect::<Vec<usize>>(), 4, |_, x| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 257);
+        assert_eq!(out.len(), 257);
+    }
+
+    #[test]
+    fn stealing_balances_skewed_work() {
+        // One shard receives all the slow jobs (ids ≡ 0 mod workers);
+        // stealing must still let everything finish and stay ordered.
+        let out = run_ordered((0..32).collect::<Vec<usize>>(), 4, |i, x| {
+            if i % 4 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x + 1
+        });
+        assert_eq!(out, (1..=32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let out: Vec<usize> = run_ordered(Vec::<usize>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+        let out = run_ordered(vec![9usize], 8, |_, x| x * 2);
+        assert_eq!(out, vec![18]);
+    }
+
+    #[test]
+    fn workers_exceeding_jobs_clamped() {
+        let out = run_ordered(vec![1usize, 2], 64, |_, x| x);
+        assert_eq!(out, vec![1, 2]);
+    }
+}

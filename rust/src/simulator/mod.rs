@@ -43,6 +43,17 @@ pub enum SimMode {
     Recompute,
 }
 
+impl std::str::FromStr for SimMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" | "follow-static" | "follow_static" => Ok(SimMode::FollowStatic),
+            "recompute" | "dynamic" => Ok(SimMode::Recompute),
+            other => anyhow::bail!("unknown simulation mode `{other}` (expected static, recompute)"),
+        }
+    }
+}
+
 /// Simulation configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {

@@ -1,0 +1,106 @@
+//! Cross-thread determinism of the scheduling service: the same seeded
+//! job batch must produce **byte-identical** JSONL for any worker count
+//! (schedules, makespans, simulation outcomes, cache flags), and
+//! duplicate jobs must be served from the schedule cache.
+
+use std::sync::Arc;
+
+use memsched::experiments::{SuiteScale, WorkloadSpec};
+use memsched::platform::presets::small_cluster;
+use memsched::scheduler::Algorithm;
+use memsched::service::{self, ClusterSpec, Job, JobSource, SchedulingService, SimJob};
+use memsched::simulator::SimMode;
+
+/// A seeded 22-job batch: 4 workloads × 4 algorithms, two simulation
+/// jobs, and four exact duplicates.
+fn batch() -> Vec<Job> {
+    let cluster = ClusterSpec::Inline(Arc::new(small_cluster()));
+    let spec = |family: &str, input: usize, seed: u64| {
+        JobSource::Generated(WorkloadSpec { family: family.into(), size: None, input, seed })
+    };
+    let mut jobs = Vec::new();
+    for (family, input, seed) in
+        [("chipseq", 1, 3u64), ("eager", 2, 4), ("bacass", 0, 5), ("methylseq", 1, 6)]
+    {
+        for algo in Algorithm::all() {
+            jobs.push(Job::new(spec(family, input, seed), cluster.clone()).with_algo(algo));
+        }
+    }
+    // Runtime-simulation jobs (both modes) on one of the workloads.
+    for mode in [SimMode::Recompute, SimMode::FollowStatic] {
+        jobs.push(
+            Job::new(spec("chipseq", 1, 3), cluster.clone())
+                .with_algo(Algorithm::HeftmBl)
+                .with_sim(SimJob { mode, sigma: 0.1, seed: 11 }),
+        );
+    }
+    // Exact duplicates sprinkled in (dedupe targets).
+    let d0 = jobs[0].clone();
+    let d5 = jobs[5].clone();
+    let d16 = jobs[16].clone();
+    jobs.push(d0);
+    jobs.push(d5);
+    jobs.push(d16.clone());
+    jobs.push(d16);
+    assert!(jobs.len() >= 16, "acceptance requires a ≥16-job batch");
+    jobs
+}
+
+fn run(workers: usize) -> (Vec<u8>, usize, usize) {
+    let service = SchedulingService::new(workers);
+    let results = service.run_batch(batch());
+    assert!(results.iter().all(|r| r.error.is_none()), "batch must succeed");
+    let stats = service.cache_stats();
+    (service::to_jsonl(&results).into_bytes(), stats.computed, stats.hits())
+}
+
+#[test]
+fn jsonl_bytes_identical_for_any_worker_count() {
+    let (bytes1, computed1, hits1) = run(1);
+    for workers in [2, 4, 8] {
+        let (bytes_n, computed_n, hits_n) = run(workers);
+        assert_eq!(
+            bytes1, bytes_n,
+            "JSONL diverged between --jobs 1 and --jobs {workers}"
+        );
+        // Cache behaviour is deterministic too, not just the output.
+        assert_eq!(computed1, computed_n, "computed-schedule count diverged at {workers}");
+        assert_eq!(hits1, hits_n, "cache-hit count diverged at {workers}");
+    }
+}
+
+#[test]
+fn duplicate_jobs_are_cache_hits() {
+    let service = SchedulingService::new(4);
+    let jobs = batch();
+    let n = jobs.len();
+    let results = service.run_batch(jobs);
+    // The four appended duplicates dedupe against their originals; the
+    // FollowStatic sim job also shares the HEFTM-BL schedule computation.
+    let dup_results = &results[n - 4..];
+    assert!(dup_results.iter().all(|r| r.cache_hit), "duplicates must be cache hits");
+    assert!(service.cache_stats().hits() >= 4);
+    // Deduped jobs report the exact payload of their originals.
+    assert_eq!(results[0].makespan, results[n - 4].makespan);
+    assert_eq!(results[0].fingerprint, results[n - 4].fingerprint);
+    assert_eq!(results[5].makespan, results[n - 3].makespan);
+}
+
+#[test]
+fn suite_grid_byte_deterministic_through_the_service() {
+    // The CLI `batch --suite smoke` path: the experiments grid itself
+    // must be byte-deterministic across worker counts.
+    let jobs = |_: ()| {
+        memsched::experiments::static_suite_jobs(
+            SuiteScale::Smoke,
+            42,
+            &ClusterSpec::Inline(Arc::new(small_cluster())),
+        )
+    };
+    let s1 = SchedulingService::new(1);
+    let r1 = s1.run_batch(jobs(()));
+    let s4 = SchedulingService::new(4);
+    let r4 = s4.run_batch(jobs(()));
+    assert_eq!(service::to_jsonl(&r1), service::to_jsonl(&r4));
+    assert_eq!(r1.len(), 40, "smoke grid: 10 workloads × 4 algorithms");
+}

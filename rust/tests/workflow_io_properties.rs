@@ -1,0 +1,125 @@
+//! Randomized property tests for `workflow::io`: generator-produced
+//! workflows round-trip through `to_json → from_json` to an identical
+//! DAG, and malformed documents (duplicate task names) are rejected.
+//! Complements the small hand-written graphs in `io.rs`'s unit tests.
+
+use memsched::generator::{self, models};
+use memsched::ser::json::Value;
+use memsched::testing::{check, random_dag};
+use memsched::traces::{self, HistoricalData, TraceConfig};
+use memsched::workflow::io::{from_json, to_json};
+use memsched::workflow::Workflow;
+
+/// Exact structural equality: tasks (name, type, work, memory), edge
+/// endpoints, and edge data sizes. Weights are compared bit-exactly —
+/// the JSON number writer emits shortest-roundtrip representations, so
+/// serialization must not lose a single ULP.
+fn assert_same_dag(a: &Workflow, b: &Workflow) -> Result<(), String> {
+    if a.name != b.name {
+        return Err(format!("name: {} vs {}", a.name, b.name));
+    }
+    if a.num_tasks() != b.num_tasks() || a.num_edges() != b.num_edges() {
+        return Err(format!(
+            "shape: {}t/{}e vs {}t/{}e",
+            a.num_tasks(),
+            a.num_edges(),
+            b.num_tasks(),
+            b.num_edges()
+        ));
+    }
+    for (i, (ta, tb)) in a.tasks().iter().zip(b.tasks()).enumerate() {
+        if ta != tb {
+            return Err(format!("task {i}: {ta:?} vs {tb:?}"));
+        }
+    }
+    for (i, (ea, eb)) in a.edges().iter().zip(b.edges()).enumerate() {
+        if ea.src != eb.src || ea.dst != eb.dst || ea.data.to_bits() != eb.data.to_bits() {
+            return Err(format!("edge {i}: {ea:?} vs {eb:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn random_dags_roundtrip_exactly() {
+    check(60, 0x10_CAFE, |rng| {
+        let wf = random_dag(rng, 120);
+        let wf2 = from_json(&to_json(&wf)).map_err(|e| format!("reparse failed: {e:#}"))?;
+        assert_same_dag(&wf, &wf2)
+    });
+}
+
+#[test]
+fn generator_workflows_with_bound_weights_roundtrip() {
+    // The full production pipeline: model expansion (and WfGen-like
+    // scaling) + historical-trace weight binding, then through JSON.
+    let mut seed = 1u64;
+    for model in models::all_models() {
+        for size in [None, Some(200)] {
+            let graph = match size {
+                Some(n) => generator::scale_to(&model, n, seed).unwrap(),
+                None => generator::expand(&model, 7).unwrap(),
+            };
+            let data = HistoricalData::synthesize(
+                &traces::task_types(&graph),
+                &TraceConfig::default(),
+                seed,
+            );
+            let wf = traces::bind_weights(&graph, &data, 2);
+            let wf2 = from_json(&to_json(&wf)).unwrap();
+            assert_same_dag(&wf, &wf2).unwrap();
+            // The round-tripped DAG must also still be a valid DAG.
+            assert!(wf2.is_topological_order(&wf2.topological_order()));
+            seed += 1;
+        }
+    }
+}
+
+#[test]
+fn text_level_roundtrip_is_stable() {
+    // serialize → print → parse → deserialize → serialize again: the two
+    // JSON texts must be identical (no drift across passes).
+    check(20, 0xBEEF, |rng| {
+        let wf = random_dag(rng, 60);
+        let text1 = to_json(&wf).to_string_pretty();
+        let v = Value::parse(&text1).map_err(|e| e.to_string())?;
+        let wf2 = from_json(&v).map_err(|e| format!("{e:#}"))?;
+        let text2 = to_json(&wf2).to_string_pretty();
+        if text1 != text2 {
+            return Err("serialized texts diverged across a roundtrip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn duplicate_task_names_rejected() {
+    let text = r#"{
+        "name": "dup",
+        "tasks": [
+            {"name": "a", "work": 1, "memory": 1},
+            {"name": "b", "work": 1, "memory": 1},
+            {"name": "a", "work": 2, "memory": 2}
+        ],
+        "edges": []
+    }"#;
+    let err = from_json(&Value::parse(text).unwrap()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("duplicate"), "unexpected error: {msg}");
+    assert!(msg.contains('a'), "should name the offending task: {msg}");
+}
+
+#[test]
+fn duplicate_names_rejected_regardless_of_edge_wiring() {
+    // Name-keyed edges resolve to the *last* duplicate before validation
+    // runs; the build must still fail on the duplicate itself.
+    let text = r#"{
+        "name": "dup2",
+        "tasks": [
+            {"name": "x", "work": 1, "memory": 1},
+            {"name": "x", "work": 1, "memory": 1}
+        ],
+        "edges": [ {"src": 0, "dst": 1, "data": 1} ]
+    }"#;
+    assert!(from_json(&Value::parse(text).unwrap()).is_err());
+}

@@ -1,0 +1,17 @@
+//! Offline in-tree stand-in for the `libc` crate: only the symbols the
+//! `memsched` binary actually uses (restoring default SIGPIPE behaviour).
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type sighandler_t = usize;
+
+/// Default signal handling.
+pub const SIG_DFL: sighandler_t = 0;
+/// Broken pipe (Linux signal number).
+pub const SIGPIPE: c_int = 13;
+
+extern "C" {
+    /// `signal(2)` from the platform C library.
+    pub fn signal(signum: c_int, handler: sighandler_t) -> sighandler_t;
+}

@@ -1,0 +1,28 @@
+//! Offline in-tree stand-in for the `log` facade: the level macros print
+//! straight to stderr (no registry, no filtering). Sufficient for the
+//! handful of diagnostic call sites in this repository.
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { eprintln!("[error] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { eprintln!("[warn] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { eprintln!("[info] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { eprintln!("[debug] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { eprintln!("[trace] {}", format!($($arg)*)) };
+}

@@ -1,0 +1,130 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real crate wraps the PJRT C API and executes AOT-compiled HLO
+//! modules. That native runtime is not present in this offline build, so
+//! this stub reproduces exactly the type surface `memsched::runtime`
+//! consumes and fails at client construction with a clear error. All
+//! callers already handle load failures gracefully (the XLA scorer and
+//! predictor are optional accelerators; the native Rust paths are the
+//! defaults), so the rest of the system is unaffected.
+
+use std::fmt;
+
+/// Error type matching the real crate's `std::error::Error` behaviour.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error { msg: "XLA/PJRT runtime is not available in this offline build (stub xla crate)".into() }
+}
+
+/// Element types of XLA literals (only the variant the bridge uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+}
+
+/// PJRT client handle. Construction always fails in the stub.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation built from an HLO proto.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable on a PJRT device.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer produced by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A host-side literal value.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not available"));
+    }
+}
