@@ -19,6 +19,12 @@ echo "== service: smoke suite ×2 through the pool (jobs=1 vs jobs=4) =="
 cmp "$TMP/j1.jsonl" "$TMP/j4.jsonl"
 echo "batch output byte-identical across worker counts"
 
+echo "== engine: parallel-scoring parity (score-threads=1 vs 4) =="
+"$BIN" batch --suite smoke --jobs 2 --score-threads 1 --out "$TMP/s1.jsonl"
+"$BIN" batch --suite smoke --jobs 2 --score-threads 4 --out "$TMP/s4.jsonl"
+cmp "$TMP/s1.jsonl" "$TMP/s4.jsonl"
+echo "batch output byte-identical across score-thread counts"
+
 echo "== experiments: fig1 smoke through the pool =="
 "$BIN" experiment --figure fig1 --scale smoke --jobs 4 > /dev/null
 

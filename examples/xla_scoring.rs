@@ -54,8 +54,8 @@ fn main() -> anyhow::Result<()> {
     println!("makespan agreement: {:.4}% difference", 100.0 * rel);
     anyhow::ensure!(rel < 0.01, "backends diverged beyond f32 tie-breaking");
 
-    // Per-call parity spot check.
-    let q = memsched::scheduler::engine::ScoreQuery {
+    // Per-call parity spot check (queries borrow a reusable arena).
+    let bufs = memsched::scheduler::ScoreBuffers {
         proc_ready: vec![0.0, 5.0, 2.0],
         speeds: vec![1.0, 2.0, 4.0],
         avail_mem: vec![100.0, 50.0, 10.0],
@@ -63,14 +63,18 @@ fn main() -> anyhow::Result<()> {
             memsched::scheduler::engine::ParentInfo { finish: 3.0, data: 10.0, proc: 0 },
             memsched::scheduler::engine::ParentInfo { finish: 4.0, data: 20.0, proc: 1 },
         ],
-        comm: vec![vec![0.0, 1.0, 0.0], vec![2.0, 0.0, 6.0]],
+        // Row-major parents × procs.
+        comm: vec![0.0, 1.0, 0.0, 2.0, 0.0, 6.0],
         work: 8.0,
         memory: 30.0,
         out_total: 5.0,
         bandwidth: 10.0,
+        ..Default::default()
     };
-    let (nft, _) = NativeScorer.score(&q);
-    let (xft, _) = xla.score(&q);
+    let (mut nft, mut nres) = (vec![0.0; 3], vec![0.0; 3]);
+    NativeScorer.score(&bufs.query(), &mut nft, &mut nres);
+    let (mut xft, mut xres) = (vec![0.0; 3], vec![0.0; 3]);
+    xla.score(&bufs.query(), &mut xft, &mut xres);
     println!("\nper-call parity (ft): native {nft:?} vs xla {xft:?}");
     Ok(())
 }

@@ -1,0 +1,94 @@
+//! Intra-schedule scaling benchmark: one huge workflow, serial scoring
+//! vs pool-parallel scoring (`--score-threads`), plus byte-equality of
+//! the resulting schedules.
+//!
+//! This is the hot path ROADMAP calls "the next lever": a 30k-task
+//! workflow used to schedule on exactly one core regardless of the
+//! service's worker count, because service-level sharding is per *job*.
+//! Here the per-task inner loop (tentative scoring against all 72
+//! processors of the paper's memory-constrained cluster) fans out across
+//! a [`ScorePool`].
+//!
+//! Knobs: `MEMSCHED_BENCH_TASKS` (default 30000; also runs a 10000-task
+//! point), `MEMSCHED_SCORE_THREADS` (default: all cores),
+//! `MEMSCHED_BENCH_FAST=1` shrinks the task counts for smoke runs.
+//!
+//! One-shot wall-clock timings (schedules this size run seconds, not
+//! microseconds — the sampling harness would only add noise).
+
+mod common;
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::memory_constrained_cluster;
+use memsched::scheduler::{compute_schedule_with, Algorithm, EvictionPolicy, Schedule};
+use memsched::service::{pool, ScorePool};
+
+fn fingerprint(s: &Schedule) -> (bool, u64, usize) {
+    // Cheap structural digest for the byte-equality assertion.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |x: u64| {
+        h = (h ^ x).wrapping_mul(0x1000_0000_01b3);
+    };
+    for t in &s.tasks {
+        mix(t.proc as u64);
+        mix(t.start.to_bits());
+        mix(t.finish.to_bits());
+        mix(t.evicted.len() as u64);
+    }
+    mix(s.makespan.to_bits());
+    (s.valid, h, s.tasks.iter().map(|t| t.evicted.len()).sum())
+}
+
+fn main() {
+    let fast = std::env::var("MEMSCHED_BENCH_FAST").ok().is_some_and(|v| v != "0");
+    let top: usize = std::env::var("MEMSCHED_BENCH_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 2000 } else { 30000 });
+    let sizes: Vec<usize> = if fast { vec![top] } else { vec![top / 3, top] };
+    let threads = std::env::var("MEMSCHED_SCORE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or_else(pool::default_workers);
+    let cluster = memory_constrained_cluster();
+    let algo = Algorithm::HeftmBl;
+    let policy = EvictionPolicy::LargestFirst;
+    println!(
+        "== bench_engine: {algo:?} on `{}` ({} procs), serial vs {threads} score thread(s) ==",
+        cluster.name,
+        cluster.len()
+    );
+    println!(
+        "{:>8}  {:>12}  {:>12}  {:>8}  {}",
+        "tasks", "serial", "parallel", "speedup", "parity"
+    );
+
+    let pool = ScorePool::new(threads);
+    for tasks in sizes {
+        let spec = WorkloadSpec { family: "chipseq".into(), size: Some(tasks), input: 3, seed: common::SEED };
+        let wf = spec.build().expect("workload builds");
+
+        let t0 = std::time::Instant::now();
+        let serial = compute_schedule_with(&wf, &cluster, algo, policy, None);
+        let serial_secs = t0.elapsed().as_secs_f64();
+
+        let t0 = std::time::Instant::now();
+        let parallel = compute_schedule_with(&wf, &cluster, algo, policy, Some(&pool));
+        let parallel_secs = t0.elapsed().as_secs_f64();
+
+        assert_eq!(
+            fingerprint(&serial),
+            fingerprint(&parallel),
+            "parallel scoring must be byte-identical at {tasks} tasks"
+        );
+        println!(
+            "{:>8}  {:>11.2}s  {:>11.2}s  {:>7.2}x  identical ({} evictions)",
+            wf.num_tasks(),
+            serial_secs,
+            parallel_secs,
+            serial_secs / parallel_secs,
+            fingerprint(&serial).2
+        );
+    }
+}

@@ -7,23 +7,28 @@ mod common;
 use memsched::bench::{black_box, Harness};
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::{default_cluster, memory_constrained_cluster};
-use memsched::scheduler::engine::{EftScorer, ParentInfo, ScoreQuery};
-use memsched::scheduler::{compute_schedule, Algorithm, Engine, EvictionPolicy};
+use memsched::scheduler::engine::ParentInfo;
+use memsched::scheduler::{compute_schedule, Algorithm, Engine, EvictionPolicy, ScoreBuffers};
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 
-fn score_query(k: usize, parents: usize) -> ScoreQuery {
-    ScoreQuery {
+/// Fill a reusable scoring arena (the engine's per-task pattern).
+fn score_buffers(k: usize, parents: usize) -> ScoreBuffers {
+    ScoreBuffers {
         proc_ready: (0..k).map(|j| j as f64).collect(),
         speeds: (0..k).map(|j| 1.0 + (j % 7) as f64).collect(),
         avail_mem: (0..k).map(|j| 1e9 + j as f64).collect(),
         parents: (0..parents)
             .map(|p| ParentInfo { finish: p as f64, data: 1e6 * p as f64, proc: p % k })
             .collect(),
-        comm: (0..parents).map(|p| (0..k).map(|j| (p * j) as f64 * 0.01).collect()).collect(),
+        // Row-major parents × procs.
+        comm: (0..parents)
+            .flat_map(|p| (0..k).map(move |j| (p * j) as f64 * 0.01))
+            .collect(),
         work: 50.0,
         memory: 2e8,
         out_total: 1e7,
         bandwidth: 1e9,
+        ..Default::default()
     }
 }
 
@@ -57,12 +62,21 @@ fn main() {
     h.bench("simulate_static_2k", || black_box(simulate(&wf, &default, &schedule, &cfg2)));
 
     // Scorer: native vs XLA artifact (per-call and schedule-integrated).
-    let q = score_query(72, 8);
+    // Outputs land in the arena's `ft`/`res` slots — zero allocation per
+    // call, exactly like the engine's hot loop.
+    let mut bufs = score_buffers(72, 8);
     let native = memsched::runtime::scorer::NativeScorer;
-    h.bench("scorer_native_call", || black_box(native.score(&q)));
+    h.bench("scorer_native_call", || {
+        bufs.score_with(&native);
+        black_box(bufs.ft[0])
+    });
     match memsched::runtime::scorer::XlaScorer::load_default() {
         Ok(xla) => {
-            h.bench("scorer_xla_call", || black_box(xla.score(&q)));
+            let mut xbufs = score_buffers(72, 8);
+            h.bench("scorer_xla_call", || {
+                xbufs.score_with(&xla);
+                black_box(xbufs.ft[0])
+            });
             let spec_small =
                 WorkloadSpec { family: "chipseq".into(), size: Some(200), input: 2, seed: 42 };
             let wf_small = spec_small.build().unwrap();

@@ -23,17 +23,27 @@ pub fn workers_from_env() -> usize {
         .unwrap_or_else(pool::default_workers)
 }
 
+/// Intra-schedule scoring threads from `MEMSCHED_SCORE_THREADS`,
+/// default 1 (serial scoring); 0 clamps to 1.
+pub fn score_threads_from_env() -> usize {
+    std::env::var("MEMSCHED_SCORE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(1)
+}
+
 pub const SEED: u64 = 42;
 
 /// Run the static suite on a cluster through the scheduling-service pool
-/// (the suite runner prints its own progress line to stderr).
+/// (the suite runner prints its own progress lines to stderr).
 pub fn static_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<StaticResult> {
-    experiments::run_static_suite(scale, SEED, cluster, workers_from_env())
+    experiments::run_static_suite(scale, SEED, cluster, workers_from_env(), score_threads_from_env())
         .expect("suite workloads build")
 }
 
 /// Run the dynamic suite (≤ 2000 tasks, σ = 10%) through the pool.
 pub fn dynamic_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<DynamicResult> {
-    experiments::run_dynamic_suite(scale, SEED, cluster, 0.1, workers_from_env())
+    experiments::run_dynamic_suite(scale, SEED, cluster, 0.1, workers_from_env(), score_threads_from_env())
         .expect("suite workloads build")
 }

@@ -14,7 +14,7 @@ pub mod figures;
 use crate::generator::{self, models};
 use crate::platform::Cluster;
 use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy, Schedule};
-use crate::service::{ClusterSpec, Job, JobSource, SchedulingService, SimJob};
+use crate::service::{ClusterSpec, Job, JobResult, JobSource, SchedulingService, SimJob};
 use crate::simulator::{simulate, DeviationModel, SimConfig, SimMode, SimOutcome};
 use crate::traces::{self, HistoricalData, TraceConfig};
 use crate::workflow::{SizeGroup, Workflow};
@@ -248,6 +248,24 @@ pub fn run_dynamic(
     })
 }
 
+/// Run a batch through the service's ordered streaming API, printing a
+/// per-job completion counter to stderr every ~5% of the batch (and at
+/// the end). Suite runs previously printed only a start line — on the
+/// Full sweep that meant tens of silent minutes.
+fn run_batch_with_progress(service: &SchedulingService, jobs: Vec<Job>) -> Vec<JobResult> {
+    let total = jobs.len();
+    let step = (total / 20).max(1);
+    let mut out: Vec<JobResult> = Vec::with_capacity(total);
+    service.run_batch_streaming(jobs, |r| {
+        out.push(r);
+        let done = out.len();
+        if done % step == 0 || done == total {
+            eprintln!("  progress: {done}/{total} jobs");
+        }
+    });
+    out
+}
+
 /// Build the static-evaluation job grid (workflow × size × input ×
 /// algorithm) for submission through the scheduling service. Job order is
 /// spec-major, algorithm-minor with [`Algorithm::all`]'s ordering — the
@@ -279,7 +297,13 @@ fn jobs_for_specs(specs: &[WorkloadSpec], cluster: &ClusterSpec) -> Vec<Job> {
 /// [`suite`] (same workloads, same normalization by HEFT's makespan),
 /// but the grid executes on the work-stealing pool and identical
 /// (workflow, cluster, algorithm) cells dedupe through the schedule
-/// cache, so the Quick/Full sweeps scale with cores.
+/// cache, so the Quick/Full sweeps scale with cores. `score_threads > 1`
+/// additionally parallelizes the inside of each schedule computation
+/// (shared [`ScorePool`](crate::service::ScorePool); byte-identical
+/// results) — the lever for huge single workflows.
+///
+/// Progress: one stderr counter line per ~5% of completed jobs (fed from
+/// the service's ordered streaming sink).
 ///
 /// Caveat: `sched_seconds` (Fig 9) is wall time measured while other
 /// schedules may be computing on sibling workers; for contention-free
@@ -289,6 +313,7 @@ pub fn run_static_suite(
     seed: u64,
     cluster: &Cluster,
     workers: usize,
+    score_threads: usize,
 ) -> anyhow::Result<Vec<StaticResult>> {
     let specs = suite(scale, seed);
     let cspec = ClusterSpec::Inline(Arc::new(cluster.clone()));
@@ -296,14 +321,15 @@ pub fn run_static_suite(
     // indexes, so the chunk arithmetic cannot drift out of sync.
     let jobs = jobs_for_specs(&specs, &cspec);
     eprintln!(
-        "static suite `{}`: {} workloads × {} algorithms on {} worker(s)...",
+        "static suite `{}`: {} workloads × {} algorithms on {} worker(s), {} score thread(s)...",
         cluster.name,
         specs.len(),
         Algorithm::all().len(),
-        workers.max(1)
+        workers.max(1),
+        score_threads.max(1)
     );
-    let service = SchedulingService::new(workers);
-    let results = service.run_batch(jobs);
+    let service = SchedulingService::new(workers).with_score_threads(score_threads);
+    let results = run_batch_with_progress(&service, jobs);
     let algos = Algorithm::all();
     let mut out = Vec::with_capacity(results.len());
     for (si, spec) in specs.iter().enumerate() {
@@ -344,6 +370,7 @@ pub fn run_dynamic_suite(
     cluster: &Cluster,
     sigma: f64,
     workers: usize,
+    score_threads: usize,
 ) -> anyhow::Result<Vec<DynamicResult>> {
     let specs: Vec<WorkloadSpec> = suite(scale, seed)
         .into_iter()
@@ -365,14 +392,15 @@ pub fn run_dynamic_suite(
         }
     }
     eprintln!(
-        "dynamic suite `{}`: {} workloads × {} algorithms × 2 modes on {} worker(s)...",
+        "dynamic suite `{}`: {} workloads × {} algorithms × 2 modes on {} worker(s), {} score thread(s)...",
         cluster.name,
         specs.len(),
         Algorithm::all().len(),
-        workers.max(1)
+        workers.max(1),
+        score_threads.max(1)
     );
-    let service = SchedulingService::new(workers);
-    let results = service.run_batch(jobs);
+    let service = SchedulingService::new(workers).with_score_threads(score_threads);
+    let results = run_batch_with_progress(&service, jobs);
     let mut out = Vec::with_capacity(results.len() / 2);
     let mut it = results.iter();
     for spec in &specs {
@@ -457,7 +485,7 @@ mod tests {
     #[test]
     fn pooled_static_suite_matches_serial() {
         let cluster = presets::small_cluster();
-        let pooled = run_static_suite(SuiteScale::Smoke, 1, &cluster, 4).unwrap();
+        let pooled = run_static_suite(SuiteScale::Smoke, 1, &cluster, 4, 1).unwrap();
         let mut serial = Vec::new();
         for spec in suite(SuiteScale::Smoke, 1) {
             serial.extend(run_static(&spec, &cluster).unwrap());
@@ -477,7 +505,7 @@ mod tests {
     #[test]
     fn pooled_dynamic_suite_matches_serial() {
         let cluster = presets::small_cluster();
-        let pooled = run_dynamic_suite(SuiteScale::Smoke, 1, &cluster, 0.1, 4).unwrap();
+        let pooled = run_dynamic_suite(SuiteScale::Smoke, 1, &cluster, 0.1, 4, 2).unwrap();
         let mut serial = Vec::new();
         for spec in suite(SuiteScale::Smoke, 1) {
             for algo in Algorithm::all() {

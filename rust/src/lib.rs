@@ -14,6 +14,10 @@
 //! - [`memdag`]: series-parallelization + min-peak-memory traversal ([19]).
 //! - [`scheduler`]: HEFT baseline and the three memory-aware HEFTM variants
 //!   with eviction into communication buffers, plus schedule retracing.
+//!   Internally split into a `Send + Sync` scoring layer (pure tentative
+//!   placement, parallelizable across processors via the service's
+//!   `ScorePool` — `--score-threads`) and a single-threaded commit layer;
+//!   schedules are byte-identical for any thread count.
 //! - [`simulator`]: the runtime system — discrete-event execution with
 //!   parameter deviations and on-the-fly schedule recomputation.
 //! - [`runtime`]: PJRT bridge running the AOT-compiled XLA scoring/predictor

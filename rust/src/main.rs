@@ -18,9 +18,7 @@ use memsched::experiments::{self, figures, SuiteScale};
 use memsched::platform::Cluster;
 use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
 use memsched::ser::json::Value;
-use memsched::service::{
-    self, ClusterSpec, Job, JobSource, SchedulingService, SimJob,
-};
+use memsched::service::{ClusterSpec, Job, JobSource, SchedulingService, SimJob};
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 use memsched::workflow;
 
@@ -35,17 +33,23 @@ COMMANDS:
   info          --workflow <file.json|.dot>
   cluster-info  [--cluster default|memory-constrained|file.json]
   schedule      --workflow <file> [--cluster C] [--algo heft|heftm-bl|heftm-blc|heftm-mm]
-                [--eviction largest|smallest] [--scorer native|xla] [--out schedule.json]
+                [--eviction largest|smallest] [--scorer native|xla]
+                [--score-threads N] [--out schedule.json]
   simulate      --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
                 [--no-recompute]
   retrace       --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
                 [--lose-proc J]...   assess deviation impact on a schedule (§V)
   batch         --input jobs.jsonl | --suite smoke|quick|full  [--jobs N]
-                [--repeat K] [--seed S] [--cluster C] [--out results.jsonl]
+                [--score-threads N] [--cache-bytes B] [--repeat K] [--seed S]
+                [--cluster C] [--out results.jsonl]
                 run a job batch on the multi-threaded scheduling service;
-                results stream as JSONL, byte-identical for any --jobs
+                results stream incrementally as JSONL (in job order, as
+                each ordered slot completes), byte-identical for any
+                --jobs/--score-threads; --cache-bytes caps the schedule
+                cache (LRU by approximate bytes, default unbounded)
   experiment    --figure fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|validity
-                [--scale smoke|quick|full] [--seed S] [--jobs N] [--markdown]
+                [--scale smoke|quick|full] [--seed S] [--jobs N]
+                [--score-threads N] [--markdown]
   help          print this text
 
 Models: atacseq, bacass, chipseq, eager, methylseq.
@@ -179,13 +183,25 @@ fn cmd_schedule(args: &mut Args) -> Result<()> {
     let algo: Algorithm = args.opt_or("algo", Algorithm::HeftmBl)?;
     let policy: EvictionPolicy = args.opt_or("eviction", EvictionPolicy::LargestFirst)?;
     let scorer_kind = args.opt_val("scorer")?.unwrap_or_else(|| "native".into());
+    let score_threads = score_threads_arg(args)?;
     let out = args.opt_val("out")?;
     args.finish()?;
 
     let t0 = std::time::Instant::now();
     let schedule = match scorer_kind.as_str() {
-        "native" => compute_schedule(&wf, &cluster, algo, policy),
+        "native" => {
+            // Parallel tentative scoring (byte-identical to serial).
+            let pool = (score_threads > 1)
+                .then(|| memsched::service::ScorePool::new(score_threads));
+            memsched::scheduler::compute_schedule_with(&wf, &cluster, algo, policy, pool.as_ref())
+        }
         "xla" => {
+            if score_threads > 1 {
+                eprintln!(
+                    "note: --score-threads {score_threads} is ignored with --scorer xla — the \
+                     batched scorer already orders all processors in one call"
+                );
+            }
             let scorer = memsched::runtime::scorer::XlaScorer::load_default()?;
             let order = algo.rank_order(&wf, &cluster);
             memsched::scheduler::Engine::new(&wf, &cluster, algo, policy)
@@ -330,11 +346,17 @@ fn workers_arg(args: &mut Args) -> Result<usize> {
     })
 }
 
+/// `--score-threads N` (clamped to ≥ 1), defaulting to serial scoring.
+fn score_threads_arg(args: &mut Args) -> Result<usize> {
+    Ok(args.opt_or("score-threads", 1usize)?.max(1))
+}
+
 fn cmd_experiment(args: &mut Args) -> Result<()> {
     let figure = args.req_str("figure")?;
     let scale: SuiteScale = args.opt_or("scale", SuiteScale::Quick)?;
     let seed: u64 = args.opt_or("seed", 42)?;
     let workers = workers_arg(args)?;
+    let score_threads = score_threads_arg(args)?;
     let markdown = args.flag("markdown");
     args.finish()?;
 
@@ -350,7 +372,8 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
     let table = match figure.as_str() {
         "fig1" | "fig2" | "fig3" | "fig4" => {
             let cluster = memsched::platform::presets::default_cluster();
-            let results = experiments::run_static_suite(scale, seed, &cluster, workers)?;
+            let results =
+                experiments::run_static_suite(scale, seed, &cluster, workers, score_threads)?;
             match figure.as_str() {
                 "fig1" => figures::success_rates(&results),
                 "fig2" => figures::relative_makespans(&results),
@@ -360,7 +383,8 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
         }
         "fig5" | "fig6" | "fig7" | "fig9" => {
             let cluster = memsched::platform::presets::memory_constrained_cluster();
-            let results = experiments::run_static_suite(scale, seed, &cluster, workers)?;
+            let results =
+                experiments::run_static_suite(scale, seed, &cluster, workers, score_threads)?;
             match figure.as_str() {
                 "fig5" => figures::success_rates(&results),
                 "fig6" => figures::relative_makespans(&results),
@@ -370,7 +394,8 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
         }
         "fig8" | "validity" => {
             let cluster = memsched::platform::presets::memory_constrained_cluster();
-            let results = experiments::run_dynamic_suite(scale, seed, &cluster, 0.1, workers)?;
+            let results =
+                experiments::run_dynamic_suite(scale, seed, &cluster, 0.1, workers, score_threads)?;
             if figure == "fig8" {
                 figures::dynamic_improvement(&results)
             } else {
@@ -384,14 +409,19 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
 }
 
 /// Run a batch of scheduling jobs on the multi-threaded service and
-/// stream the results as JSONL (stdout or `--out`). The output bytes are
-/// identical for any `--jobs` value; the run summary goes to stderr.
+/// stream the results as JSONL (stdout or `--out`). Lines are emitted
+/// **incrementally**, in job order, as each ordered slot completes —
+/// long batches show progress instead of buffering until the end. The
+/// output bytes are identical for any `--jobs`/`--score-threads` value;
+/// the run summary goes to stderr.
 fn cmd_batch(args: &mut Args) -> Result<()> {
     let input = args.opt_val("input")?;
     let suite = args.opt_val("suite")?;
     let seed: u64 = args.opt_or("seed", 42)?;
     let default_cluster = args.opt_val("cluster")?.unwrap_or_else(|| "default".into());
     let workers = workers_arg(args)?;
+    let score_threads = score_threads_arg(args)?;
+    let cache_bytes: Option<usize> = args.opt("cache-bytes")?;
     let repeat: usize = args.opt_or("repeat", 1)?;
     if repeat == 0 {
         bail!("--repeat must be at least 1");
@@ -416,28 +446,60 @@ fn cmd_batch(args: &mut Args) -> Result<()> {
     }
 
     let t0 = std::time::Instant::now();
-    let service = SchedulingService::new(workers);
-    let results = service.run_batch(jobs);
-    let text = service::to_jsonl(&results);
-    match &out {
-        Some(path) => std::fs::write(path, &text).with_context(|| format!("writing {path}"))?,
-        None => print!("{text}"),
+    let service = SchedulingService::new(workers)
+        .with_score_threads(score_threads)
+        .with_cache_bytes(cache_bytes);
+
+    // Stream each JSONL line the moment its ordered slot completes.
+    // Per-line flush only for stdout (where incremental visibility is
+    // the point); file output keeps BufWriter batching — the emitter
+    // lock serializes this sink across pool workers, so a syscall per
+    // line would throttle the whole pool.
+    use std::io::Write as _;
+    let flush_each_line = out.is_none();
+    let mut writer: Box<dyn std::io::Write + Send> = match &out {
+        Some(path) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+        )),
+        None => Box::new(std::io::stdout()),
+    };
+    let mut write_err: Option<std::io::Error> = None;
+    let (mut emitted, mut dedup_hits, mut failed) = (0usize, 0usize, 0usize);
+    service.run_batch_streaming(jobs, |r| {
+        emitted += 1;
+        if r.cache_hit {
+            dedup_hits += 1;
+        }
+        if r.error.is_some() {
+            failed += 1;
+        }
+        if write_err.is_none() {
+            let res = writer
+                .write_all(r.to_jsonl().as_bytes())
+                .and_then(|()| writer.write_all(b"\n"))
+                .and_then(|()| if flush_each_line { writer.flush() } else { Ok(()) });
+            if let Err(e) = res {
+                write_err = Some(e);
+            }
+        }
+    });
+    let final_flush = writer.flush();
+    if let Some(e) = write_err.or(final_flush.err()) {
+        return Err(anyhow::Error::new(e)
+            .context(format!("writing results to {}", out.as_deref().unwrap_or("stdout"))));
     }
 
     let stats = service.cache_stats();
-    let dedup_hits = results.iter().filter(|r| r.cache_hit).count();
-    let failed = results.iter().filter(|r| r.error.is_some()).count();
     eprintln!(
-        "batch: {} jobs ({} deduped), {} schedules computed, {} cache hits, {} workers, {}",
-        results.len(),
-        dedup_hits,
+        "batch: {emitted} jobs ({dedup_hits} deduped), {} schedules computed, {} cache hits, \
+         {workers} worker(s), {} score thread(s), {}",
         stats.computed,
         stats.hits(),
-        workers,
+        service.score_threads(),
         memsched::bench::fmt_duration(t0.elapsed())
     );
     if failed > 0 {
-        bail!("{failed} of {} jobs failed (see the `error` lines)", results.len());
+        bail!("{failed} of {emitted} jobs failed (see the `error` lines)");
     }
     Ok(())
 }

@@ -6,6 +6,11 @@
 //! - `ft[j]`  — the Step-3 finish time of `v` on `p_j`;
 //! - `res[j]` — the Step-2 memory residual (before eviction).
 //!
+//! Queries arrive as [`ScoreQuery`] views borrowing the engine's
+//! [`ScoreBuffers`](crate::scheduler::ScoreBuffers) arena, and results
+//! are written into caller-provided slices from the same arena — the
+//! scoring hot loop performs no per-task allocation on either side.
+//!
 //! The XLA path executes the AOT artifact `eft_score.hlo.txt`, whose inner
 //! kernel is a Pallas kernel (`python/compile/kernels/eft.py`) lowered in
 //! interpret mode. Shapes are fixed at export time (`PAD_PROCS` ×
@@ -31,16 +36,15 @@ pub const PAD_PARENTS: usize = 32;
 pub struct NativeScorer;
 
 impl EftScorer for NativeScorer {
-    fn score(&self, q: &ScoreQuery) -> (Vec<f64>, Vec<f64>) {
-        let k = q.proc_ready.len();
-        let mut ft = vec![0.0f64; k];
-        let mut res = vec![0.0f64; k];
+    fn score(&self, q: &ScoreQuery<'_>, ft: &mut [f64], res: &mut [f64]) {
+        let k = q.num_procs();
+        debug_assert!(ft.len() == k && res.len() == k);
         for j in 0..k {
             let mut st = q.proc_ready[j];
             let mut remote_in = 0.0f64;
             for (p, par) in q.parents.iter().enumerate() {
                 if par.proc != j {
-                    let arrival = par.finish.max(q.comm[p][j]) + par.data / q.bandwidth;
+                    let arrival = par.finish.max(q.comm[p * k + j]) + par.data / q.bandwidth;
                     st = st.max(arrival);
                     remote_in += par.data;
                 }
@@ -48,7 +52,6 @@ impl EftScorer for NativeScorer {
             ft[j] = st + q.work / q.speeds[j];
             res[j] = q.avail_mem[j] - q.memory - remote_in - q.out_total;
         }
-        (ft, res)
     }
 }
 
@@ -92,8 +95,8 @@ impl XlaScorer {
         })
     }
 
-    fn fill(&self, q: &ScoreQuery) -> Result<()> {
-        let k = q.proc_ready.len();
+    fn fill(&self, q: &ScoreQuery<'_>) -> Result<()> {
+        let k = q.num_procs();
         anyhow::ensure!(k <= PAD_PROCS, "cluster too large for artifact ({k} > {PAD_PROCS})");
         anyhow::ensure!(
             q.parents.len() <= PAD_PARENTS,
@@ -111,10 +114,11 @@ impl XlaScorer {
             if let Some(par) = q.parents.get(p) {
                 s.pft[p] = par.finish as f32;
                 s.pc[p] = par.data as f32;
+                let row = q.comm_row(p);
                 for j in 0..PAD_PROCS {
                     let idx = p * PAD_PROCS + j;
                     if j < k {
-                        s.comm[idx] = q.comm[p][j] as f32;
+                        s.comm[idx] = row[j] as f32;
                         s.mask[idx] = if par.proc == j { 0.0 } else { 1.0 };
                     } else {
                         s.comm[idx] = 0.0;
@@ -139,7 +143,7 @@ impl XlaScorer {
     }
 
     /// Raw padded scores (used by tests and benches).
-    pub fn score_padded(&self, q: &ScoreQuery) -> Result<(Vec<f32>, Vec<f32>)> {
+    pub fn score_padded(&self, q: &ScoreQuery<'_>) -> Result<(Vec<f32>, Vec<f32>)> {
         self.fill(q)?;
         let s = self.scratch.borrow();
         let outs = self.comp.run_f32(&[
@@ -158,18 +162,20 @@ impl XlaScorer {
 }
 
 impl EftScorer for XlaScorer {
-    fn score(&self, q: &ScoreQuery) -> (Vec<f64>, Vec<f64>) {
-        let k = q.proc_ready.len();
+    fn score(&self, q: &ScoreQuery<'_>, ft: &mut [f64], res: &mut [f64]) {
+        let k = q.num_procs();
         match self.score_padded(q) {
-            Ok((ft, res)) => (
-                ft[..k].iter().map(|&x| x as f64).collect(),
-                res[..k].iter().map(|&x| x as f64).collect(),
-            ),
+            Ok((xft, xres)) => {
+                for j in 0..k {
+                    ft[j] = xft[j] as f64;
+                    res[j] = xres[j] as f64;
+                }
+            }
             Err(e) => {
                 // Defensive: fall back to the native scorer rather than
                 // aborting a schedule mid-flight.
                 log::warn!("XLA scorer failed ({e}); falling back to native");
-                NativeScorer.score(q)
+                NativeScorer.score(q, ft, res);
             }
         }
     }
@@ -179,9 +185,10 @@ impl EftScorer for XlaScorer {
 mod tests {
     use super::*;
     use crate::scheduler::engine::ParentInfo;
+    use crate::scheduler::ScoreBuffers;
 
-    fn query() -> ScoreQuery {
-        ScoreQuery {
+    fn buffers() -> ScoreBuffers {
+        ScoreBuffers {
             proc_ready: vec![0.0, 5.0, 2.0],
             speeds: vec![1.0, 2.0, 4.0],
             avail_mem: vec![100.0, 50.0, 10.0],
@@ -189,18 +196,21 @@ mod tests {
                 ParentInfo { finish: 3.0, data: 10.0, proc: 0 },
                 ParentInfo { finish: 4.0, data: 20.0, proc: 1 },
             ],
-            comm: vec![vec![0.0, 1.0, 0.0], vec![2.0, 0.0, 6.0]],
+            // Row-major parents × procs.
+            comm: vec![0.0, 1.0, 0.0, 2.0, 0.0, 6.0],
             work: 8.0,
             memory: 30.0,
             out_total: 5.0,
             bandwidth: 10.0,
+            ..Default::default()
         }
     }
 
     #[test]
     fn native_scorer_matches_hand_computation() {
-        let q = query();
-        let (ft, res) = NativeScorer.score(&q);
+        let b = buffers();
+        let (mut ft, mut res) = (vec![0.0; 3], vec![0.0; 3]);
+        NativeScorer.score(&b.query(), &mut ft, &mut res);
         // Proc 0: remote parent 1 (on proc 1): arrival = max(4, 2) + 2 = 6;
         // st = max(0, 6) = 6; ft = 6 + 8/1 = 14.
         assert!((ft[0] - 14.0).abs() < 1e-9);
@@ -217,6 +227,17 @@ mod tests {
     }
 
     #[test]
+    fn score_with_reuses_the_arena() {
+        let mut b = buffers();
+        b.score_with(&NativeScorer);
+        assert_eq!(b.ft.len(), 3);
+        assert!((b.ft[1] - 9.0).abs() < 1e-9);
+        let cap = b.ft.capacity();
+        b.score_with(&NativeScorer);
+        assert_eq!(b.ft.capacity(), cap, "outputs must not reallocate");
+    }
+
+    #[test]
     fn xla_scorer_parity_if_artifact_built() {
         let path = crate::runtime::artifact_path("eft_score.hlo.txt");
         if !path.exists() {
@@ -224,9 +245,11 @@ mod tests {
             return;
         }
         let xs = XlaScorer::load(&path).unwrap();
-        let q = query();
-        let (nft, nres) = NativeScorer.score(&q);
-        let (xft, xres) = xs.score(&q);
+        let b = buffers();
+        let (mut nft, mut nres) = (vec![0.0; 3], vec![0.0; 3]);
+        NativeScorer.score(&b.query(), &mut nft, &mut nres);
+        let (mut xft, mut xres) = (vec![0.0; 3], vec![0.0; 3]);
+        xs.score(&b.query(), &mut xft, &mut xres);
         for j in 0..3 {
             assert!((nft[j] - xft[j]).abs() < 1e-3, "ft[{j}]: {} vs {}", nft[j], xft[j]);
             assert!((nres[j] - xres[j]).abs() < 1e-3, "res[{j}]");

@@ -7,6 +7,20 @@
 //! platform state (ready times, memories, pending-data sets, channel
 //! ready times).
 //!
+//! Structurally the engine is split into two layers:
+//!
+//! - a **scoring layer** ([`ScoringCtx`]) — a borrowed, read-only,
+//!   `Send + Sync` view over the platform state, the workflow, and the
+//!   committed placements. `ScoringCtx::tentative` is a pure function of
+//!   that view, so per-processor scoring can fan out across the workers
+//!   of a shared [`ScorePool`] ([`Engine::with_parallel_scoring`]); the
+//!   winner is picked by a deterministic serial reduction (minimum finish
+//!   time, ties to the lowest [`ProcId`]), which keeps schedules
+//!   byte-identical for any worker count;
+//! - a **commit layer** (`Engine::commit`) — the only mutating phase,
+//!   always single-threaded, which also invalidates the per-processor
+//!   eviction-candidate caches ([`EvictCache`]) the scoring layer reads.
+//!
 //! The same engine serves four roles:
 //! - the HEFT baseline (`memory_aware = false`): memory feasibility is
 //!   *tracked* but never enforced, so the schedule may overcommit —
@@ -16,10 +30,12 @@
 //!   [`Engine::resume`] from a mid-execution platform state);
 //! - as the oracle inside [`super::retrace`].
 
-use super::state::{EvictionPolicy, PlatformState};
+use super::state::{EvictCache, EvictionPolicy, PlatformState};
 use super::Algorithm;
 use crate::platform::{Cluster, ProcId};
+use crate::service::pool::ScorePool;
 use crate::workflow::{EdgeId, TaskId, Workflow};
+use std::sync::Mutex;
 
 /// One parent's data for batched EFT scoring.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -32,25 +48,100 @@ pub struct ParentInfo {
 /// Inputs for scoring one task against every processor at once (the
 /// engine's inner loop, offloadable to the XLA runtime — see
 /// `runtime::scorer`).
-#[derive(Debug, Clone)]
-pub struct ScoreQuery {
-    pub proc_ready: Vec<f64>,
-    pub speeds: Vec<f64>,
-    pub avail_mem: Vec<f64>,
-    pub parents: Vec<ParentInfo>,
-    /// Per parent: channel ready times `rt_{proc(u), j}` for all `j`.
-    pub comm: Vec<Vec<f64>>,
+///
+/// All array fields are slices into a reusable [`ScoreBuffers`] arena:
+/// building a query allocates nothing once the arena is warm.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoreQuery<'a> {
+    pub proc_ready: &'a [f64],
+    pub speeds: &'a [f64],
+    pub avail_mem: &'a [f64],
+    pub parents: &'a [ParentInfo],
+    /// Row-major `parents.len() × num_procs` channel ready times
+    /// `rt_{proc(u), j}` (the old per-parent `Vec<Vec<f64>>`, flattened).
+    pub comm: &'a [f64],
     pub work: f64,
     pub memory: f64,
     pub out_total: f64,
     pub bandwidth: f64,
 }
 
-/// Batched EFT scorer: finish times and memory residuals per processor.
+impl<'a> ScoreQuery<'a> {
+    pub fn num_procs(&self) -> usize {
+        self.proc_ready.len()
+    }
+
+    /// Channel ready times of parent `p` toward every processor.
+    pub fn comm_row(&self, p: usize) -> &[f64] {
+        let k = self.proc_ready.len();
+        &self.comm[p * k..(p + 1) * k]
+    }
+}
+
+/// Reusable SoA arena backing [`ScoreQuery`] plus the scorer's output
+/// slots. One arena lives in each [`Engine`]; refilling it per task
+/// replaces the former per-task `ScoreQuery` allocations (four `Vec`s
+/// plus an O(parents) `Vec<Vec<f64>>`) with amortized-zero allocation.
+#[derive(Debug, Default, Clone)]
+pub struct ScoreBuffers {
+    pub proc_ready: Vec<f64>,
+    pub speeds: Vec<f64>,
+    pub avail_mem: Vec<f64>,
+    pub parents: Vec<ParentInfo>,
+    /// Row-major `parents × procs` channel ready times.
+    pub comm: Vec<f64>,
+    pub work: f64,
+    pub memory: f64,
+    pub out_total: f64,
+    pub bandwidth: f64,
+    /// Output: per-processor finish times (filled by [`score_with`]).
+    ///
+    /// [`score_with`]: ScoreBuffers::score_with
+    pub ft: Vec<f64>,
+    /// Output: per-processor memory residuals.
+    pub res: Vec<f64>,
+}
+
+impl ScoreBuffers {
+    /// The borrowed query over the arena's current contents.
+    pub fn query(&self) -> ScoreQuery<'_> {
+        ScoreQuery {
+            proc_ready: &self.proc_ready,
+            speeds: &self.speeds,
+            avail_mem: &self.avail_mem,
+            parents: &self.parents,
+            comm: &self.comm,
+            work: self.work,
+            memory: self.memory,
+            out_total: self.out_total,
+            bandwidth: self.bandwidth,
+        }
+    }
+
+    /// Run `scorer` over the arena's query, writing into the arena's
+    /// `ft`/`res` output slots (resized to the processor count).
+    pub fn score_with(&mut self, scorer: &dyn EftScorer) {
+        let k = self.proc_ready.len();
+        let mut ft = std::mem::take(&mut self.ft);
+        let mut res = std::mem::take(&mut self.res);
+        ft.clear();
+        ft.resize(k, 0.0);
+        res.clear();
+        res.resize(k, 0.0);
+        scorer.score(&self.query(), &mut ft, &mut res);
+        self.ft = ft;
+        self.res = res;
+    }
+}
+
+/// Batched EFT scorer: finish times and memory residuals per processor,
+/// written into caller-provided slices (borrowed from [`ScoreBuffers`]).
 /// Implemented natively (`runtime::scorer::NativeScorer`) and via the AOT
 /// XLA artifact (`runtime::scorer::XlaScorer`).
 pub trait EftScorer {
-    fn score(&self, q: &ScoreQuery) -> (Vec<f64>, Vec<f64>);
+    /// Fill `ft[j]` / `res[j]` for every `j < q.num_procs()`. Both output
+    /// slices are exactly `q.num_procs()` long.
+    fn score(&self, q: &ScoreQuery<'_>, ft: &mut [f64], res: &mut [f64]);
 }
 
 /// Committed placement of one task.
@@ -123,144 +214,57 @@ impl Schedule {
         }
         used.iter().filter(|&&u| u).count()
     }
+
+    /// Approximate heap footprint in bytes (for cache accounting).
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Schedule>()
+            + self.rank_order.len() * std::mem::size_of::<TaskId>()
+            + self.tasks.len() * std::mem::size_of::<TaskSchedule>()
+            + self
+                .tasks
+                .iter()
+                .map(|t| t.evicted.len() * std::mem::size_of::<EdgeId>())
+                .sum::<usize>()
+            + self.failures.len() * std::mem::size_of::<Failure>()
+            + self.mem_peak_frac.len() * std::mem::size_of::<f64>()
+    }
 }
 
-/// Result of a tentative assignment (Steps 1–3).
+/// Result of a tentative assignment (Steps 1–3). Pure output of the
+/// scoring layer; consumed by the commit layer.
 #[derive(Debug, Clone)]
-struct Tentative {
-    start: f64,
-    finish: f64,
-    evictions: Vec<(EdgeId, f64)>,
+pub struct Tentative {
+    pub start: f64,
+    pub finish: f64,
+    pub evictions: Vec<(EdgeId, f64)>,
     /// `Res` before eviction (memory slack; negative → eviction needed).
-    res: f64,
+    pub res: f64,
     /// Absolute memory usage during execution, bytes (post-eviction).
-    used: f64,
+    pub used: f64,
 }
 
-/// The assignment engine. See module docs.
-pub struct Engine<'a> {
+/// Borrowed, read-only view over everything tentative scoring needs
+/// (Steps 1–3 of §IV-B): the workflow, the cluster, the platform state,
+/// and the placements committed so far.
+///
+/// `ScoringCtx` is `Send + Sync` by construction — no `Rc`, no `RefCell`;
+/// the only interior mutability is the `OnceLock` cells of the shared
+/// [`EvictCache`] — so [`Engine::assign`] can evaluate
+/// [`tentative`](ScoringCtx::tentative) for disjoint processors on
+/// [`ScorePool`] workers concurrently. All mutation happens afterwards,
+/// in the engine's single-threaded commit layer.
+#[derive(Clone, Copy)]
+pub struct ScoringCtx<'a> {
     wf: &'a Workflow,
     cluster: &'a Cluster,
-    pub state: PlatformState,
+    state: &'a PlatformState,
+    placed: &'a [Option<TaskSchedule>],
+    evict_cache: &'a EvictCache,
     memory_aware: bool,
     policy: EvictionPolicy,
-    algorithm: Algorithm,
-    /// Placements (None = not yet assigned).
-    placed: Vec<Option<TaskSchedule>>,
-    failures: Vec<Failure>,
-    /// Optional batched scorer: pre-orders processors by finish time so
-    /// the exact per-processor check can stop at the first feasible one.
-    scorer: Option<&'a dyn EftScorer>,
-    /// Per-processor cache of eviction candidates sorted by policy.
-    /// `PD_j` only changes on commits, while tentative assignment consults
-    /// the sorted view once per (task, processor) — caching turns
-    /// O(tasks · procs · |PD| log |PD|) sorting into O(commits · |PD| log |PD|).
-    evict_cache: std::cell::RefCell<Vec<Option<std::rc::Rc<Vec<(EdgeId, f64)>>>>>,
 }
 
-impl<'a> Engine<'a> {
-    /// Fresh engine over an idle platform.
-    pub fn new(
-        wf: &'a Workflow,
-        cluster: &'a Cluster,
-        algorithm: Algorithm,
-        policy: EvictionPolicy,
-    ) -> Engine<'a> {
-        Engine {
-            wf,
-            cluster,
-            state: PlatformState::new(cluster),
-            memory_aware: algorithm.memory_aware(),
-            policy,
-            algorithm,
-            placed: vec![None; wf.num_tasks()],
-            failures: Vec::new(),
-            scorer: None,
-            evict_cache: std::cell::RefCell::new(vec![None; cluster.len()]),
-        }
-    }
-
-    /// Attach a batched EFT scorer (e.g. the XLA/PJRT artifact).
-    pub fn with_scorer(mut self, scorer: &'a dyn EftScorer) -> Engine<'a> {
-        self.scorer = Some(scorer);
-        self
-    }
-
-    /// Resume from a mid-execution platform state with some tasks already
-    /// placed (dynamic rescheduling, §V). `fixed` entries are kept as-is.
-    pub fn resume(
-        wf: &'a Workflow,
-        cluster: &'a Cluster,
-        algorithm: Algorithm,
-        policy: EvictionPolicy,
-        state: PlatformState,
-        fixed: Vec<Option<TaskSchedule>>,
-    ) -> Engine<'a> {
-        assert_eq!(fixed.len(), wf.num_tasks());
-        Engine {
-            wf,
-            cluster,
-            state,
-            memory_aware: algorithm.memory_aware(),
-            policy,
-            algorithm,
-            placed: fixed,
-            failures: Vec::new(),
-            scorer: None,
-            evict_cache: std::cell::RefCell::new(vec![None; cluster.len()]),
-        }
-    }
-
-    /// Sorted eviction candidates of `p_j` (cached until the next commit
-    /// touching `p_j`).
-    fn sorted_candidates(&self, j: ProcId) -> std::rc::Rc<Vec<(EdgeId, f64)>> {
-        let mut cache = self.evict_cache.borrow_mut();
-        if let Some(c) = &cache[j] {
-            return c.clone();
-        }
-        let c = std::rc::Rc::new(self.state.procs[j].pending.candidates(self.policy));
-        cache[j] = Some(c.clone());
-        c
-    }
-
-    /// Build the batched-scoring query for task `v` (see [`ScoreQuery`]).
-    fn score_query(&self, v: TaskId) -> ScoreQuery {
-        let k = self.cluster.len();
-        let parents: Vec<ParentInfo> = self
-            .wf
-            .in_edge_ids(v)
-            .iter()
-            .map(|&e| {
-                let edge = self.wf.edge(e);
-                ParentInfo {
-                    finish: self.ft(edge.src),
-                    data: edge.data,
-                    proc: self.proc_of(edge.src),
-                }
-            })
-            .collect();
-        let comm: Vec<Vec<f64>> = parents
-            .iter()
-            .map(|p| (0..k).map(|j| self.state.comm_ready(p.proc, j)).collect())
-            .collect();
-        ScoreQuery {
-            proc_ready: self.state.procs.iter().map(|p| p.ready_time).collect(),
-            speeds: self.cluster.processors.iter().map(|p| p.speed).collect(),
-            avail_mem: self.state.procs.iter().map(|p| p.avail_mem).collect(),
-            parents,
-            comm,
-            work: self.wf.task(v).work,
-            memory: self.wf.task(v).memory,
-            out_total: self.wf.total_out_data(v),
-            bandwidth: self.cluster.bandwidth,
-        }
-    }
-
-    /// Current placements (None = not yet assigned).
-    pub fn placements(&self) -> &[Option<TaskSchedule>] {
-        &self.placed
-    }
-
+impl<'a> ScoringCtx<'a> {
     /// Finish time of an already-placed task (must exist).
     fn ft(&self, u: TaskId) -> f64 {
         self.placed[u].as_ref().expect("rank order is topological").finish
@@ -272,14 +276,21 @@ impl<'a> Engine<'a> {
 
     /// Steps 1–3 (§IV-B): tentatively assign `v` to `p_j`.
     /// Returns `None` if the placement is invalid (memory or buffer).
-    fn tentative(&self, v: TaskId, j: ProcId) -> Option<Tentative> {
+    pub fn tentative(&self, v: TaskId, j: ProcId) -> Option<Tentative> {
         let ps = &self.state.procs[j];
         let mem_j = self.cluster.proc(j).memory;
+
+        // CSR in-edge ids are ascending (counting sort by destination
+        // preserves edge-id order), so membership checks below can
+        // binary-search the slice directly — no per-call allocation, and
+        // no quadratic scan for high-fan-in tasks.
+        let inputs = self.wf.in_edge_ids(v);
+        debug_assert!(inputs.windows(2).all(|w| w[0] < w[1]), "CSR in-edges must be sorted");
 
         // Partition v's inputs into same-proc and remote.
         let mut local_in_pending = 0.0f64; // v's inputs resident in PD_j
         let mut remote_in = 0.0f64;
-        for &e in self.wf.in_edge_ids(v) {
+        for &e in inputs {
             let edge = self.wf.edge(e);
             if self.proc_of(edge.src) == j {
                 // Step 1: the file must still be pending in p_j's memory.
@@ -310,21 +321,17 @@ impl<'a> Engine<'a> {
                 }
                 // Evict pending files (largest/smallest first) until the
                 // deficit is covered; the task's own inputs are not
-                // candidates, and everything must fit in the comm buffer.
+                // candidates (a pending file of p_j that is also an input
+                // of v necessarily has its producer on p_j, so the sorted
+                // `inputs` slice is the exact skip set), and everything
+                // must fit in the comm buffer.
                 let mut need = need;
                 let mut buf_left = ps.avail_buf;
-                let inputs: Vec<EdgeId> = self
-                    .wf
-                    .in_edge_ids(v)
-                    .iter()
-                    .copied()
-                    .filter(|&e| self.proc_of(self.wf.edge(e).src) == j)
-                    .collect();
-                for &(e, size) in self.sorted_candidates(j).iter() {
+                for &(e, size) in self.evict_cache.sorted(j, &ps.pending, self.policy) {
                     if need <= 0.0 {
                         break;
                     }
-                    if inputs.contains(&e) {
+                    if inputs.binary_search(&e).is_ok() {
                         continue;
                     }
                     if size > buf_left {
@@ -345,12 +352,12 @@ impl<'a> Engine<'a> {
 
         // Step 3: start/finish times.
         let mut st = ps.ready_time;
-        for &e in self.wf.in_edge_ids(v) {
+        for &e in inputs {
             let edge = self.wf.edge(e);
             let pu = self.proc_of(edge.src);
             if pu != j {
-                let arrival =
-                    self.ft(edge.src).max(self.state.comm_ready(pu, j)) + edge.data / self.cluster.bandwidth;
+                let arrival = self.ft(edge.src).max(self.state.comm_ready(pu, j))
+                    + edge.data / self.cluster.bandwidth;
                 st = st.max(arrival);
             }
         }
@@ -359,17 +366,176 @@ impl<'a> Engine<'a> {
         Some(Tentative { start: st, finish: ft, evictions, res, used })
     }
 
+    /// Fill the batched-scoring arena for task `v` (see [`ScoreQuery`]).
+    pub fn fill_query(&self, v: TaskId, buf: &mut ScoreBuffers) {
+        let k = self.cluster.len();
+        buf.proc_ready.clear();
+        buf.proc_ready.extend(self.state.procs.iter().map(|p| p.ready_time));
+        buf.speeds.clear();
+        buf.speeds.extend(self.cluster.processors.iter().map(|p| p.speed));
+        buf.avail_mem.clear();
+        buf.avail_mem.extend(self.state.procs.iter().map(|p| p.avail_mem));
+        buf.parents.clear();
+        for &e in self.wf.in_edge_ids(v) {
+            let edge = self.wf.edge(e);
+            buf.parents.push(ParentInfo {
+                finish: self.ft(edge.src),
+                data: edge.data,
+                proc: self.proc_of(edge.src),
+            });
+        }
+        buf.comm.clear();
+        buf.comm.reserve(buf.parents.len() * k);
+        for p in &buf.parents {
+            for j in 0..k {
+                buf.comm.push(self.state.comm_ready(p.proc, j));
+            }
+        }
+        buf.work = self.wf.task(v).work;
+        buf.memory = self.wf.task(v).memory;
+        buf.out_total = self.wf.total_out_data(v);
+        buf.bandwidth = self.cluster.bandwidth;
+    }
+}
+
+/// The assignment engine. See module docs.
+pub struct Engine<'a> {
+    wf: &'a Workflow,
+    cluster: &'a Cluster,
+    pub state: PlatformState,
+    memory_aware: bool,
+    policy: EvictionPolicy,
+    algorithm: Algorithm,
+    /// Placements (None = not yet assigned).
+    placed: Vec<Option<TaskSchedule>>,
+    failures: Vec<Failure>,
+    /// Optional batched scorer: pre-orders processors by finish time so
+    /// the exact per-processor check can stop at the first feasible one.
+    scorer: Option<&'a dyn EftScorer>,
+    /// Optional shared pool for parallel tentative scoring.
+    score_pool: Option<&'a ScorePool>,
+    /// Per-processor eviction-candidate caches (scoring layer reads,
+    /// commit layer invalidates).
+    evict_cache: EvictCache,
+    /// Reusable query arena for the batched-scorer path.
+    buffers: ScoreBuffers,
+    /// Per-processor result slots for the parallel scoring phase (reused
+    /// across tasks; reduced serially for determinism).
+    slots: Vec<Mutex<Option<Tentative>>>,
+}
+
+impl<'a> Engine<'a> {
+    /// Fresh engine over an idle platform.
+    pub fn new(
+        wf: &'a Workflow,
+        cluster: &'a Cluster,
+        algorithm: Algorithm,
+        policy: EvictionPolicy,
+    ) -> Engine<'a> {
+        Engine {
+            wf,
+            cluster,
+            state: PlatformState::new(cluster),
+            memory_aware: algorithm.memory_aware(),
+            policy,
+            algorithm,
+            placed: vec![None; wf.num_tasks()],
+            failures: Vec::new(),
+            scorer: None,
+            score_pool: None,
+            evict_cache: EvictCache::new(cluster.len()),
+            buffers: ScoreBuffers::default(),
+            slots: (0..cluster.len()).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Attach a batched EFT scorer (e.g. the XLA/PJRT artifact).
+    pub fn with_scorer(mut self, scorer: &'a dyn EftScorer) -> Engine<'a> {
+        self.scorer = Some(scorer);
+        self
+    }
+
+    /// Fan tentative scoring out across `pool`'s workers. Schedules are
+    /// byte-identical to serial scoring for any thread count: every
+    /// processor's tentative is computed independently and the winner is
+    /// picked by a serial reduction (min finish time, ties to the lowest
+    /// `ProcId` — exactly the serial loop's order). Ignored while a
+    /// batched [`EftScorer`] is attached (that path is already ordered).
+    pub fn with_parallel_scoring(mut self, pool: &'a ScorePool) -> Engine<'a> {
+        self.score_pool = Some(pool);
+        self
+    }
+
+    /// Resume from a mid-execution platform state with some tasks already
+    /// placed (dynamic rescheduling, §V). `fixed` entries are kept as-is.
+    pub fn resume(
+        wf: &'a Workflow,
+        cluster: &'a Cluster,
+        algorithm: Algorithm,
+        policy: EvictionPolicy,
+        state: PlatformState,
+        fixed: Vec<Option<TaskSchedule>>,
+    ) -> Engine<'a> {
+        assert_eq!(fixed.len(), wf.num_tasks());
+        Engine {
+            wf,
+            cluster,
+            state,
+            memory_aware: algorithm.memory_aware(),
+            policy,
+            algorithm,
+            placed: fixed,
+            failures: Vec::new(),
+            scorer: None,
+            score_pool: None,
+            evict_cache: EvictCache::new(cluster.len()),
+            buffers: ScoreBuffers::default(),
+            slots: (0..cluster.len()).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// The read-only scoring view over the engine's current state.
+    pub fn scoring_ctx(&self) -> ScoringCtx<'_> {
+        ScoringCtx {
+            wf: self.wf,
+            cluster: self.cluster,
+            state: &self.state,
+            placed: &self.placed,
+            evict_cache: &self.evict_cache,
+            memory_aware: self.memory_aware,
+            policy: self.policy,
+        }
+    }
+
+    /// Current placements (None = not yet assigned).
+    pub fn placements(&self) -> &[Option<TaskSchedule>] {
+        &self.placed
+    }
+
+    fn proc_of(&self, u: TaskId) -> ProcId {
+        self.placed[u].as_ref().expect("rank order is topological").proc
+    }
+
+    fn tentative(&self, v: TaskId, j: ProcId) -> Option<Tentative> {
+        self.scoring_ctx().tentative(v, j)
+    }
+
+    #[cfg(test)]
+    fn reset_evict_cache(&mut self) {
+        self.evict_cache = EvictCache::new(self.cluster.len());
+    }
+
     /// Commit `v` on `j` (the paper's "assignment of task v" bullets).
     fn commit(&mut self, v: TaskId, j: ProcId, t: Tentative) {
         // Pending sets change below: drop the sorted-candidate caches of
         // every touched processor (j plus all remote parents' hosts).
-        {
-            let mut cache = self.evict_cache.borrow_mut();
-            cache[j] = None;
-            for &e in self.wf.in_edge_ids(v) {
-                let pu = self.proc_of(self.wf.edge(e).src);
-                cache[pu] = None;
-            }
+        self.evict_cache.invalidate(j);
+        for &e in self.wf.in_edge_ids(v) {
+            let pu = self.placed[self.wf.edge(e).src]
+                .as_ref()
+                .expect("rank order is topological")
+                .proc;
+            self.evict_cache.invalidate(pu);
         }
         // 1. Evict files into the communication buffer.
         let mut evicted_ids = Vec::with_capacity(t.evictions.len());
@@ -420,6 +586,50 @@ impl<'a> Engine<'a> {
         });
     }
 
+    /// Score `v` against every processor and return the winner —
+    /// deterministic min finish time, ties to the lowest `ProcId`.
+    ///
+    /// With a [`ScorePool`] attached the per-processor tentatives run on
+    /// the pool's workers (each writes its own slot; no shared mutable
+    /// state), and only the reduction below is serial.
+    fn best_tentative(&self, v: TaskId) -> Option<(ProcId, Tentative)> {
+        let k = self.cluster.len();
+        let ctx = self.scoring_ctx();
+        let parallel = self
+            .score_pool
+            .filter(|p| p.threads() > 1 && k > 1);
+        if let Some(pool) = parallel {
+            let slots = &self.slots;
+            let chunks = pool.threads().min(k);
+            pool.scoped_for(chunks, &|c| {
+                // Contiguous chunk per worker: cache-friendly and free of
+                // false sharing on the slot locks.
+                let (lo, hi) = (c * k / chunks, (c + 1) * k / chunks);
+                for j in lo..hi {
+                    *slots[j].lock().unwrap() = ctx.tentative(v, j);
+                }
+            });
+        }
+        let mut best: Option<(ProcId, Tentative)> = None;
+        for j in 0..k {
+            let t = if parallel.is_some() {
+                self.slots[j].lock().unwrap().take()
+            } else {
+                ctx.tentative(v, j)
+            };
+            if let Some(t) = t {
+                let better = match &best {
+                    None => true,
+                    Some((_, bt)) => t.finish < bt.finish,
+                };
+                if better {
+                    best = Some((j, t));
+                }
+            }
+        }
+        best
+    }
+
     /// Assign one task: try all processors, commit the best.
     /// Returns false if no feasible processor existed (memory-aware mode);
     /// in that case a memory-oblivious fallback placement is committed so
@@ -433,27 +643,22 @@ impl<'a> Engine<'a> {
             // processors; the exact check stops at the first feasible one
             // (the scores are the Step-3 finish times, so the first
             // feasible processor in score order is the argmin).
-            let (ft, _res) = scorer.score(&self.score_query(v));
+            let mut bufs = std::mem::take(&mut self.buffers);
+            self.scoring_ctx().fill_query(v, &mut bufs);
+            bufs.score_with(scorer);
             let mut order: Vec<ProcId> = (0..k).collect();
-            order.sort_by(|&a, &b| ft[a].partial_cmp(&ft[b]).unwrap_or(std::cmp::Ordering::Equal));
+            order.sort_by(|&a, &b| {
+                bufs.ft[a].partial_cmp(&bufs.ft[b]).unwrap_or(std::cmp::Ordering::Equal)
+            });
             for j in order {
                 if let Some(t) = self.tentative(v, j) {
                     best = Some((j, t));
                     break;
                 }
             }
+            self.buffers = bufs;
         } else {
-            for j in 0..k {
-                if let Some(t) = self.tentative(v, j) {
-                    let better = match &best {
-                        None => true,
-                        Some((_, bt)) => t.finish < bt.finish,
-                    };
-                    if better {
-                        best = Some((j, t));
-                    }
-                }
-            }
+            best = self.best_tentative(v);
         }
         match best {
             Some((j, t)) => {
@@ -471,17 +676,9 @@ impl<'a> Engine<'a> {
                 // schedule (reported makespans of invalid schedules).
                 let saved = self.memory_aware;
                 self.memory_aware = false;
-                let (mut bj, mut bt): (ProcId, Option<Tentative>) = (0, None);
-                for j in 0..k {
-                    if let Some(t) = self.tentative(v, j) {
-                        if bt.as_ref().is_none_or(|b| t.finish < b.finish) {
-                            bj = j;
-                            bt = Some(t);
-                        }
-                    }
-                }
+                let fallback = self.best_tentative(v);
                 self.memory_aware = saved;
-                let t = bt.expect("memory-oblivious tentative always succeeds");
+                let (bj, t) = fallback.expect("memory-oblivious tentative always succeeds");
                 self.commit(v, bj, t);
                 false
             }
@@ -740,5 +937,79 @@ mod tests {
         let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
         assert!(s.procs_used() >= 1);
         assert!(s.mean_mem_usage() >= 0.0);
+        assert!(s.approx_bytes() > 0);
+    }
+
+    #[test]
+    fn scoring_ctx_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ScoringCtx<'static>>();
+    }
+
+    /// An eviction-heavy instance: a sized-down generated workflow on a
+    /// memory-scaled small cluster, so every code path (Step-1 rejection,
+    /// eviction, fallback) is exercised.
+    fn eviction_heavy_instance() -> (Workflow, Cluster) {
+        let spec = crate::experiments::WorkloadSpec {
+            family: "chipseq".into(),
+            size: Some(300),
+            input: 3,
+            seed: 7,
+        };
+        let wf = spec.build().unwrap();
+        let cluster = small_cluster().scale_memory(0.02, "tight-small");
+        (wf, cluster)
+    }
+
+    #[test]
+    fn evict_cache_matches_uncached_scoring() {
+        // The per-processor candidate cache must be behaviorally
+        // invisible: resetting it before every assignment (i.e. always
+        // sorting fresh, the pre-cache behavior) must give the identical
+        // schedule.
+        let (wf, cluster) = eviction_heavy_instance();
+        for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
+            for policy in [EvictionPolicy::LargestFirst, EvictionPolicy::SmallestFirst] {
+                let order = algo.rank_order(&wf, &cluster);
+                let cached = Engine::new(&wf, &cluster, algo, policy).run(&order);
+                let mut fresh_engine = Engine::new(&wf, &cluster, algo, policy);
+                for &v in &order {
+                    fresh_engine.reset_evict_cache();
+                    fresh_engine.assign(v);
+                }
+                let fresh = fresh_engine.into_schedule(order.clone());
+                assert_eq!(cached.valid, fresh.valid, "{algo:?}/{policy:?}");
+                assert_eq!(cached.tasks, fresh.tasks, "{algo:?}/{policy:?}");
+                assert_eq!(
+                    cached.makespan.to_bits(),
+                    fresh.makespan.to_bits(),
+                    "{algo:?}/{policy:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_scoring_matches_serial_exactly() {
+        let (wf, cluster) = eviction_heavy_instance();
+        for threads in [2, 3, 8] {
+            let pool = ScorePool::new(threads);
+            for algo in Algorithm::all() {
+                let order = algo.rank_order(&wf, &cluster);
+                let policy = EvictionPolicy::LargestFirst;
+                let serial = Engine::new(&wf, &cluster, algo, policy).run(&order);
+                let parallel = Engine::new(&wf, &cluster, algo, policy)
+                    .with_parallel_scoring(&pool)
+                    .run(&order);
+                assert_eq!(serial.valid, parallel.valid, "{algo:?} × {threads}");
+                assert_eq!(serial.failures, parallel.failures, "{algo:?} × {threads}");
+                assert_eq!(serial.tasks, parallel.tasks, "{algo:?} × {threads}");
+                assert_eq!(
+                    serial.makespan.to_bits(),
+                    parallel.makespan.to_bits(),
+                    "{algo:?} × {threads}"
+                );
+            }
+        }
     }
 }

@@ -16,10 +16,11 @@ pub mod ranking;
 pub mod retrace;
 pub mod state;
 
-pub use engine::{Engine, Failure, Schedule, TaskSchedule};
-pub use state::{EvictionPolicy, PlatformState};
+pub use engine::{Engine, Failure, Schedule, ScoreBuffers, ScoringCtx, TaskSchedule};
+pub use state::{EvictCache, EvictionPolicy, PlatformState};
 
 use crate::platform::Cluster;
+use crate::service::pool::ScorePool;
 use crate::workflow::{TaskId, Workflow};
 
 /// The four scheduling algorithms of the paper.
@@ -85,6 +86,25 @@ pub fn compute_schedule(
     algo: Algorithm,
     policy: EvictionPolicy,
 ) -> Schedule {
+    compute_schedule_with(wf, cluster, algo, policy, None)
+}
+
+/// [`compute_schedule`] with optional intra-schedule parallel scoring:
+/// when a [`ScorePool`] is given, every task's per-processor tentative
+/// scoring fans out across its workers. The resulting schedule is
+/// byte-identical to the serial one for any thread count (deterministic
+/// reduction — see [`Engine::with_parallel_scoring`]).
+pub fn compute_schedule_with(
+    wf: &Workflow,
+    cluster: &Cluster,
+    algo: Algorithm,
+    policy: EvictionPolicy,
+    score_pool: Option<&ScorePool>,
+) -> Schedule {
     let order = algo.rank_order(wf, cluster);
-    Engine::new(wf, cluster, algo, policy).run(&order)
+    let mut engine = Engine::new(wf, cluster, algo, policy);
+    if let Some(pool) = score_pool {
+        engine = engine.with_parallel_scoring(pool);
+    }
+    engine.run(&order)
 }

@@ -97,6 +97,41 @@ impl std::str::FromStr for EvictionPolicy {
     }
 }
 
+/// Per-processor cache of eviction candidates sorted by policy.
+///
+/// `PD_j` only changes on commits, while tentative assignment consults
+/// the sorted view once per (task, processor) — caching turns
+/// O(tasks · procs · |PD| log |PD|) sorting into O(commits · |PD| log |PD|).
+///
+/// Unlike its `Rc<RefCell<…>>` predecessor this cache is `Sync`: each
+/// cell is a [`OnceLock`](std::sync::OnceLock), so read-only scoring
+/// contexts ([`super::engine::ScoringCtx`]) can fill cells from pool
+/// workers in parallel, while invalidation ([`EvictCache::invalidate`])
+/// requires `&mut self` and therefore only happens in the
+/// single-threaded commit phase.
+#[derive(Debug, Default)]
+pub struct EvictCache {
+    cells: Vec<std::sync::OnceLock<Vec<(EdgeId, f64)>>>,
+}
+
+impl EvictCache {
+    /// An empty cache with one cell per processor.
+    pub fn new(num_procs: usize) -> EvictCache {
+        EvictCache { cells: (0..num_procs).map(|_| std::sync::OnceLock::new()).collect() }
+    }
+
+    /// Sorted candidates of `p_j`, computed from `pending` on first use
+    /// and cached until [`invalidate`](EvictCache::invalidate)d.
+    pub fn sorted(&self, j: ProcId, pending: &PendingSet, policy: EvictionPolicy) -> &[(EdgeId, f64)] {
+        self.cells[j].get_or_init(|| pending.candidates(policy))
+    }
+
+    /// Drop `p_j`'s cached view (its pending set is about to change).
+    pub fn invalidate(&mut self, j: ProcId) {
+        self.cells[j].take();
+    }
+}
+
 /// Per-processor state.
 #[derive(Debug, Clone)]
 pub struct ProcState {
@@ -229,6 +264,24 @@ mod tests {
         st.push_comm(0, 1, 2.5);
         assert_eq!(st.comm_ready(0, 1), 2.5);
         assert_eq!(st.comm_ready(1, 0), 0.0);
+    }
+
+    #[test]
+    fn evict_cache_serves_stale_view_until_invalidated() {
+        let mut pd = PendingSet::default();
+        pd.insert(0, 10.0);
+        pd.insert(1, 30.0);
+        let mut cache = EvictCache::new(2);
+        let first: Vec<_> = cache.sorted(0, &pd, EvictionPolicy::LargestFirst).to_vec();
+        assert_eq!(first.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 0]);
+        // The cache intentionally ignores pending-set changes until the
+        // owning processor is invalidated (commits do that).
+        pd.insert(2, 50.0);
+        assert_eq!(cache.sorted(0, &pd, EvictionPolicy::LargestFirst), &first[..]);
+        // Other processors have independent cells.
+        assert_eq!(cache.sorted(1, &pd, EvictionPolicy::LargestFirst).len(), 3);
+        cache.invalidate(0);
+        assert_eq!(cache.sorted(0, &pd, EvictionPolicy::LargestFirst).len(), 3);
     }
 
     #[test]

@@ -1,29 +1,198 @@
-//! Content-addressed schedule cache.
+//! Compute-once maps: the generic [`OnceMap`] and the content-addressed
+//! [`ScheduleCache`] built on it.
 //!
-//! Keyed by [`schedule_fingerprint`](super::fingerprint::schedule_fingerprint):
-//! identical (workflow, platform, algorithm, policy) requests resolve to
-//! one computation. Each key holds a `OnceLock`, so when several workers
+//! `OnceMap` is the one implementation of the Mutex-map-of-`OnceLock`
+//! idiom the service previously hand-rolled twice (here and in the
+//! workflow/cluster `Memo`): per key one cell, so when several workers
 //! race on the same key exactly one computes while the others block on
-//! the cell rather than duplicating the work — the cache is the service's
-//! cross-job sharing point (e.g. the two dynamic-mode simulations of one
-//! workload reuse a single static schedule).
+//! the cell rather than duplicating the work. It optionally enforces an
+//! **LRU-by-bytes budget**: computed entries are weighed by a
+//! caller-supplied function, and when the total exceeds the budget the
+//! least-recently-used entries are dropped (never an entry still being
+//! computed, and never the entry being returned). Without a budget the
+//! map is append-only and fully deterministic; with one, *which* keys
+//! stay resident across batches depends on access order, so evicted keys
+//! simply recompute on their next request — values themselves are always
+//! deterministic.
 //!
-//! Counter semantics: `computed` is the number of distinct schedules
-//! actually computed (deterministic: one per unique key); `lookups` is
-//! the total number of requests — both direct [`get_or_compute`] calls
-//! and batch-level deduplicated jobs recorded via
+//! `ScheduleCache` keys schedules by
+//! [`schedule_fingerprint`](super::fingerprint::schedule_fingerprint):
+//! identical (workflow, platform, algorithm, policy) requests resolve to
+//! one computation — the service's cross-job sharing point (e.g. the two
+//! dynamic-mode simulations of one workload reuse a single static
+//! schedule).
+//!
+//! Counter semantics: `computed` is the number of schedule computations
+//! actually run (one per unique key, plus recomputations of evicted
+//! keys when a byte budget is set); `lookups` is the total number of
+//! requests — both direct [`get_or_compute`] calls and batch-level
+//! deduplicated jobs recorded via
 //! [`note_deduped`](ScheduleCache::note_deduped), which are satisfied
 //! without ever reaching the map; `hits = lookups - computed`.
 //!
 //! [`get_or_compute`]: ScheduleCache::get_or_compute
 
 use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::scheduler::Schedule;
 
 use super::fingerprint::Fingerprint;
+
+#[derive(Debug)]
+struct Entry<V> {
+    cell: Arc<OnceLock<V>>,
+    /// LRU clock stamp of the most recent request for this key.
+    last_used: u64,
+    /// Weighed size once computed and accounted; 0 while in flight.
+    bytes: usize,
+}
+
+#[derive(Debug)]
+struct MapInner<K, V> {
+    map: HashMap<K, Entry<V>>,
+    clock: u64,
+    total_bytes: usize,
+}
+
+/// Generic compute-once map (see module docs).
+#[derive(Debug)]
+pub struct OnceMap<K, V> {
+    inner: Mutex<MapInner<K, V>>,
+    /// LRU byte budget for computed entries (`None` = unbounded).
+    cap_bytes: Option<usize>,
+}
+
+impl<K, V> Default for OnceMap<K, V> {
+    fn default() -> Self {
+        OnceMap::new()
+    }
+}
+
+// Construction needs no key/value bounds.
+impl<K, V> OnceMap<K, V> {
+    /// An unbounded map.
+    pub fn new() -> OnceMap<K, V> {
+        OnceMap::with_byte_cap(None)
+    }
+
+    /// A map evicting least-recently-used computed entries once their
+    /// weighed total exceeds `cap_bytes`.
+    pub fn with_byte_cap(cap_bytes: Option<usize>) -> OnceMap<K, V> {
+        OnceMap {
+            inner: Mutex::new(MapInner { map: HashMap::new(), clock: 0, total_bytes: 0 }),
+            cap_bytes,
+        }
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> OnceMap<K, V> {
+    /// Look up `key`, computing (exactly once across all racing threads)
+    /// via `init` on a miss. `weigh` sizes a freshly computed value for
+    /// the byte budget.
+    pub fn get_or_init<F, W>(&self, key: &K, init: F, weigh: W) -> V
+    where
+        F: FnOnce() -> V,
+        W: FnOnce(&V) -> usize,
+    {
+        let cell = {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            inner.clock += 1;
+            let clock = inner.clock;
+            let entry = inner.map.entry(key.clone()).or_insert_with(|| Entry {
+                cell: Arc::new(OnceLock::new()),
+                last_used: 0,
+                bytes: 0,
+            });
+            entry.last_used = clock;
+            entry.cell.clone()
+        };
+        let mut freshly_computed = false;
+        let value = cell
+            .get_or_init(|| {
+                freshly_computed = true;
+                init()
+            })
+            .clone();
+        if freshly_computed {
+            let bytes = weigh(&value);
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            if let Some(entry) = inner.map.get_mut(key) {
+                // Account only if this cell is still the resident one and
+                // not yet weighed (it may have been evicted meanwhile).
+                if entry.bytes == 0 && Arc::ptr_eq(&entry.cell, &cell) {
+                    entry.bytes = bytes;
+                    inner.total_bytes += bytes;
+                }
+            }
+            if let Some(cap) = self.cap_bytes {
+                Self::evict_lru(inner, cap, key);
+            }
+        }
+        value
+    }
+
+    /// Drop least-recently-used *computed* entries until the budget
+    /// holds. `keep` (the key just served) is never evicted, so a single
+    /// oversized value stays resident rather than thrashing.
+    fn evict_lru(inner: &mut MapInner<K, V>, cap: usize, keep: &K) {
+        while inner.total_bytes > cap {
+            let victim: Option<K> = inner
+                .map
+                .iter()
+                .filter(|&(k, e)| e.bytes > 0 && k != keep)
+                .min_by_key(|&(_, e)| e.last_used)
+                .map(|(k, _)| (*k).clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = inner.map.remove(&k) {
+                        inner.total_bytes -= e.bytes;
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Whether a *computed* value exists for `key` (in-flight cells
+    /// don't count).
+    pub fn contains_computed(&self, key: &K) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.map.get(key).is_some_and(|e| e.cell.get().is_some())
+    }
+
+    /// Number of computed entries.
+    pub fn len_computed(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.map.values().filter(|e| e.cell.get().is_some()).count()
+    }
+
+    /// Current weighed total of resident computed entries.
+    pub fn total_bytes(&self) -> usize {
+        self.inner.lock().unwrap().total_bytes
+    }
+
+    /// Keep only entries for which `pred(key, computed_value)` holds;
+    /// in-flight entries (`None`) are judged too. Call only when no
+    /// initializations are racing (e.g. at batch boundaries).
+    pub fn retain<F: Fn(&K, Option<&V>) -> bool>(&self, pred: F) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let mut freed = 0usize;
+        inner.map.retain(|k, e| {
+            let keep = pred(k, e.cell.get());
+            if !keep {
+                freed += e.bytes;
+            }
+            keep
+        });
+        inner.total_bytes -= freed;
+    }
+}
 
 /// A cached schedule plus the wall time its computation took.
 #[derive(Debug, Clone)]
@@ -51,33 +220,50 @@ impl CacheStats {
     }
 }
 
-/// The cache. Cheap to share behind the service; all methods take `&self`.
+/// The schedule cache: an [`OnceMap`] over schedule fingerprints with
+/// request counters. Cheap to share behind the service; all methods take
+/// `&self`.
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
-    map: Mutex<HashMap<u128, Arc<OnceLock<CachedSchedule>>>>,
+    map: OnceMap<u128, CachedSchedule>,
     lookups: AtomicUsize,
     computed: AtomicUsize,
 }
 
 impl ScheduleCache {
+    /// An unbounded cache.
     pub fn new() -> ScheduleCache {
         ScheduleCache::default()
     }
 
+    /// A cache evicting least-recently-used schedules beyond `cap_bytes`
+    /// (approximate heap bytes, see [`Schedule::approx_bytes`]). Evicted
+    /// fingerprints recompute on their next request.
+    pub fn with_byte_cap(cap_bytes: Option<usize>) -> ScheduleCache {
+        ScheduleCache {
+            map: OnceMap::with_byte_cap(cap_bytes),
+            lookups: AtomicUsize::new(0),
+            computed: AtomicUsize::new(0),
+        }
+    }
+
     /// Whether a schedule for `fp` has already been computed.
     pub fn contains(&self, fp: Fingerprint) -> bool {
-        let map = self.map.lock().unwrap();
-        map.get(&fp.0).is_some_and(|cell| cell.get().is_some())
+        self.map.contains_computed(&fp.0)
     }
 
     /// Number of computed entries.
     pub fn len(&self) -> usize {
-        let map = self.map.lock().unwrap();
-        map.values().filter(|c| c.get().is_some()).count()
+        self.map.len_computed()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Approximate resident bytes of cached schedules.
+    pub fn resident_bytes(&self) -> usize {
+        self.map.total_bytes()
     }
 
     /// Look up `fp`, computing (exactly once across all threads) via
@@ -89,16 +275,15 @@ impl ScheduleCache {
         compute: F,
     ) -> CachedSchedule {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        let cell = {
-            let mut map = self.map.lock().unwrap();
-            map.entry(fp.0).or_insert_with(|| Arc::new(OnceLock::new())).clone()
-        };
-        cell.get_or_init(|| {
-            self.computed.fetch_add(1, Ordering::Relaxed);
-            let (schedule, seconds) = compute();
-            CachedSchedule { schedule: Arc::new(schedule), seconds }
-        })
-        .clone()
+        self.map.get_or_init(
+            &fp.0,
+            || {
+                self.computed.fetch_add(1, Ordering::Relaxed);
+                let (schedule, seconds) = compute();
+                CachedSchedule { schedule: Arc::new(schedule), seconds }
+            },
+            |cs| cs.schedule.approx_bytes(),
+        )
     }
 
     /// Record `n` requests satisfied upstream by batch-level
@@ -152,6 +337,7 @@ mod tests {
         assert_eq!(stats.hits(), 2);
         assert!(cache.contains(fp));
         assert_eq!(cache.len(), 1);
+        assert!(cache.resident_bytes() > 0);
     }
 
     #[test]
@@ -176,5 +362,89 @@ mod tests {
         assert_eq!(computes.load(Ordering::Relaxed), 1);
         assert_eq!(cache.stats().lookups, 8);
         assert_eq!(cache.stats().hits(), 7);
+    }
+
+    #[test]
+    fn once_map_retain_prunes_and_reaccounts() {
+        let map: OnceMap<String, Result<u32, String>> = OnceMap::new();
+        let ok = map.get_or_init(&"good".to_string(), || Ok(1), |_| 10);
+        assert_eq!(ok, Ok(1));
+        let err = map.get_or_init(&"bad".to_string(), || Err("boom".into()), |_| 10);
+        assert!(err.is_err());
+        assert_eq!(map.len_computed(), 2);
+        assert_eq!(map.total_bytes(), 20);
+        // The Memo pattern: drop failed entries between batches.
+        map.retain(|_, v| v.is_none_or(|r| r.is_ok()));
+        assert_eq!(map.len_computed(), 1);
+        assert_eq!(map.total_bytes(), 10);
+        assert!(map.contains_computed(&"good".to_string()));
+        assert!(!map.contains_computed(&"bad".to_string()));
+        // A retried key computes again.
+        let retried = map.get_or_init(&"bad".to_string(), || Ok(7), |_| 10);
+        assert_eq!(retried, Ok(7));
+    }
+
+    #[test]
+    fn lru_byte_cap_evicts_least_recently_used() {
+        let map: OnceMap<u32, Vec<u8>> = OnceMap::with_byte_cap(Some(250));
+        let weigh = |v: &Vec<u8>| v.len();
+        for k in 0..3u32 {
+            map.get_or_init(&k, || vec![0u8; 100], weigh);
+        }
+        // 300 bytes > 250: key 0 (least recently used) must be gone.
+        assert!(!map.contains_computed(&0));
+        assert!(map.contains_computed(&1) && map.contains_computed(&2));
+        assert!(map.total_bytes() <= 250);
+        // Touch key 1, insert key 3: now key 2 is the LRU victim.
+        map.get_or_init(&1, || unreachable!("still resident"), weigh);
+        map.get_or_init(&3, || vec![0u8; 100], weigh);
+        assert!(map.contains_computed(&1), "recently touched entry survives");
+        assert!(!map.contains_computed(&2));
+        // Evicted keys recompute on demand.
+        let recomputed = std::cell::Cell::new(false);
+        map.get_or_init(
+            &0,
+            || {
+                recomputed.set(true);
+                vec![0u8; 100]
+            },
+            weigh,
+        );
+        assert!(recomputed.get());
+    }
+
+    #[test]
+    fn oversized_single_entry_stays_resident() {
+        let map: OnceMap<u32, Vec<u8>> = OnceMap::with_byte_cap(Some(10));
+        map.get_or_init(&1, || vec![0u8; 100], |v| v.len());
+        // Over budget, but the just-served key is never evicted.
+        assert!(map.contains_computed(&1));
+        // The next insert evicts it instead.
+        map.get_or_init(&2, || vec![0u8; 100], |v| v.len());
+        assert!(!map.contains_computed(&1));
+        assert!(map.contains_computed(&2));
+    }
+
+    #[test]
+    fn schedule_cache_byte_cap_recomputes_evicted_fingerprints() {
+        let (wf, cluster) = sample();
+        // A cap far below one schedule's footprint: every distinct
+        // fingerprint evicts the previous one.
+        let cache = ScheduleCache::with_byte_cap(Some(1));
+        let fp_bl = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let fp_mm = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        cache.get_or_compute(fp_bl, || {
+            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.0)
+        });
+        cache.get_or_compute(fp_mm, || {
+            (compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst), 0.0)
+        });
+        assert!(!cache.contains(fp_bl), "evicted by the second schedule");
+        cache.get_or_compute(fp_bl, || {
+            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.0)
+        });
+        // 3 lookups, 3 computations (one was a post-eviction recompute).
+        assert_eq!(cache.stats().computed, 3);
+        assert_eq!(cache.stats().hits(), 0);
     }
 }

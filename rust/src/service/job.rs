@@ -7,6 +7,12 @@
 //! line — it deliberately contains no wall-clock fields, so batch output
 //! is byte-identical regardless of worker count (timings travel on the
 //! side, in [`JobResult::seconds`], for harnesses that want them).
+//!
+//! Execution knobs (`--jobs` worker count, `--score-threads`
+//! intra-schedule scoring threads, `--cache-bytes` cache budget) are
+//! deliberately **not** part of a job or its fingerprint: they describe
+//! *how* to compute, never *what*, and every computed value is identical
+//! under any setting.
 
 use std::path::PathBuf;
 use std::sync::Arc;

@@ -16,11 +16,21 @@
 //!    cache hits. Pre-cached schedules (earlier batches on the same
 //!    service) are marked here too, *before* any execution, so the
 //!    `cache_hit` flags in the output never depend on thread timing.
-//! 3. *Execute* (parallel): unique jobs run on the pool ([`pool`]); the
-//!    schedule cache ([`cache`]) additionally shares identical schedule
-//!    computations *across* distinct jobs (e.g. the two simulation modes
-//!    of one workload).
-//! 4. *Assemble* (sequential): results are emitted in job order.
+//! 3. *Execute + emit* (parallel): unique jobs run on the pool
+//!    ([`pool`]); the schedule cache ([`cache`]) additionally shares
+//!    identical schedule computations *across* distinct jobs (e.g. the
+//!    two simulation modes of one workload). Results are emitted in
+//!    submission order **as the ordered prefix completes**
+//!    ([`SchedulingService::run_batch_streaming`]) — long batches
+//!    stream instead of buffering until the end.
+//!
+//! Two orthogonal parallelism axes compose here: `workers` shards the
+//! batch across jobs, while
+//! [`with_score_threads`](SchedulingService::with_score_threads) attaches
+//! a shared [`pool::ScorePool`] that parallelizes the *inside* of each
+//! schedule computation (per-processor tentative scoring — the lever for
+//! one huge workflow that would otherwise pin a single core). Both axes
+//! preserve byte-identical output.
 //!
 //! The experiments harness submits its Quick/Full suite grids through
 //! this service (`experiments::run_static_suite` /
@@ -32,53 +42,51 @@ pub mod fingerprint;
 pub mod job;
 pub mod pool;
 
-pub use cache::{CacheStats, CachedSchedule, ScheduleCache};
+pub use cache::{CacheStats, CachedSchedule, OnceMap, ScheduleCache};
 pub use fingerprint::Fingerprint;
 pub use job::{ClusterSpec, Job, JobResult, JobSource, SimJob, SimResult};
+pub use pool::ScorePool;
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex};
 
 use crate::platform::Cluster;
-use crate::scheduler::compute_schedule;
+use crate::scheduler::compute_schedule_with;
 use crate::simulator::{simulate, DeviationModel, SimConfig};
 use crate::workflow::Workflow;
 
-/// Compute-once memo: per key, one `OnceLock` cell so concurrent
-/// requesters block on a single initializer instead of duplicating
-/// work. Within a batch an error is stable (every duplicate of a
-/// failing source observes the same single attempt — no re-loads, no
-/// worker-count-dependent mixed results); failed entries are pruned at
-/// batch boundaries ([`prune_errors`](Memo::prune_errors)), so a
+/// Compute-once memo over a generic [`OnceMap`]: per key, one cell so
+/// concurrent requesters block on a single initializer instead of
+/// duplicating work. Within a batch an error is stable (every duplicate
+/// of a failing source observes the same single attempt — no re-loads,
+/// no worker-count-dependent mixed results); failed entries are pruned
+/// at batch boundaries ([`prune_errors`](Memo::prune_errors)), so a
 /// transient failure (e.g. a workflow file that appears later) can be
 /// retried by a subsequent batch rather than poisoning the key for the
 /// service's lifetime.
 #[derive(Debug)]
 struct Memo<V: Clone> {
-    map: Mutex<HashMap<String, Arc<OnceLock<Result<V, String>>>>>,
+    map: OnceMap<String, Result<V, String>>,
 }
 
 // Manual (a derive would needlessly bound `V: Default`).
 impl<V: Clone> Default for Memo<V> {
     fn default() -> Self {
-        Memo { map: Mutex::new(HashMap::new()) }
+        Memo { map: OnceMap::new() }
     }
 }
 
 impl<V: Clone> Memo<V> {
     fn get_or_try_init<F: FnOnce() -> Result<V, String>>(&self, key: &str, init: F) -> Result<V, String> {
-        let cell = {
-            let mut map = self.map.lock().unwrap();
-            map.entry(key.to_string()).or_insert_with(|| Arc::new(OnceLock::new())).clone()
-        };
-        cell.get_or_init(init).clone()
+        // Memo entries are metadata-sized next to cached schedules, and
+        // the memo is unbounded — weigh 0.
+        self.map.get_or_init(&key.to_string(), init, |_| 0)
     }
 
     /// Drop entries whose initialization failed (called between
     /// batches, when no initializations are in flight).
     fn prune_errors(&self) {
-        let mut map = self.map.lock().unwrap();
-        map.retain(|_, cell| cell.get().is_none_or(|r| r.is_ok()));
+        self.map.retain(|_, v| v.is_none_or(|r| r.is_ok()));
     }
 }
 
@@ -87,6 +95,8 @@ impl<V: Clone> Memo<V> {
 #[derive(Debug)]
 pub struct SchedulingService {
     workers: usize,
+    /// Shared intra-schedule scoring pool (None ⇒ serial scoring).
+    score_pool: Option<ScorePool>,
     schedules: ScheduleCache,
     workflows: Memo<Arc<Workflow>>,
     clusters: Memo<Arc<Cluster>>,
@@ -124,6 +134,7 @@ impl SchedulingService {
     pub fn new(workers: usize) -> SchedulingService {
         SchedulingService {
             workers: workers.max(1),
+            score_pool: None,
             schedules: ScheduleCache::new(),
             workflows: Memo::default(),
             clusters: Memo::default(),
@@ -135,8 +146,40 @@ impl SchedulingService {
         SchedulingService::new(pool::default_workers())
     }
 
+    /// Parallelize the *inside* of every schedule computation across
+    /// `threads` score threads (1 ⇒ serial scoring, the default). The
+    /// pool is shared by all service workers; schedules stay
+    /// byte-identical for any thread count.
+    pub fn with_score_threads(mut self, threads: usize) -> SchedulingService {
+        self.score_pool = if threads > 1 { Some(ScorePool::new(threads)) } else { None };
+        self
+    }
+
+    /// Cap the schedule cache at approximately `cap_bytes` resident
+    /// bytes (LRU eviction; `None` = unbounded, the default). Replaces
+    /// the cache, so configure before the first batch.
+    ///
+    /// Determinism scope: every payload value (schedules, makespans,
+    /// sim outcomes) stays byte-identical under any cap — evicted
+    /// fingerprints recompute to the same result. But LRU stamps follow
+    /// execution order, so *which* entries survive into the next batch
+    /// can vary with thread timing; across **multiple batches on one
+    /// capped service**, `cache_hit` flags (a residency observation,
+    /// fixed per batch before execution) may therefore differ between
+    /// runs. Single-batch output is always fully deterministic; leave
+    /// the cap unbounded where cross-batch flag stability matters.
+    pub fn with_cache_bytes(mut self, cap_bytes: Option<usize>) -> SchedulingService {
+        self.schedules = ScheduleCache::with_byte_cap(cap_bytes);
+        self
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Threads applied to intra-schedule scoring (1 = serial).
+    pub fn score_threads(&self) -> usize {
+        self.score_pool.as_ref().map_or(1, |p| p.threads())
     }
 
     /// Schedule-cache counters (lookups / computed / hits).
@@ -174,7 +217,13 @@ impl SchedulingService {
     fn execute(&self, job: &Job, prep: &Prepared) -> Executed {
         let cached = self.schedules.get_or_compute(prep.sched_fp, || {
             let t0 = std::time::Instant::now();
-            let s = compute_schedule(&prep.wf, &prep.cluster, job.algo, job.policy);
+            let s = compute_schedule_with(
+                &prep.wf,
+                &prep.cluster,
+                job.algo,
+                job.policy,
+                self.score_pool.as_ref(),
+            );
             let seconds = t0.elapsed().as_secs_f64();
             (s, seconds)
         });
@@ -216,6 +265,22 @@ impl SchedulingService {
     /// Execute a batch; results come back in submission order and their
     /// JSONL rendering is byte-identical for any worker count.
     pub fn run_batch(&self, jobs: Vec<Job>) -> Vec<JobResult> {
+        let mut out = Vec::with_capacity(jobs.len());
+        self.run_batch_streaming(jobs, |r| out.push(r));
+        out
+    }
+
+    /// Like [`run_batch`](SchedulingService::run_batch), but hands each
+    /// [`JobResult`] to `sink` as soon as it is final — in submission
+    /// order, while later jobs are still executing. The emitted sequence
+    /// is exactly `run_batch`'s, so streaming consumers (the `memsched
+    /// batch` JSONL writer, suite progress counters) see incremental,
+    /// still byte-deterministic output.
+    ///
+    /// `sink` runs on pool worker threads (serialized — never
+    /// concurrently with itself); keep it cheap or the emission lock
+    /// becomes a bottleneck.
+    pub fn run_batch_streaming(&self, jobs: Vec<Job>, sink: impl FnMut(JobResult) + Send) {
         // Give previously-failed sources a fresh chance (see `Memo`).
         self.workflows.prune_errors();
         self.clusters.prune_errors();
@@ -267,44 +332,93 @@ impl SchedulingService {
         // Deduplicated jobs are cache hits that never reach the map.
         self.schedules.note_deduped(deduped);
 
-        // Phase 3: execute unique jobs on the pool.
-        let prepared_ref = &prepared;
-        let executed: Vec<(u128, Executed)> =
-            pool::run_ordered(compute_order, self.workers, move |_, i| {
-                let (job, prep) = &prepared_ref[i];
-                let prep = prep.as_ref().expect("compute_order only holds prepared jobs");
-                (prep.job_fp.0, self.execute(job, prep))
-            });
-        let by_fp: HashMap<u128, Executed> = executed.into_iter().collect();
+        // Phase 3 + 4 fused: execute unique jobs on the pool; each
+        // completion drains the ready prefix of the (submission-ordered)
+        // result stream into the sink. A job's payload is its
+        // fingerprint representative's `Executed` slot, and
+        // `representative[i] <= i`, so the prefix test below can only
+        // wait on slots of earlier-or-equal jobs.
+        let slot_of: HashMap<usize, usize> =
+            compute_order.iter().enumerate().map(|(slot, &i)| (i, slot)).collect();
+        let slots: Vec<Mutex<Option<Executed>>> =
+            (0..compute_order.len()).map(|_| Mutex::new(None)).collect();
+        // (next job index to emit, sink) behind one lock: emission is
+        // serialized and in order by construction.
+        let emitter = Mutex::new((0usize, sink));
 
-        // Phase 4: assemble in submission order.
-        prepared
-            .into_iter()
-            .enumerate()
-            .map(|(i, (job, prep))| match prep {
-                Err(e) => JobResult::failed(i, e),
-                Ok(p) => {
-                    let ex = &by_fp[&p.job_fp.0];
-                    JobResult {
-                        id: i,
-                        error: None,
-                        workflow: p.wf.name.clone(),
-                        tasks: p.wf.num_tasks(),
-                        cluster: p.cluster.name.clone(),
-                        algo: job.algo,
-                        fingerprint: p.job_fp.to_string(),
-                        cache_hit: representative[&p.job_fp.0] != i || pre_cached[&p.job_fp.0],
-                        valid: ex.valid,
-                        makespan: ex.makespan,
-                        mem_usage: ex.mem_usage,
-                        procs_used: ex.procs_used,
-                        evictions: ex.evictions,
-                        seconds: ex.seconds,
-                        sim: ex.sim.clone(),
+        let assemble = |i: usize, job: &Job, p: &Prepared| -> JobResult {
+            let slot = slot_of[&representative[&p.job_fp.0]];
+            let ex = slots[slot]
+                .lock()
+                .unwrap()
+                .clone()
+                .expect("drained only when the representative slot is filled");
+            JobResult {
+                id: i,
+                error: None,
+                workflow: p.wf.name.clone(),
+                tasks: p.wf.num_tasks(),
+                cluster: p.cluster.name.clone(),
+                algo: job.algo,
+                fingerprint: p.job_fp.to_string(),
+                cache_hit: representative[&p.job_fp.0] != i || pre_cached[&p.job_fp.0],
+                valid: ex.valid,
+                makespan: ex.makespan,
+                mem_usage: ex.mem_usage,
+                procs_used: ex.procs_used,
+                evictions: ex.evictions,
+                seconds: ex.seconds,
+                sim: ex.sim,
+            }
+        };
+        // Workers drain opportunistically (`block = false`): if another
+        // worker already holds the emission lock it will re-scan the
+        // prefix itself, and the final blocking drain below catches any
+        // residue — so nobody queues up behind a slow sink instead of
+        // returning to the pool for more work.
+        let drain = |block: bool| {
+            let guard = if block {
+                Some(emitter.lock().unwrap())
+            } else {
+                emitter.try_lock().ok()
+            };
+            let Some(mut guard) = guard else {
+                return;
+            };
+            let emitter = &mut *guard;
+            while emitter.0 < prepared.len() {
+                let i = emitter.0;
+                let (job, prep) = &prepared[i];
+                let result = match prep {
+                    Err(e) => JobResult::failed(i, e.clone()),
+                    Ok(p) => {
+                        let slot = slot_of[&representative[&p.job_fp.0]];
+                        let ready = slots[slot].lock().unwrap().is_some();
+                        if !ready {
+                            return; // prefix not ready yet
+                        }
+                        assemble(i, job, p)
                     }
-                }
-            })
-            .collect()
+                };
+                (emitter.1)(result);
+                emitter.0 += 1;
+            }
+        };
+
+        let work: Vec<(usize, usize)> = compute_order.iter().copied().enumerate().collect();
+        let prepared_ref = &prepared;
+        pool::run_ordered(work, self.workers, |_, (slot, i)| {
+            let (job, prep) = &prepared_ref[i];
+            let prep = prep.as_ref().expect("compute_order only holds prepared jobs");
+            let ex = self.execute(job, prep);
+            *slots[slot].lock().unwrap() = Some(ex);
+            drain(false);
+        });
+        // Blocking tail drain: trailing failed jobs (which never touch
+        // the pool), all-deduped batches, the empty-compute-order case,
+        // and any prefix skipped by contended opportunistic drains.
+        drain(true);
+        debug_assert_eq!(emitter.lock().unwrap().0, prepared.len(), "every job emitted");
     }
 }
 
@@ -439,5 +553,70 @@ mod tests {
         let r = svc.run_batch(vec![job]);
         assert!(r[0].error.is_none());
         assert_eq!(r[0].cluster, "memory-constrained");
+    }
+
+    #[test]
+    fn streaming_emits_in_submission_order_and_matches_run_batch() {
+        let cluster = Arc::new(small_cluster());
+        let mut jobs = Vec::new();
+        for algo in Algorithm::all() {
+            jobs.push(spec_job("chipseq", 1, algo, &cluster));
+            jobs.push(spec_job("eager", 2, algo, &cluster));
+        }
+        // A failing job in the middle and a duplicate at the end.
+        jobs.insert(3, Job::new(
+            JobSource::Generated(WorkloadSpec {
+                family: "nope".into(),
+                size: None,
+                input: 0,
+                seed: 1,
+            }),
+            ClusterSpec::Inline(cluster.clone()),
+        ));
+        jobs.push(jobs[0].clone());
+
+        let svc_stream = SchedulingService::new(4);
+        let mut streamed = Vec::new();
+        svc_stream.run_batch_streaming(jobs.clone(), |r| streamed.push(r));
+        assert_eq!(streamed.len(), jobs.len());
+        assert!(streamed.iter().enumerate().all(|(i, r)| r.id == i), "order must be by id");
+
+        let svc_buffered = SchedulingService::new(1);
+        let buffered = svc_buffered.run_batch(jobs);
+        assert_eq!(to_jsonl(&streamed), to_jsonl(&buffered));
+    }
+
+    #[test]
+    fn score_threads_preserve_batch_bytes() {
+        let cluster = Arc::new(small_cluster());
+        let jobs = |_: ()| -> Vec<Job> {
+            Algorithm::all()
+                .into_iter()
+                .map(|algo| spec_job("methylseq", 1, algo, &cluster))
+                .collect()
+        };
+        let serial = SchedulingService::new(2);
+        let r_serial = serial.run_batch(jobs(()));
+        let scored = SchedulingService::new(2).with_score_threads(4);
+        assert_eq!(scored.score_threads(), 4);
+        let r_scored = scored.run_batch(jobs(()));
+        assert_eq!(to_jsonl(&r_serial), to_jsonl(&r_scored));
+    }
+
+    #[test]
+    fn cache_byte_cap_keeps_results_correct() {
+        let cluster = Arc::new(small_cluster());
+        let jobs = |_: ()| -> Vec<Job> {
+            Algorithm::all()
+                .into_iter()
+                .map(|algo| spec_job("bacass", 0, algo, &cluster))
+                .collect()
+        };
+        let unbounded = SchedulingService::new(2);
+        let r_unbounded = unbounded.run_batch(jobs(()));
+        // A 1-byte budget evicts aggressively; outputs must not change.
+        let capped = SchedulingService::new(2).with_cache_bytes(Some(1));
+        let r_capped = capped.run_batch(jobs(()));
+        assert_eq!(to_jsonl(&r_unbounded), to_jsonl(&r_capped));
     }
 }

@@ -1,20 +1,33 @@
-//! Sharded work-stealing worker pool on `std::thread` (no rayon/tokio in
-//! this offline tree).
+//! Worker pools on `std::thread` (no rayon/tokio in this offline tree).
 //!
-//! Jobs are distributed round-robin over per-worker deques ("shards").
-//! Each worker drains its own shard from the front and, when empty,
-//! steals from the *back* of the other shards — the classic deque
-//! discipline that keeps stolen work coarse and owner work cache-warm.
-//! Results are written into per-job slots, so the output vector is always
-//! in submission order regardless of worker count or steal interleaving:
-//! this is the ordering layer the batch service's byte-identical JSONL
-//! guarantee rests on.
+//! Two primitives live here:
 //!
-//! Job closures must be deterministic functions of `(index, item)`; the
-//! pool adds no other source of nondeterminism to their outputs.
+//! - [`run_ordered`] — a sharded work-stealing batch pool. Jobs are
+//!   distributed round-robin over per-worker deques ("shards"). Each
+//!   worker drains its own shard from the front and, when empty, steals
+//!   from the *back* of the other shards — the classic deque discipline
+//!   that keeps stolen work coarse and owner work cache-warm. Results
+//!   are written into per-job slots, so the output vector is always in
+//!   submission order regardless of worker count or steal interleaving:
+//!   this is the ordering layer the batch service's byte-identical JSONL
+//!   guarantee rests on.
+//!
+//! - [`ScorePool`] — a persistent scoped parallel-for pool for the
+//!   scheduler's *intra-schedule* hot loop (parallel tentative scoring
+//!   across processors, see `scheduler::engine`). Spawning scoped
+//!   threads per task would dwarf the scoring work (a 30k-task schedule
+//!   issues 30k fan-outs), so `ScorePool` keeps its workers alive across
+//!   calls: they spin briefly between jobs (the gap between two tasks of
+//!   one schedule is a commit, microseconds) and fall back to a condvar
+//!   only when idle for real. Dispatch is therefore a couple of atomic
+//!   operations on the hot path.
+//!
+//! Job closures must be deterministic functions of their index; the
+//! pools add no other source of nondeterminism to their outputs.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of workers to use when the caller does not specify one.
 pub fn default_workers() -> usize {
@@ -84,6 +97,240 @@ where
         .collect()
 }
 
+/// Pointer to the caller-stack closure of a scoped job, type-erased.
+///
+/// A raw pointer rather than a (lifetime-lying) `&'static` reference:
+/// workers may legitimately hold their `Arc<ScopedJob>` a little past
+/// `scoped_for`'s return (having observed `next >= n` they only read
+/// counters), and a dangling *reference* inside a live struct would
+/// violate reference validity rules even if never used. The pointer is
+/// only dereferenced between a successful chunk claim (`next < n`) and
+/// the matching `done` increment, and `scoped_for` does not return
+/// before `done == n` — so every dereference happens while the real
+/// closure is still alive on the caller's stack.
+struct ErasedFn(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (callable from any thread through a
+// shared reference), and the dereference discipline above guarantees
+// liveness; the pointer itself is just an address.
+unsafe impl Send for ErasedFn {}
+unsafe impl Sync for ErasedFn {}
+
+/// One scoped parallel-for call in flight.
+struct ScopedJob {
+    f: ErasedFn,
+    n: usize,
+    /// Next chunk index to claim.
+    next: AtomicUsize,
+    /// Chunks fully executed (panicked ones included — the caller's
+    /// completion wait must terminate either way).
+    done: AtomicUsize,
+    /// Any chunk panicked; the submitting caller re-raises after the
+    /// job is fully retired and cleared.
+    panicked: AtomicBool,
+}
+
+impl ScopedJob {
+    /// Claim-and-run loop shared by workers and the submitting caller.
+    ///
+    /// Panics in the closure are caught and recorded, never allowed to
+    /// break the protocol: a worker dying between claim and `done`
+    /// would strand the caller in its completion wait, and a caller
+    /// unwinding out of `scoped_for` would leave the erased pointer
+    /// installed for workers to dereference after the closure is gone.
+    fn run_chunks(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            // SAFETY: `i < n` was claimed uniquely, so the submitting
+            // `scoped_for` is still blocked on `done == n` and the
+            // closure behind the pointer is alive (see `ErasedFn`).
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (*self.f.0)(i)
+            }));
+            if outcome.is_err() {
+                self.panicked.store(true, Ordering::Release);
+            }
+            self.done.fetch_add(1, Ordering::Release);
+        }
+    }
+}
+
+struct PoolShared {
+    /// Current job; replaced under the mutex, observed via `epoch`.
+    job: Mutex<Option<Arc<ScopedJob>>>,
+    /// Bumped once per installed job; workers spin on it between jobs.
+    epoch: AtomicU64,
+    shutdown: AtomicBool,
+    /// Wakes workers that gave up spinning (paired with `job`).
+    wake: Condvar,
+}
+
+/// How many spin iterations a worker tolerates between jobs before
+/// blocking on the condvar. Successive tasks of one schedule arrive
+/// within microseconds, so the spin window keeps the whole schedule on
+/// the fast path while bounding idle burn to well under a millisecond.
+const SPIN_LIMIT: u32 = 20_000;
+
+/// A persistent scoped parallel-for pool.
+///
+/// [`ScorePool::scoped_for`]`(n, f)` runs `f(0..n)` across the pool's
+/// threads (the caller participates, so a pool of `t` threads applies
+/// `t` cores) and returns once every index completed. Closures may
+/// borrow from the caller's stack — the call is fully scoped. Concurrent
+/// callers are serialized; the pool adds no nondeterminism (callers
+/// decide what each index writes, typically disjoint slots reduced
+/// serially afterwards).
+pub struct ScorePool {
+    shared: Arc<PoolShared>,
+    /// Serializes `scoped_for` callers (e.g. service workers sharing one
+    /// pool): one scoped job at a time keeps the worker protocol simple.
+    caller: Mutex<()>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ScorePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScorePool").field("threads", &self.threads).finish()
+    }
+}
+
+impl ScorePool {
+    /// A pool applying `threads` total threads per call (the submitting
+    /// caller counts as one, so `threads - 1` workers are spawned).
+    /// `threads` is clamped to ≥ 1; a 1-thread pool runs everything
+    /// inline on the caller.
+    pub fn new(threads: usize) -> ScorePool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            job: Mutex::new(None),
+            epoch: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            wake: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("score-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn score worker")
+            })
+            .collect();
+        ScorePool { shared, caller: Mutex::new(()), threads, handles }
+    }
+
+    /// Total threads applied per `scoped_for` call (caller included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i < n` across the pool and the calling
+    /// thread; returns when all completed. `f` may borrow locals.
+    pub fn scoped_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.threads == 1 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Poison-tolerant: the caller mutex guards no data, only
+        // serialization, and a previous caller may have (deliberately)
+        // unwound out of this function after its closure panicked.
+        let _serialize = self.caller.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: erase the closure's lifetime into a raw pointer. Sound
+        // because this function only returns after `done == n` (every
+        // claimed chunk finished) and no new chunk can be claimed once
+        // `next >= n`, so no dereference outlives the real borrow.
+        let erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let job = Arc::new(ScopedJob {
+            f: ErasedFn(erased as *const (dyn Fn(usize) + Sync)),
+            n,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            *slot = Some(job.clone());
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+            self.shared.wake.notify_all();
+        }
+        // The caller works too, with the same panic-capturing protocol
+        // (an unwind here must not skip the job teardown below).
+        job.run_chunks();
+        // Wait for straggler workers still executing claimed chunks.
+        let mut spins = 0u32;
+        while job.done.load(Ordering::Acquire) < n {
+            spins += 1;
+            if spins > SPIN_LIMIT {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        *self.shared.job.lock().unwrap() = None;
+        // Re-raise only after the job is retired and cleared: every
+        // chunk ran (or unwound) and no worker can reach the closure.
+        if job.panicked.load(Ordering::Acquire) {
+            panic!("ScorePool: a scoped closure panicked (see stderr for the original panic)");
+        }
+    }
+}
+
+impl Drop for ScorePool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _slot = self.shared.job.lock().unwrap();
+            self.shared.wake.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut seen = 0u64;
+    let mut spins = 0u32;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let epoch = shared.epoch.load(Ordering::Acquire);
+        if epoch != seen {
+            seen = epoch;
+            spins = 0;
+            let job = shared.job.lock().unwrap().clone();
+            if let Some(job) = job {
+                // The submitting caller keeps the closure alive until
+                // `done == n` (see `ScopedJob` docs).
+                job.run_chunks();
+            }
+            continue;
+        }
+        spins += 1;
+        if spins < SPIN_LIMIT {
+            std::hint::spin_loop();
+            continue;
+        }
+        // Idle for real: block until the next job (or shutdown).
+        let guard = shared.job.lock().unwrap();
+        if shared.epoch.load(Ordering::Acquire) != seen || shared.shutdown.load(Ordering::Acquire)
+        {
+            continue;
+        }
+        let _guard = shared.wake.wait(guard).unwrap();
+        spins = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +384,111 @@ mod tests {
     fn workers_exceeding_jobs_clamped() {
         let out = run_ordered(vec![1usize, 2], 64, |_, x| x);
         assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn scoped_for_runs_every_index_once() {
+        for threads in [1, 2, 4] {
+            let pool = ScorePool::new(threads);
+            assert_eq!(pool.threads(), threads.max(1));
+            let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+            pool.scoped_for(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn scoped_for_borrows_caller_stack_state() {
+        // The whole point of the scoped API: closures borrow locals.
+        let pool = ScorePool::new(3);
+        let input: Vec<u64> = (0..100).collect();
+        let out: Vec<Mutex<u64>> = (0..100).map(|_| Mutex::new(0)).collect();
+        pool.scoped_for(100, &|i| {
+            *out[i].lock().unwrap() = input[i] * 3;
+        });
+        for (i, slot) in out.iter().enumerate() {
+            assert_eq!(*slot.lock().unwrap(), i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn scoped_for_is_cheap_to_reissue() {
+        // The engine issues one scoped call per task; thousands of
+        // back-to-back calls must work (workers spin between them).
+        let pool = ScorePool::new(4);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..2000 {
+            pool.scoped_for(4, &|_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 8000);
+    }
+
+    #[test]
+    fn scoped_for_zero_and_one_chunk() {
+        let pool = ScorePool::new(4);
+        pool.scoped_for(0, &|_| panic!("no chunks to run"));
+        let ran = AtomicUsize::new(0);
+        pool.scoped_for(1, &|i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_callers_serialize_on_one_pool() {
+        // Several service workers sharing one score pool: calls must not
+        // interleave chunks of different jobs into the wrong closure.
+        let pool = ScorePool::new(2);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let (pool, total) = (&pool, &total);
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let local = AtomicUsize::new(0);
+                        pool.scoped_for(8, &|_| {
+                            local.fetch_add(1, Ordering::Relaxed);
+                        });
+                        assert_eq!(local.load(Ordering::Relaxed), 8, "caller {t}");
+                        total.fetch_add(8, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 8);
+    }
+
+    #[test]
+    fn dropping_an_idle_pool_joins_workers() {
+        let pool = ScorePool::new(3);
+        pool.scoped_for(5, &|_| {});
+        drop(pool); // must not hang on sleeping workers
+    }
+
+    #[test]
+    fn scoped_closure_panics_propagate_without_hanging() {
+        let pool = ScorePool::new(3);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scoped_for(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(outcome.is_err(), "a chunk panic must re-raise on the caller");
+        // The pool stays usable: no stranded chunks, no poisoned state.
+        let ran = AtomicUsize::new(0);
+        pool.scoped_for(4, &|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 4);
     }
 }

@@ -4,8 +4,8 @@
 //! `cargo test` works on a fresh checkout).
 
 use memsched::runtime::{artifact_path, predictor::Predictor, scorer};
-use memsched::scheduler::engine::{EftScorer, ParentInfo, ScoreQuery};
-use memsched::scheduler::{Algorithm, Engine, EvictionPolicy};
+use memsched::scheduler::engine::{EftScorer, ParentInfo};
+use memsched::scheduler::{Algorithm, Engine, EvictionPolicy, ScoreBuffers};
 use memsched::testing::{check, random_cluster, random_dag};
 
 fn artifacts_built() -> bool {
@@ -29,19 +29,23 @@ fn xla_scorer_matches_native_on_random_queries() {
                 proc: rng.range_inclusive(0, k - 1),
             })
             .collect();
-        let q = ScoreQuery {
+        let bufs = ScoreBuffers {
             proc_ready: (0..k).map(|_| rng.uniform(0.0, 500.0)).collect(),
             speeds: (0..k).map(|_| rng.uniform(1.0, 32.0)).collect(),
             avail_mem: (0..k).map(|_| rng.uniform(0.0, 64e9)).collect(),
-            comm: (0..p).map(|_| (0..k).map(|_| rng.uniform(0.0, 500.0)).collect()).collect(),
+            // Row-major parents × procs.
+            comm: (0..p * k).map(|_| rng.uniform(0.0, 500.0)).collect(),
             parents,
             work: rng.uniform(0.1, 500.0),
             memory: rng.uniform(0.0, 8e9),
             out_total: rng.uniform(0.0, 4e9),
             bandwidth: 1e9,
+            ..Default::default()
         };
-        let (nft, nres) = scorer::NativeScorer.score(&q);
-        let (xft, xres) = xla.score(&q);
+        let (mut nft, mut nres) = (vec![0.0; k], vec![0.0; k]);
+        scorer::NativeScorer.score(&bufs.query(), &mut nft, &mut nres);
+        let (mut xft, mut xres) = (vec![0.0; k], vec![0.0; k]);
+        xla.score(&bufs.query(), &mut xft, &mut xres);
         for j in 0..k {
             // f32 artifact vs f64 native: tolerances scaled to magnitude.
             let tol_ft = 1e-4 * nft[j].abs().max(1.0);

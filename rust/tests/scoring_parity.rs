@@ -1,0 +1,100 @@
+//! Byte-level parity of parallel intra-schedule scoring: for any
+//! `--score-threads` count, every algorithm and eviction policy must
+//! produce a schedule *bit-identical* to the serial engine's on generated
+//! 1k-task DAGs — placements, start/finish times (f64 bits), eviction
+//! lists, rank order, validity, and peak-memory fractions.
+//!
+//! This is the engine-level counterpart of `service_determinism.rs`
+//! (which checks the batch JSONL): the deterministic reduction in
+//! `Engine::assign` (min finish time, ties to the lowest ProcId) is what
+//! both guarantees rest on.
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::{memory_constrained_cluster, small_cluster};
+use memsched::platform::Cluster;
+use memsched::scheduler::{Algorithm, Engine, EvictionPolicy, Schedule};
+use memsched::service::ScorePool;
+use memsched::workflow::Workflow;
+
+/// Canonical byte encoding of everything a schedule decides.
+fn schedule_bytes(s: &Schedule) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(s.valid as u8);
+    out.extend((s.failures.len() as u64).to_le_bytes());
+    out.extend((s.rank_order.len() as u64).to_le_bytes());
+    for &t in &s.rank_order {
+        out.extend((t as u64).to_le_bytes());
+    }
+    for t in &s.tasks {
+        out.extend((t.proc as u64).to_le_bytes());
+        out.extend(t.start.to_bits().to_le_bytes());
+        out.extend(t.finish.to_bits().to_le_bytes());
+        out.extend((t.evicted.len() as u64).to_le_bytes());
+        for &e in &t.evicted {
+            out.extend((e as u64).to_le_bytes());
+        }
+        out.push(t.res_nonneg as u8);
+    }
+    out.extend(s.makespan.to_bits().to_le_bytes());
+    for &f in &s.mem_peak_frac {
+        out.extend(f.to_bits().to_le_bytes());
+    }
+    out
+}
+
+fn workload(family: &str, tasks: usize, input: usize, seed: u64) -> Workflow {
+    WorkloadSpec { family: family.into(), size: Some(tasks), input, seed }
+        .build()
+        .expect("generated workload builds")
+}
+
+fn assert_parity(wf: &Workflow, cluster: &Cluster, algos: &[Algorithm], label: &str) {
+    for &algo in algos {
+        for policy in [EvictionPolicy::LargestFirst, EvictionPolicy::SmallestFirst] {
+            let order = algo.rank_order(wf, cluster);
+            let serial = Engine::new(wf, cluster, algo, policy).run(&order);
+            let serial_bytes = schedule_bytes(&serial);
+            for threads in [2usize, 4, 8] {
+                let pool = ScorePool::new(threads);
+                let parallel = Engine::new(wf, cluster, algo, policy)
+                    .with_parallel_scoring(&pool)
+                    .run(&order);
+                assert_eq!(
+                    serial_bytes,
+                    schedule_bytes(&parallel),
+                    "{label}: {algo:?}/{policy:?} diverged at --score-threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_scoring_parity_on_eviction_heavy_1k_dags() {
+    // A tight small cluster: plenty of Step-1 rejections, evictions, and
+    // out-of-memory fallbacks — the paths where nondeterminism would hide.
+    let cluster = small_cluster().scale_memory(0.03, "tight-small");
+    let wf = workload("chipseq", 1000, 3, 11);
+    assert_parity(&wf, &cluster, &Algorithm::all(), "chipseq-1k/tight");
+}
+
+#[test]
+fn parallel_scoring_parity_on_second_family() {
+    let cluster = small_cluster().scale_memory(0.05, "tight-small-2");
+    let wf = workload("eager", 1000, 2, 23);
+    assert_parity(&wf, &cluster, &Algorithm::all(), "eager-1k/tight");
+}
+
+#[test]
+fn parallel_scoring_parity_on_wide_cluster() {
+    // The paper's 72-processor memory-constrained cluster: wide chunked
+    // fan-out (the configuration bench_engine measures).
+    let cluster = memory_constrained_cluster();
+    let wf = workload("methylseq", 1000, 3, 5);
+    assert_parity(
+        &wf,
+        &cluster,
+        &[Algorithm::Heft, Algorithm::HeftmBl],
+        "methylseq-1k/wide",
+    );
+}

@@ -87,6 +87,24 @@ fn duplicate_jobs_are_cache_hits() {
 }
 
 #[test]
+fn score_threads_do_not_change_jsonl_bytes() {
+    // Intra-schedule parallel scoring (the second parallelism axis) must
+    // be invisible in the wire format, exactly like the worker count.
+    let baseline = SchedulingService::new(2);
+    let r_base = baseline.run_batch(batch());
+    for score_threads in [2, 8] {
+        let svc = SchedulingService::new(2).with_score_threads(score_threads);
+        let r = svc.run_batch(batch());
+        assert_eq!(
+            service::to_jsonl(&r_base),
+            service::to_jsonl(&r),
+            "JSONL diverged at --score-threads {score_threads}"
+        );
+        assert_eq!(baseline.cache_stats().computed, svc.cache_stats().computed);
+    }
+}
+
+#[test]
 fn suite_grid_byte_deterministic_through_the_service() {
     // The CLI `batch --suite smoke` path: the experiments grid itself
     // must be byte-deterministic across worker counts.
