@@ -1,31 +1,173 @@
 #!/usr/bin/env bash
-# CI check: tier-1 (build + tests) plus the smoke-scale suite through the
-# scheduling service's worker pool, including the byte-determinism check
-# the batch API guarantees.
+# Tiered CI harness.
+#
+#   ./ci.sh             all tiers (tier1, lint, smoke, bench)
+#   ./ci.sh --tier1     build + cargo test -q
+#   ./ci.sh --lint      cargo fmt --check + cargo clippy -- -D warnings
+#                       (root package only — the rust/vendor shims are
+#                       path dependencies, not workspace members, so
+#                       they are excluded automatically; skipped with a
+#                       notice when the components are not installed)
+#   ./ci.sh --smoke     service/parity smokes + the replay-parity smoke
+#                       (multi-sigma vs per-sigma, sweep vs flat,
+#                       warm/cold --cache-dir with schedules_computed=0)
+#   ./ci.sh --bench     bench_engine + bench_service at tiny scale,
+#                       emit BENCH_ci.json, and gate >2x regressions
+#                       against rust/benches/BENCH_baseline.json when
+#                       that baseline exists
+#
+# .github/workflows/ci.yml runs the tiers as separate jobs.
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "== tier-1: cargo build --release && cargo test -q =="
-cargo build --release
-cargo test -q
-
 BIN=target/release/memsched
-TMP="$(mktemp -d)"
-trap 'rm -rf "$TMP"' EXIT
 
-echo "== service: smoke suite ×2 through the pool (jobs=1 vs jobs=4) =="
-"$BIN" batch --suite smoke --repeat 2 --jobs 1 --out "$TMP/j1.jsonl"
-"$BIN" batch --suite smoke --repeat 2 --jobs 4 --out "$TMP/j4.jsonl"
-cmp "$TMP/j1.jsonl" "$TMP/j4.jsonl"
-echo "batch output byte-identical across worker counts"
+usage() {
+  sed -n '2,19p' "$0" | sed 's/^# \{0,1\}//'
+}
 
-echo "== engine: parallel-scoring parity (score-threads=1 vs 4) =="
-"$BIN" batch --suite smoke --jobs 2 --score-threads 1 --out "$TMP/s1.jsonl"
-"$BIN" batch --suite smoke --jobs 2 --score-threads 4 --out "$TMP/s4.jsonl"
-cmp "$TMP/s1.jsonl" "$TMP/s4.jsonl"
-echo "batch output byte-identical across score-thread counts"
+TIERS=()
+for arg in "$@"; do
+  case "$arg" in
+    --tier1) TIERS+=(tier1) ;;
+    --lint) TIERS+=(lint) ;;
+    --smoke) TIERS+=(smoke) ;;
+    --bench) TIERS+=(bench) ;;
+    -h|--help) usage; exit 0 ;;
+    *) echo "unknown option: $arg" >&2; usage >&2; exit 2 ;;
+  esac
+done
+if [ ${#TIERS[@]} -eq 0 ]; then
+  TIERS=(tier1 lint smoke bench)
+fi
 
-echo "== experiments: fig1 smoke through the pool =="
-"$BIN" experiment --figure fig1 --scale smoke --jobs 4 > /dev/null
+ensure_bin() {
+  # Always build: a stale target/release/memsched (e.g. restored from a
+  # CI cache) must never be what the smokes and bench gates validate.
+  # Incremental compilation makes the no-change case cheap.
+  cargo build --release
+}
 
-echo "ci: OK"
+tier_tier1() {
+  echo "== tier-1: cargo build --release && cargo test -q =="
+  cargo build --release
+  cargo test -q
+}
+
+tier_lint() {
+  echo "== lint: cargo fmt --check + cargo clippy -- -D warnings =="
+  if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+  else
+    echo "lint: rustfmt not installed; skipping fmt check"
+  fi
+  if cargo clippy --version >/dev/null 2>&1; then
+    # Vendor shims are path dependencies (not workspace members), so
+    # clippy only lints the memsched package itself.
+    cargo clippy --release --all-targets -- -D warnings
+  else
+    echo "lint: clippy not installed; skipping clippy"
+  fi
+}
+
+tier_smoke() {
+  ensure_bin
+  TMP="$(mktemp -d)"
+  trap 'rm -rf "$TMP"' EXIT
+
+  echo "== service: smoke suite ×2 through the pool (jobs=1 vs jobs=4) =="
+  "$BIN" batch --suite smoke --repeat 2 --jobs 1 --out "$TMP/j1.jsonl" 2>/dev/null
+  "$BIN" batch --suite smoke --repeat 2 --jobs 4 --out "$TMP/j4.jsonl" 2>/dev/null
+  cmp "$TMP/j1.jsonl" "$TMP/j4.jsonl"
+  echo "batch output byte-identical across worker counts"
+
+  echo "== engine: parallel-scoring parity (score-threads=1 vs 4 vs auto) =="
+  "$BIN" batch --suite smoke --jobs 2 --score-threads 1 --out "$TMP/s1.jsonl" 2>/dev/null
+  "$BIN" batch --suite smoke --jobs 2 --score-threads 4 --out "$TMP/s4.jsonl" 2>/dev/null
+  "$BIN" batch --suite smoke --jobs 2 --score-threads auto --out "$TMP/sa.jsonl" 2>/dev/null
+  cmp "$TMP/s1.jsonl" "$TMP/s4.jsonl"
+  cmp "$TMP/s1.jsonl" "$TMP/sa.jsonl"
+  echo "batch output byte-identical across score-thread counts (incl. auto)"
+
+  echo "== experiments: fig1 smoke through the pool =="
+  "$BIN" experiment --figure fig1 --scale smoke --jobs 4 > /dev/null 2>"$TMP/fig1.err"
+
+  echo "== replay: multi-sigma experiment == concatenated single-sigma runs =="
+  "$BIN" experiment --figure fig8 --scale smoke --sigmas 0.1,0.3 --jobs 4 \
+    > "$TMP/multi.csv" 2>/dev/null
+  "$BIN" experiment --figure fig8 --scale smoke --sigmas 0.1 --jobs 1 \
+    > "$TMP/s01.csv" 2>/dev/null
+  "$BIN" experiment --figure fig8 --scale smoke --sigmas 0.3 --jobs 1 \
+    > "$TMP/s03.csv" 2>/dev/null
+  cat "$TMP/s01.csv" "$TMP/s03.csv" | cmp - "$TMP/multi.csv"
+  echo "multi-sigma fig8 output identical to per-sigma concatenation"
+
+  echo "== replay: sweep JSONL == flattened per-point JSONL =="
+  cat > "$TMP/sweep_jobs.jsonl" <<'EOF'
+{"model":"chipseq","input":1,"sweep":[{"mode":"recompute","sigma":0.1},{"mode":"recompute","sigma":0.3},{"mode":"static","sigma":0.3}]}
+{"model":"bacass","input":0,"algo":"heftm-mm","sweep":[{"mode":"static","sigma":0.2,"seed":9}]}
+{"model":"eager","input":0}
+EOF
+  cat > "$TMP/flat_jobs.jsonl" <<'EOF'
+{"model":"chipseq","input":1,"sim":{"mode":"recompute","sigma":0.1}}
+{"model":"chipseq","input":1,"sim":{"mode":"recompute","sigma":0.3}}
+{"model":"chipseq","input":1,"sim":{"mode":"static","sigma":0.3}}
+{"model":"bacass","input":0,"algo":"heftm-mm","sim":{"mode":"static","sigma":0.2,"seed":9}}
+{"model":"eager","input":0}
+EOF
+  "$BIN" batch --input "$TMP/sweep_jobs.jsonl" --jobs 4 --out "$TMP/sweep.jsonl" 2>/dev/null
+  "$BIN" batch --input "$TMP/flat_jobs.jsonl" --jobs 1 --out "$TMP/flat.jsonl" 2>/dev/null
+  cmp "$TMP/sweep.jsonl" "$TMP/flat.jsonl"
+  echo "replay-sweep batch byte-identical to flattened per-point batch"
+
+  echo "== replay: warm/cold --cache-dir byte-identity + schedules_computed==0 =="
+  "$BIN" batch --suite smoke --sigmas 0.1,0.3 --jobs 1 --out "$TMP/nocache.jsonl" 2>/dev/null
+  "$BIN" batch --suite smoke --sigmas 0.1,0.3 --jobs 4 --cache-dir "$TMP/cache" \
+    --out "$TMP/cold.jsonl" 2>"$TMP/cold.err"
+  "$BIN" batch --suite smoke --sigmas 0.1,0.3 --jobs 4 --cache-dir "$TMP/cache" \
+    --out "$TMP/warm.jsonl" 2>"$TMP/warm.err"
+  cmp "$TMP/nocache.jsonl" "$TMP/cold.jsonl"
+  cmp "$TMP/nocache.jsonl" "$TMP/warm.jsonl"
+  grep -Eq '"schedules_computed":0[,}]' "$TMP/warm.err" \
+    || { echo "warm run did not report schedules_computed=0:"; cat "$TMP/warm.err"; exit 1; }
+  echo "multi-sigma batch byte-identical across jobs and warm/cold cache-dir; warm run computed 0 schedules"
+
+  echo "== replay: warm --cache-dir experiment reuses every schedule =="
+  "$BIN" experiment --figure fig8 --scale smoke --sigmas 0.1,0.3 --jobs 4 \
+    --cache-dir "$TMP/ecache" > "$TMP/e_cold.csv" 2>/dev/null
+  "$BIN" experiment --figure fig8 --scale smoke --sigmas 0.1,0.3 --jobs 4 \
+    --cache-dir "$TMP/ecache" > "$TMP/e_warm.csv" 2>"$TMP/e_warm.err"
+  cmp "$TMP/multi.csv" "$TMP/e_cold.csv"
+  cmp "$TMP/multi.csv" "$TMP/e_warm.csv"
+  grep -Eq '"schedules_computed":0[,}]' "$TMP/e_warm.err" \
+    || { echo "warm experiment did not report schedules_computed=0:"; cat "$TMP/e_warm.err"; exit 1; }
+  echo "experiment tables cache-independent; warm experiment computed 0 schedules"
+}
+
+tier_bench() {
+  ensure_bin
+  echo "== bench: tiny-scale bench_engine + bench_service -> BENCH_ci.json =="
+  rm -f BENCH_ci.json
+  # Pinned knobs so entry ids are stable across machines/runs.
+  MEMSCHED_BENCH_FAST=1 MEMSCHED_SCORE_THREADS=4 \
+    MEMSCHED_BENCH_JSON="$PWD/BENCH_ci.json" \
+    cargo bench --bench bench_engine
+  MEMSCHED_SUITE_SCALE=smoke MEMSCHED_JOBS=4 \
+    MEMSCHED_BENCH_JSON="$PWD/BENCH_ci.json" \
+    cargo bench --bench bench_service
+  echo "bench entries:"
+  cat BENCH_ci.json
+  BASELINE=rust/benches/BENCH_baseline.json
+  if [ -f "$BASELINE" ]; then
+    echo "== bench: regression gate (>2x vs $BASELINE fails) =="
+    "$BIN" bench-check --current BENCH_ci.json --baseline "$BASELINE" --tolerance 2.0
+  else
+    echo "no checked-in baseline at $BASELINE; copy BENCH_ci.json there (from a"
+    echo "representative machine) to enable the regression gate"
+  fi
+}
+
+for tier in "${TIERS[@]}"; do
+  "tier_$tier"
+done
+echo "ci: OK (${TIERS[*]})"

@@ -90,5 +90,18 @@ fn main() {
             serial_secs / parallel_secs,
             fingerprint(&serial).2
         );
+        // Score-threads-axis throughput for the CI regression gate
+        // (tasks scheduled per second; `tasks` names the requested size
+        // so ids stay stable across runs).
+        common::emit_bench_entry(
+            &format!("engine/tasks={tasks}/serial"),
+            tasks as f64 / serial_secs,
+            serial_secs,
+        );
+        common::emit_bench_entry(
+            &format!("engine/tasks={tasks}/parallel"),
+            tasks as f64 / parallel_secs,
+            parallel_secs,
+        );
     }
 }

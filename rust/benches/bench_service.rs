@@ -52,6 +52,11 @@ fn main() {
         jobs.len() as f64 / serial_secs,
         serial_computed
     );
+    common::emit_bench_entry(
+        &format!("service/jobs={}/serial", jobs.len()),
+        jobs.len() as f64 / serial_secs,
+        serial_secs,
+    );
 
     let (parallel_out, parallel_secs, parallel_computed) = run(jobs.clone(), workers);
     println!(
@@ -59,6 +64,11 @@ fn main() {
         parallel_secs,
         jobs.len() as f64 / parallel_secs,
         parallel_computed
+    );
+    common::emit_bench_entry(
+        &format!("service/jobs={}/parallel", jobs.len()),
+        jobs.len() as f64 / parallel_secs,
+        parallel_secs,
     );
     assert_eq!(serial_out, parallel_out, "JSONL must be byte-identical across worker counts");
     assert_eq!(serial_computed, parallel_computed);
@@ -80,5 +90,10 @@ fn main() {
         warm_secs,
         jobs.len() as f64 / warm_secs,
         serial_secs / warm_secs
+    );
+    common::emit_bench_entry(
+        &format!("service/jobs={}/warm", jobs.len()),
+        jobs.len() as f64 / warm_secs,
+        warm_secs,
     );
 }

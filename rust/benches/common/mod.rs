@@ -35,15 +35,50 @@ pub fn score_threads_from_env() -> usize {
 
 pub const SEED: u64 = 42;
 
+/// The bench service configuration from the `MEMSCHED_JOBS` /
+/// `MEMSCHED_SCORE_THREADS` environment knobs.
+pub fn service_config_from_env() -> memsched::service::ServiceConfig {
+    memsched::service::ServiceConfig {
+        workers: workers_from_env(),
+        score: memsched::service::ScoreThreadSpec::Fixed(score_threads_from_env()),
+        ..memsched::service::ServiceConfig::default()
+    }
+}
+
 /// Run the static suite on a cluster through the scheduling-service pool
 /// (the suite runner prints its own progress lines to stderr).
 pub fn static_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<StaticResult> {
-    experiments::run_static_suite(scale, SEED, cluster, workers_from_env(), score_threads_from_env())
+    experiments::run_static_suite(scale, SEED, cluster, &service_config_from_env())
         .expect("suite workloads build")
 }
 
 /// Run the dynamic suite (≤ 2000 tasks, σ = 10%) through the pool.
 pub fn dynamic_suite(scale: SuiteScale, cluster: &Cluster) -> Vec<DynamicResult> {
-    experiments::run_dynamic_suite(scale, SEED, cluster, 0.1, workers_from_env(), score_threads_from_env())
+    experiments::run_dynamic_suite(scale, SEED, cluster, &[0.1], &service_config_from_env())
         .expect("suite workloads build")
+        .remove(0)
+}
+
+/// Append one machine-readable bench entry to the JSONL file named by
+/// `MEMSCHED_BENCH_JSON` (no-op when unset). `ci.sh --bench` collects
+/// these into `BENCH_ci.json` and gates regressions with
+/// `memsched bench-check`.
+pub fn emit_bench_entry(id: &str, throughput: f64, seconds: f64) {
+    let Some(path) = std::env::var_os("MEMSCHED_BENCH_JSON") else {
+        return;
+    };
+    use memsched::ser::json::obj;
+    use std::io::Write as _;
+    let line = obj(vec![
+        ("id", id.into()),
+        ("throughput", throughput.into()),
+        ("seconds", seconds.into()),
+    ])
+    .to_string_compact();
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{line}");
+        }
+        Err(e) => eprintln!("warning: cannot append bench entry to {path:?}: {e}"),
+    }
 }

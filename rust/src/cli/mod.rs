@@ -148,6 +148,15 @@ impl Args {
             .unwrap_or_default()
     }
 
+    /// Typed comma-separated list (`--sigmas 0.1,0.2,0.5`). An absent
+    /// key yields an empty vector; any unparsable element is an error.
+    pub fn list_of<T: std::str::FromStr>(&mut self, key: &str) -> Result<Vec<T>> {
+        self.list(key)
+            .iter()
+            .map(|s| s.parse::<T>().map_err(|_| anyhow!("invalid value `{s}` in --{key}")))
+            .collect()
+    }
+
     pub fn positionals(&self) -> &[String] {
         &self.positionals
     }
@@ -218,6 +227,16 @@ mod tests {
         let mut a = parse(&["prog", "x", "--sizes", "200, 1000,2000", "--wf", "a", "--wf", "b"]);
         assert_eq!(a.list("sizes"), vec!["200", "1000", "2000"]);
         assert_eq!(a.multi("wf"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn typed_lists_parse_and_reject() {
+        let mut a = parse(&["prog", "x", "--sigmas", "0.1, 0.2,0.5"]);
+        assert_eq!(a.list_of::<f64>("sigmas").unwrap(), vec![0.1, 0.2, 0.5]);
+        assert!(a.list_of::<f64>("absent").unwrap().is_empty());
+        let mut b = parse(&["prog", "x", "--sigmas", "0.1,zero.2"]);
+        let err = b.list_of::<f64>("sigmas").unwrap_err().to_string();
+        assert!(err.contains("zero.2"), "unhelpful error: {err}");
     }
 
     #[test]

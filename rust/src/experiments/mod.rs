@@ -14,7 +14,9 @@ pub mod figures;
 use crate::generator::{self, models};
 use crate::platform::Cluster;
 use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy, Schedule};
-use crate::service::{ClusterSpec, Job, JobResult, JobSource, SchedulingService, SimJob};
+use crate::service::{
+    ClusterSpec, Job, JobResult, JobSource, ReplaySweep, SchedulingService, ServiceConfig, SimJob,
+};
 use crate::simulator::{simulate, DeviationModel, SimConfig, SimMode, SimOutcome};
 use crate::traces::{self, HistoricalData, TraceConfig};
 use crate::workflow::{SizeGroup, Workflow};
@@ -266,6 +268,31 @@ fn run_batch_with_progress(service: &SchedulingService, jobs: Vec<Job>) -> Vec<J
     out
 }
 
+/// [`run_batch_with_progress`], replay-sweep flavoured: the counter runs
+/// over the flattened replay-point stream.
+fn run_sweeps_with_progress(service: &SchedulingService, sweeps: Vec<ReplaySweep>) -> Vec<JobResult> {
+    let total: usize = sweeps.iter().map(ReplaySweep::num_results).sum();
+    let step = (total / 20).max(1);
+    let mut out: Vec<JobResult> = Vec::with_capacity(total);
+    service.run_replay_sweeps_streaming(sweeps, |r| {
+        out.push(r);
+        let done = out.len();
+        if done % step == 0 || done == total {
+            eprintln!("  progress: {done}/{total} replay points");
+        }
+    });
+    out
+}
+
+/// Print the service's run-summary record (cache-hit / schedule-reuse
+/// counters) to stderr — the machine-readable side channel `ci.sh`
+/// greps; the figure tables on stdout stay byte-deterministic.
+fn eprint_summary(service: &SchedulingService, results: &[JobResult]) {
+    let hits = results.iter().filter(|r| r.cache_hit).count();
+    let failed = results.iter().filter(|r| r.error.is_some()).count();
+    eprintln!("{}", service.summary_json(results.len(), hits, failed).to_string_compact());
+}
+
 /// Build the static-evaluation job grid (workflow × size × input ×
 /// algorithm) for submission through the scheduling service. Job order is
 /// spec-major, algorithm-minor with [`Algorithm::all`]'s ordering — the
@@ -292,44 +319,46 @@ fn jobs_for_specs(specs: &[WorkloadSpec], cluster: &ClusterSpec) -> Vec<Job> {
     jobs
 }
 
-/// Run the static suite through the scheduling service on `workers`
-/// threads. Semantically identical to looping [`run_static`] over
-/// [`suite`] (same workloads, same normalization by HEFT's makespan),
-/// but the grid executes on the work-stealing pool and identical
-/// (workflow, cluster, algorithm) cells dedupe through the schedule
-/// cache, so the Quick/Full sweeps scale with cores. `score_threads > 1`
-/// additionally parallelizes the inside of each schedule computation
-/// (shared [`ScorePool`](crate::service::ScorePool); byte-identical
-/// results) — the lever for huge single workflows.
+/// Run the static suite through a scheduling service built from `cfg`.
+/// Semantically identical to looping [`run_static`] over [`suite`]
+/// (same workloads, same normalization by HEFT's makespan), but the
+/// grid executes on the work-stealing pool and identical (workflow,
+/// cluster, algorithm) cells dedupe through the schedule cache — which
+/// may additionally be disk-backed (`cfg.cache_dir`) so repeated
+/// invocations share schedules across processes. Score threads > 1 (or
+/// `Auto`) parallelize the inside of each schedule computation (shared
+/// [`ScorePool`](crate::service::ScorePool); byte-identical results) —
+/// the lever for huge single workflows.
 ///
-/// Progress: one stderr counter line per ~5% of completed jobs (fed from
-/// the service's ordered streaming sink).
+/// Progress: one stderr counter line per ~5% of completed jobs (fed
+/// from the service's ordered streaming sink), plus a final JSONL
+/// summary record with the cache/reuse counters.
 ///
 /// Caveat: `sched_seconds` (Fig 9) is wall time measured while other
 /// schedules may be computing on sibling workers; for contention-free
-/// heuristic timings, run with `workers = 1`.
+/// heuristic timings, run with `cfg.workers = 1`.
 pub fn run_static_suite(
     scale: SuiteScale,
     seed: u64,
     cluster: &Cluster,
-    workers: usize,
-    score_threads: usize,
+    cfg: &ServiceConfig,
 ) -> anyhow::Result<Vec<StaticResult>> {
     let specs = suite(scale, seed);
     let cspec = ClusterSpec::Inline(Arc::new(cluster.clone()));
     // Jobs are built from the very `specs` vec the reassembly below
     // indexes, so the chunk arithmetic cannot drift out of sync.
     let jobs = jobs_for_specs(&specs, &cspec);
+    let service = cfg.build()?;
     eprintln!(
         "static suite `{}`: {} workloads × {} algorithms on {} worker(s), {} score thread(s)...",
         cluster.name,
         specs.len(),
         Algorithm::all().len(),
-        workers.max(1),
-        score_threads.max(1)
+        service.workers(),
+        service.score_threads()
     );
-    let service = SchedulingService::new(workers).with_score_threads(score_threads);
     let results = run_batch_with_progress(&service, jobs);
+    eprint_summary(&service, &results);
     let algos = Algorithm::all();
     let mut out = Vec::with_capacity(results.len());
     for (si, spec) in specs.iter().enumerate() {
@@ -360,71 +389,110 @@ pub fn run_static_suite(
     Ok(out)
 }
 
+/// The dynamic suite's workload set: sizes ≤ 2000 of the full grid (the
+/// paper's §VI-C restriction).
+pub fn dynamic_suite_specs(scale: SuiteScale, seed: u64) -> Vec<WorkloadSpec> {
+    suite(scale, seed).into_iter().filter(|s| s.size.is_none_or(|n| n <= 2000)).collect()
+}
+
+/// The dynamic suite as replay sweeps: one sweep per (workload,
+/// algorithm) cell carrying `2 × sigmas.len()` replay points —
+/// `[Recompute, FollowStatic]` per sigma, in the given sigma order, with
+/// the suite's per-spec deviation seed. Shared by
+/// [`run_dynamic_suite`] and `memsched batch --suite … --sigmas …`.
+pub fn dynamic_suite_sweeps(
+    specs: &[WorkloadSpec],
+    cluster: &ClusterSpec,
+    sigmas: &[f64],
+) -> Vec<ReplaySweep> {
+    let mut sweeps = Vec::with_capacity(specs.len() * Algorithm::all().len());
+    for spec in specs {
+        let dev_seed = spec.seed ^ 0xdeu64;
+        for algo in Algorithm::all() {
+            let points: Vec<SimJob> = sigmas
+                .iter()
+                .flat_map(|&sigma| {
+                    [SimMode::Recompute, SimMode::FollowStatic]
+                        .into_iter()
+                        .map(move |mode| SimJob { mode, sigma, seed: dev_seed })
+                })
+                .collect();
+            sweeps.push(ReplaySweep {
+                source: JobSource::Generated(spec.clone()),
+                cluster: cluster.clone(),
+                algo,
+                policy: EvictionPolicy::LargestFirst,
+                points,
+            });
+        }
+    }
+    sweeps
+}
+
 /// Run the dynamic suite (sizes ≤ 2000, both execution modes per
-/// workload × algorithm) through the scheduling service. The two
-/// simulation-mode jobs of each (workload, algorithm) cell share one
-/// static-schedule computation via the schedule cache.
+/// workload × algorithm) under every deviation level in `sigmas`,
+/// through the service's replay engine: each (workload, algorithm)
+/// cell's static schedule is computed **exactly once** and replayed at
+/// every `(sigma, mode)` point — previously each sigma level recomputed
+/// the full schedule grid from scratch.
+///
+/// Returns one result vector per sigma, in `sigmas` order; each vector
+/// is element-for-element (bit-)identical to what a single-sigma run
+/// produces, so multi-sigma output concatenates to the per-sigma
+/// baseline.
 pub fn run_dynamic_suite(
     scale: SuiteScale,
     seed: u64,
     cluster: &Cluster,
-    sigma: f64,
-    workers: usize,
-    score_threads: usize,
-) -> anyhow::Result<Vec<DynamicResult>> {
-    let specs: Vec<WorkloadSpec> = suite(scale, seed)
-        .into_iter()
-        .filter(|s| s.size.is_none_or(|n| n <= 2000))
-        .collect();
+    sigmas: &[f64],
+    cfg: &ServiceConfig,
+) -> anyhow::Result<Vec<Vec<DynamicResult>>> {
+    anyhow::ensure!(!sigmas.is_empty(), "at least one sigma level is required");
+    let specs = dynamic_suite_specs(scale, seed);
     let cspec = ClusterSpec::Inline(Arc::new(cluster.clone()));
-    let mut jobs = Vec::new();
-    for spec in &specs {
-        for algo in Algorithm::all() {
-            for mode in [SimMode::Recompute, SimMode::FollowStatic] {
-                jobs.push(Job {
-                    source: JobSource::Generated(spec.clone()),
-                    cluster: cspec.clone(),
-                    algo,
-                    policy: EvictionPolicy::LargestFirst,
-                    sim: Some(SimJob { mode, sigma, seed: spec.seed ^ 0xdeu64 }),
-                });
-            }
-        }
-    }
+    let sweeps = dynamic_suite_sweeps(&specs, &cspec, sigmas);
+    let service = cfg.build()?;
     eprintln!(
-        "dynamic suite `{}`: {} workloads × {} algorithms × 2 modes on {} worker(s), {} score thread(s)...",
+        "dynamic suite `{}`: {} workloads × {} algorithms × {} sigma(s) × 2 modes on {} worker(s), {} score thread(s)...",
         cluster.name,
         specs.len(),
         Algorithm::all().len(),
-        workers.max(1),
-        score_threads.max(1)
+        sigmas.len(),
+        service.workers(),
+        service.score_threads()
     );
-    let service = SchedulingService::new(workers).with_score_threads(score_threads);
-    let results = run_batch_with_progress(&service, jobs);
-    let mut out = Vec::with_capacity(results.len() / 2);
+    let results = run_sweeps_with_progress(&service, sweeps);
+    eprint_summary(&service, &results);
+    // Reassemble the flattened stream (sweep-major over spec × algo,
+    // point-minor: sigma-major, [Recompute, FollowStatic]-minor) into
+    // per-sigma tables.
+    let mut out: Vec<Vec<DynamicResult>> =
+        sigmas.iter().map(|_| Vec::with_capacity(specs.len() * Algorithm::all().len())).collect();
     let mut it = results.iter();
     for spec in &specs {
         for algo in Algorithm::all() {
-            let rec = it.next().expect("one Recompute row per (spec, algo)");
-            let stat = it.next().expect("one FollowStatic row per (spec, algo)");
-            for r in [rec, stat] {
-                if let Some(e) = &r.error {
-                    anyhow::bail!("suite workload `{}` failed: {e}", spec.id());
+            for per_sigma in out.iter_mut() {
+                let rec = it.next().expect("one Recompute row per (spec, algo, sigma)");
+                let stat = it.next().expect("one FollowStatic row per (spec, algo, sigma)");
+                for r in [rec, stat] {
+                    if let Some(e) = &r.error {
+                        anyhow::bail!("suite workload `{}` failed: {e}", spec.id());
+                    }
                 }
+                let rsim = rec.sim.as_ref().expect("dynamic jobs carry sim results");
+                let ssim = stat.sim.as_ref().expect("dynamic jobs carry sim results");
+                per_sigma.push(DynamicResult {
+                    spec_id: spec.id(),
+                    group: SizeGroup::of(rec.tasks),
+                    algo,
+                    initially_valid: rec.valid,
+                    recompute_ok: rsim.completed,
+                    recompute_makespan: rsim.makespan,
+                    recomputations: rsim.recomputations,
+                    static_ok: ssim.completed,
+                    static_makespan: ssim.makespan,
+                });
             }
-            let rsim = rec.sim.as_ref().expect("dynamic jobs carry sim results");
-            let ssim = stat.sim.as_ref().expect("dynamic jobs carry sim results");
-            out.push(DynamicResult {
-                spec_id: spec.id(),
-                group: SizeGroup::of(rec.tasks),
-                algo,
-                initially_valid: rec.valid,
-                recompute_ok: rsim.completed,
-                recompute_makespan: rsim.makespan,
-                recomputations: rsim.recomputations,
-                static_ok: ssim.completed,
-                static_makespan: ssim.makespan,
-            });
         }
     }
     Ok(out)
@@ -482,10 +550,18 @@ mod tests {
         }
     }
 
+    fn cfg(workers: usize, score_threads: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            score: crate::service::ScoreThreadSpec::Fixed(score_threads),
+            ..ServiceConfig::default()
+        }
+    }
+
     #[test]
     fn pooled_static_suite_matches_serial() {
         let cluster = presets::small_cluster();
-        let pooled = run_static_suite(SuiteScale::Smoke, 1, &cluster, 4, 1).unwrap();
+        let pooled = run_static_suite(SuiteScale::Smoke, 1, &cluster, &cfg(4, 1)).unwrap();
         let mut serial = Vec::new();
         for spec in suite(SuiteScale::Smoke, 1) {
             serial.extend(run_static(&spec, &cluster).unwrap());
@@ -505,15 +581,16 @@ mod tests {
     #[test]
     fn pooled_dynamic_suite_matches_serial() {
         let cluster = presets::small_cluster();
-        let pooled = run_dynamic_suite(SuiteScale::Smoke, 1, &cluster, 0.1, 4, 2).unwrap();
+        let pooled = run_dynamic_suite(SuiteScale::Smoke, 1, &cluster, &[0.1], &cfg(4, 2)).unwrap();
+        assert_eq!(pooled.len(), 1, "one table per sigma");
         let mut serial = Vec::new();
         for spec in suite(SuiteScale::Smoke, 1) {
             for algo in Algorithm::all() {
                 serial.push(run_dynamic(&spec, &cluster, algo, 0.1).unwrap());
             }
         }
-        assert_eq!(pooled.len(), serial.len());
-        for (p, s) in pooled.iter().zip(&serial) {
+        assert_eq!(pooled[0].len(), serial.len());
+        for (p, s) in pooled[0].iter().zip(&serial) {
             assert_eq!(p.spec_id, s.spec_id);
             assert_eq!(p.algo, s.algo);
             assert_eq!(p.initially_valid, s.initially_valid);
@@ -524,5 +601,57 @@ mod tests {
             assert_eq!(p.static_makespan.to_bits(), s.static_makespan.to_bits());
             assert_eq!(p.recomputations, s.recomputations);
         }
+    }
+
+    fn dynamic_results_bit_equal(a: &[DynamicResult], b: &[DynamicResult]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.spec_id, y.spec_id);
+            assert_eq!(x.algo, y.algo);
+            assert_eq!(x.initially_valid, y.initially_valid);
+            assert_eq!(x.recompute_ok, y.recompute_ok);
+            assert_eq!(x.static_ok, y.static_ok);
+            assert_eq!(x.recompute_makespan.to_bits(), y.recompute_makespan.to_bits());
+            assert_eq!(x.static_makespan.to_bits(), y.static_makespan.to_bits());
+            assert_eq!(x.recomputations, y.recomputations);
+        }
+    }
+
+    #[test]
+    fn multi_sigma_suite_matches_per_sigma_baseline() {
+        // The replay-engine guarantee at suite level: a multi-sigma run
+        // equals the per-sigma runs, table for table, bit for bit —
+        // across worker counts.
+        let cluster = presets::small_cluster();
+        let sigmas = [0.1, 0.3];
+        let multi = run_dynamic_suite(SuiteScale::Smoke, 1, &cluster, &sigmas, &cfg(4, 1)).unwrap();
+        assert_eq!(multi.len(), 2);
+        for (si, &sigma) in sigmas.iter().enumerate() {
+            let single =
+                run_dynamic_suite(SuiteScale::Smoke, 1, &cluster, &[sigma], &cfg(1, 1)).unwrap();
+            dynamic_results_bit_equal(&multi[si], &single[0]);
+        }
+    }
+
+    #[test]
+    fn multi_sigma_sweeps_compute_each_schedule_once() {
+        // Acceptance check, service-level: the sweep grid of a
+        // multi-sigma dynamic suite computes one schedule per
+        // (workload, algorithm) cell, however many sigmas it replays.
+        let cluster = presets::small_cluster();
+        let specs = dynamic_suite_specs(SuiteScale::Smoke, 1);
+        let cspec = ClusterSpec::Inline(Arc::new(cluster.clone()));
+        let sweeps = dynamic_suite_sweeps(&specs, &cspec, &[0.1, 0.2, 0.5]);
+        let service = SchedulingService::new(4);
+        let results = service.run_replay_sweeps(sweeps);
+        assert!(results.iter().all(|r| r.error.is_none()));
+        assert_eq!(results.len(), specs.len() * Algorithm::all().len() * 3 * 2);
+        let stats = service.cache_stats();
+        assert_eq!(
+            stats.computed,
+            specs.len() * Algorithm::all().len(),
+            "each static schedule must be computed exactly once"
+        );
+        assert_eq!(stats.lookups, results.len());
     }
 }

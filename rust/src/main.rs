@@ -9,6 +9,7 @@
 //! - `simulate`      run the dynamic runtime system on a schedule
 //! - `batch`         run a JSONL job batch on the parallel scheduling service
 //! - `experiment`    run an evaluation suite and print a figure's table
+//! - `bench-check`   compare bench JSONL against a baseline (CI gate)
 //!
 //! Run `memsched help` for the full usage text.
 
@@ -18,7 +19,9 @@ use memsched::experiments::{self, figures, SuiteScale};
 use memsched::platform::Cluster;
 use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
 use memsched::ser::json::Value;
-use memsched::service::{ClusterSpec, Job, JobSource, SchedulingService, SimJob};
+use memsched::service::{
+    ClusterSpec, Job, JobSource, ReplaySweep, ScoreThreadSpec, ServiceConfig, SimJob,
+};
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 use memsched::workflow;
 
@@ -34,22 +37,35 @@ COMMANDS:
   cluster-info  [--cluster default|memory-constrained|file.json]
   schedule      --workflow <file> [--cluster C] [--algo heft|heftm-bl|heftm-blc|heftm-mm]
                 [--eviction largest|smallest] [--scorer native|xla]
-                [--score-threads N] [--out schedule.json]
+                [--score-threads N|auto] [--out schedule.json]
   simulate      --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
                 [--no-recompute]
   retrace       --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
                 [--lose-proc J]...   assess deviation impact on a schedule (§V)
   batch         --input jobs.jsonl | --suite smoke|quick|full  [--jobs N]
-                [--score-threads N] [--cache-bytes B] [--repeat K] [--seed S]
-                [--cluster C] [--out results.jsonl]
+                [--sigmas 0.1,0.2,...] [--score-threads N|auto] [--cache-bytes B]
+                [--cache-dir DIR] [--repeat K] [--seed S] [--cluster C]
+                [--out results.jsonl]
                 run a job batch on the multi-threaded scheduling service;
                 results stream incrementally as JSONL (in job order, as
                 each ordered slot completes), byte-identical for any
-                --jobs/--score-threads; --cache-bytes caps the schedule
-                cache (LRU by approximate bytes, default unbounded)
+                --jobs/--score-threads and warm/cold --cache-dir;
+                --sigmas turns a --suite batch into a dynamic replay
+                sweep (one static schedule per workload × algorithm,
+                replayed at every sigma × mode); --cache-bytes caps the
+                in-memory schedule cache (LRU by approximate bytes),
+                --cache-dir adds a disk-backed cache shared across
+                invocations; a JSONL summary record with the cache-hit /
+                schedule-reuse counters goes to stderr
   experiment    --figure fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|validity
                 [--scale smoke|quick|full] [--seed S] [--jobs N]
-                [--score-threads N] [--markdown]
+                [--sigmas 0.1,0.3] [--score-threads N|auto]
+                [--cache-dir DIR] [--markdown]
+                --sigmas (dynamic figures fig8/validity only) prints one
+                table per sigma, scheduling each workload exactly once
+  bench-check   --current BENCH_ci.json --baseline <file> [--tolerance 2.0]
+                fail when a bench throughput regresses more than
+                tolerance× against the baseline (used by ci.sh --bench)
   help          print this text
 
 Models: atacseq, bacass, chipseq, eager, methylseq.
@@ -57,8 +73,10 @@ Models: atacseq, bacass, chipseq, eager, methylseq.
 Batch job lines are JSON objects:
   {\"model\": \"chipseq\", \"tasks\": 200, \"input\": 2, \"seed\": 42}   (generated)
   {\"workflow\": \"wf.json\"}                                      (from file)
-with optional \"cluster\", \"algo\", \"eviction\", and
-\"sim\": {\"mode\": \"recompute\"|\"static\", \"sigma\": 0.1, \"seed\": 7}.";
+with optional \"cluster\", \"algo\", \"eviction\", and either
+\"sim\": {\"mode\": \"recompute\"|\"static\", \"sigma\": 0.1, \"seed\": 7}  (one point)
+or \"sweep\": [{\"mode\": ..., \"sigma\": ..., \"seed\": ...}, ...]        (replay sweep:
+the workflow is scheduled once and replayed at every point).";
 
 fn main() {
     // Die quietly when piped into `head` etc. (default SIGPIPE behaviour).
@@ -86,6 +104,7 @@ fn run() -> Result<()> {
         Some("retrace") => cmd_retrace(&mut args),
         Some("batch") => cmd_batch(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
+        Some("bench-check") => cmd_bench_check(&mut args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -188,6 +207,12 @@ fn cmd_schedule(args: &mut Args) -> Result<()> {
     args.finish()?;
 
     let t0 = std::time::Instant::now();
+    // Resolve `auto` against this (workflow, cluster) instance.
+    let score_spec = score_threads;
+    let score_threads = match score_spec {
+        ScoreThreadSpec::Fixed(n) => n,
+        ScoreThreadSpec::Auto => memsched::scheduler::auto_score_threads(&wf, &cluster),
+    };
     let schedule = match scorer_kind.as_str() {
         "native" => {
             // Parallel tentative scoring (byte-identical to serial).
@@ -196,11 +221,15 @@ fn cmd_schedule(args: &mut Args) -> Result<()> {
             memsched::scheduler::compute_schedule_with(&wf, &cluster, algo, policy, pool.as_ref())
         }
         "xla" => {
-            if score_threads > 1 {
-                eprintln!(
-                    "note: --score-threads {score_threads} is ignored with --scorer xla — the \
-                     batched scorer already orders all processors in one call"
-                );
+            // Only nag about an *explicit* thread request; the `auto`
+            // default resolving to many threads is not the user's doing.
+            if let ScoreThreadSpec::Fixed(n) = score_spec {
+                if n > 1 {
+                    eprintln!(
+                        "note: --score-threads {n} is ignored with --scorer xla — the \
+                         batched scorer already orders all processors in one call"
+                    );
+                }
             }
             let scorer = memsched::runtime::scorer::XlaScorer::load_default()?;
             let order = algo.rank_order(&wf, &cluster);
@@ -346,82 +375,159 @@ fn workers_arg(args: &mut Args) -> Result<usize> {
     })
 }
 
-/// `--score-threads N` (clamped to ≥ 1), defaulting to serial scoring.
-fn score_threads_arg(args: &mut Args) -> Result<usize> {
-    Ok(args.opt_or("score-threads", 1usize)?.max(1))
+/// `--score-threads N|auto`, defaulting to `auto`: serial below the
+/// measured `cluster × fan-in` crossover, all cores above it —
+/// schedules are byte-identical either way.
+fn score_threads_arg(args: &mut Args) -> Result<ScoreThreadSpec> {
+    args.opt_or("score-threads", ScoreThreadSpec::Auto)
+}
+
+/// The service configuration shared by `batch` and `experiment`:
+/// `--jobs`, `--score-threads`, `--cache-bytes`, `--cache-dir`.
+fn service_config_args(args: &mut Args) -> Result<ServiceConfig> {
+    Ok(ServiceConfig {
+        workers: workers_arg(args)?,
+        score: score_threads_arg(args)?,
+        cache_bytes: args.opt("cache-bytes")?,
+        cache_dir: args.opt_val("cache-dir")?.map(std::path::PathBuf::from),
+    })
 }
 
 fn cmd_experiment(args: &mut Args) -> Result<()> {
     let figure = args.req_str("figure")?;
     let scale: SuiteScale = args.opt_or("scale", SuiteScale::Quick)?;
     let seed: u64 = args.opt_or("seed", 42)?;
-    let workers = workers_arg(args)?;
-    let score_threads = score_threads_arg(args)?;
+    let cfg = service_config_args(args)?;
+    let sigmas: Vec<f64> = args.list_of("sigmas")?;
     let markdown = args.flag("markdown");
     args.finish()?;
 
-    if figure == "fig9" && workers > 1 {
+    let dynamic_figure = matches!(figure.as_str(), "fig8" | "validity");
+    if !sigmas.is_empty() && !dynamic_figure {
+        bail!("--sigmas only applies to the dynamic figures (fig8, validity)");
+    }
+    if figure == "fig9" && cfg.workers > 1 {
         eprintln!(
-            "note: fig9 reports per-heuristic wall times; with --jobs {workers} they are \
-             measured under pool contention — pass --jobs 1 for clean timings"
+            "note: fig9 reports per-heuristic wall times; with --jobs {} they are \
+             measured under pool contention — pass --jobs 1 for clean timings",
+            cfg.workers
         );
     }
 
-    // Every suite runs through the scheduling-service pool on `workers`
-    // threads (serial per-spec loops lived here before).
-    let table = match figure.as_str() {
+    // Every suite runs through the scheduling-service pool (serial
+    // per-spec loops lived here before).
+    let render = |t: &memsched::ser::csv::CsvWriter| -> String {
+        if markdown {
+            t.to_markdown()
+        } else {
+            t.to_csv()
+        }
+    };
+    let out = match figure.as_str() {
         "fig1" | "fig2" | "fig3" | "fig4" => {
             let cluster = memsched::platform::presets::default_cluster();
-            let results =
-                experiments::run_static_suite(scale, seed, &cluster, workers, score_threads)?;
-            match figure.as_str() {
+            let results = experiments::run_static_suite(scale, seed, &cluster, &cfg)?;
+            let table = match figure.as_str() {
                 "fig1" => figures::success_rates(&results),
                 "fig2" => figures::relative_makespans(&results),
                 "fig3" => figures::memory_usage(&results, false),
                 _ => figures::memory_usage(&results, true),
-            }
+            };
+            render(&table)
         }
         "fig5" | "fig6" | "fig7" | "fig9" => {
             let cluster = memsched::platform::presets::memory_constrained_cluster();
-            let results =
-                experiments::run_static_suite(scale, seed, &cluster, workers, score_threads)?;
-            match figure.as_str() {
+            let results = experiments::run_static_suite(scale, seed, &cluster, &cfg)?;
+            let table = match figure.as_str() {
                 "fig5" => figures::success_rates(&results),
                 "fig6" => figures::relative_makespans(&results),
                 "fig7" => figures::memory_usage(&results, false),
                 _ => figures::heuristic_runtimes(&results),
-            }
+            };
+            render(&table)
         }
         "fig8" | "validity" => {
+            // Headers only when --sigmas was passed: the legacy
+            // single-sigma default keeps its pure-CSV stdout format.
+            let sigma_headers = !sigmas.is_empty();
+            let sigmas = if sigmas.is_empty() { vec![0.1] } else { sigmas };
             let cluster = memsched::platform::presets::memory_constrained_cluster();
-            let results =
-                experiments::run_dynamic_suite(scale, seed, &cluster, 0.1, workers, score_threads)?;
-            if figure == "fig8" {
-                figures::dynamic_improvement(&results)
-            } else {
-                figures::dynamic_validity(&results)
+            // One replay-engine pass: each static schedule is computed
+            // once and replayed at every sigma level.
+            let per_sigma = experiments::run_dynamic_suite(scale, seed, &cluster, &sigmas, &cfg)?;
+            // One self-contained `# sigma=…`-headed table per sigma, so
+            // a multi-sigma run's output is byte-identical to the
+            // per-sigma (`--sigmas <s>`) runs concatenated.
+            let mut out = String::new();
+            for (sigma, results) in sigmas.iter().zip(&per_sigma) {
+                let table = if figure == "fig8" {
+                    figures::dynamic_improvement(results)
+                } else {
+                    figures::dynamic_validity(results)
+                };
+                if sigma_headers {
+                    out.push_str(&format!("# sigma={sigma}\n"));
+                }
+                out.push_str(&render(&table));
             }
+            out
         }
         other => bail!("unknown figure `{other}`"),
     };
-    print!("{}", if markdown { table.to_markdown() } else { table.to_csv() });
+    print!("{out}");
     Ok(())
 }
 
-/// Run a batch of scheduling jobs on the multi-threaded service and
-/// stream the results as JSONL (stdout or `--out`). Lines are emitted
-/// **incrementally**, in job order, as each ordered slot completes —
-/// long batches show progress instead of buffering until the end. The
-/// output bytes are identical for any `--jobs`/`--score-threads` value;
-/// the run summary goes to stderr.
+/// A batch submission: plain per-point jobs or replay sweeps. The two
+/// emit byte-identical JSONL for equal flattened content; sweeps
+/// additionally guarantee the schedule-once-replay-many execution shape.
+enum Batch {
+    Jobs(Vec<Job>),
+    Sweeps(Vec<ReplaySweep>),
+}
+
+impl Batch {
+    fn len(&self) -> usize {
+        match self {
+            Batch::Jobs(jobs) => jobs.len(),
+            Batch::Sweeps(sweeps) => sweeps.iter().map(ReplaySweep::num_results).sum(),
+        }
+    }
+
+    fn repeated(self, repeat: usize) -> Batch {
+        match self {
+            Batch::Jobs(base) => {
+                let mut jobs = Vec::with_capacity(base.len() * repeat);
+                for _ in 0..repeat {
+                    jobs.extend(base.iter().cloned());
+                }
+                Batch::Jobs(jobs)
+            }
+            Batch::Sweeps(base) => {
+                let mut sweeps = Vec::with_capacity(base.len() * repeat);
+                for _ in 0..repeat {
+                    sweeps.extend(base.iter().cloned());
+                }
+                Batch::Sweeps(sweeps)
+            }
+        }
+    }
+}
+
+/// Run a batch of scheduling jobs (or replay sweeps) on the
+/// multi-threaded service and stream the results as JSONL (stdout or
+/// `--out`). Lines are emitted **incrementally**, in job order, as each
+/// ordered slot completes — long batches show progress instead of
+/// buffering until the end. The output bytes are identical for any
+/// `--jobs`/`--score-threads` value and for warm/cold `--cache-dir`;
+/// the run summary (human line + JSONL record) goes to stderr.
 fn cmd_batch(args: &mut Args) -> Result<()> {
     let input = args.opt_val("input")?;
     let suite = args.opt_val("suite")?;
     let seed: u64 = args.opt_or("seed", 42)?;
     let default_cluster = args.opt_val("cluster")?.unwrap_or_else(|| "default".into());
-    let workers = workers_arg(args)?;
-    let score_threads = score_threads_arg(args)?;
-    let cache_bytes: Option<usize> = args.opt("cache-bytes")?;
+    let cfg = service_config_args(args)?;
+    let sigmas: Vec<f64> = args.list_of("sigmas")?;
     let repeat: usize = args.opt_or("repeat", 1)?;
     if repeat == 0 {
         bail!("--repeat must be at least 1");
@@ -429,26 +535,34 @@ fn cmd_batch(args: &mut Args) -> Result<()> {
     let out = args.opt_val("out")?;
     args.finish()?;
 
-    let base: Vec<Job> = match (&input, &suite) {
-        (Some(path), None) => parse_jobs_file(path, &default_cluster, seed)?,
+    let base: Batch = match (&input, &suite) {
+        (Some(path), None) => {
+            if !sigmas.is_empty() {
+                bail!("--sigmas only applies to --suite batches; put a `sweep` array on the job lines instead");
+            }
+            parse_jobs_file(path, &default_cluster, seed)?
+        }
         (None, Some(scale_str)) => {
             let scale: SuiteScale = scale_str.parse()?;
-            experiments::static_suite_jobs(scale, seed, &ClusterSpec::Named(default_cluster))
+            let cluster = ClusterSpec::Named(default_cluster);
+            if sigmas.is_empty() {
+                Batch::Jobs(experiments::static_suite_jobs(scale, seed, &cluster))
+            } else {
+                // Dynamic replay sweeps: one static schedule per
+                // (workload, algorithm), replayed at every sigma × mode.
+                let specs = experiments::dynamic_suite_specs(scale, seed);
+                Batch::Sweeps(experiments::dynamic_suite_sweeps(&specs, &cluster, &sigmas))
+            }
         }
         _ => bail!("batch requires exactly one of --input <jobs.jsonl> or --suite <smoke|quick|full>"),
     };
-    if base.is_empty() {
+    if base.len() == 0 {
         bail!("batch is empty");
     }
-    let mut jobs = Vec::with_capacity(base.len() * repeat);
-    for _ in 0..repeat {
-        jobs.extend(base.iter().cloned());
-    }
+    let batch = base.repeated(repeat);
 
     let t0 = std::time::Instant::now();
-    let service = SchedulingService::new(workers)
-        .with_score_threads(score_threads)
-        .with_cache_bytes(cache_bytes);
+    let service = cfg.build()?;
 
     // Stream each JSONL line the moment its ordered slot completes.
     // Per-line flush only for stdout (where incremental visibility is
@@ -465,39 +579,50 @@ fn cmd_batch(args: &mut Args) -> Result<()> {
     };
     let mut write_err: Option<std::io::Error> = None;
     let (mut emitted, mut dedup_hits, mut failed) = (0usize, 0usize, 0usize);
-    service.run_batch_streaming(jobs, |r| {
-        emitted += 1;
-        if r.cache_hit {
-            dedup_hits += 1;
-        }
-        if r.error.is_some() {
-            failed += 1;
-        }
-        if write_err.is_none() {
-            let res = writer
-                .write_all(r.to_jsonl().as_bytes())
-                .and_then(|()| writer.write_all(b"\n"))
-                .and_then(|()| if flush_each_line { writer.flush() } else { Ok(()) });
-            if let Err(e) = res {
-                write_err = Some(e);
+    {
+        let sink = |r: memsched::service::JobResult| {
+            emitted += 1;
+            if r.cache_hit {
+                dedup_hits += 1;
             }
+            if r.error.is_some() {
+                failed += 1;
+            }
+            if write_err.is_none() {
+                let res = writer
+                    .write_all(r.to_jsonl().as_bytes())
+                    .and_then(|()| writer.write_all(b"\n"))
+                    .and_then(|()| if flush_each_line { writer.flush() } else { Ok(()) });
+                if let Err(e) = res {
+                    write_err = Some(e);
+                }
+            }
+        };
+        match batch {
+            Batch::Jobs(jobs) => service.run_batch_streaming(jobs, sink),
+            Batch::Sweeps(sweeps) => service.run_replay_sweeps_streaming(sweeps, sink),
         }
-    });
+    }
     let final_flush = writer.flush();
     if let Some(e) = write_err.or(final_flush.err()) {
-        return Err(anyhow::Error::new(e)
+        return Err(anyhow::Error::from(e)
             .context(format!("writing results to {}", out.as_deref().unwrap_or("stdout"))));
     }
 
     let stats = service.cache_stats();
     eprintln!(
-        "batch: {emitted} jobs ({dedup_hits} deduped), {} schedules computed, {} cache hits, \
-         {workers} worker(s), {} score thread(s), {}",
+        "batch: {emitted} jobs ({dedup_hits} deduped), {} schedules computed, {} cache hits \
+         ({} from disk), {} worker(s), {} score thread(s), {}",
         stats.computed,
         stats.hits(),
+        stats.disk_hits,
+        service.workers(),
         service.score_threads(),
         memsched::bench::fmt_duration(t0.elapsed())
     );
+    // Machine-readable summary record (stderr: the JSONL result stream
+    // on stdout/--out must stay byte-identical across warm/cold caches).
+    eprintln!("{}", service.summary_json(emitted, dedup_hits, failed).to_string_compact());
     if failed > 0 {
         bail!("{failed} of {emitted} jobs failed (see the `error` lines)");
     }
@@ -506,10 +631,13 @@ fn cmd_batch(args: &mut Args) -> Result<()> {
 
 /// Parse a JSONL job file (one JSON object per line; `#` comments and
 /// blank lines ignored). `default_seed` (the CLI's `--seed`) applies to
-/// generated jobs whose lines omit an explicit `seed`.
-fn parse_jobs_file(path: &str, default_cluster: &str, default_seed: u64) -> Result<Vec<Job>> {
+/// generated jobs whose lines omit an explicit `seed`. If any line
+/// carries a `sweep` array the whole batch runs through the replay
+/// engine (plain lines become one-point sweeps); the output bytes are
+/// identical either way.
+fn parse_jobs_file(path: &str, default_cluster: &str, default_seed: u64) -> Result<Batch> {
     let text = std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
-    let mut jobs = Vec::new();
+    let mut parsed: Vec<(Job, Option<Vec<SimJob>>)> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -517,19 +645,33 @@ fn parse_jobs_file(path: &str, default_cluster: &str, default_seed: u64) -> Resu
         }
         let v = Value::parse(line)
             .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", lineno + 1))?;
-        jobs.push(
+        parsed.push(
             parse_job(&v, default_cluster, default_seed)
-                .with_context(|| format!("{path}:{} (job {})", lineno + 1, jobs.len() + 1))?,
+                .with_context(|| format!("{path}:{} (job {})", lineno + 1, parsed.len() + 1))?,
         );
     }
-    Ok(jobs)
+    if parsed.iter().any(|(_, sweep)| sweep.is_some()) {
+        Ok(Batch::Sweeps(
+            parsed
+                .into_iter()
+                .map(|(job, sweep)| match sweep {
+                    Some(points) => ReplaySweep::from_job(job).with_points(points),
+                    None => ReplaySweep::from_job(job),
+                })
+                .collect(),
+        ))
+    } else {
+        Ok(Batch::Jobs(parsed.into_iter().map(|(job, _)| job).collect()))
+    }
 }
 
-fn parse_job(v: &Value, default_cluster: &str, default_seed: u64) -> Result<Job> {
+/// One parsed job line: the job itself plus, when the line carried a
+/// `sweep` array, its replay points.
+fn parse_job(v: &Value, default_cluster: &str, default_seed: u64) -> Result<(Job, Option<Vec<SimJob>>)> {
     // Mirror Args::finish's strictness: a typo'd key must error, not
     // silently fall back to a default.
-    const JOB_KEYS: [&str; 9] =
-        ["workflow", "model", "tasks", "input", "seed", "cluster", "algo", "eviction", "sim"];
+    const JOB_KEYS: [&str; 10] =
+        ["workflow", "model", "tasks", "input", "seed", "cluster", "algo", "eviction", "sim", "sweep"];
     let fields = v.as_object().ok_or_else(|| anyhow::anyhow!("job line must be a JSON object"))?;
     for (key, _) in fields {
         if !JOB_KEYS.contains(&key.as_str()) {
@@ -601,30 +743,116 @@ fn parse_job(v: &Value, default_cluster: &str, default_seed: u64) -> Result<Job>
     };
     let sim = match v.get("sim") {
         None => None,
+        Some(s) => Some(parse_sim_point(s, default_seed)?),
+    };
+    let sweep = match v.get("sweep") {
+        None => None,
         Some(s) => {
-            const SIM_KEYS: [&str; 3] = ["mode", "sigma", "seed"];
-            let fields =
-                s.as_object().ok_or_else(|| anyhow::anyhow!("`sim` must be a JSON object"))?;
-            for (key, _) in fields {
-                if !SIM_KEYS.contains(&key.as_str()) {
-                    bail!("unknown sim field `{key}` (expected one of {})", SIM_KEYS.join(", "));
-                }
+            if sim.is_some() {
+                bail!("a job takes `sim` (one point) or `sweep` (many points), not both");
             }
-            let mode: SimMode = s.req_str("mode")?.parse()?;
-            let sigma = match s.get("sigma") {
-                None => 0.1,
-                Some(x) => x
-                    .as_f64()
-                    .ok_or_else(|| anyhow::anyhow!("`sim.sigma` must be a number"))?,
-            };
-            let seed = match s.get("seed") {
-                None => default_seed,
-                Some(x) => x
-                    .as_u64()
-                    .ok_or_else(|| anyhow::anyhow!("`sim.seed` must be an integer"))?,
-            };
-            Some(SimJob { mode, sigma, seed })
+            let points = s
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("`sweep` must be an array of sim points"))?;
+            Some(
+                points
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        parse_sim_point(p, default_seed)
+                            .with_context(|| format!("sweep point {}", i + 1))
+                    })
+                    .collect::<Result<Vec<SimJob>>>()?,
+            )
         }
     };
-    Ok(Job { source, cluster, algo, policy, sim })
+    Ok((Job { source, cluster, algo, policy, sim }, sweep))
+}
+
+/// Compare a bench JSONL file (entries `{"id": ..., "throughput": ...,
+/// "seconds": ...}`, as emitted by the benches under
+/// `MEMSCHED_BENCH_JSON`) against a baseline file: fail when any shared
+/// id's throughput regressed more than `--tolerance`× (default 2×, wide
+/// enough to absorb machine noise but not an accidental serial path).
+/// Ids present on only one side are reported and skipped — baselines
+/// from differently-sized machines simply compare fewer entries.
+fn cmd_bench_check(args: &mut Args) -> Result<()> {
+    let current_path = args.req_str("current")?;
+    let baseline_path = args.req_str("baseline")?;
+    let tolerance: f64 = args.opt_or("tolerance", 2.0)?;
+    args.finish()?;
+    if tolerance.is_nan() || tolerance < 1.0 {
+        bail!("--tolerance must be >= 1.0");
+    }
+
+    let load = |path: &str| -> Result<std::collections::BTreeMap<String, f64>> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading bench file {path}"))?;
+        let mut entries = std::collections::BTreeMap::new();
+        for v in memsched::ser::json::parse_jsonl(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        {
+            let id = v.req_str("id").with_context(|| format!("bench entry in {path}"))?;
+            let throughput =
+                v.req_f64("throughput").with_context(|| format!("bench entry `{id}` in {path}"))?;
+            if throughput.is_nan() || throughput <= 0.0 {
+                bail!("bench entry `{id}` in {path} has non-positive throughput {throughput}");
+            }
+            entries.insert(id.to_string(), throughput);
+        }
+        Ok(entries)
+    };
+    let current = load(&current_path)?;
+    let baseline = load(&baseline_path)?;
+
+    let (mut compared, mut regressions) = (0usize, 0usize);
+    for (id, base) in &baseline {
+        match current.get(id) {
+            None => println!("{id}: not in current run (skipped)"),
+            Some(cur) => {
+                compared += 1;
+                let slowdown = base / cur;
+                let verdict = if slowdown > tolerance {
+                    regressions += 1;
+                    "REGRESSED"
+                } else {
+                    "ok"
+                };
+                println!(
+                    "{id}: baseline {base:.2}/s, current {cur:.2}/s ({slowdown:.2}x slowdown) {verdict}"
+                );
+            }
+        }
+    }
+    for id in current.keys().filter(|id| !baseline.contains_key(*id)) {
+        println!("{id}: new metric (no baseline)");
+    }
+    if compared == 0 {
+        eprintln!("warning: no comparable bench entries between {current_path} and {baseline_path}");
+    }
+    if regressions > 0 {
+        bail!("{regressions} bench metric(s) regressed more than {tolerance}x against {baseline_path}");
+    }
+    Ok(())
+}
+
+/// One simulation point (`sim` object or a `sweep` array element).
+fn parse_sim_point(s: &Value, default_seed: u64) -> Result<SimJob> {
+    const SIM_KEYS: [&str; 3] = ["mode", "sigma", "seed"];
+    let fields = s.as_object().ok_or_else(|| anyhow::anyhow!("sim point must be a JSON object"))?;
+    for (key, _) in fields {
+        if !SIM_KEYS.contains(&key.as_str()) {
+            bail!("unknown sim field `{key}` (expected one of {})", SIM_KEYS.join(", "));
+        }
+    }
+    let mode: SimMode = s.req_str("mode")?.parse()?;
+    let sigma = match s.get("sigma") {
+        None => 0.1,
+        Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("`sim.sigma` must be a number"))?,
+    };
+    let seed = match s.get("seed") {
+        None => default_seed,
+        Some(x) => x.as_u64().ok_or_else(|| anyhow::anyhow!("`sim.seed` must be an integer"))?,
+    };
+    Ok(SimJob { mode, sigma, seed })
 }

@@ -79,6 +79,31 @@ impl std::str::FromStr for Algorithm {
     }
 }
 
+/// Measured crossover for pool-parallel tentative scoring, in units of
+/// `cluster.len() × mean task fan-in` — the per-task scoring work that
+/// the [`ScorePool`] fans out. Below it, dispatch overhead exceeds the
+/// win and serial scoring is faster (`bench_engine` is the measuring
+/// harness: the paper's 72-processor cluster with chipseq-like fan-in
+/// sits comfortably above, the 4–8 processor presets far below).
+/// Refresh from a `ci.sh --bench` run whenever the scoring loop changes.
+pub const SCORE_PARALLEL_CROSSOVER: f64 = 64.0;
+
+/// Adaptive score-thread choice (`--score-threads auto`): serial when
+/// the instance sits below [`SCORE_PARALLEL_CROSSOVER`], all cores
+/// above it. Schedules are byte-identical either way, so the choice is
+/// purely a throughput knob.
+pub fn auto_score_threads(wf: &Workflow, cluster: &Cluster) -> usize {
+    let mean_fan_in = wf.num_edges() as f64 / wf.num_tasks().max(1) as f64;
+    if (cluster.len() as f64) * mean_fan_in < SCORE_PARALLEL_CROSSOVER {
+        1
+    } else {
+        // Deliberately not `service::pool::default_workers()`: the
+        // scheduler layer must not depend upward on the service (the
+        // two expressions are identical).
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
 /// Compute a full static schedule (phases 1 + 2).
 pub fn compute_schedule(
     wf: &Workflow,
@@ -107,4 +132,56 @@ pub fn compute_schedule_with(
         engine = engine.with_parallel_scoring(pool);
     }
     engine.run(&order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets;
+    use crate::workflow::WorkflowBuilder;
+
+    /// A chain workflow with `extra` additional cross edges, so mean
+    /// fan-in is controllable: `(n - 1 + extra) / n` edges per task.
+    fn wf_with_edges(n: usize, extra: usize) -> Workflow {
+        let mut b = WorkflowBuilder::new("fanin");
+        let ids: Vec<_> = (0..n).map(|i| b.task(&format!("t{i}"), "t", 1.0, 1.0)).collect();
+        for w in ids.windows(2) {
+            b.edge(w[0], w[1], 1.0);
+        }
+        let mut added = 0;
+        'outer: for gap in 2..n {
+            for i in 0..n.saturating_sub(gap) {
+                if added == extra {
+                    break 'outer;
+                }
+                b.edge(ids[i], ids[i + gap], 1.0);
+                added += 1;
+            }
+        }
+        assert_eq!(added, extra, "requested more extra edges than the DAG admits");
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn auto_score_threads_pins_the_crossover() {
+        let all_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        // 20 tasks, 19 edges on the 6-processor test cluster:
+        // 6 × 0.95 = 5.7, far below the crossover → serial.
+        let small = presets::small_cluster();
+        assert_eq!(auto_score_threads(&wf_with_edges(20, 0), &small), 1);
+
+        // The paper's 72-processor cluster with fan-in ≥ 1 sits above:
+        // 72 × 0.95 = 68.4 ≥ 64 → parallel (all cores).
+        let big = presets::default_cluster();
+        assert_eq!(auto_score_threads(&wf_with_edges(20, 0), &big), all_cores);
+
+        // Exact boundary arithmetic on the small cluster: 6 procs need
+        // mean fan-in ≥ 64/6 ≈ 10.67, i.e. ≥ 534 edges on 50 tasks.
+        // 533 edges → 6 × 10.66 = 63.96 < 64 (serial), 534 → 64.08 ≥ 64
+        // (parallel); the constant itself is pinned so accidental
+        // retuning fails loudly.
+        assert_eq!(SCORE_PARALLEL_CROSSOVER, 64.0);
+        assert_eq!(auto_score_threads(&wf_with_edges(50, 533 - 49), &small), 1);
+        assert_eq!(auto_score_threads(&wf_with_edges(50, 534 - 49), &small), all_cores);
+    }
 }

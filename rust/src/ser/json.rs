@@ -202,6 +202,27 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
     Value::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Parse a JSONL document: one value per line; blank lines and `#`
+/// comment lines are skipped. Errors carry the 1-based *file* line of
+/// the offending record (columns stay within that line).
+pub fn parse_jsonl(text: &str) -> Result<Vec<Value>, ParseError> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        match Value::parse(trimmed) {
+            Ok(v) => out.push(v),
+            Err(mut e) => {
+                e.line = i + 1;
+                return Err(e);
+            }
+        }
+    }
+    Ok(out)
+}
+
 impl From<f64> for Value {
     fn from(v: f64) -> Self {
         Value::Number(v)
@@ -551,6 +572,17 @@ mod tests {
     #[test]
     fn rejects_duplicate_keys() {
         assert!(Value::parse(r#"{"a":1,"a":2}"#).is_err());
+    }
+
+    #[test]
+    fn jsonl_parses_lines_and_reports_file_line_numbers() {
+        let text = "# comment\n{\"a\":1}\n\n{\"b\":2}\n";
+        let values = parse_jsonl(text).unwrap();
+        assert_eq!(values.len(), 2);
+        assert_eq!(values[1].req_usize("b").unwrap(), 2);
+        let err = parse_jsonl("{\"ok\":1}\n{broken\n").unwrap_err();
+        assert_eq!(err.line, 2, "error must carry the file line: {err}");
+        assert!(parse_jsonl("").unwrap().is_empty());
     }
 
     #[test]

@@ -22,9 +22,19 @@
 //! dynamic-mode simulations of one workload reuse a single static
 //! schedule).
 //!
+//! `ScheduleCache` optionally layers a **disk-backed store**
+//! ([`DiskStore`], `--cache-dir`) under the in-memory map: memory misses
+//! first try the content-addressed on-disk entry, and fresh computations
+//! are persisted (atomic rename) — so repeated CLI invocations and CI
+//! runs share schedules across processes, and LRU-evicted fingerprints
+//! reload instead of recomputing. Corrupt, truncated, stale-version, or
+//! mismatched entries degrade to a recompute (see [`super::disk`]).
+//!
 //! Counter semantics: `computed` is the number of schedule computations
 //! actually run (one per unique key, plus recomputations of evicted
-//! keys when a byte budget is set); `lookups` is the total number of
+//! keys when a byte budget is set); `disk_hits` counts memory misses
+//! served from disk (not computations — a fully warm `--cache-dir` run
+//! reports `computed == 0`); `lookups` is the total number of
 //! requests — both direct [`get_or_compute`] calls and batch-level
 //! deduplicated jobs recorded via
 //! [`note_deduped`](ScheduleCache::note_deduped), which are satisfied
@@ -39,6 +49,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::scheduler::Schedule;
 
+use super::disk::DiskStore;
 use super::fingerprint::Fingerprint;
 
 #[derive(Debug)]
@@ -208,30 +219,41 @@ pub struct CachedSchedule {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
     pub lookups: usize,
+    /// Schedule computations actually run (disk loads are *not*
+    /// computations — a fully warm `--cache-dir` run reports 0 here).
     pub computed: usize,
+    /// Misses served by the disk-backed layer instead of a computation.
+    pub disk_hits: usize,
 }
 
 impl CacheStats {
-    /// Saturating: a reader racing an in-flight computation can observe
-    /// `computed` incremented before `lookups`; between batches the two
-    /// are consistent.
+    /// Requests satisfied without running a schedule computation (memory
+    /// hits, batch-level dedupe, and disk loads together). Saturating: a
+    /// reader racing an in-flight computation can observe `computed`
+    /// incremented before `lookups`; between batches the two are
+    /// consistent.
     pub fn hits(&self) -> usize {
         self.lookups.saturating_sub(self.computed)
     }
 }
 
 /// The schedule cache: an [`OnceMap`] over schedule fingerprints with
-/// request counters. Cheap to share behind the service; all methods take
+/// request counters and an optional disk-backed second layer
+/// ([`DiskStore`]). Cheap to share behind the service; all methods take
 /// `&self`.
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
     map: OnceMap<u128, CachedSchedule>,
+    /// Second cache layer: consulted on memory misses, filled on
+    /// computes, shared across processes via `--cache-dir`.
+    disk: Option<Arc<DiskStore>>,
     lookups: AtomicUsize,
     computed: AtomicUsize,
+    disk_hits: AtomicUsize,
 }
 
 impl ScheduleCache {
-    /// An unbounded cache.
+    /// An unbounded, memory-only cache.
     pub fn new() -> ScheduleCache {
         ScheduleCache::default()
     }
@@ -240,10 +262,22 @@ impl ScheduleCache {
     /// (approximate heap bytes, see [`Schedule::approx_bytes`]). Evicted
     /// fingerprints recompute on their next request.
     pub fn with_byte_cap(cap_bytes: Option<usize>) -> ScheduleCache {
+        ScheduleCache::with_config(cap_bytes, None)
+    }
+
+    /// Full configuration: optional LRU byte cap on the in-memory layer,
+    /// optional disk-backed layer. With a disk store, memory misses
+    /// first try the on-disk entry (counted in
+    /// [`CacheStats::disk_hits`], not `computed`) and fresh computations
+    /// are persisted best-effort — so an LRU-evicted or
+    /// other-process-computed fingerprint loads instead of recomputing.
+    pub fn with_config(cap_bytes: Option<usize>, disk: Option<Arc<DiskStore>>) -> ScheduleCache {
         ScheduleCache {
             map: OnceMap::with_byte_cap(cap_bytes),
+            disk,
             lookups: AtomicUsize::new(0),
             computed: AtomicUsize::new(0),
+            disk_hits: AtomicUsize::new(0),
         }
     }
 
@@ -274,13 +308,39 @@ impl ScheduleCache {
         fp: Fingerprint,
         compute: F,
     ) -> CachedSchedule {
+        self.get_or_compute_checked(fp, None, compute)
+    }
+
+    /// [`get_or_compute`](ScheduleCache::get_or_compute) with a sanity
+    /// check on disk loads: an on-disk entry whose task count differs
+    /// from `expect_tasks` (a renamed file, fingerprint-collision-shaped
+    /// garbage, or a true 128-bit collision) is discarded as a miss and
+    /// recomputed — never returned as a wrong schedule.
+    pub fn get_or_compute_checked<F: FnOnce() -> (Schedule, f64)>(
+        &self,
+        fp: Fingerprint,
+        expect_tasks: Option<usize>,
+        compute: F,
+    ) -> CachedSchedule {
         self.lookups.fetch_add(1, Ordering::Relaxed);
         self.map.get_or_init(
             &fp.0,
             || {
+                if let Some(disk) = &self.disk {
+                    if let Some(cached) = disk.load(fp) {
+                        if expect_tasks.is_none_or(|n| cached.schedule.tasks.len() == n) {
+                            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                            return cached;
+                        }
+                    }
+                }
                 self.computed.fetch_add(1, Ordering::Relaxed);
                 let (schedule, seconds) = compute();
-                CachedSchedule { schedule: Arc::new(schedule), seconds }
+                let cached = CachedSchedule { schedule: Arc::new(schedule), seconds };
+                if let Some(disk) = &self.disk {
+                    disk.store(fp, &cached);
+                }
+                cached
             },
             |cs| cs.schedule.approx_bytes(),
         )
@@ -297,6 +357,7 @@ impl ScheduleCache {
         CacheStats {
             lookups: self.lookups.load(Ordering::Relaxed),
             computed: self.computed.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
         }
     }
 }
@@ -423,6 +484,128 @@ mod tests {
         map.get_or_init(&2, || vec![0u8; 100], |v| v.len());
         assert!(!map.contains_computed(&1));
         assert!(map.contains_computed(&2));
+    }
+
+    fn disk_store(tag: &str) -> (std::path::PathBuf, Arc<DiskStore>) {
+        let dir = std::env::temp_dir().join(format!("memsched_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(DiskStore::open(&dir).unwrap());
+        (dir, store)
+    }
+
+    #[test]
+    fn disk_layer_shares_schedules_across_cache_instances() {
+        let (wf, cluster) = sample();
+        let (dir, store) = disk_store("share");
+        let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+
+        let cold = ScheduleCache::with_config(None, Some(store.clone()));
+        let first = cold.get_or_compute_checked(fp, Some(wf.num_tasks()), || {
+            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.25)
+        });
+        assert_eq!(cold.stats().computed, 1);
+        assert_eq!(cold.stats().disk_hits, 0);
+
+        // A second cache instance (a "new process") loads from disk.
+        let warm = ScheduleCache::with_config(None, Some(store));
+        let loaded = warm.get_or_compute_checked(fp, Some(wf.num_tasks()), || {
+            panic!("warm cache must not recompute")
+        });
+        assert_eq!(warm.stats().computed, 0);
+        assert_eq!(warm.stats().disk_hits, 1);
+        assert_eq!(warm.stats().hits(), 1);
+        assert_eq!(loaded.schedule.makespan.to_bits(), first.schedule.makespan.to_bits());
+        assert_eq!(loaded.seconds, first.seconds);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_disk_entries_degrade_to_recompute() {
+        let (wf, cluster) = sample();
+        let (dir, store) = disk_store("corrupt");
+        let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        ScheduleCache::with_config(None, Some(store.clone())).get_or_compute(fp, || {
+            (compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst), 0.0)
+        });
+        let path = dir.join(format!("{fp}.sched"));
+        let good = std::fs::read(&path).unwrap();
+        // Truncation, a wrong version header, and random garbage must
+        // all recompute (never panic, never return a wrong schedule).
+        let mut wrong_version = good.clone();
+        wrong_version[8] ^= 0xff;
+        for bad in [&good[..good.len() / 2], &wrong_version[..], &b"not a schedule"[..]] {
+            std::fs::write(&path, bad).unwrap();
+            let cache = ScheduleCache::with_config(None, Some(store.clone()));
+            let mut recomputed = false;
+            cache.get_or_compute(fp, || {
+                recomputed = true;
+                (compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst), 0.0)
+            });
+            assert!(recomputed);
+            assert_eq!(cache.stats().disk_hits, 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn task_count_mismatch_on_disk_is_a_miss() {
+        let (wf, cluster) = sample();
+        let (dir, store) = disk_store("mismatch");
+        let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        ScheduleCache::with_config(None, Some(store.clone())).get_or_compute(fp, || {
+            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.0)
+        });
+        // A collision-shaped entry: valid bytes, but the requester's
+        // workflow has a different task count.
+        let cache = ScheduleCache::with_config(None, Some(store));
+        let mut recomputed = false;
+        cache.get_or_compute_checked(fp, Some(wf.num_tasks() + 1), || {
+            recomputed = true;
+            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.0)
+        });
+        assert!(recomputed, "mismatched task count must force a recompute");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_leave_a_valid_store() {
+        let (wf, cluster) = sample();
+        let (dir, _) = disk_store("race");
+        let fps: Vec<(Algorithm, Fingerprint)> = Algorithm::all()
+            .into_iter()
+            .map(|a| (a, schedule_fingerprint(&wf, &cluster, a, EvictionPolicy::LargestFirst)))
+            .collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (dir, fps, wf, cluster) = (&dir, &fps, &wf, &cluster);
+                s.spawn(move || {
+                    // Each writer opens its own store on the shared dir
+                    // (separate processes in miniature).
+                    let store = Arc::new(DiskStore::open(dir).unwrap());
+                    let cache = ScheduleCache::with_config(None, Some(store));
+                    for &(algo, fp) in fps {
+                        cache.get_or_compute(fp, || {
+                            (compute_schedule(wf, cluster, algo, EvictionPolicy::LargestFirst), 0.0)
+                        });
+                    }
+                });
+            }
+        });
+        // Every entry readable, nothing to recompute, no temp litter.
+        let store = Arc::new(DiskStore::open(&dir).unwrap());
+        assert_eq!(store.len(), fps.len());
+        let cache = ScheduleCache::with_config(None, Some(store));
+        for &(_, fp) in &fps {
+            cache.get_or_compute(fp, || panic!("store must be fully warm"));
+        }
+        assert_eq!(cache.stats().disk_hits, fps.len());
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
+            .count();
+        assert_eq!(leftovers, 0, "temp files must not accumulate");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Disk-backed layer of the schedule cache: content-addressed files keyed
+//! by the 128-bit schedule fingerprint, so repeated CLI invocations and CI
+//! runs share schedules *across processes* (the in-memory
+//! [`ScheduleCache`](super::ScheduleCache) only lives as long as one
+//! service instance).
+//!
+//! ## On-disk format (version 1)
+//!
+//! One file per schedule, named `<32-hex-fingerprint>.sched` under the
+//! store directory (`--cache-dir`). Little-endian throughout:
+//!
+//! ```text
+//! magic      8 bytes   b"MEMSCHED"
+//! version    u32       format version (currently 1)
+//! fp         u128      the schedule fingerprint the payload belongs to
+//! seconds    f64       wall seconds of the original computation
+//! len        u64       payload length in bytes
+//! hash       u64       FNV-1a 64 over the payload bytes
+//! payload    len bytes the encoded Schedule (see `encode_schedule`)
+//! ```
+//!
+//! ## Robustness contract
+//!
+//! Every read path degrades to a **miss** (recompute), never a panic or a
+//! wrong schedule:
+//!
+//! - short/truncated files, bad magic, unknown versions → miss;
+//! - payload hash mismatch (bit rot, torn writes that somehow survived
+//!   the atomic rename) → miss;
+//! - a stored fingerprint that differs from the requested one (renamed or
+//!   collision-shaped files) → miss;
+//! - trailing bytes after the payload, out-of-range enum tags, or length
+//!   fields larger than the remaining bytes → miss;
+//! - on top of the codec, the cache layer cross-checks the decoded task
+//!   count against the requesting workflow
+//!   ([`get_or_compute_checked`](super::ScheduleCache::get_or_compute_checked)).
+//!
+//! Writers are crash- and concurrency-safe: the entry is written to a
+//! unique temp file and atomically renamed into place, so readers only
+//! ever observe complete entries, and concurrent writers of one
+//! fingerprint race to install bit-identical content (last rename wins).
+//! Store errors are deliberately swallowed — the disk layer is an
+//! accelerator, not a source of truth.
+//!
+//! Invalidation is by construction: the file *name* is the schedule
+//! fingerprint (any change to workflow weights, platform, or algorithm
+//! config addresses a different file), and the `version` header retires
+//! whole stores when the schedule representation itself changes. Bump
+//! [`FORMAT_VERSION`] whenever `Schedule`'s semantics change without the
+//! fingerprint seeing it (e.g. a scheduler bugfix that alters outputs for
+//! the same inputs).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::scheduler::{Failure, Schedule, TaskSchedule};
+
+use super::cache::CachedSchedule;
+use super::fingerprint::{algo_from_tag, algo_tag, policy_from_tag, policy_tag, Fingerprint};
+
+const MAGIC: &[u8; 8] = b"MEMSCHED";
+/// Bump to retire every existing store (see module docs).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Uniquifies temp names within this process (the pid in the name
+/// handles other processes). Process-global, not per-store: two stores
+/// opened on the same directory must never collide on a temp path.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A directory of content-addressed schedule files.
+#[derive(Debug)]
+pub struct DiskStore {
+    dir: PathBuf,
+}
+
+/// Temp files older than this are dead by construction (writers rename
+/// within milliseconds of creating them) and are swept on `open`.
+const STALE_TMP_AGE: std::time::Duration = std::time::Duration::from_secs(3600);
+
+impl DiskStore {
+    /// Open (creating if needed) a store at `dir`. Sweeps temp files
+    /// orphaned by crashed writers (killed between write and rename) so
+    /// a long-lived shared cache dir cannot accumulate them; recent
+    /// temps are left alone — they may belong to a live writer.
+    pub fn open(dir: &Path) -> anyhow::Result<DiskStore> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating cache dir {}: {e}", dir.display()))?;
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            let now = std::time::SystemTime::now();
+            for entry in entries.filter_map(|e| e.ok()) {
+                if !entry.file_name().to_string_lossy().starts_with(".tmp-") {
+                    continue;
+                }
+                let stale = entry
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| now.duration_since(t).ok())
+                    .is_some_and(|age| age > STALE_TMP_AGE);
+                if stale {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        Ok(DiskStore { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn entry_path(&self, fp: Fingerprint) -> PathBuf {
+        self.dir.join(format!("{fp}.sched"))
+    }
+
+    /// Load the entry for `fp`; any unreadable/corrupt/stale/mismatched
+    /// file is a miss (`None`), never an error.
+    pub fn load(&self, fp: Fingerprint) -> Option<CachedSchedule> {
+        let bytes = std::fs::read(self.entry_path(fp)).ok()?;
+        decode_entry(&bytes, fp)
+    }
+
+    /// Persist the entry for `fp` (best effort: write to a unique temp
+    /// file, atomic rename into place; errors are swallowed).
+    pub fn store(&self, fp: Fingerprint, cached: &CachedSchedule) {
+        let bytes = encode_entry(fp, cached);
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        if std::fs::write(&tmp, &bytes).is_err()
+            || std::fs::rename(&tmp, self.entry_path(fp)).is_err()
+        {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
+    /// Number of (plausible) entries currently in the store directory.
+    pub fn len(&self) -> usize {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| e.path().extension().is_some_and(|x| x == "sched"))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x1000_0000_01b3))
+}
+
+/// Encode a full store entry (header + payload) for `fp`.
+pub fn encode_entry(fp: Fingerprint, cached: &CachedSchedule) -> Vec<u8> {
+    let payload = encode_schedule(&cached.schedule);
+    let mut out = Vec::with_capacity(payload.len() + 48);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&fp.0.to_le_bytes());
+    out.extend_from_slice(&cached.seconds.to_bits().to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode a store entry, verifying it belongs to `expect`. `None` on any
+/// corruption, version mismatch, or fingerprint mismatch.
+pub fn decode_entry(bytes: &[u8], expect: Fingerprint) -> Option<CachedSchedule> {
+    let mut r = Reader { buf: bytes };
+    if r.take(MAGIC.len())? != MAGIC {
+        return None;
+    }
+    if r.u32()? != FORMAT_VERSION {
+        return None;
+    }
+    if r.u128()? != expect.0 {
+        return None;
+    }
+    let seconds = r.f64()?;
+    let len = r.len()?;
+    let hash = r.u64()?;
+    let payload = r.take(len)?;
+    if !r.buf.is_empty() || fnv64(payload) != hash {
+        return None;
+    }
+    let schedule = decode_schedule(payload)?;
+    Some(CachedSchedule { schedule: std::sync::Arc::new(schedule), seconds })
+}
+
+fn encode_schedule(s: &Schedule) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + s.tasks.len() * 40);
+    out.push(algo_tag(s.algorithm) as u8);
+    out.push(policy_tag(s.policy) as u8);
+    out.push(s.valid as u8);
+    out.extend_from_slice(&s.makespan.to_bits().to_le_bytes());
+    out.extend_from_slice(&(s.rank_order.len() as u64).to_le_bytes());
+    for &v in &s.rank_order {
+        out.extend_from_slice(&(v as u64).to_le_bytes());
+    }
+    out.extend_from_slice(&(s.tasks.len() as u64).to_le_bytes());
+    for t in &s.tasks {
+        out.extend_from_slice(&(t.proc as u64).to_le_bytes());
+        out.extend_from_slice(&t.start.to_bits().to_le_bytes());
+        out.extend_from_slice(&t.finish.to_bits().to_le_bytes());
+        out.push(t.res_nonneg as u8);
+        out.extend_from_slice(&(t.evicted.len() as u64).to_le_bytes());
+        for &e in &t.evicted {
+            out.extend_from_slice(&(e as u64).to_le_bytes());
+        }
+    }
+    out.extend_from_slice(&(s.failures.len() as u64).to_le_bytes());
+    for f in &s.failures {
+        match f {
+            Failure::OutOfMemory { task } => {
+                out.push(0);
+                out.extend_from_slice(&(*task as u64).to_le_bytes());
+                out.extend_from_slice(&0u64.to_le_bytes());
+            }
+            Failure::Overcommit { task, proc } => {
+                out.push(1);
+                out.extend_from_slice(&(*task as u64).to_le_bytes());
+                out.extend_from_slice(&(*proc as u64).to_le_bytes());
+            }
+        }
+    }
+    out.extend_from_slice(&(s.mem_peak_frac.len() as u64).to_le_bytes());
+    for &f in &s.mem_peak_frac {
+        out.extend_from_slice(&f.to_bits().to_le_bytes());
+    }
+    out
+}
+
+fn decode_schedule(payload: &[u8]) -> Option<Schedule> {
+    let mut r = Reader { buf: payload };
+    let algorithm = algo_from_tag(r.u8()? as u64)?;
+    let policy = policy_from_tag(r.u8()? as u64)?;
+    let valid = r.bool()?;
+    let makespan = r.f64()?;
+    let n = r.checked_len(8)?;
+    let mut rank_order = Vec::with_capacity(n);
+    for _ in 0..n {
+        rank_order.push(r.len()?);
+    }
+    let n = r.checked_len(33)?; // fixed part of one task record
+    let mut tasks = Vec::with_capacity(n);
+    for _ in 0..n {
+        let proc = r.len()?;
+        let start = r.f64()?;
+        let finish = r.f64()?;
+        let res_nonneg = r.bool()?;
+        let ne = r.checked_len(8)?;
+        let mut evicted = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            evicted.push(r.len()?);
+        }
+        tasks.push(TaskSchedule { proc, start, finish, evicted, res_nonneg });
+    }
+    let n = r.checked_len(17)?;
+    let mut failures = Vec::with_capacity(n);
+    for _ in 0..n {
+        let tag = r.u8()?;
+        let task = r.len()?;
+        let proc = r.len()?;
+        failures.push(match tag {
+            0 => Failure::OutOfMemory { task },
+            1 => Failure::Overcommit { task, proc },
+            _ => return None,
+        });
+    }
+    let n = r.checked_len(8)?;
+    let mut mem_peak_frac = Vec::with_capacity(n);
+    for _ in 0..n {
+        mem_peak_frac.push(r.f64()?);
+    }
+    if !r.buf.is_empty() {
+        return None; // trailing garbage
+    }
+    Some(Schedule { algorithm, policy, rank_order, tasks, valid, failures, makespan, mem_peak_frac })
+}
+
+/// Bounds-checked little-endian cursor; every accessor returns `None`
+/// past the end, so decoding corrupt bytes can only miss, never panic.
+struct Reader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.buf.len() < n {
+            return None;
+        }
+        let (head, tail) = self.buf.split_at(n);
+        self.buf = tail;
+        Some(head)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Option<bool> {
+        match self.u8()? {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None, // strictness helps reject garbage early
+        }
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn u128(&mut self) -> Option<u128> {
+        Some(u128::from_le_bytes(self.take(16)?.try_into().ok()?))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+
+    /// A u64 that must fit `usize`.
+    fn len(&mut self) -> Option<usize> {
+        usize::try_from(self.u64()?).ok()
+    }
+
+    /// A length field for records of at least `elem_bytes` each: rejected
+    /// (miss) when it exceeds the remaining bytes, so corrupt lengths
+    /// cannot trigger huge allocations.
+    fn checked_len(&mut self, elem_bytes: usize) -> Option<usize> {
+        let n = self.len()?;
+        if n > self.buf.len() / elem_bytes.max(1) {
+            return None;
+        }
+        Some(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::small_cluster;
+    use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+    use crate::service::fingerprint::schedule_fingerprint;
+    use crate::workflow::WorkflowBuilder;
+    use std::sync::Arc;
+
+    fn sample_cached() -> (Fingerprint, CachedSchedule) {
+        let mut b = WorkflowBuilder::new("disk");
+        let a = b.task("a", "t", 5.0, 10.0);
+        let c = b.task("c", "t", 7.0, 20.0);
+        let d = b.task("d", "t", 2.0, 15.0);
+        b.edge(a, c, 3.0);
+        b.edge(a, d, 4.0);
+        let wf = b.build().unwrap();
+        let cluster = small_cluster();
+        let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        (fp, CachedSchedule { schedule: Arc::new(s), seconds: 0.125 })
+    }
+
+    fn schedules_equal(a: &Schedule, b: &Schedule) {
+        assert_eq!(a.algorithm, b.algorithm);
+        assert_eq!(a.policy, b.policy);
+        assert_eq!(a.valid, b.valid);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.rank_order, b.rank_order);
+        assert_eq!(a.failures, b.failures);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.proc, y.proc);
+            assert_eq!(x.start.to_bits(), y.start.to_bits());
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+            assert_eq!(x.evicted, y.evicted);
+            assert_eq!(x.res_nonneg, y.res_nonneg);
+        }
+        assert_eq!(
+            a.mem_peak_frac.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            b.mem_peak_frac.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn entry_round_trips_bit_exactly() {
+        let (fp, cached) = sample_cached();
+        let bytes = encode_entry(fp, &cached);
+        let back = decode_entry(&bytes, fp).expect("valid entry decodes");
+        assert_eq!(back.seconds, cached.seconds);
+        schedules_equal(&back.schedule, &cached.schedule);
+    }
+
+    #[test]
+    fn wrong_fingerprint_is_a_miss() {
+        let (fp, cached) = sample_cached();
+        let bytes = encode_entry(fp, &cached);
+        assert!(decode_entry(&bytes, Fingerprint(fp.0 ^ 1)).is_none());
+    }
+
+    #[test]
+    fn wrong_version_is_a_miss() {
+        let (fp, cached) = sample_cached();
+        let mut bytes = encode_entry(fp, &cached);
+        bytes[8] = bytes[8].wrapping_add(1); // first version byte
+        assert!(decode_entry(&bytes, fp).is_none());
+    }
+
+    #[test]
+    fn every_truncation_is_a_miss_not_a_panic() {
+        let (fp, cached) = sample_cached();
+        let bytes = encode_entry(fp, &cached);
+        for cut in 0..bytes.len() {
+            assert!(decode_entry(&bytes[..cut], fp).is_none(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn flipped_payload_bytes_are_a_miss() {
+        let (fp, cached) = sample_cached();
+        let bytes = encode_entry(fp, &cached);
+        // Flip every payload byte in turn; the hash (or a strict field
+        // check) must reject each mutant.
+        let payload_start = 8 + 4 + 16 + 8 + 8 + 8;
+        for i in payload_start..bytes.len() {
+            let mut mutant = bytes.clone();
+            mutant[i] ^= 0xa5;
+            assert!(decode_entry(&mutant, fp).is_none(), "flip at {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_length_fields_do_not_allocate() {
+        let (fp, cached) = sample_cached();
+        // Hand-build an entry whose payload claims 2^60 rank entries but
+        // passes the hash check: decode must reject via checked_len.
+        let mut payload = vec![
+            algo_tag(Algorithm::HeftmBl) as u8,
+            policy_tag(EvictionPolicy::LargestFirst) as u8,
+            1,
+        ];
+        payload.extend_from_slice(&1.0f64.to_bits().to_le_bytes());
+        payload.extend_from_slice(&(1u64 << 60).to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&fp.0.to_le_bytes());
+        bytes.extend_from_slice(&cached.seconds.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&fnv64(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        assert!(decode_entry(&bytes, fp).is_none());
+    }
+
+    #[test]
+    fn store_round_trips_through_files() {
+        let dir = std::env::temp_dir().join(format!("memsched_disk_rt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DiskStore::open(&dir).unwrap();
+        let (fp, cached) = sample_cached();
+        assert!(store.load(fp).is_none(), "empty store misses");
+        store.store(fp, &cached);
+        assert_eq!(store.len(), 1);
+        let back = store.load(fp).expect("stored entry loads");
+        schedules_equal(&back.schedule, &cached.schedule);
+        // A renamed entry (collision-shaped: valid bytes, wrong name)
+        // must miss via the embedded fingerprint.
+        let other = Fingerprint(fp.0 ^ 7);
+        std::fs::copy(dir.join(format!("{fp}.sched")), dir.join(format!("{other}.sched"))).unwrap();
+        assert!(store.load(other).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn garbage_files_miss_without_panicking() {
+        let dir = std::env::temp_dir().join(format!("memsched_disk_garbage_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DiskStore::open(&dir).unwrap();
+        let (fp, _) = sample_cached();
+        for garbage in [&b""[..], b"x", b"MEMSCHEDMEMSCHEDMEMSCHED", &[0u8; 4096]] {
+            std::fs::write(dir.join(format!("{fp}.sched")), garbage).unwrap();
+            assert!(store.load(fp).is_none());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tag_round_trips_match_fingerprint_tags() {
+        for algo in Algorithm::all() {
+            assert_eq!(algo_from_tag(algo_tag(algo)), Some(algo));
+        }
+        for policy in [EvictionPolicy::LargestFirst, EvictionPolicy::SmallestFirst] {
+            assert_eq!(policy_from_tag(policy_tag(policy)), Some(policy));
+        }
+        assert_eq!(algo_from_tag(99), None);
+        assert_eq!(policy_from_tag(99), None);
+    }
+}

@@ -88,7 +88,9 @@ impl Hasher {
     }
 }
 
-fn algo_tag(algo: Algorithm) -> u64 {
+/// Canonical numeric tag of an algorithm (shared by the fingerprint and
+/// the disk-cache codec so the two encodings can never disagree).
+pub(crate) fn algo_tag(algo: Algorithm) -> u64 {
     match algo {
         Algorithm::Heft => 0,
         Algorithm::HeftmBl => 1,
@@ -97,11 +99,24 @@ fn algo_tag(algo: Algorithm) -> u64 {
     }
 }
 
-fn policy_tag(policy: EvictionPolicy) -> u64 {
+/// Inverse of [`algo_tag`]; `None` for unknown tags (corrupt files).
+pub(crate) fn algo_from_tag(tag: u64) -> Option<Algorithm> {
+    Algorithm::all().into_iter().find(|&a| algo_tag(a) == tag)
+}
+
+/// Canonical numeric tag of an eviction policy (see [`algo_tag`]).
+pub(crate) fn policy_tag(policy: EvictionPolicy) -> u64 {
     match policy {
         EvictionPolicy::LargestFirst => 0,
         EvictionPolicy::SmallestFirst => 1,
     }
+}
+
+/// Inverse of [`policy_tag`]; `None` for unknown tags.
+pub(crate) fn policy_from_tag(tag: u64) -> Option<EvictionPolicy> {
+    [EvictionPolicy::LargestFirst, EvictionPolicy::SmallestFirst]
+        .into_iter()
+        .find(|&p| policy_tag(p) == tag)
 }
 
 /// Fingerprint of a *schedule computation*: workflow + platform + algo

@@ -120,6 +120,93 @@ impl Job {
     }
 }
 
+/// A replay sweep: one static-scheduling triple (workflow, cluster,
+/// algorithm config) replayed under many deviation points.
+///
+/// The service computes (or cache-hits) the static schedule **once** per
+/// sweep and fans the replay points across the worker pool
+/// ([`run_replay_sweeps_streaming`]); the result stream is byte-identical
+/// to submitting [`flatten`](ReplaySweep::flatten)'s per-point jobs
+/// through the plain batch API — the sweep kind just amortizes the
+/// workflow materialization and schedule fingerprinting, and guarantees
+/// the one-schedule-many-replays execution shape.
+///
+/// [`run_replay_sweeps_streaming`]: super::SchedulingService::run_replay_sweeps_streaming
+#[derive(Debug, Clone)]
+pub struct ReplaySweep {
+    pub source: JobSource,
+    pub cluster: ClusterSpec,
+    pub algo: Algorithm,
+    pub policy: EvictionPolicy,
+    /// Replay points, in emission order. An empty vector yields exactly
+    /// one static (no-simulation) result, like a sim-less [`Job`].
+    pub points: Vec<SimJob>,
+}
+
+impl ReplaySweep {
+    /// A sweep with the default algorithm configuration and no points.
+    pub fn new(source: JobSource, cluster: ClusterSpec) -> ReplaySweep {
+        ReplaySweep {
+            source,
+            cluster,
+            algo: Algorithm::HeftmBl,
+            policy: EvictionPolicy::LargestFirst,
+            points: Vec::new(),
+        }
+    }
+
+    /// Wrap a plain job as a one-point (or zero-point) sweep.
+    pub fn from_job(job: Job) -> ReplaySweep {
+        ReplaySweep {
+            source: job.source,
+            cluster: job.cluster,
+            algo: job.algo,
+            policy: job.policy,
+            points: job.sim.into_iter().collect(),
+        }
+    }
+
+    pub fn with_algo(mut self, algo: Algorithm) -> ReplaySweep {
+        self.algo = algo;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: EvictionPolicy) -> ReplaySweep {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_points(mut self, points: Vec<SimJob>) -> ReplaySweep {
+        self.points = points;
+        self
+    }
+
+    /// Number of results this sweep emits.
+    pub fn num_results(&self) -> usize {
+        self.points.len().max(1)
+    }
+
+    /// The equivalent per-point job list (the sweep's semantic ground
+    /// truth: the service's sweep path must emit byte-identical results
+    /// for this flattening).
+    pub fn flatten(&self) -> Vec<Job> {
+        let sims: Vec<Option<SimJob>> = if self.points.is_empty() {
+            vec![None]
+        } else {
+            self.points.iter().copied().map(Some).collect()
+        };
+        sims.into_iter()
+            .map(|sim| Job {
+                source: self.source.clone(),
+                cluster: self.cluster.clone(),
+                algo: self.algo,
+                policy: self.policy,
+                sim,
+            })
+            .collect()
+    }
+}
+
 /// Simulation outcome summary (deterministic fields only).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
@@ -203,14 +290,7 @@ impl JobResult {
             fields.push((
                 "sim",
                 obj(vec![
-                    (
-                        "mode",
-                        match sim.mode {
-                            SimMode::FollowStatic => "static",
-                            SimMode::Recompute => "recompute",
-                        }
-                        .into(),
-                    ),
+                    ("mode", sim.mode.label().into()),
                     ("completed", sim.completed.into()),
                     ("makespan", sim.makespan.into()),
                     ("recomputations", sim.recomputations.into()),
@@ -269,6 +349,35 @@ mod tests {
     fn error_results_are_minimal() {
         let r = JobResult::failed(7, "boom".into());
         assert_eq!(r.to_jsonl(), "{\"id\":7,\"error\":\"boom\"}");
+    }
+
+    #[test]
+    fn sweep_flattening_expands_points_in_order() {
+        let source = JobSource::File(PathBuf::from("/tmp/wf.json"));
+        let cluster = ClusterSpec::Named("default".into());
+        let sweep = ReplaySweep::new(source.clone(), cluster.clone())
+            .with_algo(Algorithm::HeftmMm)
+            .with_points(vec![
+                SimJob { mode: SimMode::Recompute, sigma: 0.1, seed: 7 },
+                SimJob { mode: SimMode::FollowStatic, sigma: 0.3, seed: 7 },
+            ]);
+        assert_eq!(sweep.num_results(), 2);
+        let flat = sweep.flatten();
+        assert_eq!(flat.len(), 2);
+        assert!(flat.iter().all(|j| j.algo == Algorithm::HeftmMm));
+        assert_eq!(flat[0].sim.unwrap().sigma, 0.1);
+        assert_eq!(flat[1].sim.unwrap().mode, SimMode::FollowStatic);
+        // Point-less sweeps behave like a single static job.
+        let empty = ReplaySweep::new(source, cluster);
+        assert_eq!(empty.num_results(), 1);
+        let flat = empty.flatten();
+        assert_eq!(flat.len(), 1);
+        assert!(flat[0].sim.is_none());
+        // A plain job round-trips through the sweep form.
+        let job = flat[0].clone().with_sim(SimJob { mode: SimMode::Recompute, sigma: 0.2, seed: 1 });
+        let back = ReplaySweep::from_job(job.clone()).flatten();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].sim, job.sim);
     }
 
     #[test]

@@ -29,8 +29,24 @@
 //! [`with_score_threads`](SchedulingService::with_score_threads) attaches
 //! a shared [`pool::ScorePool`] that parallelizes the *inside* of each
 //! schedule computation (per-processor tentative scoring — the lever for
-//! one huge workflow that would otherwise pin a single core). Both axes
-//! preserve byte-identical output.
+//! one huge workflow that would otherwise pin a single core;
+//! [`ScoreThreadSpec::Auto`] engages it per schedule only above the
+//! measured crossover). Both axes preserve byte-identical output.
+//!
+//! On top of the per-job batch API sits the **replay engine**
+//! ([`SchedulingService::run_replay_sweeps_streaming`]): a
+//! [`ReplaySweep`] carries one `(workflow, cluster, algo)` triple plus a
+//! vector of `(sigma, seed, mode)` replay points; the schedule is
+//! materialized, fingerprinted, and computed once, and the replay points
+//! fan out across the pool — the execution shape behind multi-sigma
+//! deviation sweeps (`--sigmas`). Its output is byte-identical to
+//! flattening each sweep into per-point jobs.
+//!
+//! The schedule cache optionally layers a **disk-backed store**
+//! ([`disk`], `--cache-dir`): content-addressed files keyed by the
+//! 128-bit schedule fingerprint, atomic rename on write, corrupt/stale
+//! entries degrading to a recompute — so repeated CLI invocations and CI
+//! runs share schedules across processes.
 //!
 //! The experiments harness submits its Quick/Full suite grids through
 //! this service (`experiments::run_static_suite` /
@@ -38,22 +54,84 @@
 //! JSONL-in/JSONL-out interface.
 
 pub mod cache;
+pub mod disk;
 pub mod fingerprint;
 pub mod job;
 pub mod pool;
 
 pub use cache::{CacheStats, CachedSchedule, OnceMap, ScheduleCache};
+pub use disk::DiskStore;
 pub use fingerprint::Fingerprint;
-pub use job::{ClusterSpec, Job, JobResult, JobSource, SimJob, SimResult};
+pub use job::{ClusterSpec, Job, JobResult, JobSource, ReplaySweep, SimJob, SimResult};
 pub use pool::ScorePool;
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use crate::platform::Cluster;
 use crate::scheduler::compute_schedule_with;
+use crate::ser::json::{obj, Value};
 use crate::simulator::{simulate, DeviationModel, SimConfig};
 use crate::workflow::Workflow;
+
+/// How many intra-schedule scoring threads to apply (the
+/// `--score-threads` knob; parsed from `auto` or a number).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreThreadSpec {
+    /// Exactly this many threads (1 ⇒ serial scoring).
+    Fixed(usize),
+    /// Decide per schedule: serial below the measured crossover
+    /// ([`scheduler::auto_score_threads`](crate::scheduler::auto_score_threads)),
+    /// all cores above it. Schedules are byte-identical either way.
+    Auto,
+}
+
+impl Default for ScoreThreadSpec {
+    fn default() -> Self {
+        ScoreThreadSpec::Fixed(1)
+    }
+}
+
+impl std::str::FromStr for ScoreThreadSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(ScoreThreadSpec::Auto);
+        }
+        s.parse::<usize>()
+            .map(|n| ScoreThreadSpec::Fixed(n.max(1)))
+            .map_err(|_| anyhow::anyhow!("invalid score-thread spec `{s}` (expected a number or `auto`)"))
+    }
+}
+
+/// Declarative service configuration shared by the CLI commands and the
+/// suite runners: worker count, scoring threads, and cache layers.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceConfig {
+    /// Batch worker threads (0 ⇒ all cores).
+    pub workers: usize,
+    pub score: ScoreThreadSpec,
+    /// LRU byte cap on the in-memory schedule cache (`None` = unbounded).
+    pub cache_bytes: Option<usize>,
+    /// Disk-backed schedule cache directory (`--cache-dir`).
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl ServiceConfig {
+    /// Build a service from this configuration (fails only if the cache
+    /// directory cannot be created).
+    pub fn build(&self) -> anyhow::Result<SchedulingService> {
+        let workers = if self.workers == 0 { pool::default_workers() } else { self.workers };
+        let mut svc = SchedulingService::new(workers)
+            .with_score_spec(self.score)
+            .with_cache_bytes(self.cache_bytes);
+        if let Some(dir) = &self.cache_dir {
+            svc = svc.with_cache_dir(dir)?;
+        }
+        Ok(svc)
+    }
+}
 
 /// Compute-once memo over a generic [`OnceMap`]: per key, one cell so
 /// concurrent requesters block on a single initializer instead of
@@ -97,7 +175,16 @@ pub struct SchedulingService {
     workers: usize,
     /// Shared intra-schedule scoring pool (None ⇒ serial scoring).
     score_pool: Option<ScorePool>,
+    /// Auto mode: gate the pool per schedule via the fan-in crossover
+    /// heuristic ([`crate::scheduler::auto_score_threads`]).
+    score_auto: bool,
     schedules: ScheduleCache,
+    /// Cache configuration retained so the two cache builders
+    /// ([`with_cache_bytes`](SchedulingService::with_cache_bytes),
+    /// [`with_cache_dir`](SchedulingService::with_cache_dir)) compose in
+    /// either order.
+    cache_bytes: Option<usize>,
+    cache_disk: Option<Arc<DiskStore>>,
     workflows: Memo<Arc<Workflow>>,
     clusters: Memo<Arc<Cluster>>,
 }
@@ -109,7 +196,10 @@ impl Default for SchedulingService {
     }
 }
 
-/// Phase-1 product: everything execution needs, fingerprinted.
+/// Phase-1 product: everything execution needs, fingerprinted. Cloning
+/// is cheap (two `Arc`s + two `Copy` fingerprints) — the replay-sweep
+/// path clones one prepared sweep per replay point.
+#[derive(Clone)]
 struct Prepared {
     wf: Arc<Workflow>,
     cluster: Arc<Cluster>,
@@ -135,7 +225,10 @@ impl SchedulingService {
         SchedulingService {
             workers: workers.max(1),
             score_pool: None,
+            score_auto: false,
             schedules: ScheduleCache::new(),
+            cache_bytes: None,
+            cache_disk: None,
             workflows: Memo::default(),
             clusters: Memo::default(),
         }
@@ -152,7 +245,25 @@ impl SchedulingService {
     /// byte-identical for any thread count.
     pub fn with_score_threads(mut self, threads: usize) -> SchedulingService {
         self.score_pool = if threads > 1 { Some(ScorePool::new(threads)) } else { None };
+        self.score_auto = false;
         self
+    }
+
+    /// Apply a [`ScoreThreadSpec`]: `Fixed(n)` behaves like
+    /// [`with_score_threads`](SchedulingService::with_score_threads);
+    /// `Auto` sizes the pool to all cores but engages it per schedule
+    /// only above the measured crossover
+    /// ([`crate::scheduler::auto_score_threads`]) — small instances keep
+    /// the (faster) serial path. Byte-identical output either way.
+    pub fn with_score_spec(self, spec: ScoreThreadSpec) -> SchedulingService {
+        match spec {
+            ScoreThreadSpec::Fixed(n) => self.with_score_threads(n),
+            ScoreThreadSpec::Auto => {
+                let mut svc = self.with_score_threads(pool::default_workers());
+                svc.score_auto = true;
+                svc
+            }
+        }
     }
 
     /// Cap the schedule cache at approximately `cap_bytes` resident
@@ -169,8 +280,22 @@ impl SchedulingService {
     /// runs. Single-batch output is always fully deterministic; leave
     /// the cap unbounded where cross-batch flag stability matters.
     pub fn with_cache_bytes(mut self, cap_bytes: Option<usize>) -> SchedulingService {
-        self.schedules = ScheduleCache::with_byte_cap(cap_bytes);
+        self.cache_bytes = cap_bytes;
+        self.schedules = ScheduleCache::with_config(self.cache_bytes, self.cache_disk.clone());
         self
+    }
+
+    /// Attach a disk-backed schedule-cache layer at `dir` (`--cache-dir`):
+    /// memory misses load content-addressed entries from disk, fresh
+    /// computations are persisted (atomic rename), so repeated CLI
+    /// invocations and concurrent processes share schedules. Corrupt or
+    /// stale entries degrade to a recompute ([`disk`]). Replaces the
+    /// cache, so configure before the first batch. Fails only if `dir`
+    /// cannot be created.
+    pub fn with_cache_dir(mut self, dir: &Path) -> anyhow::Result<SchedulingService> {
+        self.cache_disk = Some(Arc::new(DiskStore::open(dir)?));
+        self.schedules = ScheduleCache::with_config(self.cache_bytes, self.cache_disk.clone());
+        Ok(self)
     }
 
     pub fn workers(&self) -> usize {
@@ -185,6 +310,34 @@ impl SchedulingService {
     /// Schedule-cache counters (lookups / computed / hits).
     pub fn cache_stats(&self) -> CacheStats {
         self.schedules.stats()
+    }
+
+    /// The run-summary record surfacing the cache-hit / schedule-reuse
+    /// counters as one JSONL object. Emitters print it on **stderr** (or
+    /// a side file) — never into the result stream, whose bytes must not
+    /// depend on cache residency: a warm `--cache-dir` run reports
+    /// `schedules_computed: 0` here while its JSONL results stay
+    /// byte-identical to the cold run's.
+    pub fn summary_json(&self, jobs: usize, result_cache_hits: usize, failed: usize) -> Value {
+        let stats = self.cache_stats();
+        obj(vec![(
+            "summary",
+            obj(vec![
+                ("jobs", jobs.into()),
+                ("failed", failed.into()),
+                ("result_cache_hits", result_cache_hits.into()),
+                ("schedule_requests", stats.lookups.into()),
+                ("schedules_computed", stats.computed.into()),
+                ("schedule_reuse_hits", stats.hits().into()),
+                ("disk_cache_hits", stats.disk_hits.into()),
+                ("workers", self.workers.into()),
+                // Under `auto`, `score_threads` is the pool *size*; the
+                // per-schedule crossover gate may still have scored
+                // every schedule serially — `score_mode` disambiguates.
+                ("score_threads", self.score_threads().into()),
+                ("score_mode", if self.score_auto { "auto" } else { "fixed" }.into()),
+            ]),
+        )])
     }
 
     /// Memoized workflow materialization (one build per distinct source,
@@ -206,27 +359,55 @@ impl SchedulingService {
         }
     }
 
+    /// Materialize + fingerprint one schedule computation (shared by the
+    /// per-job and per-sweep preparation paths; the sweep path calls it
+    /// once per sweep instead of once per replay point).
+    fn prepare_schedule(
+        &self,
+        source: &JobSource,
+        cluster: &ClusterSpec,
+        algo: crate::scheduler::Algorithm,
+        policy: crate::scheduler::EvictionPolicy,
+    ) -> Result<(Arc<Workflow>, Arc<Cluster>, Fingerprint), String> {
+        let wf = self.workflow(source)?;
+        let cluster = self.cluster(cluster)?;
+        let sched_fp = fingerprint::schedule_fingerprint(&wf, &cluster, algo, policy);
+        Ok((wf, cluster, sched_fp))
+    }
+
     fn prepare(&self, job: &Job) -> Result<Prepared, String> {
-        let wf = self.workflow(&job.source)?;
-        let cluster = self.cluster(&job.cluster)?;
-        let sched_fp = fingerprint::schedule_fingerprint(&wf, &cluster, job.algo, job.policy);
+        let (wf, cluster, sched_fp) =
+            self.prepare_schedule(&job.source, &job.cluster, job.algo, job.policy)?;
         let job_fp = fingerprint::job_fingerprint(sched_fp, job.sim.as_ref());
         Ok(Prepared { wf, cluster, sched_fp, job_fp })
     }
 
     fn execute(&self, job: &Job, prep: &Prepared) -> Executed {
-        let cached = self.schedules.get_or_compute(prep.sched_fp, || {
-            let t0 = std::time::Instant::now();
-            let s = compute_schedule_with(
-                &prep.wf,
-                &prep.cluster,
-                job.algo,
-                job.policy,
-                self.score_pool.as_ref(),
-            );
-            let seconds = t0.elapsed().as_secs_f64();
-            (s, seconds)
-        });
+        // Auto mode: small instances skip the pool (serial scoring wins
+        // below the crossover); schedules are byte-identical either way.
+        let score_pool = if self.score_auto
+            && crate::scheduler::auto_score_threads(&prep.wf, &prep.cluster) == 1
+        {
+            None
+        } else {
+            self.score_pool.as_ref()
+        };
+        let cached = self.schedules.get_or_compute_checked(
+            prep.sched_fp,
+            Some(prep.wf.num_tasks()),
+            || {
+                let t0 = std::time::Instant::now();
+                let s = compute_schedule_with(
+                    &prep.wf,
+                    &prep.cluster,
+                    job.algo,
+                    job.policy,
+                    score_pool,
+                );
+                let seconds = t0.elapsed().as_secs_f64();
+                (s, seconds)
+            },
+        );
         let schedule = &cached.schedule;
         let sim = job.sim.map(|sj| {
             if !schedule.valid {
@@ -284,21 +465,7 @@ impl SchedulingService {
         // Give previously-failed sources a fresh chance (see `Memo`).
         self.workflows.prune_errors();
         self.clusters.prune_errors();
-
-        // Phase 0: pre-materialize unique sources in parallel. Without
-        // this, a suite-style grid (the same workload under several
-        // algorithms, jobs adjacent in submission order) lands one job
-        // per worker and they all block on a single memo cell — phase 1
-        // would degrade to the serial sum of the workflow builds.
-        let mut seen = std::collections::HashSet::new();
-        let unique_sources: Vec<JobSource> = jobs
-            .iter()
-            .filter(|j| seen.insert(j.source.key()))
-            .map(|j| j.source.clone())
-            .collect();
-        pool::run_ordered(unique_sources, self.workers, |_, source| {
-            let _ = self.workflow(&source);
-        });
+        self.prematerialize(jobs.iter().map(|j| j.source.clone()));
 
         // Phase 1: materialize + fingerprint.
         let prepared: Vec<(Job, Result<Prepared, String>)> =
@@ -307,6 +474,95 @@ impl SchedulingService {
                 (job, prep)
             });
 
+        self.stream_prepared(prepared, sink);
+    }
+
+    /// Execute a batch of replay sweeps; results come back flattened in
+    /// submission order (sweep-major, replay-point-minor), buffered.
+    pub fn run_replay_sweeps(&self, sweeps: Vec<ReplaySweep>) -> Vec<JobResult> {
+        let mut out = Vec::with_capacity(sweeps.iter().map(ReplaySweep::num_results).sum());
+        self.run_replay_sweeps_streaming(sweeps, |r| out.push(r));
+        out
+    }
+
+    /// The replay engine: each sweep's workflow is materialized and its
+    /// schedule fingerprinted **once**, the static schedule is computed
+    /// (or cache-/disk-hit) once per distinct fingerprint, and the replay
+    /// points fan out across the worker pool. Results stream to `sink`
+    /// exactly like [`run_batch_streaming`]: flattened in submission
+    /// order (sweep-major, point-minor, ids counting the flattened
+    /// stream) and **byte-identical** to submitting
+    /// [`ReplaySweep::flatten`]'s per-point jobs through the plain batch
+    /// API — the two paths share phases 2–4, so the guarantee holds by
+    /// construction.
+    ///
+    /// [`run_batch_streaming`]: SchedulingService::run_batch_streaming
+    pub fn run_replay_sweeps_streaming(
+        &self,
+        sweeps: Vec<ReplaySweep>,
+        sink: impl FnMut(JobResult) + Send,
+    ) {
+        self.workflows.prune_errors();
+        self.clusters.prune_errors();
+        self.prematerialize(sweeps.iter().map(|s| s.source.clone()));
+
+        // Phase 1, sweep-grained: one materialize + schedule fingerprint
+        // per sweep, not per replay point — on a k-point sweep over an
+        // n-task workflow this saves k−1 O(n) fingerprint walks.
+        type SweepPrep = (Arc<Workflow>, Arc<Cluster>, Fingerprint);
+        let sweep_prepared: Vec<(ReplaySweep, Result<SweepPrep, String>)> =
+            pool::run_ordered(sweeps, self.workers, |_, sweep| {
+                let prep =
+                    self.prepare_schedule(&sweep.source, &sweep.cluster, sweep.algo, sweep.policy);
+                (sweep, prep)
+            });
+
+        // Expand each sweep into its per-point jobs, deriving the cheap
+        // per-point job fingerprints from the sweep's schedule
+        // fingerprint. The expansion is exactly `ReplaySweep::flatten`.
+        let mut prepared: Vec<(Job, Result<Prepared, String>)> =
+            Vec::with_capacity(sweep_prepared.iter().map(|(s, _)| s.num_results()).sum());
+        for (sweep, prep) in &sweep_prepared {
+            for job in sweep.flatten() {
+                let p = match prep {
+                    Err(e) => Err(e.clone()),
+                    Ok((wf, cluster, sched_fp)) => Ok(Prepared {
+                        wf: wf.clone(),
+                        cluster: cluster.clone(),
+                        sched_fp: *sched_fp,
+                        job_fp: fingerprint::job_fingerprint(*sched_fp, job.sim.as_ref()),
+                    }),
+                };
+                prepared.push((job, p));
+            }
+        }
+
+        self.stream_prepared(prepared, sink);
+    }
+
+    /// Phase 0: pre-materialize unique sources in parallel. Without
+    /// this, a suite-style grid (the same workload under several
+    /// algorithms, jobs adjacent in submission order) lands one job
+    /// per worker and they all block on a single memo cell — phase 1
+    /// would degrade to the serial sum of the workflow builds.
+    fn prematerialize(&self, sources: impl Iterator<Item = JobSource>) {
+        let mut seen = std::collections::HashSet::new();
+        let unique_sources: Vec<JobSource> = sources.filter(|s| seen.insert(s.key())).collect();
+        pool::run_ordered(unique_sources, self.workers, |_, source| {
+            let _ = self.workflow(&source);
+        });
+    }
+
+    /// Phases 2–4, shared by the per-job and replay-sweep paths: group,
+    /// execute uniques on the pool, drain the ordered prefix into the
+    /// sink. Everything downstream of here sees only `(Job, Prepared)`
+    /// pairs, which is why the two submission kinds emit byte-identical
+    /// streams for equal flattened inputs.
+    fn stream_prepared(
+        &self,
+        prepared: Vec<(Job, Result<Prepared, String>)>,
+        sink: impl FnMut(JobResult) + Send,
+    ) {
         // Phase 2: deterministic grouping. The lowest-id job of each
         // fingerprint group is the computer; `cache_hit` flags are fixed
         // here, before execution, from (group position, cache state).
@@ -601,6 +857,145 @@ mod tests {
         assert_eq!(scored.score_threads(), 4);
         let r_scored = scored.run_batch(jobs(()));
         assert_eq!(to_jsonl(&r_serial), to_jsonl(&r_scored));
+    }
+
+    #[test]
+    fn replay_sweeps_match_flattened_batch_bytes() {
+        let cluster = Arc::new(small_cluster());
+        let points: Vec<SimJob> = [0.1, 0.3]
+            .into_iter()
+            .flat_map(|sigma| {
+                [SimMode::Recompute, SimMode::FollowStatic]
+                    .into_iter()
+                    .map(move |mode| SimJob { mode, sigma, seed: 9 })
+            })
+            .collect();
+        let mut sweeps = Vec::new();
+        for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
+            sweeps.push(
+                ReplaySweep::new(
+                    JobSource::Generated(WorkloadSpec {
+                        family: "chipseq".into(),
+                        size: None,
+                        input: 1,
+                        seed: 5,
+                    }),
+                    ClusterSpec::Inline(cluster.clone()),
+                )
+                .with_algo(algo)
+                .with_points(points.clone()),
+            );
+        }
+        // A point-less (static) sweep and a failing sweep ride along.
+        sweeps.push(ReplaySweep::new(
+            JobSource::Generated(WorkloadSpec { family: "eager".into(), size: None, input: 0, seed: 5 }),
+            ClusterSpec::Inline(cluster.clone()),
+        ));
+        sweeps.push(ReplaySweep::new(
+            JobSource::Generated(WorkloadSpec { family: "nope".into(), size: None, input: 0, seed: 5 }),
+            ClusterSpec::Inline(cluster.clone()),
+        ));
+
+        let flattened: Vec<Job> = sweeps.iter().flat_map(|s| s.flatten()).collect();
+        let sweep_svc = SchedulingService::new(4);
+        let mut streamed = Vec::new();
+        sweep_svc.run_replay_sweeps_streaming(sweeps.clone(), |r| streamed.push(r));
+        assert_eq!(streamed.len(), flattened.len());
+        assert!(streamed.iter().enumerate().all(|(i, r)| r.id == i), "flattened id order");
+
+        let flat_svc = SchedulingService::new(1);
+        let baseline = flat_svc.run_batch(flattened);
+        assert_eq!(to_jsonl(&streamed), to_jsonl(&baseline), "sweep path must match flat path");
+
+        // The replay engine's core guarantee: one schedule computation
+        // per successful sweep, however many replay points it carries.
+        assert_eq!(sweep_svc.cache_stats().computed, 3);
+        // 2 sweeps × 4 points + 1 static = 9 schedule requests.
+        assert_eq!(sweep_svc.cache_stats().lookups, 9);
+        assert_eq!(sweep_svc.cache_stats().hits(), 6);
+
+        // Buffered variant (fresh service: cache_hit flags are part of
+        // the bytes and depend on pre-batch cache state).
+        let buffered = SchedulingService::new(2).run_replay_sweeps(sweeps);
+        assert_eq!(to_jsonl(&buffered), to_jsonl(&streamed));
+    }
+
+    #[test]
+    fn auto_score_mode_preserves_batch_bytes() {
+        let cluster = Arc::new(small_cluster());
+        let jobs = |_: ()| -> Vec<Job> {
+            Algorithm::all()
+                .into_iter()
+                .map(|algo| spec_job("bacass", 1, algo, &cluster))
+                .collect()
+        };
+        let serial = SchedulingService::new(2).with_score_spec(ScoreThreadSpec::Fixed(1));
+        let auto = SchedulingService::new(2).with_score_spec(ScoreThreadSpec::Auto);
+        assert_eq!(to_jsonl(&serial.run_batch(jobs(()))), to_jsonl(&auto.run_batch(jobs(()))));
+    }
+
+    #[test]
+    fn score_thread_spec_parses() {
+        assert_eq!("auto".parse::<ScoreThreadSpec>().unwrap(), ScoreThreadSpec::Auto);
+        assert_eq!("AUTO".parse::<ScoreThreadSpec>().unwrap(), ScoreThreadSpec::Auto);
+        assert_eq!("4".parse::<ScoreThreadSpec>().unwrap(), ScoreThreadSpec::Fixed(4));
+        assert_eq!("0".parse::<ScoreThreadSpec>().unwrap(), ScoreThreadSpec::Fixed(1));
+        assert!("several".parse::<ScoreThreadSpec>().is_err());
+        assert_eq!(ScoreThreadSpec::default(), ScoreThreadSpec::Fixed(1));
+    }
+
+    #[test]
+    fn disk_cache_dir_shares_schedules_across_services() {
+        let dir = std::env::temp_dir().join(format!("memsched_svc_disk_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cluster = Arc::new(small_cluster());
+        let jobs = |_: ()| -> Vec<Job> {
+            Algorithm::all()
+                .into_iter()
+                .map(|algo| spec_job("methylseq", 0, algo, &cluster))
+                .collect()
+        };
+        let cold = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+        let cold_out = to_jsonl(&cold.run_batch(jobs(())));
+        assert_eq!(cold.cache_stats().computed, 4);
+        assert_eq!(cold.cache_stats().disk_hits, 0);
+
+        // A fresh service ("new process") on the same directory loads
+        // every schedule from disk and emits byte-identical results.
+        let warm = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+        let warm_out = to_jsonl(&warm.run_batch(jobs(())));
+        assert_eq!(warm_out, cold_out, "warm disk cache must not change output bytes");
+        assert_eq!(warm.cache_stats().computed, 0, "warm run computes nothing");
+        assert_eq!(warm.cache_stats().disk_hits, 4);
+
+        // The summary record carries the reuse counters.
+        let summary = warm.summary_json(4, 0, 0);
+        let line = summary.to_string_compact();
+        assert!(line.contains("\"schedules_computed\":0"), "{line}");
+        assert!(line.contains("\"disk_cache_hits\":4"), "{line}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cache_builders_compose_in_either_order() {
+        let dir = std::env::temp_dir().join(format!("memsched_svc_compose_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cluster = Arc::new(small_cluster());
+        let job = spec_job("eager", 1, Algorithm::HeftmBl, &cluster);
+        // bytes-then-dir and dir-then-bytes must both keep the disk layer.
+        let a = SchedulingService::new(1)
+            .with_cache_bytes(Some(1 << 30))
+            .with_cache_dir(&dir)
+            .unwrap();
+        a.run_batch(vec![job.clone()]);
+        let b = SchedulingService::new(1)
+            .with_cache_dir(&dir)
+            .unwrap()
+            .with_cache_bytes(Some(1 << 30));
+        b.run_batch(vec![job]);
+        assert_eq!(b.cache_stats().computed, 0, "disk layer must survive with_cache_bytes");
+        assert_eq!(b.cache_stats().disk_hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

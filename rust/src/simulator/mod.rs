@@ -43,6 +43,16 @@ pub enum SimMode {
     Recompute,
 }
 
+impl SimMode {
+    /// Canonical wire label (accepted back by the `FromStr` impl).
+    pub fn label(self) -> &'static str {
+        match self {
+            SimMode::FollowStatic => "static",
+            SimMode::Recompute => "recompute",
+        }
+    }
+}
+
 impl std::str::FromStr for SimMode {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self, Self::Err> {

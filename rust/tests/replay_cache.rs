@@ -1,0 +1,178 @@
+//! End-to-end acceptance tests for the replay engine + disk-backed
+//! schedule cache (ISSUE 4): at smoke scale, a multi-sigma dynamic sweep
+//! computes each static schedule exactly once, and its JSONL output is
+//! byte-identical to the per-sigma/per-point baseline across `--jobs
+//! 1/4` and warm/cold `--cache-dir`.
+
+use memsched::experiments::{dynamic_suite_specs, dynamic_suite_sweeps, SuiteScale};
+use memsched::platform::presets::small_cluster;
+use memsched::scheduler::Algorithm;
+use memsched::service::{
+    to_jsonl, ClusterSpec, Job, ReplaySweep, SchedulingService, ScoreThreadSpec,
+};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const SIGMAS: [f64; 2] = [0.1, 0.3];
+
+fn smoke_sweeps() -> Vec<ReplaySweep> {
+    let specs = dynamic_suite_specs(SuiteScale::Smoke, 7);
+    let cluster = ClusterSpec::Inline(Arc::new(small_cluster()));
+    dynamic_suite_sweeps(&specs, &cluster, &SIGMAS)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("memsched_replay_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn multi_sigma_sweep_schedules_once_and_matches_flat_baseline() {
+    let sweeps = smoke_sweeps();
+    let n_schedules = sweeps.len(); // one (workload, algorithm) cell each
+    let n_points: usize = sweeps.iter().map(ReplaySweep::num_results).sum();
+    assert_eq!(n_points, n_schedules * SIGMAS.len() * 2);
+
+    // Baseline: the flattened per-point jobs through the plain batch API.
+    let flat: Vec<Job> = sweeps.iter().flat_map(|s| s.flatten()).collect();
+    let baseline = to_jsonl(&SchedulingService::new(1).run_batch(flat));
+
+    // The replay engine, across worker counts: byte-identical output,
+    // each static schedule computed exactly once.
+    for workers in [1, 4] {
+        let svc = SchedulingService::new(workers);
+        let out = to_jsonl(&svc.run_replay_sweeps(sweeps.clone()));
+        assert_eq!(out, baseline, "sweep output must match the flat baseline at jobs={workers}");
+        let stats = svc.cache_stats();
+        assert_eq!(stats.computed, n_schedules, "one schedule per sweep at jobs={workers}");
+        assert_eq!(stats.lookups, n_points);
+        assert_eq!(stats.hits(), n_points - n_schedules);
+    }
+}
+
+#[test]
+fn warm_and_cold_cache_dir_keep_sweep_bytes_identical() {
+    let dir = temp_dir("warmcold");
+    let sweeps = smoke_sweeps();
+    let n_schedules = sweeps.len();
+    let no_cache = to_jsonl(&SchedulingService::new(4).run_replay_sweeps(sweeps.clone()));
+
+    // Cold disk cache: everything computed, everything persisted.
+    let cold = SchedulingService::new(4).with_cache_dir(&dir).unwrap();
+    let cold_out = to_jsonl(&cold.run_replay_sweeps(sweeps.clone()));
+    assert_eq!(cold_out, no_cache, "a cold cache dir must not change output bytes");
+    assert_eq!(cold.cache_stats().computed, n_schedules);
+    assert_eq!(cold.cache_stats().disk_hits, 0);
+
+    // Warm disk cache in a fresh service ("second CLI invocation"):
+    // zero schedules computed, byte-identical results — across both
+    // worker counts.
+    for workers in [1, 4] {
+        let warm = SchedulingService::new(workers).with_cache_dir(&dir).unwrap();
+        let warm_out = to_jsonl(&warm.run_replay_sweeps(sweeps.clone()));
+        assert_eq!(warm_out, no_cache, "warm cache dir must not change output bytes");
+        let stats = warm.cache_stats();
+        assert_eq!(stats.computed, 0, "warm run must compute nothing (jobs={workers})");
+        assert_eq!(stats.disk_hits, n_schedules);
+        // The summary record surfaces exactly these counters for ci.sh.
+        let line = warm.summary_json(0, 0, 0).to_string_compact();
+        assert!(line.contains("\"schedules_computed\":0"), "{line}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweeps_with_auto_score_threads_match_serial_bytes() {
+    let sweeps = smoke_sweeps();
+    let serial = to_jsonl(
+        &SchedulingService::new(2)
+            .with_score_spec(ScoreThreadSpec::Fixed(1))
+            .run_replay_sweeps(sweeps.clone()),
+    );
+    let auto = to_jsonl(
+        &SchedulingService::new(2)
+            .with_score_spec(ScoreThreadSpec::Auto)
+            .run_replay_sweeps(sweeps),
+    );
+    assert_eq!(serial, auto, "auto score threads must preserve bytes");
+}
+
+#[test]
+fn corrupted_store_recovers_per_entry() {
+    // Corrupt a subset of a warm store's entries: corrupted fingerprints
+    // recompute, intact ones load, results stay byte-identical.
+    let dir = temp_dir("repair");
+    let sweeps = smoke_sweeps();
+    let n_schedules = sweeps.len();
+    let cold = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+    let expected = to_jsonl(&cold.run_replay_sweeps(sweeps.clone()));
+
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "sched"))
+        .collect();
+    entries.sort();
+    assert_eq!(entries.len(), n_schedules);
+    // Damage three entries three different ways.
+    let full = std::fs::read(&entries[0]).unwrap();
+    std::fs::write(&entries[0], &full[..full.len() / 3]).unwrap(); // truncated
+    let mut versioned = std::fs::read(&entries[1]).unwrap();
+    versioned[8] ^= 0x55; // wrong version header
+    std::fs::write(&entries[1], versioned).unwrap();
+    std::fs::write(&entries[2], b"fingerprint-collision-shaped garbage").unwrap();
+
+    let repaired = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+    let out = to_jsonl(&repaired.run_replay_sweeps(sweeps.clone()));
+    assert_eq!(out, expected, "corruption must never change results");
+    let stats = repaired.cache_stats();
+    assert_eq!(stats.computed, 3, "exactly the corrupted entries recompute");
+    assert_eq!(stats.disk_hits, n_schedules - 3);
+
+    // The recomputes re-persisted their entries: a third pass is fully warm.
+    let warm = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+    assert_eq!(to_jsonl(&warm.run_replay_sweeps(sweeps)), expected);
+    assert_eq!(warm.cache_stats().computed, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mixed_static_and_sweep_batches_stream_in_order() {
+    // A sweep batch that mixes point-less (static) sweeps with replay
+    // sweeps and a failing sweep: ids stay sequential over the flattened
+    // stream and match the flat-path bytes.
+    let cluster = ClusterSpec::Inline(Arc::new(small_cluster()));
+    let specs = dynamic_suite_specs(SuiteScale::Smoke, 3);
+    let mut sweeps = dynamic_suite_sweeps(&specs[..2], &cluster, &[0.2]);
+    sweeps.push(
+        ReplaySweep::new(
+            memsched::service::JobSource::Generated(memsched::experiments::WorkloadSpec {
+                family: specs[0].family.clone(),
+                size: None,
+                input: specs[0].input,
+                seed: specs[0].seed,
+            }),
+            cluster.clone(),
+        )
+        .with_algo(Algorithm::Heft),
+    );
+    sweeps.push(ReplaySweep::new(
+        memsched::service::JobSource::Generated(memsched::experiments::WorkloadSpec {
+            family: "no_such_family".into(),
+            size: None,
+            input: 0,
+            seed: 1,
+        }),
+        cluster,
+    ));
+    let flat: Vec<Job> = sweeps.iter().flat_map(|s| s.flatten()).collect();
+    let svc = SchedulingService::new(3);
+    let results = svc.run_replay_sweeps(sweeps);
+    assert_eq!(results.len(), flat.len());
+    assert!(results.iter().enumerate().all(|(i, r)| r.id == i));
+    assert!(results.last().unwrap().error.as_deref().unwrap().contains("no_such_family"));
+    let baseline = SchedulingService::new(1).run_batch(flat);
+    assert_eq!(to_jsonl(&results), to_jsonl(&baseline));
+}
