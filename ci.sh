@@ -9,12 +9,13 @@
 #                       they are excluded automatically; skipped with a
 #                       notice when the components are not installed)
 #   ./ci.sh --smoke     service/parity smokes + the replay-parity smoke
-#                       (multi-sigma vs per-sigma, sweep vs flat,
-#                       warm/cold --cache-dir with schedules_computed=0)
-#   ./ci.sh --bench     bench_engine + bench_service at tiny scale,
-#                       emit BENCH_ci.json, and gate >2x regressions
-#                       against rust/benches/BENCH_baseline.json when
-#                       that baseline exists
+#                       (multi-sigma vs per-sigma, sweep vs flat, scaffold
+#                       sweep vs per-point `memsched simulate`, warm/cold
+#                       --cache-dir with schedules_computed=0)
+#   ./ci.sh --bench     bench_engine + bench_service + bench_replay at
+#                       tiny scale, emit BENCH_ci.json, and gate >2x
+#                       regressions against rust/benches/BENCH_baseline.json
+#                       when that baseline exists
 #
 # .github/workflows/ci.yml runs the tiers as separate jobs.
 set -euo pipefail
@@ -23,7 +24,7 @@ cd "$(dirname "$0")"
 BIN=target/release/memsched
 
 usage() {
-  sed -n '2,19p' "$0" | sed 's/^# \{0,1\}//'
+  sed -n '2,20p' "$0" | sed 's/^# \{0,1\}//'
 }
 
 TIERS=()
@@ -120,6 +121,35 @@ EOF
   cmp "$TMP/sweep.jsonl" "$TMP/flat.jsonl"
   echo "replay-sweep batch byte-identical to flattened per-point batch"
 
+  echo "== replay: scaffold sweep matches per-point memsched simulate =="
+  # The sweep runs through the shared-scaffold replay core; each point is
+  # then re-run standalone (`memsched simulate --json`, which prints the
+  # same full-precision `sim` object a batch line carries) and the bytes
+  # must agree exactly.
+  "$BIN" generate --model chipseq --seed 7 --input 1 --out "$TMP/wf.json" >/dev/null
+  printf '%s\n' \
+    "{\"workflow\":\"$TMP/wf.json\",\"sweep\":[{\"mode\":\"recompute\",\"sigma\":0.1,\"seed\":7},{\"mode\":\"recompute\",\"sigma\":0.3,\"seed\":7},{\"mode\":\"static\",\"sigma\":0.3,\"seed\":7}]}" \
+    > "$TMP/scaffold_sweep.jsonl"
+  "$BIN" batch --input "$TMP/scaffold_sweep.jsonl" --jobs 4 \
+    --out "$TMP/scaffold_out.jsonl" 2>/dev/null
+  # The comparison below assumes the static schedule is valid (both
+  # paths then emit the same sim-object shape); fail legibly otherwise.
+  sed -n '1p' "$TMP/scaffold_out.jsonl" | grep -q '"valid":true' \
+    || { echo "scaffold smoke workload schedules invalid; pick another instance:"; \
+         cat "$TMP/scaffold_out.jsonl"; exit 1; }
+  i=1
+  for point in "--sigma 0.1 --seed 7" "--sigma 0.3 --seed 7" "--sigma 0.3 --seed 7 --no-recompute"; do
+    want=$(sed -n "${i}p" "$TMP/scaffold_out.jsonl" | sed -E 's/.*"sim":(\{[^}]*\})\}$/\1/')
+    # shellcheck disable=SC2086  # $point is a flag list by construction
+    got=$("$BIN" simulate --workflow "$TMP/wf.json" $point --json)
+    if [ "$want" != "$got" ]; then
+      echo "replay point $i mismatch:"; echo "  sweep:    $want"; echo "  simulate: $got"
+      exit 1
+    fi
+    i=$((i+1))
+  done
+  echo "scaffold-path sweep sim fields byte-identical to per-point memsched simulate"
+
   echo "== replay: warm/cold --cache-dir byte-identity + schedules_computed==0 =="
   "$BIN" batch --suite smoke --sigmas 0.1,0.3 --jobs 1 --out "$TMP/nocache.jsonl" 2>/dev/null
   "$BIN" batch --suite smoke --sigmas 0.1,0.3 --jobs 4 --cache-dir "$TMP/cache" \
@@ -146,7 +176,7 @@ EOF
 
 tier_bench() {
   ensure_bin
-  echo "== bench: tiny-scale bench_engine + bench_service -> BENCH_ci.json =="
+  echo "== bench: tiny-scale bench_engine + bench_service + bench_replay -> BENCH_ci.json =="
   rm -f BENCH_ci.json
   # Pinned knobs so entry ids are stable across machines/runs.
   MEMSCHED_BENCH_FAST=1 MEMSCHED_SCORE_THREADS=4 \
@@ -155,6 +185,9 @@ tier_bench() {
   MEMSCHED_SUITE_SCALE=smoke MEMSCHED_JOBS=4 \
     MEMSCHED_BENCH_JSON="$PWD/BENCH_ci.json" \
     cargo bench --bench bench_service
+  MEMSCHED_BENCH_FAST=1 \
+    MEMSCHED_BENCH_JSON="$PWD/BENCH_ci.json" \
+    cargo bench --bench bench_replay
   echo "bench entries:"
   cat BENCH_ci.json
   BASELINE=rust/benches/BENCH_baseline.json

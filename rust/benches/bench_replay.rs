@@ -1,0 +1,108 @@
+//! Replay-core benchmark: points/sec of replaying one static schedule
+//! under many deviation points, scaffold-reuse (one [`SimScaffold`] +
+//! one [`SimRun`] arena, the replay engine's execution shape) vs the
+//! per-point rebuild the `simulate()` shim performs — the hoisting
+//! ROADMAP flagged as the remaining replay bottleneck after the static
+//! schedule itself was amortized.
+//!
+//! Workload: a ~5k-task generated chipseq instance on the default
+//! cluster, replayed in FollowStatic mode over a sigma × seed grid
+//! (FollowStatic isolates the replay core; Recompute points spend their
+//! time in the scheduling engine instead).
+//!
+//! Knobs: `MEMSCHED_BENCH_TASKS` (default 5000), `MEMSCHED_BENCH_FAST=1`
+//! shrinks the instance and the point grid for smoke runs. One-shot
+//! wall-clock timings, like the other figure benches.
+
+mod common;
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::default_cluster;
+use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::simulator::{DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold};
+use std::sync::Arc;
+
+fn outcome_digest(out: &SimOutcome) -> (bool, u64, usize, usize) {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &f in &out.finish_times {
+        h = (h ^ f.to_bits()).wrapping_mul(0x1000_0000_01b3);
+    }
+    h = (h ^ out.makespan.to_bits()).wrapping_mul(0x1000_0000_01b3);
+    (out.completed, h, out.recomputations, out.started)
+}
+
+fn main() {
+    let fast = std::env::var("MEMSCHED_BENCH_FAST").ok().is_some_and(|v| v != "0");
+    let tasks: usize = std::env::var("MEMSCHED_BENCH_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 800 } else { 5000 });
+    let seeds_per_sigma: u64 = if fast { 4 } else { 16 };
+    let sigmas = [0.05, 0.1, 0.2, 0.3];
+
+    let spec = WorkloadSpec { family: "chipseq".into(), size: Some(tasks), input: 2, seed: common::SEED };
+    let wf = spec.build().expect("workload builds");
+    let cluster = default_cluster();
+    // First memory-aware algorithm yielding a valid schedule, so the
+    // replay points execute the whole workflow instead of failing early.
+    let schedule = [Algorithm::HeftmBl, Algorithm::HeftmMm, Algorithm::HeftmBlc]
+        .into_iter()
+        .map(|algo| compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst))
+        .find(|s| s.valid)
+        .expect("some memory-aware schedule is valid on the default cluster");
+
+    let points: Vec<SimConfig> = sigmas
+        .iter()
+        .flat_map(|&sigma| {
+            (0..seeds_per_sigma)
+                .map(move |seed| SimConfig::new(SimMode::FollowStatic, DeviationModel::new(sigma, seed)))
+        })
+        .collect();
+    println!(
+        "== bench_replay: {} tasks on `{}`, {} replay points (FollowStatic) ==",
+        wf.num_tasks(),
+        cluster.name,
+        points.len()
+    );
+
+    // Per-point rebuild: the compatibility shim re-derives the scaffold
+    // (rank order, queues, estimate tables), clones the inputs into the
+    // scaffold's Arcs, and reallocates run state for every point — all
+    // costs the scaffold-reuse path amortizes away.
+    let t0 = std::time::Instant::now();
+    let rebuilt: Vec<_> = points
+        .iter()
+        .map(|cfg| outcome_digest(&memsched::simulator::simulate(&wf, &cluster, &schedule, cfg)))
+        .collect();
+    let rebuild_secs = t0.elapsed().as_secs_f64();
+
+    // Scaffold reuse: one scaffold, one arena, reset between points.
+    let scaffold = SimScaffold::new(
+        Arc::new(wf.clone()),
+        Arc::new(cluster.clone()),
+        Arc::new(schedule.clone()),
+    );
+    let mut run = SimRun::new();
+    let t0 = std::time::Instant::now();
+    let reused: Vec<_> = points.iter().map(|cfg| outcome_digest(&run.simulate(&scaffold, cfg))).collect();
+    let scaffold_secs = t0.elapsed().as_secs_f64();
+
+    assert_eq!(rebuilt, reused, "scaffold path must be bit-identical to per-point rebuild");
+
+    let n = points.len() as f64;
+    println!(
+        "{:>10}  {:>10.3}s  ({:>8.1} points/s)",
+        "rebuild", rebuild_secs, n / rebuild_secs
+    );
+    println!(
+        "{:>10}  {:>10.3}s  ({:>8.1} points/s)   speedup {:.2}x, identical outcomes",
+        "scaffold",
+        scaffold_secs,
+        n / scaffold_secs,
+        rebuild_secs / scaffold_secs
+    );
+    // Replay-axis throughput for the CI regression gate (ids keyed on
+    // the requested size so they stay stable across machines).
+    common::emit_bench_entry(&format!("replay/tasks={tasks}/rebuild"), n / rebuild_secs, rebuild_secs);
+    common::emit_bench_entry(&format!("replay/tasks={tasks}/scaffold"), n / scaffold_secs, scaffold_secs);
+}

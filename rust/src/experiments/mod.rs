@@ -17,7 +17,7 @@ use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy, Schedule};
 use crate::service::{
     ClusterSpec, Job, JobResult, JobSource, ReplaySweep, SchedulingService, ServiceConfig, SimJob,
 };
-use crate::simulator::{simulate, DeviationModel, SimConfig, SimMode, SimOutcome};
+use crate::simulator::{DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold};
 use crate::traces::{self, HistoricalData, TraceConfig};
 use crate::workflow::{SizeGroup, Workflow};
 use std::sync::Arc;
@@ -209,7 +209,9 @@ impl DynamicResult {
 }
 
 /// Run the dynamic evaluation (paper §VI-C): both execution modes under
-/// the 10% deviation model.
+/// the 10% deviation model. The two executions replay one static
+/// schedule, so they share one [`SimScaffold`] and one [`SimRun`] arena
+/// (bit-identical to two standalone `simulate` calls).
 pub fn run_dynamic(
     spec: &WorkloadSpec,
     cluster: &Cluster,
@@ -219,11 +221,16 @@ pub fn run_dynamic(
     let wf = spec.build()?;
     let group = SizeGroup::of(wf.num_tasks());
     let schedule: Schedule = compute_schedule(&wf, cluster, algo, EvictionPolicy::LargestFirst);
+    let initially_valid = schedule.valid;
     let dev = DeviationModel::new(sigma, spec.seed ^ 0xdeu64);
-    let (rec, stat): (SimOutcome, SimOutcome) = if schedule.valid {
+    let (rec, stat): (SimOutcome, SimOutcome) = if initially_valid {
+        let scaffold =
+            SimScaffold::new(Arc::new(wf), Arc::new(cluster.clone()), Arc::new(schedule));
+        let mut run = SimRun::new();
+        // Summary variant: DynamicResult never reads finish_times.
         (
-            simulate(&wf, cluster, &schedule, &SimConfig::new(SimMode::Recompute, dev)),
-            simulate(&wf, cluster, &schedule, &SimConfig::new(SimMode::FollowStatic, dev)),
+            run.simulate_summary(&scaffold, &SimConfig::new(SimMode::Recompute, dev)),
+            run.simulate_summary(&scaffold, &SimConfig::new(SimMode::FollowStatic, dev)),
         )
     } else {
         // Invalid initial schedule: executions are not attempted.
@@ -241,7 +248,7 @@ pub fn run_dynamic(
         spec_id: spec.id(),
         group,
         algo,
-        initially_valid: schedule.valid,
+        initially_valid,
         recompute_ok: rec.completed,
         recompute_makespan: rec.makespan,
         recomputations: rec.recomputations,

@@ -20,7 +20,7 @@ use memsched::platform::Cluster;
 use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
 use memsched::ser::json::Value;
 use memsched::service::{
-    ClusterSpec, Job, JobSource, ReplaySweep, ScoreThreadSpec, ServiceConfig, SimJob,
+    ClusterSpec, Job, JobSource, ReplaySweep, ScoreThreadSpec, ServiceConfig, SimJob, SimResult,
 };
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 use memsched::workflow;
@@ -39,13 +39,15 @@ COMMANDS:
                 [--eviction largest|smallest] [--scorer native|xla]
                 [--score-threads N|auto] [--out schedule.json]
   simulate      --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
-                [--no-recompute]
+                [--no-recompute] [--json]
+                --json prints the simulation outcome as one JSONL object
+                (the `sim` object of a batch result line, full precision)
   retrace       --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
                 [--lose-proc J]...   assess deviation impact on a schedule (§V)
   batch         --input jobs.jsonl | --suite smoke|quick|full  [--jobs N]
                 [--sigmas 0.1,0.2,...] [--score-threads N|auto] [--cache-bytes B]
-                [--cache-dir DIR] [--repeat K] [--seed S] [--cluster C]
-                [--out results.jsonl]
+                [--cache-dir DIR] [--cache-dir-bytes B] [--repeat K] [--seed S]
+                [--cluster C] [--out results.jsonl]
                 run a job batch on the multi-threaded scheduling service;
                 results stream incrementally as JSONL (in job order, as
                 each ordered slot completes), byte-identical for any
@@ -55,12 +57,14 @@ COMMANDS:
                 replayed at every sigma × mode); --cache-bytes caps the
                 in-memory schedule cache (LRU by approximate bytes),
                 --cache-dir adds a disk-backed cache shared across
-                invocations; a JSONL summary record with the cache-hit /
-                schedule-reuse counters goes to stderr
+                invocations and --cache-dir-bytes bounds it (LRU by
+                mtime, oldest entries evicted first); a JSONL summary
+                record with the cache-hit / schedule-reuse / scaffold
+                counters goes to stderr
   experiment    --figure fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|validity
                 [--scale smoke|quick|full] [--seed S] [--jobs N]
                 [--sigmas 0.1,0.3] [--score-threads N|auto]
-                [--cache-dir DIR] [--markdown]
+                [--cache-dir DIR] [--cache-dir-bytes B] [--markdown]
                 --sigmas (dynamic figures fig8/validity only) prints one
                 table per sigma, scheduling each workload exactly once
   bench-check   --current BENCH_ci.json --baseline <file> [--tolerance 2.0]
@@ -301,17 +305,37 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
     let sigma: f64 = args.opt_or("sigma", 0.1)?;
     let seed: u64 = args.opt_or("seed", 42)?;
     let no_recompute = args.flag("no-recompute");
+    let json = args.flag("json");
     args.finish()?;
 
     let schedule = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
-    println!("static schedule: valid={} makespan={:.3}", schedule.valid, schedule.makespan);
+    if !json {
+        println!("static schedule: valid={} makespan={:.3}", schedule.valid, schedule.makespan);
+    }
     if !schedule.valid {
+        if json {
+            // Machine-readable error object on stdout *and* a non-zero
+            // exit, so scripted consumers can't mistake it for a sim
+            // object.
+            use memsched::ser::json::obj;
+            println!("{}", obj(vec![("error", "initial schedule invalid".into())]).to_string_compact());
+            bail!("initial schedule invalid; execution not attempted");
+        }
         println!("initial schedule invalid; execution not attempted");
         return Ok(());
     }
     let mode = if no_recompute { SimMode::FollowStatic } else { SimMode::Recompute };
     let cfg = SimConfig::new(mode, DeviationModel::new(sigma, seed));
+    // Through the scaffold-backed shim — the same replay core the
+    // service's sweep path drives (scaffold build + one run).
     let out = simulate(&wf, &cluster, &schedule, &cfg);
+    if json {
+        // Exactly the `sim` object of a batch JSONL line — one shared
+        // mapping + serializer (`SimResult`), so `ci.sh --smoke` can
+        // byte-compare these against the replay engine's sweep output.
+        println!("{}", SimResult::from_outcome(mode, &out).to_json().to_string_compact());
+        return Ok(());
+    }
     println!("mode:            {mode:?}");
     println!("completed:       {}", out.completed);
     println!("makespan:        {:.3}", out.makespan);
@@ -383,13 +407,15 @@ fn score_threads_arg(args: &mut Args) -> Result<ScoreThreadSpec> {
 }
 
 /// The service configuration shared by `batch` and `experiment`:
-/// `--jobs`, `--score-threads`, `--cache-bytes`, `--cache-dir`.
+/// `--jobs`, `--score-threads`, `--cache-bytes`, `--cache-dir`,
+/// `--cache-dir-bytes`.
 fn service_config_args(args: &mut Args) -> Result<ServiceConfig> {
     Ok(ServiceConfig {
         workers: workers_arg(args)?,
         score: score_threads_arg(args)?,
         cache_bytes: args.opt("cache-bytes")?,
         cache_dir: args.opt_val("cache-dir")?.map(std::path::PathBuf::from),
+        cache_dir_bytes: args.opt("cache-dir-bytes")?,
     })
 }
 

@@ -37,6 +37,13 @@ impl PendingSet {
         self.total += size;
     }
 
+    /// Remove every file, keeping the map's allocation (the simulator's
+    /// run arena resets pending sets in place between replay points).
+    pub fn clear(&mut self) {
+        self.files.clear();
+        self.total = 0.0;
+    }
+
     /// Remove a file; returns its size if present.
     pub fn remove(&mut self, e: EdgeId) -> Option<f64> {
         let size = self.files.remove(&e)?;
@@ -231,6 +238,12 @@ mod tests {
         assert_eq!(pd.remove(1), None);
         assert_eq!(pd.total_size(), 30.0);
         assert_eq!(pd.len(), 2);
+        pd.clear();
+        assert!(pd.is_empty());
+        assert_eq!(pd.total_size(), 0.0);
+        // Cleared sets accept re-inserts (arena reuse path).
+        pd.insert(1, 5.0);
+        assert_eq!(pd.total_size(), 5.0);
     }
 
     #[test]

@@ -49,6 +49,12 @@
 //! [`FORMAT_VERSION`] whenever `Schedule`'s semantics change without the
 //! fingerprint seeing it (e.g. a scheduler bugfix that alters outputs for
 //! the same inputs).
+//!
+//! Long-lived stores (CI cache dirs) can be bounded with an
+//! **LRU-by-mtime byte cap** ([`DiskStore::open_capped`],
+//! `--cache-dir-bytes`): oldest-mtime `.sched` entries are evicted first,
+//! on open and after every write, and evictions degrade to recomputes
+//! exactly like any other miss.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -67,10 +73,19 @@ pub const FORMAT_VERSION: u32 = 1;
 /// opened on the same directory must never collide on a temp path.
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
-/// A directory of content-addressed schedule files.
+/// A directory of content-addressed schedule files, optionally bounded
+/// by an LRU-by-mtime byte cap (`--cache-dir-bytes`): when the summed
+/// size of `.sched` entries exceeds the cap, oldest-mtime entries are
+/// evicted first — on open (a long-lived CI cache dir shrinks to the
+/// bound) and after every write. The just-written entry is never its own
+/// victim, mirroring the in-memory cache's "oversized single entry stays
+/// resident" rule. Evicted fingerprints degrade to a recompute, exactly
+/// like any other miss.
 #[derive(Debug)]
 pub struct DiskStore {
     dir: PathBuf,
+    /// Byte budget over `.sched` entries (`None` = unbounded).
+    cap_bytes: Option<u64>,
 }
 
 /// Temp files older than this are dead by construction (writers rename
@@ -83,6 +98,13 @@ impl DiskStore {
     /// a long-lived shared cache dir cannot accumulate them; recent
     /// temps are left alone — they may belong to a live writer.
     pub fn open(dir: &Path) -> anyhow::Result<DiskStore> {
+        DiskStore::open_capped(dir, None)
+    }
+
+    /// [`open`](DiskStore::open) with an LRU-by-mtime byte cap: the
+    /// store is pruned to `cap_bytes` immediately (stale caches shrink
+    /// on open) and again after every write.
+    pub fn open_capped(dir: &Path, cap_bytes: Option<u64>) -> anyhow::Result<DiskStore> {
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow::anyhow!("creating cache dir {}: {e}", dir.display()))?;
         if let Ok(entries) = std::fs::read_dir(dir) {
@@ -102,7 +124,49 @@ impl DiskStore {
                 }
             }
         }
-        Ok(DiskStore { dir: dir.to_path_buf() })
+        let store = DiskStore { dir: dir.to_path_buf(), cap_bytes };
+        store.prune(None);
+        Ok(store)
+    }
+
+    /// Evict oldest-mtime `.sched` entries until the byte cap holds
+    /// (no-op when unbounded). `keep` is never evicted — the caller's
+    /// just-written entry survives even a cap smaller than one entry.
+    /// Best-effort like every other store write path: I/O errors leave
+    /// entries behind rather than failing the computation.
+    fn prune(&self, keep: Option<&Path>) {
+        let Some(cap) = self.cap_bytes else {
+            return;
+        };
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return;
+        };
+        let mut files: Vec<(std::time::SystemTime, PathBuf, u64)> = entries
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "sched"))
+            .filter_map(|e| {
+                let md = e.metadata().ok()?;
+                Some((md.modified().ok()?, e.path(), md.len()))
+            })
+            .collect();
+        let mut total: u64 = files.iter().map(|&(_, _, size)| size).sum();
+        if total <= cap {
+            return;
+        }
+        // Oldest mtime first; path tie-break keeps coarse-timestamp
+        // filesystems deterministic.
+        files.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (_, path, size) in files {
+            if total <= cap {
+                break;
+            }
+            if keep.is_some_and(|k| k == path) {
+                continue;
+            }
+            if std::fs::remove_file(&path).is_ok() {
+                total -= size;
+            }
+        }
     }
 
     pub fn dir(&self) -> &Path {
@@ -114,10 +178,20 @@ impl DiskStore {
     }
 
     /// Load the entry for `fp`; any unreadable/corrupt/stale/mismatched
-    /// file is a miss (`None`), never an error.
+    /// file is a miss (`None`), never an error. On a capped store, a hit
+    /// refreshes the entry's mtime (best effort), so eviction is
+    /// genuinely least-recently-*used* — a day-one entry hit on every
+    /// run outlives newer never-reused entries.
     pub fn load(&self, fp: Fingerprint) -> Option<CachedSchedule> {
-        let bytes = std::fs::read(self.entry_path(fp)).ok()?;
-        decode_entry(&bytes, fp)
+        let path = self.entry_path(fp);
+        let bytes = std::fs::read(&path).ok()?;
+        let cached = decode_entry(&bytes, fp)?;
+        if self.cap_bytes.is_some() {
+            let _ = std::fs::File::options().write(true).open(&path).and_then(|f| {
+                f.set_times(std::fs::FileTimes::new().set_modified(std::time::SystemTime::now()))
+            });
+        }
+        Some(cached)
     }
 
     /// Persist the entry for `fp` (best effort: write to a unique temp
@@ -129,11 +203,12 @@ impl DiskStore {
             std::process::id(),
             TMP_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
-        if std::fs::write(&tmp, &bytes).is_err()
-            || std::fs::rename(&tmp, self.entry_path(fp)).is_err()
-        {
+        let dst = self.entry_path(fp);
+        if std::fs::write(&tmp, &bytes).is_err() || std::fs::rename(&tmp, &dst).is_err() {
             let _ = std::fs::remove_file(&tmp);
+            return;
         }
+        self.prune(Some(&dst));
     }
 
     /// Number of (plausible) entries currently in the store directory.
@@ -491,6 +566,125 @@ mod tests {
             std::fs::write(dir.join(format!("{fp}.sched")), garbage).unwrap();
             assert!(store.load(fp).is_none());
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// One cached entry per algorithm (same workflow/cluster), so the
+    /// LRU tests have several distinct fingerprints to juggle.
+    fn cached_per_algo() -> Vec<(Fingerprint, CachedSchedule)> {
+        let mut b = WorkflowBuilder::new("disk_lru");
+        let a = b.task("a", "t", 5.0, 10.0);
+        let c = b.task("c", "t", 7.0, 20.0);
+        let d = b.task("d", "t", 2.0, 15.0);
+        b.edge(a, c, 3.0);
+        b.edge(c, d, 4.0);
+        let wf = b.build().unwrap();
+        let cluster = small_cluster();
+        Algorithm::all()
+            .into_iter()
+            .map(|algo| {
+                let fp = schedule_fingerprint(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+                let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+                (fp, CachedSchedule { schedule: Arc::new(s), seconds: 0.0 })
+            })
+            .collect()
+    }
+
+    /// Pin a `.sched` entry's mtime to `secs_ago` seconds in the past —
+    /// sleeping between writes would be flaky on filesystems with
+    /// coarse (e.g. 1 s) mtime granularity.
+    fn age_entry(dir: &Path, fp: Fingerprint, secs_ago: u64) {
+        let path = dir.join(format!("{fp}.sched"));
+        let t = std::time::SystemTime::now() - std::time::Duration::from_secs(secs_ago);
+        let f = std::fs::File::options().write(true).open(&path).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_modified(t)).unwrap();
+    }
+
+    /// Write `entries` through an unbounded store, then pin strictly
+    /// decreasing ages (entries[0] oldest).
+    fn aged_store(dir: &Path, entries: &[(Fingerprint, CachedSchedule)]) {
+        let unbounded = DiskStore::open(dir).unwrap();
+        for e in entries {
+            unbounded.store(e.0, &e.1);
+        }
+        for (i, e) in entries.iter().enumerate() {
+            age_entry(dir, e.0, ((entries.len() - i) * 100) as u64);
+        }
+    }
+
+    #[test]
+    fn byte_cap_evicts_oldest_mtime_entries_first() {
+        let dir = std::env::temp_dir().join(format!("memsched_disk_lru_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let entries = cached_per_algo();
+        let size = |e: &(Fingerprint, CachedSchedule)| encode_entry(e.0, &e.1).len() as u64;
+        // Age the first three entries (entries[0] oldest), then write the
+        // fourth through a store capped to fit exactly the two newest:
+        // the post-write prune must evict the two oldest-mtime entries.
+        aged_store(&dir, &entries[..3]);
+        let cap = size(&entries[2]) + size(&entries[3]);
+        let store = DiskStore::open_capped(&dir, Some(cap)).unwrap();
+        store.store(entries[3].0, &entries[3].1);
+        assert!(store.load(entries[0].0).is_none(), "oldest entry must be evicted");
+        assert!(store.load(entries[1].0).is_none(), "second-oldest entry must be evicted");
+        assert!(store.load(entries[2].0).is_some());
+        assert!(store.load(entries[3].0).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn byte_cap_never_evicts_the_just_written_entry() {
+        let dir = std::env::temp_dir().join(format!("memsched_disk_keep_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let entries = cached_per_algo();
+        aged_store(&dir, &entries[..3]);
+        // A 1-byte cap: every entry is oversized, but the entry just
+        // written survives (it evicts everything else instead).
+        let store = DiskStore::open_capped(&dir, Some(1)).unwrap();
+        assert_eq!(store.len(), 0, "open-time prune clears the over-budget store");
+        store.store(entries[3].0, &entries[3].1);
+        assert_eq!(store.len(), 1, "only the most recent write survives");
+        assert!(store.load(entries[3].0).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_hits_refresh_recency_on_a_capped_store() {
+        let dir = std::env::temp_dir().join(format!("memsched_disk_touch_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let entries = cached_per_algo();
+        let size = |e: &(Fingerprint, CachedSchedule)| encode_entry(e.0, &e.1).len() as u64;
+        aged_store(&dir, &entries[..3]);
+        // Cap fits exactly the three resident entries (open prune is a
+        // no-op). Loading the *oldest*-written entry refreshes its
+        // mtime, so when the fourth write forces an eviction the victim
+        // is the now-least-recently-used entries[1], not entries[0].
+        let cap = size(&entries[0]) + size(&entries[1]) + size(&entries[2]);
+        let store = DiskStore::open_capped(&dir, Some(cap)).unwrap();
+        assert!(store.load(entries[0].0).is_some(), "hit refreshes mtime");
+        store.store(entries[3].0, &entries[3].1);
+        assert!(store.load(entries[0].0).is_some(), "recently used entry survives");
+        assert!(store.load(entries[1].0).is_none(), "LRU victim is the unused oldest entry");
+        assert!(store.load(entries[3].0).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_prunes_an_over_budget_store() {
+        let dir = std::env::temp_dir().join(format!("memsched_disk_open_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let entries = cached_per_algo();
+        // Fill unbounded with aged entries, then reopen with a cap
+        // fitting one: the open-time prune (ROADMAP's long-lived CI
+        // cache case) shrinks the store to the newest entry.
+        aged_store(&dir, &entries);
+        assert_eq!(DiskStore::open(&dir).unwrap().len(), entries.len());
+        let newest = entries.last().unwrap();
+        let cap = encode_entry(newest.0, &newest.1).len() as u64;
+        let capped = DiskStore::open_capped(&dir, Some(cap)).unwrap();
+        assert_eq!(capped.len(), 1);
+        assert!(capped.load(newest.0).is_some(), "newest entry survives the open prune");
+        assert!(capped.load(entries[0].0).is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -21,7 +21,7 @@ use crate::experiments::WorkloadSpec;
 use crate::platform::Cluster;
 use crate::scheduler::{Algorithm, EvictionPolicy};
 use crate::ser::json::{obj, Value};
-use crate::simulator::SimMode;
+use crate::simulator::{SimMode, SimOutcome};
 use crate::workflow::Workflow;
 
 /// Where a job's workflow comes from.
@@ -217,6 +217,34 @@ pub struct SimResult {
     pub started: usize,
 }
 
+impl SimResult {
+    /// The summary of one simulated execution — the single mapping site
+    /// from [`SimOutcome`] shared by the service's replay path and
+    /// `memsched simulate --json`.
+    pub fn from_outcome(mode: SimMode, out: &SimOutcome) -> SimResult {
+        SimResult {
+            mode,
+            completed: out.completed,
+            makespan: out.makespan,
+            recomputations: out.recomputations,
+            started: out.started,
+        }
+    }
+
+    /// The deterministic `sim` object of a result line. `memsched
+    /// simulate --json` prints exactly this value, and `ci.sh --smoke`
+    /// byte-compares the two — one serializer, no drift.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("mode", self.mode.label().into()),
+            ("completed", self.completed.into()),
+            ("makespan", self.makespan.into()),
+            ("recomputations", self.recomputations.into()),
+            ("started", self.started.into()),
+        ])
+    }
+}
+
 /// One JSONL result line (also consumed structurally by the experiments
 /// harness).
 #[derive(Debug, Clone)]
@@ -287,16 +315,7 @@ impl JobResult {
             ("evictions", self.evictions.into()),
         ];
         if let Some(sim) = &self.sim {
-            fields.push((
-                "sim",
-                obj(vec![
-                    ("mode", sim.mode.label().into()),
-                    ("completed", sim.completed.into()),
-                    ("makespan", sim.makespan.into()),
-                    ("recomputations", sim.recomputations.into()),
-                    ("started", sim.started.into()),
-                ]),
-            ));
+            fields.push(("sim", sim.to_json()));
         }
         obj(fields)
     }

@@ -40,7 +40,12 @@
 //! materialized, fingerprinted, and computed once, and the replay points
 //! fan out across the pool — the execution shape behind multi-sigma
 //! deviation sweeps (`--sigmas`). Its output is byte-identical to
-//! flattening each sweep into per-point jobs.
+//! flattening each sweep into per-point jobs. The simulation side is
+//! amortized the same way: one [`SimScaffold`] per sweep (a `OnceLock`
+//! cell shared by the sweep's points; `scaffolds_built` in the run
+//! summary counts them) and one thread-local [`SimRun`] arena per pool
+//! worker, reset between points instead of reallocated (see
+//! `simulator`'s module docs).
 //!
 //! The schedule cache optionally layers a **disk-backed store**
 //! ([`disk`], `--cache-dir`): content-addressed files keyed by the
@@ -65,15 +70,25 @@ pub use fingerprint::Fingerprint;
 pub use job::{ClusterSpec, Job, JobResult, JobSource, ReplaySweep, SimJob, SimResult};
 pub use pool::ScorePool;
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::platform::Cluster;
-use crate::scheduler::compute_schedule_with;
+use crate::scheduler::{compute_schedule_with, Schedule};
 use crate::ser::json::{obj, Value};
-use crate::simulator::{simulate, DeviationModel, SimConfig};
+use crate::simulator::{DeviationModel, SimConfig, SimOutcome, SimRun, SimScaffold};
 use crate::workflow::Workflow;
+
+thread_local! {
+    /// Per-worker reusable simulation arena: replay points executing on
+    /// this thread reset it in place instead of reallocating run state
+    /// ([`SimRun`]). Outcomes are bit-identical to fresh runs, so batch
+    /// bytes stay independent of which worker executes which point.
+    static SIM_ARENA: RefCell<SimRun> = RefCell::new(SimRun::new());
+}
 
 /// How many intra-schedule scoring threads to apply (the
 /// `--score-threads` knob; parsed from `auto` or a number).
@@ -116,18 +131,25 @@ pub struct ServiceConfig {
     pub cache_bytes: Option<usize>,
     /// Disk-backed schedule cache directory (`--cache-dir`).
     pub cache_dir: Option<PathBuf>,
+    /// LRU-by-mtime byte cap on the disk cache (`--cache-dir-bytes`;
+    /// `None` = unbounded). Requires `cache_dir`.
+    pub cache_dir_bytes: Option<u64>,
 }
 
 impl ServiceConfig {
     /// Build a service from this configuration (fails only if the cache
-    /// directory cannot be created).
+    /// directory cannot be created, or on an inconsistent combination).
     pub fn build(&self) -> anyhow::Result<SchedulingService> {
         let workers = if self.workers == 0 { pool::default_workers() } else { self.workers };
         let mut svc = SchedulingService::new(workers)
             .with_score_spec(self.score)
             .with_cache_bytes(self.cache_bytes);
-        if let Some(dir) = &self.cache_dir {
-            svc = svc.with_cache_dir(dir)?;
+        match (&self.cache_dir, self.cache_dir_bytes) {
+            (Some(dir), cap) => svc = svc.with_cache_dir_capped(dir, cap)?,
+            (None, Some(_)) => {
+                anyhow::bail!("--cache-dir-bytes requires --cache-dir")
+            }
+            (None, None) => {}
         }
         Ok(svc)
     }
@@ -187,6 +209,9 @@ pub struct SchedulingService {
     cache_disk: Option<Arc<DiskStore>>,
     workflows: Memo<Arc<Workflow>>,
     clusters: Memo<Arc<Cluster>>,
+    /// [`SimScaffold`]s constructed: one per replay sweep (shared by all
+    /// of its points via a `OnceLock`), one per plain simulation job.
+    scaffolds_built: AtomicUsize,
 }
 
 impl Default for SchedulingService {
@@ -205,6 +230,11 @@ struct Prepared {
     cluster: Arc<Cluster>,
     sched_fp: Fingerprint,
     job_fp: Fingerprint,
+    /// Simulation-scaffold cell shared by every replay point of one
+    /// sweep, so the scaffold is built exactly once per sweep (by
+    /// whichever point executes first). `None` for plain jobs — each
+    /// builds its own scaffold when it carries a simulation layer.
+    scaffold: Option<Arc<OnceLock<Arc<SimScaffold>>>>,
 }
 
 /// Phase-3 product: the deterministic result payload of one unique job.
@@ -231,6 +261,7 @@ impl SchedulingService {
             cache_disk: None,
             workflows: Memo::default(),
             clusters: Memo::default(),
+            scaffolds_built: AtomicUsize::new(0),
         }
     }
 
@@ -292,8 +323,20 @@ impl SchedulingService {
     /// stale entries degrade to a recompute ([`disk`]). Replaces the
     /// cache, so configure before the first batch. Fails only if `dir`
     /// cannot be created.
-    pub fn with_cache_dir(mut self, dir: &Path) -> anyhow::Result<SchedulingService> {
-        self.cache_disk = Some(Arc::new(DiskStore::open(dir)?));
+    pub fn with_cache_dir(self, dir: &Path) -> anyhow::Result<SchedulingService> {
+        self.with_cache_dir_capped(dir, None)
+    }
+
+    /// [`with_cache_dir`](SchedulingService::with_cache_dir) with an
+    /// LRU-by-mtime byte cap on the store (`--cache-dir-bytes`): the
+    /// directory is pruned to the cap on open and after every write,
+    /// oldest-mtime entries first ([`disk::DiskStore::open_capped`]).
+    pub fn with_cache_dir_capped(
+        mut self,
+        dir: &Path,
+        cap_bytes: Option<u64>,
+    ) -> anyhow::Result<SchedulingService> {
+        self.cache_disk = Some(Arc::new(DiskStore::open_capped(dir, cap_bytes)?));
         self.schedules = ScheduleCache::with_config(self.cache_bytes, self.cache_disk.clone());
         Ok(self)
     }
@@ -310,6 +353,17 @@ impl SchedulingService {
     /// Schedule-cache counters (lookups / computed / hits).
     pub fn cache_stats(&self) -> CacheStats {
         self.schedules.stats()
+    }
+
+    /// Number of [`SimScaffold`]s constructed so far — one per replay
+    /// sweep whose points actually execute (the sweep's points share a
+    /// cell), plus one per executed plain simulation job. Analogous to
+    /// `schedules_computed`: a sweep of k points reports 1 here. Note
+    /// that batch-level job-fingerprint dedup runs first: a duplicate
+    /// sweep (or duplicate points) reuses the original's results and
+    /// builds nothing, exactly as it computes no schedule.
+    pub fn scaffolds_built(&self) -> usize {
+        self.scaffolds_built.load(Ordering::Relaxed)
     }
 
     /// The run-summary record surfacing the cache-hit / schedule-reuse
@@ -330,6 +384,7 @@ impl SchedulingService {
                 ("schedules_computed", stats.computed.into()),
                 ("schedule_reuse_hits", stats.hits().into()),
                 ("disk_cache_hits", stats.disk_hits.into()),
+                ("scaffolds_built", self.scaffolds_built().into()),
                 ("workers", self.workers.into()),
                 // Under `auto`, `score_threads` is the pool *size*; the
                 // per-schedule crossover gate may still have scored
@@ -379,7 +434,24 @@ impl SchedulingService {
         let (wf, cluster, sched_fp) =
             self.prepare_schedule(&job.source, &job.cluster, job.algo, job.policy)?;
         let job_fp = fingerprint::job_fingerprint(sched_fp, job.sim.as_ref());
-        Ok(Prepared { wf, cluster, sched_fp, job_fp })
+        Ok(Prepared { wf, cluster, sched_fp, job_fp, scaffold: None })
+    }
+
+    /// Execute one replay point: resolve the simulation scaffold (the
+    /// sweep-shared cell when present, else a fresh build) and run the
+    /// point on this worker's thread-local [`SimRun`] arena.
+    fn run_point(&self, prep: &Prepared, schedule: &Arc<Schedule>, cfg: &SimConfig) -> SimOutcome {
+        let build = || {
+            self.scaffolds_built.fetch_add(1, Ordering::Relaxed);
+            Arc::new(SimScaffold::new(prep.wf.clone(), prep.cluster.clone(), schedule.clone()))
+        };
+        let scaffold = match &prep.scaffold {
+            Some(cell) => cell.get_or_init(build).clone(),
+            None => build(),
+        };
+        // Summary variant: `SimResult` never carries finish_times, so
+        // skip the O(n) per-point clone of them.
+        SIM_ARENA.with(|arena| arena.borrow_mut().simulate_summary(&scaffold, cfg))
     }
 
     fn execute(&self, job: &Job, prep: &Prepared) -> Executed {
@@ -422,14 +494,8 @@ impl SchedulingService {
                 }
             } else {
                 let cfg = SimConfig::new(sj.mode, DeviationModel::new(sj.sigma, sj.seed));
-                let out = simulate(&prep.wf, &prep.cluster, schedule, &cfg);
-                SimResult {
-                    mode: sj.mode,
-                    completed: out.completed,
-                    makespan: out.makespan,
-                    recomputations: out.recomputations,
-                    started: out.started,
-                }
+                let out = self.run_point(prep, &cached.schedule, &cfg);
+                SimResult::from_outcome(sj.mode, &out)
             }
         });
         Executed {
@@ -523,6 +589,11 @@ impl SchedulingService {
         let mut prepared: Vec<(Job, Result<Prepared, String>)> =
             Vec::with_capacity(sweep_prepared.iter().map(|(s, _)| s.num_results()).sum());
         for (sweep, prep) in &sweep_prepared {
+            // One scaffold cell per sweep: every point of the sweep
+            // shares it, so the simulation scaffold is built exactly
+            // once per sweep however many points fan out (the
+            // `scaffolds_built` counter in the run summary tracks this).
+            let scaffold_cell = Arc::new(OnceLock::new());
             for job in sweep.flatten() {
                 let p = match prep {
                     Err(e) => Err(e.clone()),
@@ -531,6 +602,7 @@ impl SchedulingService {
                         cluster: cluster.clone(),
                         sched_fp: *sched_fp,
                         job_fp: fingerprint::job_fingerprint(*sched_fp, job.sim.as_ref()),
+                        scaffold: Some(scaffold_cell.clone()),
                     }),
                 };
                 prepared.push((job, p));
@@ -914,10 +986,60 @@ mod tests {
         assert_eq!(sweep_svc.cache_stats().lookups, 9);
         assert_eq!(sweep_svc.cache_stats().hits(), 6);
 
+        // Tentpole acceptance: the sweep path builds one simulation
+        // scaffold per sweep that actually simulates, while the flat
+        // baseline builds one per executed sim job.
+        let valid_sim_sweeps = [0..4usize, 4..8]
+            .into_iter()
+            .filter(|r| streamed[r.clone()].iter().any(|j| j.valid && j.sim.is_some()))
+            .count();
+        assert_eq!(sweep_svc.scaffolds_built(), valid_sim_sweeps);
+        let valid_sim_points =
+            baseline.iter().filter(|r| r.error.is_none() && r.valid && r.sim.is_some()).count();
+        assert_eq!(flat_svc.scaffolds_built(), valid_sim_points);
+
         // Buffered variant (fresh service: cache_hit flags are part of
         // the bytes and depend on pre-batch cache state).
         let buffered = SchedulingService::new(2).run_replay_sweeps(sweeps);
         assert_eq!(to_jsonl(&buffered), to_jsonl(&streamed));
+    }
+
+    #[test]
+    fn scaffold_built_once_per_sweep() {
+        let cluster = Arc::new(small_cluster());
+        let points: Vec<SimJob> = [0.1, 0.2, 0.3]
+            .into_iter()
+            .flat_map(|sigma| {
+                [SimMode::Recompute, SimMode::FollowStatic]
+                    .into_iter()
+                    .map(move |mode| SimJob { mode, sigma, seed: 9 })
+            })
+            .collect();
+        let sweep = ReplaySweep::new(
+            JobSource::Generated(WorkloadSpec {
+                family: "chipseq".into(),
+                size: None,
+                input: 0,
+                seed: 3,
+            }),
+            ClusterSpec::Inline(cluster.clone()),
+        )
+        .with_points(points.clone());
+        let svc = SchedulingService::new(4);
+        let results = svc.run_replay_sweeps(vec![sweep.clone()]);
+        assert_eq!(results.len(), points.len());
+        assert!(results.iter().all(|r| r.valid && r.sim.is_some()));
+        assert_eq!(svc.scaffolds_built(), 1, "one scaffold per sweep, not per point");
+        assert_eq!(svc.cache_stats().computed, 1);
+        // The run-summary record surfaces the counter.
+        let line = svc.summary_json(results.len(), 0, 0).to_string_compact();
+        assert!(line.contains("\"scaffolds_built\":1"), "{line}");
+
+        // The flat per-point path rebuilds one scaffold per executed job.
+        let flat = SchedulingService::new(2);
+        let flat_results = flat.run_batch(sweep.flatten());
+        assert_eq!(to_jsonl(&flat_results), to_jsonl(&results));
+        assert_eq!(flat.scaffolds_built(), points.len());
     }
 
     #[test]

@@ -21,6 +21,22 @@
 //! memory* fails or triggers recomputation depending on the mode; a *task
 //! taking significantly less (or more) time than expected* triggers
 //! recomputation.
+//!
+//! ## Execution shape: scaffold + run
+//!
+//! The adaptive evaluation replays one static schedule under thousands of
+//! deviation points (sigma sweeps, seed grids). Everything that is a pure
+//! function of `(workflow, cluster, schedule)` — the rank-position table,
+//! the per-processor planned task queues, the per-task estimate tables —
+//! is therefore hoisted into an immutable, `Send + Sync` [`SimScaffold`]
+//! built **once** per schedule, while all mutable execution state (task
+//! states, memory residency, finish times, the event heap) lives in a
+//! reusable [`SimRun`] arena that `reset()`s between points instead of
+//! reallocating. The replay engine builds one scaffold per sweep and fans
+//! the points out across workers, each carrying a thread-local `SimRun`
+//! (see `service::SchedulingService::run_replay_sweeps_streaming`);
+//! [`simulate`] remains as a thin compatibility shim (scaffold build +
+//! one run) with bit-identical outcomes.
 
 pub mod deviation;
 
@@ -28,11 +44,11 @@ pub use deviation::DeviationModel;
 
 use crate::platform::{Cluster, ProcId};
 use crate::scheduler::engine::{Engine, Schedule, TaskSchedule};
-use crate::scheduler::state::{EvictionPolicy, PendingSet, PlatformState};
-use crate::scheduler::Algorithm;
-use crate::workflow::{TaskId, Workflow};
+use crate::scheduler::state::{PendingSet, PlatformState};
+use crate::workflow::{EdgeId, TaskId, Workflow};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 /// Execution mode of the runtime system.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,6 +105,13 @@ pub enum SimFailure {
     BufferOverflow { task: TaskId, proc: ProcId },
 }
 
+/// Sentinel in [`SimOutcome::finish_times`] for tasks that never started.
+///
+/// Finish times are non-negative by construction, so `-1.0` is
+/// unambiguous — and unlike the previous `NaN` marker it keeps `==` (and
+/// therefore slice/`Vec` equality in parity tests) well-behaved.
+pub const NEVER_STARTED: f64 = -1.0;
+
 /// Result of one simulated execution.
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
@@ -101,8 +124,18 @@ pub struct SimOutcome {
     pub recomputations: usize,
     /// Tasks that started before failure/completion.
     pub started: usize,
-    /// Actual per-task finish times (NaN where never started).
+    /// Actual per-task finish times ([`NEVER_STARTED`] where the task
+    /// never started — see [`SimOutcome::finish_time`]).
     pub finish_times: Vec<f64>,
+}
+
+impl SimOutcome {
+    /// `Some(finish time)` of task `v`, `None` if it never started —
+    /// including on summary outcomes ([`SimRun::simulate_summary`]),
+    /// whose `finish_times` vector is empty.
+    pub fn finish_time(&self, v: TaskId) -> Option<f64> {
+        self.finish_times.get(v).copied().filter(|&t| t >= 0.0)
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -114,26 +147,122 @@ enum TState {
 
 /// Simulate executing `schedule` of `wf_est` (estimated weights) under the
 /// deviation model in `cfg`.
+///
+/// Compatibility shim over the scaffold/run split: builds a
+/// [`SimScaffold`] and performs one [`SimRun`]. Because the scaffold
+/// owns `Arc`s, the shim clones its three inputs once per call (vs the
+/// pre-split simulator, which cloned only the workflow) — negligible
+/// next to one discrete-event execution, but callers replaying one
+/// schedule at many deviation points should build the scaffold once and
+/// reuse a `SimRun` arena instead. Outcomes are bit-identical either
+/// way.
 pub fn simulate(
     wf_est: &Workflow,
     cluster: &Cluster,
     schedule: &Schedule,
     cfg: &SimConfig,
 ) -> SimOutcome {
-    Sim::new(wf_est, cluster, schedule, cfg).run()
+    let scaffold = SimScaffold::new(
+        Arc::new(wf_est.clone()),
+        Arc::new(cluster.clone()),
+        Arc::new(schedule.clone()),
+    );
+    SimRun::new().simulate(&scaffold, cfg)
 }
 
-struct Sim<'a> {
-    wf_est: &'a Workflow,
-    /// Estimates, overwritten with actuals as tasks arrive.
-    known: Workflow,
-    cluster: &'a Cluster,
-    cfg: &'a SimConfig,
-    policy: EvictionPolicy,
-    algorithm: Algorithm,
-    rank_order: Vec<TaskId>,
+/// Everything schedule-invariant about a simulated execution, hoisted out
+/// of the per-point loop: the workflow/cluster/schedule triple plus the
+/// derived tables every run re-used to recompute inline — rank positions,
+/// per-processor planned queues (over the pristine plan, all tasks
+/// unstarted), and per-task estimate tables. Immutable and `Send + Sync`,
+/// so one scaffold is shared by all workers replaying a sweep.
+#[derive(Debug)]
+pub struct SimScaffold {
+    wf: Arc<Workflow>,
+    cluster: Arc<Cluster>,
+    schedule: Arc<Schedule>,
+    /// Position of each task in `schedule.rank_order`.
     rank_pos: Vec<usize>,
+    /// Per-processor queues of *all* tasks in plan order (planned start,
+    /// then rank position; reversed for `pop()` from the back) — the
+    /// queue state of a fresh run before any task starts.
+    initial_queues: Vec<Vec<TaskId>>,
+    /// Estimated work per task (`w_u`, the deviation model's mean).
+    est_work: Vec<f64>,
+    /// Estimated memory per task (`m_u`).
+    est_mem: Vec<f64>,
+    /// Total outgoing data per task (`sum of c_{u,v}` over children).
+    total_out: Vec<f64>,
+}
+
+impl SimScaffold {
+    /// Build the scaffold for one `(workflow, cluster, schedule)` triple.
+    pub fn new(wf: Arc<Workflow>, cluster: Arc<Cluster>, schedule: Arc<Schedule>) -> SimScaffold {
+        let n = wf.num_tasks();
+        assert_eq!(schedule.tasks.len(), n, "schedule does not cover this workflow");
+        let mut rank_pos = vec![0usize; n];
+        for (i, &v) in schedule.rank_order.iter().enumerate() {
+            rank_pos[v] = i;
+        }
+        let mut initial_queues: Vec<Vec<TaskId>> = vec![Vec::new(); cluster.len()];
+        for v in 0..n {
+            initial_queues[schedule.tasks[v].proc].push(v);
+        }
+        for q in &mut initial_queues {
+            q.sort_by(|&a, &b| {
+                schedule.tasks[a]
+                    .start
+                    .partial_cmp(&schedule.tasks[b].start)
+                    .unwrap()
+                    .then(rank_pos[a].cmp(&rank_pos[b]))
+            });
+            q.reverse();
+        }
+        let est_work = wf.tasks().iter().map(|t| t.work).collect();
+        let est_mem = wf.tasks().iter().map(|t| t.memory).collect();
+        let total_out = (0..n).map(|v| wf.total_out_data(v)).collect();
+        SimScaffold { wf, cluster, schedule, rank_pos, initial_queues, est_work, est_mem, total_out }
+    }
+
+    pub fn workflow(&self) -> &Arc<Workflow> {
+        &self.wf
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    pub fn schedule(&self) -> &Arc<Schedule> {
+        &self.schedule
+    }
+}
+
+/// The mutable half of a simulated execution: a reusable arena holding
+/// every per-run vector (task states, memory residency, finish times,
+/// queues, event heap, scratch buffers). [`SimRun::simulate`] resets the
+/// arena in place — after the first run on a given scaffold shape,
+/// subsequent points perform no topology/queue allocation (the plan's
+/// eviction lists and the rebuilt queues reuse their buffers; only the
+/// returned `finish_times` vector and recompute-triggered engine calls
+/// allocate).
+///
+/// One arena serves scaffolds of any size (vectors are resized on
+/// reset), which is what lets the service keep a single thread-local
+/// `SimRun` per worker across heterogeneous sweeps.
+#[derive(Debug, Default)]
+pub struct SimRun {
+    /// `known` clone source; when the Arc is unchanged the clone is kept
+    /// and only its task params are restored (Recompute mode only).
+    known_src: Option<Arc<Workflow>>,
+    /// Estimates, overwritten with actuals as tasks arrive (what a
+    /// recomputation "knows"; maintained only in Recompute mode).
+    known: Option<Workflow>,
+    /// Current plan; starts as the scaffold's schedule, replaced by
+    /// recomputations.
     plan: Vec<TaskSchedule>,
+    plan_src: Option<Arc<Schedule>>,
+    /// Whether `plan` diverged from `plan_src` (a recompute happened).
+    plan_dirty: bool,
     // Runtime state -------------------------------------------------------
     time: f64,
     proc_free: Vec<f64>,
@@ -158,6 +287,9 @@ struct Sim<'a> {
     recompute_tried: Vec<bool>,
     /// Tasks deferred until the next finish event (waiting for memory).
     deferred: Vec<bool>,
+    // Scratch buffers (reused across `try_start` calls) ------------------
+    scratch_local: Vec<(EdgeId, f64)>,
+    scratch_evict: Vec<(EdgeId, f64)>,
 }
 
 /// Total-order bits for a non-negative f64 (times are ≥ 0).
@@ -166,92 +298,159 @@ fn time_key(t: f64) -> u64 {
     t.to_bits()
 }
 
-impl<'a> Sim<'a> {
-    fn new(
-        wf_est: &'a Workflow,
-        cluster: &'a Cluster,
-        schedule: &'a Schedule,
-        cfg: &'a SimConfig,
-    ) -> Sim<'a> {
-        let n = wf_est.num_tasks();
-        let k = cluster.len();
-        let mut rank_pos = vec![0usize; n];
-        for (i, &v) in schedule.rank_order.iter().enumerate() {
-            rank_pos[v] = i;
+/// `v.clear() + resize` — reuses the allocation, unlike `vec![val; n]`.
+fn reset_vec<T: Clone>(v: &mut Vec<T>, n: usize, val: T) {
+    v.clear();
+    v.resize(n, val);
+}
+
+/// Overwrite `dst` with `src`, reusing both the outer vector and each
+/// task's `evicted` buffer when the lengths line up.
+fn copy_plan(src: &[TaskSchedule], dst: &mut Vec<TaskSchedule>) {
+    if dst.len() == src.len() {
+        for (d, s) in dst.iter_mut().zip(src) {
+            // Exhaustive destructuring: adding a TaskSchedule field
+            // breaks this copy loudly instead of going stale on reset.
+            let TaskSchedule { proc, start, finish, evicted, res_nonneg } = s;
+            d.proc = *proc;
+            d.start = *start;
+            d.finish = *finish;
+            d.res_nonneg = *res_nonneg;
+            d.evicted.clone_from(evicted);
         }
-        let mut sim = Sim {
-            wf_est,
-            known: wf_est.clone(),
-            cluster,
-            cfg,
-            policy: schedule.policy,
-            algorithm: schedule.algorithm,
-            rank_order: schedule.rank_order.clone(),
-            rank_pos,
-            plan: schedule.tasks.clone(),
-            time: 0.0,
-            proc_free: vec![0.0; k],
-            running: vec![None; k],
-            avail_mem: cluster.processors.iter().map(|p| p.memory).collect(),
-            avail_buf: cluster.processors.iter().map(|p| p.comm_buffer).collect(),
-            pending: vec![PendingSet::default(); k],
-            buffered: vec![PendingSet::default(); k],
-            comm_rt: vec![0.0; k * k],
-            state_of: vec![TState::NotStarted; n],
-            st_act: vec![f64::NAN; n],
-            ft_act: vec![f64::NAN; n],
-            held: vec![0.0; n],
-            queues: vec![Vec::new(); k],
-            heap: BinaryHeap::new(),
-            recomputations: 0,
-            started: 0,
-            recompute_tried: vec![false; n],
-            deferred: vec![false; n],
-        };
-        sim.rebuild_queues();
-        sim
+    } else {
+        dst.clear();
+        dst.extend(src.iter().cloned());
+    }
+}
+
+impl SimRun {
+    /// An empty arena; sized lazily by the first [`simulate`](SimRun::simulate).
+    pub fn new() -> SimRun {
+        SimRun::default()
+    }
+
+    /// Execute one replay point of `sc` under `cfg`, resetting the arena
+    /// in place first. Bit-identical to the [`simulate`] shim for the
+    /// same inputs, whatever ran in this arena before.
+    pub fn simulate(&mut self, sc: &SimScaffold, cfg: &SimConfig) -> SimOutcome {
+        self.reset(sc, cfg);
+        let (completed, failure) = self.exec(sc, cfg);
+        self.outcome(completed, failure, true)
+    }
+
+    /// [`simulate`](SimRun::simulate) without materializing the per-task
+    /// finish times: `finish_times` comes back **empty** (every other
+    /// field is bit-identical). For hot replay loops — the service's
+    /// sweep path — that only consume the summary fields, this skips an
+    /// O(n) clone per point.
+    pub fn simulate_summary(&mut self, sc: &SimScaffold, cfg: &SimConfig) -> SimOutcome {
+        self.reset(sc, cfg);
+        let (completed, failure) = self.exec(sc, cfg);
+        self.outcome(completed, failure, false)
+    }
+
+    /// Reinitialize every piece of run state from the scaffold. Total:
+    /// nothing observable survives from the previous point (the arena
+    /// only carries allocations across).
+    fn reset(&mut self, sc: &SimScaffold, cfg: &SimConfig) {
+        let n = sc.wf.num_tasks();
+        let k = sc.cluster.len();
+        self.time = 0.0;
+        self.recomputations = 0;
+        self.started = 0;
+        reset_vec(&mut self.proc_free, k, 0.0);
+        reset_vec(&mut self.running, k, None);
+        self.avail_mem.clear();
+        self.avail_mem.extend(sc.cluster.processors.iter().map(|p| p.memory));
+        self.avail_buf.clear();
+        self.avail_buf.extend(sc.cluster.processors.iter().map(|p| p.comm_buffer));
+        for p in &mut self.pending {
+            p.clear();
+        }
+        self.pending.resize_with(k, PendingSet::default);
+        for p in &mut self.buffered {
+            p.clear();
+        }
+        self.buffered.resize_with(k, PendingSet::default);
+        reset_vec(&mut self.comm_rt, k * k, 0.0);
+        reset_vec(&mut self.state_of, n, TState::NotStarted);
+        reset_vec(&mut self.st_act, n, NEVER_STARTED);
+        reset_vec(&mut self.ft_act, n, NEVER_STARTED);
+        reset_vec(&mut self.held, n, 0.0);
+        reset_vec(&mut self.recompute_tried, n, false);
+        reset_vec(&mut self.deferred, n, false);
+        self.heap.clear();
+        // Queues restart from the scaffold's pristine planned queues;
+        // `clone_from` reuses each queue's buffer.
+        self.queues.resize_with(k, Vec::new);
+        for (q, init) in self.queues.iter_mut().zip(&sc.initial_queues) {
+            q.clone_from(init);
+        }
+        // The plan needs restoring only when the schedule changed or the
+        // previous point's recomputations overwrote it.
+        let same_schedule = self.plan_src.as_ref().is_some_and(|s| Arc::ptr_eq(s, &sc.schedule));
+        if !same_schedule || self.plan_dirty {
+            copy_plan(&sc.schedule.tasks, &mut self.plan);
+            self.plan_src = Some(sc.schedule.clone());
+            self.plan_dirty = false;
+        }
+        // `known` is only consulted by recomputations; FollowStatic runs
+        // skip the workflow clone entirely.
+        if cfg.mode == SimMode::Recompute {
+            let same_wf = self.known_src.as_ref().is_some_and(|s| Arc::ptr_eq(s, &sc.wf));
+            if same_wf {
+                let known = self.known.as_mut().expect("known_src set together with known");
+                for v in 0..n {
+                    let t = sc.wf.task(v);
+                    known.set_task_params(v, t.work, t.memory);
+                }
+            } else {
+                self.known = Some(sc.wf.as_ref().clone());
+                self.known_src = Some(sc.wf.clone());
+            }
+        }
     }
 
     /// Rebuild per-processor queues of unstarted tasks in plan order
     /// (planned start, then rank position; stored reversed for pop()).
-    fn rebuild_queues(&mut self) {
-        for q in &mut self.queues {
+    fn rebuild_queues(&mut self, sc: &SimScaffold) {
+        let SimRun { queues, plan, state_of, .. } = self;
+        for q in queues.iter_mut() {
             q.clear();
         }
-        let mut by_proc: Vec<Vec<TaskId>> = vec![Vec::new(); self.queues.len()];
-        for v in 0..self.plan.len() {
-            if self.state_of[v] == TState::NotStarted {
-                by_proc[self.plan[v].proc].push(v);
+        for v in 0..plan.len() {
+            if state_of[v] == TState::NotStarted {
+                queues[plan[v].proc].push(v);
             }
         }
-        for (j, mut tasks) in by_proc.into_iter().enumerate() {
-            tasks.sort_by(|&a, &b| {
-                self.plan[a]
+        for q in queues.iter_mut() {
+            q.sort_by(|&a, &b| {
+                plan[a]
                     .start
-                    .partial_cmp(&self.plan[b].start)
+                    .partial_cmp(&plan[b].start)
                     .unwrap()
-                    .then(self.rank_pos[a].cmp(&self.rank_pos[b]))
+                    .then(sc.rank_pos[a].cmp(&sc.rank_pos[b]))
             });
-            tasks.reverse();
-            self.queues[j] = tasks;
+            q.reverse();
         }
     }
 
-    fn parents_done(&self, v: TaskId) -> bool {
-        self.wf_est.parents(v).all(|(u, _)| self.state_of[u] == TState::Done)
+    fn parents_done(&self, v: TaskId, sc: &SimScaffold) -> bool {
+        sc.wf.parents(v).all(|(u, _)| self.state_of[u] == TState::Done)
     }
 
     /// Arrival time of all remote inputs of `v` on `j`, advancing channel
     /// ready times (mirrors the scheduler's bookkeeping).
-    fn input_arrival(&mut self, v: TaskId, j: ProcId) -> f64 {
+    fn input_arrival(&mut self, v: TaskId, j: ProcId, sc: &SimScaffold) -> f64 {
         let k = self.queues.len();
         let mut arrival = 0.0f64;
-        for &e in self.wf_est.in_edge_ids(v) {
-            let edge = self.wf_est.edge(e);
+        for &e in sc.wf.in_edge_ids(v) {
+            let edge = sc.wf.edge(e);
             let pu = self.plan[edge.src].proc;
             if pu != j {
                 let channel = self.comm_rt[pu * k + j].max(self.ft_act[edge.src]);
-                let t = channel + edge.data / self.cluster.bandwidth;
+                let t = channel + edge.data / sc.cluster.bandwidth;
                 self.comm_rt[pu * k + j] = t;
                 arrival = arrival.max(t);
             }
@@ -263,61 +462,78 @@ impl<'a> Sim<'a> {
     /// - `Ok(true)`  — started;
     /// - `Ok(false)` — recomputation happened instead (Recompute mode);
     /// - `Err(f)`    — execution failed.
-    fn try_start(&mut self, v: TaskId) -> Result<bool, SimFailure> {
+    fn try_start(&mut self, v: TaskId, sc: &SimScaffold, cfg: &SimConfig) -> Result<bool, SimFailure> {
         let j = self.plan[v].proc;
         // Reveal actual parameters (the task "arrives in the system").
-        let est = self.wf_est.task(v);
-        let (w_act, m_act) = self.cfg.deviation.actual(v, est.work, est.memory);
-        self.known.set_task_params(v, w_act, m_act);
+        let (est_work, est_mem) = (sc.est_work[v], sc.est_mem[v]);
+        let (w_act, m_act) = cfg.deviation.actual(v, est_work, est_mem);
+        if cfg.mode == SimMode::Recompute {
+            self.known.as_mut().unwrap().set_task_params(v, w_act, m_act);
+        }
 
-        // Memory feasibility with actual values.
+        // Memory feasibility with actual values (read-only phase; the
+        // scratch buffers are moved out and restored on every exit path).
         let mut remote_in = 0.0f64;
-        let mut local_inputs: Vec<(usize, f64)> = Vec::new();
-        for &e in self.wf_est.in_edge_ids(v) {
-            let edge = self.wf_est.edge(e);
+        let mut local = std::mem::take(&mut self.scratch_local);
+        local.clear();
+        for &e in sc.wf.in_edge_ids(v) {
+            let edge = sc.wf.edge(e);
             if self.plan[edge.src].proc == j {
-                local_inputs.push((e, edge.data));
+                local.push((e, edge.data));
             } else {
                 remote_in += edge.data;
             }
         }
-        let out = self.wf_est.total_out_data(v);
+        let out = sc.total_out[v];
 
         // Planned evictions first (skip files already gone).
-        let mut evict: Vec<(usize, f64)> = Vec::new();
+        let mut evict = std::mem::take(&mut self.scratch_evict);
+        evict.clear();
         let mut buf_left = self.avail_buf[j];
         let mut mem_gain = 0.0f64;
-        for &e in &self.plan[v].evicted.clone() {
+        // `Some(true)` = buffer overflow on a planned eviction,
+        // `Some(false)` = not enough memory.
+        let mut problem: Option<bool> = None;
+        for idx in 0..self.plan[v].evicted.len() {
+            let e = self.plan[v].evicted[idx];
             if let Some(size) = self.pending[j].get(e) {
                 if size > buf_left {
-                    return self.memory_problem(v, j, true);
+                    problem = Some(true);
+                    break;
                 }
                 buf_left -= size;
                 mem_gain += size;
                 evict.push((e, size));
             }
         }
-        let mut res = self.avail_mem[j] + mem_gain - m_act - remote_in - out;
-        if res < 0.0 && self.cfg.mode == SimMode::Recompute {
-            // Additional greedy evictions (the scheduler would have
-            // planned these, had it known the actual memory).
-            for (e, size) in self.pending[j].candidates(self.policy) {
-                if res >= 0.0 {
-                    break;
+        if problem.is_none() {
+            let mut res = self.avail_mem[j] + mem_gain - m_act - remote_in - out;
+            if res < 0.0 && cfg.mode == SimMode::Recompute {
+                // Additional greedy evictions (the scheduler would have
+                // planned these, had it known the actual memory).
+                for (e, size) in self.pending[j].candidates(sc.schedule.policy) {
+                    if res >= 0.0 {
+                        break;
+                    }
+                    if local.iter().any(|&(le, _)| le == e)
+                        || evict.iter().any(|&(ee, _)| ee == e)
+                        || size > buf_left
+                    {
+                        continue;
+                    }
+                    buf_left -= size;
+                    res += size;
+                    evict.push((e, size));
                 }
-                if local_inputs.iter().any(|&(le, _)| le == e)
-                    || evict.iter().any(|&(ee, _)| ee == e)
-                    || size > buf_left
-                {
-                    continue;
-                }
-                buf_left -= size;
-                res += size;
-                evict.push((e, size));
+            }
+            if res < 0.0 {
+                problem = Some(false);
             }
         }
-        if res < 0.0 {
-            return self.memory_problem(v, j, false);
+        if let Some(buffer) = problem {
+            self.scratch_local = local;
+            self.scratch_evict = evict;
+            return self.memory_problem(v, j, buffer, sc, cfg);
         }
 
         // Commit the start. -------------------------------------------------
@@ -327,12 +543,12 @@ impl<'a> Sim<'a> {
             self.buffered[j].insert(e, size);
             self.avail_buf[j] -= size;
         }
-        let arrival = self.input_arrival(v, j);
+        let arrival = self.input_arrival(v, j, sc);
         let st = self.proc_free[j].max(arrival).max(self.time);
-        let dur = self.cluster.exec_time(w_act, j);
+        let dur = sc.cluster.exec_time(w_act, j);
         // Producer-side frees for remote inputs (files are sent now).
-        for &e in self.wf_est.in_edge_ids(v) {
-            let edge = self.wf_est.edge(e);
+        for &e in sc.wf.in_edge_ids(v) {
+            let edge = sc.wf.edge(e);
             let pu = self.plan[edge.src].proc;
             if pu != j {
                 if let Some(size) = self.pending[pu].remove(e) {
@@ -351,13 +567,15 @@ impl<'a> Sim<'a> {
         self.proc_free[j] = st + dur;
         self.started += 1;
         self.heap.push(Reverse((time_key(st + dur), v)));
+        self.scratch_local = local;
+        self.scratch_evict = evict;
 
         // Significant execution-time/memory deviation → warn the scheduler.
-        if self.cfg.mode == SimMode::Recompute {
-            let rel = (w_act - est.work).abs() / est.work.max(1e-12);
-            let mel = (m_act - est.memory).abs() / est.memory.max(1e-12);
-            if rel > self.cfg.recompute_threshold || mel > self.cfg.recompute_threshold {
-                self.recompute();
+        if cfg.mode == SimMode::Recompute {
+            let rel = (w_act - est_work).abs() / est_work.max(1e-12);
+            let mel = (m_act - est_mem).abs() / est_mem.max(1e-12);
+            if rel > cfg.recompute_threshold || mel > cfg.recompute_threshold {
+                self.recompute(sc);
             }
         }
         Ok(true)
@@ -372,10 +590,17 @@ impl<'a> Sim<'a> {
     /// assignment, §IV-B) and the execution (freeing at runtime) reconcile.
     /// Only when no progress is possible is the execution declared invalid
     /// (§VI-A-3: "not enough memory").
-    fn memory_problem(&mut self, v: TaskId, j: ProcId, buffer: bool) -> Result<bool, SimFailure> {
-        if self.cfg.mode == SimMode::Recompute && !self.recompute_tried[v] {
+    fn memory_problem(
+        &mut self,
+        v: TaskId,
+        j: ProcId,
+        buffer: bool,
+        sc: &SimScaffold,
+        cfg: &SimConfig,
+    ) -> Result<bool, SimFailure> {
+        if cfg.mode == SimMode::Recompute && !self.recompute_tried[v] {
             self.recompute_tried[v] = true;
-            self.recompute();
+            self.recompute(sc);
             return Ok(false);
         }
         if !self.heap.is_empty() {
@@ -384,7 +609,7 @@ impl<'a> Sim<'a> {
             // one recomputation per memory issue — repeated recomputes per
             // retry would cost O(n·k) each for no new information.)
             self.deferred[v] = true;
-            self.rebuild_queues(); // restore v (it was pre-popped)
+            self.rebuild_queues(sc); // restore v (it was pre-popped)
             return Ok(false);
         }
         Err(if buffer {
@@ -396,10 +621,10 @@ impl<'a> Sim<'a> {
 
     /// Recompute the placements of all unstarted tasks from the current
     /// platform state (paper §V).
-    fn recompute(&mut self) {
+    fn recompute(&mut self, sc: &SimScaffold) {
         let k = self.queues.len();
         // Snapshot the platform.
-        let mut state = PlatformState::new(self.cluster);
+        let mut state = PlatformState::new(&sc.cluster);
         for j in 0..k {
             state.procs[j].ready_time = self.proc_free[j].max(self.time);
             state.procs[j].avail_mem = self.avail_mem[j];
@@ -410,8 +635,8 @@ impl<'a> Sim<'a> {
             // but not yet in the pending set; pre-insert them so Step 1
             // sees them when placing their children.
             if let Some(r) = self.running[j] {
-                for &e in self.wf_est.out_edge_ids(r) {
-                    state.procs[j].pending.insert(e, self.wf_est.edge(e).data);
+                for &e in sc.wf.out_edge_ids(r) {
+                    state.procs[j].pending.insert(e, sc.wf.edge(e).data);
                 }
             }
             for to in 0..k {
@@ -435,21 +660,22 @@ impl<'a> Sim<'a> {
             })
             .collect();
         let engine = Engine::resume(
-            &self.known,
-            self.cluster,
-            self.algorithm,
-            self.policy,
+            self.known.as_ref().expect("Recompute mode maintains `known`"),
+            sc.cluster.as_ref(),
+            sc.schedule.algorithm,
+            sc.schedule.policy,
             state,
             fixed,
         );
-        let new = engine.run(&self.rank_order);
+        let new = engine.run(&sc.schedule.rank_order);
         self.plan = new.tasks;
-        self.rebuild_queues();
+        self.plan_dirty = true;
+        self.rebuild_queues(sc);
         self.recomputations += 1;
     }
 
     /// Sweep all idle processors; start whatever is startable.
-    fn try_starts(&mut self) -> Result<(), SimFailure> {
+    fn try_starts(&mut self, sc: &SimScaffold, cfg: &SimConfig) -> Result<(), SimFailure> {
         let k = self.queues.len();
         let mut progress = true;
         while progress {
@@ -467,7 +693,7 @@ impl<'a> Sim<'a> {
                     }
                 }
                 let Some(&v) = self.queues[j].last() else { continue };
-                if !self.parents_done(v) {
+                if !self.parents_done(v, sc) {
                     continue; // predecessor not finished: wait
                 }
                 if self.deferred[v] {
@@ -477,7 +703,7 @@ impl<'a> Sim<'a> {
                 // rebuilds the queues from scratch (and re-inserts v if it
                 // did not start), so the stale entry must be gone first.
                 self.queues[j].pop();
-                match self.try_start(v)? {
+                match self.try_start(v, sc, cfg)? {
                     true => {
                         progress = true;
                     }
@@ -492,7 +718,7 @@ impl<'a> Sim<'a> {
         Ok(())
     }
 
-    fn finish_task(&mut self, v: TaskId) {
+    fn finish_task(&mut self, v: TaskId, sc: &SimScaffold) {
         let j = self.plan[v].proc;
         debug_assert_eq!(self.running[j], Some(v));
         self.running[j] = None;
@@ -500,8 +726,8 @@ impl<'a> Sim<'a> {
         // Free the transient (task memory + remote inputs).
         self.avail_mem[j] += self.held[v];
         // Local inputs leave the pending set.
-        for &e in self.wf_est.in_edge_ids(v) {
-            let edge = self.wf_est.edge(e);
+        for &e in sc.wf.in_edge_ids(v) {
+            let edge = sc.wf.edge(e);
             if self.plan[edge.src].proc == j {
                 if let Some(size) = self.pending[j].remove(e) {
                     self.avail_mem[j] += size;
@@ -509,23 +735,23 @@ impl<'a> Sim<'a> {
             }
         }
         // Outputs become pending files (space already reserved at start).
-        for &e in self.wf_est.out_edge_ids(v) {
-            self.pending[j].insert(e, self.wf_est.edge(e).data);
+        for &e in sc.wf.out_edge_ids(v) {
+            self.pending[j].insert(e, sc.wf.edge(e).data);
         }
     }
 
-    fn run(mut self) -> SimOutcome {
-        let n = self.wf_est.num_tasks();
+    fn exec(&mut self, sc: &SimScaffold, cfg: &SimConfig) -> (bool, Option<SimFailure>) {
+        let n = sc.wf.num_tasks();
         let mut done = 0usize;
         loop {
-            if let Err(f) = self.try_starts() {
-                return self.outcome(false, Some(f));
+            if let Err(f) = self.try_starts(sc, cfg) {
+                return (false, Some(f));
             }
             let Some(Reverse((tk, v))) = self.heap.pop() else {
                 break;
             };
             self.time = f64::from_bits(tk);
-            self.finish_task(v);
+            self.finish_task(v, sc);
             // Freed memory: deferred tasks get another chance.
             self.deferred.iter_mut().for_each(|d| *d = false);
             done += 1;
@@ -533,19 +759,23 @@ impl<'a> Sim<'a> {
                 break;
             }
         }
-        let completed = done == n;
-        self.outcome(completed, None)
+        (done == n, None)
     }
 
-    fn outcome(self, completed: bool, failure: Option<SimFailure>) -> SimOutcome {
-        let makespan = self.ft_act.iter().copied().filter(|f| f.is_finite()).fold(0.0, f64::max);
+    fn outcome(
+        &self,
+        completed: bool,
+        failure: Option<SimFailure>,
+        with_finish_times: bool,
+    ) -> SimOutcome {
+        let makespan = self.ft_act.iter().copied().filter(|&f| f >= 0.0).fold(0.0, f64::max);
         SimOutcome {
             completed,
             makespan,
             failure,
             recomputations: self.recomputations,
             started: self.started,
-            finish_times: self.ft_act,
+            finish_times: if with_finish_times { self.ft_act.clone() } else { Vec::new() },
         }
     }
 }
@@ -554,7 +784,7 @@ impl<'a> Sim<'a> {
 mod tests {
     use super::*;
     use crate::platform::presets::small_cluster;
-    use crate::scheduler::compute_schedule;
+    use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
 
     fn sample(samples: usize, seed: u64) -> (Workflow, Cluster) {
         let model = crate::generator::models::chipseq();
@@ -659,5 +889,155 @@ mod tests {
                 assert!(out.completed || out.failure.is_some(), "{algo:?} {mode:?} stalled");
             }
         }
+    }
+
+    fn outcomes_bit_equal(a: &SimOutcome, b: &SimOutcome) {
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.failure, b.failure);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.recomputations, b.recomputations);
+        assert_eq!(a.started, b.started);
+        assert_eq!(
+            a.finish_times.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            b.finish_times.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn scaffold_run_matches_simulate_shim_bit_exactly() {
+        // One scaffold + one reused arena across points vs the per-point
+        // shim, across both modes and several sigmas/seeds — the parity
+        // contract the replay engine is built on.
+        let (wf, cluster) = sample(8, 9);
+        for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
+            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let scaffold = SimScaffold::new(
+                Arc::new(wf.clone()),
+                Arc::new(cluster.clone()),
+                Arc::new(s.clone()),
+            );
+            let mut run = SimRun::new();
+            for mode in [SimMode::Recompute, SimMode::FollowStatic] {
+                for sigma in [0.0, 0.1, 0.3] {
+                    for seed in [5, 7] {
+                        let cfg = SimConfig::new(mode, DeviationModel::new(sigma, seed));
+                        let fresh = simulate(&wf, &cluster, &s, &cfg);
+                        let reused = run.simulate(&scaffold, &cfg);
+                        outcomes_bit_equal(&fresh, &reused);
+                        // The summary variant (the service's hot path)
+                        // matches on everything but the elided vector.
+                        let summary = run.simulate_summary(&scaffold, &cfg);
+                        assert_eq!(summary.completed, fresh.completed);
+                        assert_eq!(summary.failure, fresh.failure);
+                        assert_eq!(summary.makespan.to_bits(), fresh.makespan.to_bits());
+                        assert_eq!(summary.recomputations, fresh.recomputations);
+                        assert_eq!(summary.started, fresh.started);
+                        assert!(summary.finish_times.is_empty());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reset_reuses_allocations() {
+        // The `recompute_triggered_by_large_deviation` instance: valid,
+        // and sigma 0.3 reliably dirties the plan mid-run.
+        let (wf, cluster) = sample(6, 4);
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        let scaffold =
+            SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(s));
+        // A sigma large enough to trigger recomputations, so the reset
+        // path that restores a dirtied plan is exercised too.
+        let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.3, 5));
+        let mut run = SimRun::new();
+        let first = run.simulate(&scaffold, &cfg);
+        assert!(first.recomputations > 0, "test wants the plan dirtied");
+        let fingerprint = |r: &SimRun| {
+            (
+                r.state_of.as_ptr() as usize,
+                r.st_act.as_ptr() as usize,
+                r.ft_act.as_ptr() as usize,
+                r.held.as_ptr() as usize,
+                r.comm_rt.as_ptr() as usize,
+                r.queues.as_ptr() as usize,
+                r.pending.as_ptr() as usize,
+                r.queues.iter().map(|q| q.as_ptr() as usize).collect::<Vec<_>>(),
+            )
+        };
+        let before = fingerprint(&run);
+        let second = run.simulate(&scaffold, &cfg);
+        outcomes_bit_equal(&first, &second);
+        // Same backing buffers: the reset reused every arena allocation
+        // (queue buffers included) instead of reallocating per point.
+        assert_eq!(before, fingerprint(&run));
+    }
+
+    #[test]
+    fn arena_adapts_across_scaffolds() {
+        // One thread-local arena must serve heterogeneous sweeps:
+        // different workflows, clusters, and schedules back to back.
+        let (wf_a, cluster_a) = sample(8, 1);
+        let (wf_b, cluster_b) = sample(4, 2);
+        let s_a = compute_schedule(&wf_a, &cluster_a, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s_b = compute_schedule(&wf_b, &cluster_b, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        let sc_a = SimScaffold::new(
+            Arc::new(wf_a.clone()),
+            Arc::new(cluster_a.clone()),
+            Arc::new(s_a.clone()),
+        );
+        let sc_b = SimScaffold::new(
+            Arc::new(wf_b.clone()),
+            Arc::new(cluster_b.clone()),
+            Arc::new(s_b.clone()),
+        );
+        let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.2, 3));
+        let mut run = SimRun::new();
+        for _ in 0..2 {
+            outcomes_bit_equal(&run.simulate(&sc_a, &cfg), &simulate(&wf_a, &cluster_a, &s_a, &cfg));
+            outcomes_bit_equal(&run.simulate(&sc_b, &cfg), &simulate(&wf_b, &cluster_b, &s_b, &cfg));
+        }
+    }
+
+    #[test]
+    fn never_started_sentinel_keeps_equality_well_behaved() {
+        // An instance that cannot start at all: task memory far beyond
+        // every processor. The outcome's finish_times must carry the
+        // documented sentinel (not NaN), so Vec equality — what parity
+        // tests rely on — holds.
+        let mut b = crate::workflow::WorkflowBuilder::new("oom");
+        let a = b.task("a", "t", 1.0, 1e30);
+        let c = b.task("c", "t", 1.0, 1e30);
+        b.edge(a, c, 1.0);
+        let wf = b.build().unwrap();
+        let cluster = small_cluster();
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(!s.valid);
+        let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::none(1));
+        let out = simulate(&wf, &cluster, &s, &cfg);
+        assert!(!out.completed);
+        assert!(out.failure.is_some());
+        assert_eq!(out.started, 0);
+        assert!(out.finish_times.iter().all(|&f| f == NEVER_STARTED));
+        assert_eq!(out.finish_time(0), None);
+        // The point of the sentinel: `==` is usable (NaN != NaN broke it).
+        let again = simulate(&wf, &cluster, &s, &cfg);
+        assert_eq!(out.finish_times, again.finish_times);
+        // Completed tasks report a real time through the accessor (the
+        // `zero_deviation_follows_schedule` instance, known valid).
+        let (wf2, cluster2) = sample(6, 1);
+        let s2 = compute_schedule(&wf2, &cluster2, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(s2.valid);
+        let done = simulate(&wf2, &cluster2, &s2, &SimConfig::new(SimMode::FollowStatic, DeviationModel::none(1)));
+        assert!(done.completed);
+        assert!((0..wf2.num_tasks()).all(|v| done.finish_time(v).is_some()));
+    }
+
+    #[test]
+    fn scaffold_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SimScaffold>();
+        assert_send_sync::<SimRun>();
     }
 }

@@ -1,0 +1,149 @@
+//! Parity contract of the shared simulation scaffold (the replay core):
+//!
+//! 1. `SimScaffold` + a reused `SimRun` arena produce **bit-equal**
+//!    `SimOutcome`s (makespan, recomputations, finish_times, failure) to
+//!    a point-by-point `simulate()` loop, across both `SimMode`s and
+//!    several sigmas;
+//! 2. the service's scaffold-backed replay-sweep path emits
+//!    **byte-identical** sweep JSONL to the flattened per-point batch,
+//!    for `--jobs 1` and `--jobs 4`, and its per-point sim fields are
+//!    bit-equal to direct `simulate()` ground truth;
+//! 3. the scaffold is built exactly once per sweep (the acceptance
+//!    counter surfaced in the run summary).
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::small_cluster;
+use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::service::{
+    to_jsonl, ClusterSpec, Job, JobSource, ReplaySweep, SchedulingService, SimJob,
+};
+use memsched::simulator::{
+    simulate, DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold,
+};
+use std::sync::Arc;
+
+const SIGMAS: [f64; 2] = [0.1, 0.3];
+const MODES: [SimMode; 2] = [SimMode::Recompute, SimMode::FollowStatic];
+const DEV_SEED: u64 = 9;
+
+fn spec() -> WorkloadSpec {
+    // The same instance `experiments::tests::dynamic_run_smoke` asserts
+    // schedules validly on `small_cluster` — the parity tests below rely
+    // on the schedules being valid so the replay points actually run.
+    WorkloadSpec { family: "chipseq".into(), size: None, input: 0, seed: 3 }
+}
+
+fn points() -> Vec<SimJob> {
+    SIGMAS
+        .into_iter()
+        .flat_map(|sigma| MODES.into_iter().map(move |mode| SimJob { mode, sigma, seed: DEV_SEED }))
+        .collect()
+}
+
+fn outcomes_bit_equal(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.failure, b.failure, "{ctx}: failure");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.recomputations, b.recomputations, "{ctx}: recomputations");
+    assert_eq!(a.started, b.started, "{ctx}: started");
+    assert_eq!(
+        a.finish_times.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        b.finish_times.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        "{ctx}: finish_times"
+    );
+}
+
+#[test]
+fn scaffold_outcomes_bit_equal_point_by_point_simulate() {
+    let wf = spec().build().unwrap();
+    let cluster = small_cluster();
+    for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
+        let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        assert!(s.valid, "{algo:?} schedule must be valid for this parity test");
+        let scaffold = SimScaffold::new(
+            Arc::new(wf.clone()),
+            Arc::new(cluster.clone()),
+            Arc::new(s.clone()),
+        );
+        // One arena across every point — the sweep execution shape.
+        let mut run = SimRun::new();
+        for point in points() {
+            let cfg = SimConfig::new(point.mode, DeviationModel::new(point.sigma, point.seed));
+            let fresh = simulate(&wf, &cluster, &s, &cfg);
+            let reused = run.simulate(&scaffold, &cfg);
+            outcomes_bit_equal(
+                &fresh,
+                &reused,
+                &format!("{algo:?} {:?} sigma={}", point.mode, point.sigma),
+            );
+        }
+    }
+}
+
+fn sweeps(cluster: &Arc<memsched::platform::Cluster>) -> Vec<ReplaySweep> {
+    [Algorithm::HeftmBl, Algorithm::HeftmMm]
+        .into_iter()
+        .map(|algo| {
+            ReplaySweep::new(
+                JobSource::Generated(spec()),
+                ClusterSpec::Inline(cluster.clone()),
+            )
+            .with_algo(algo)
+            .with_points(points())
+        })
+        .collect()
+}
+
+#[test]
+fn sweep_jsonl_bytes_identical_across_jobs_and_to_flat_batch() {
+    let cluster = Arc::new(small_cluster());
+    let flattened: Vec<Job> = sweeps(&cluster).iter().flat_map(|s| s.flatten()).collect();
+
+    let svc1 = SchedulingService::new(1);
+    let mut jobs1 = Vec::new();
+    svc1.run_replay_sweeps_streaming(sweeps(&cluster), |r| jobs1.push(r));
+    let svc4 = SchedulingService::new(4);
+    let mut jobs4 = Vec::new();
+    svc4.run_replay_sweeps_streaming(sweeps(&cluster), |r| jobs4.push(r));
+    assert_eq!(to_jsonl(&jobs1), to_jsonl(&jobs4), "sweep JSONL must not depend on --jobs");
+
+    let flat = SchedulingService::new(1).run_batch(flattened);
+    assert_eq!(
+        to_jsonl(&jobs1),
+        to_jsonl(&flat),
+        "scaffold-backed sweep path must match the per-point batch byte for byte"
+    );
+
+    // Acceptance counter: one scaffold per sweep, at any worker count.
+    assert_eq!(svc1.scaffolds_built(), 2);
+    assert_eq!(svc4.scaffolds_built(), 2);
+}
+
+#[test]
+fn sweep_sim_fields_bit_equal_direct_simulate_ground_truth() {
+    let cluster = Arc::new(small_cluster());
+    let svc = SchedulingService::new(4);
+    let results = svc.run_replay_sweeps(sweeps(&cluster));
+    assert!(results.iter().all(|r| r.error.is_none()));
+
+    let wf = spec().build().unwrap();
+    let mut it = results.iter();
+    for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
+        let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        for point in points() {
+            let r = it.next().expect("one result per point");
+            assert_eq!(r.algo, algo);
+            let sim = r.sim.as_ref().expect("replay points carry sim results");
+            let cfg = SimConfig::new(point.mode, DeviationModel::new(point.sigma, point.seed));
+            let truth = simulate(&wf, &cluster, &s, &cfg);
+            let ctx = format!("{algo:?} {:?} sigma={}", point.mode, point.sigma);
+            assert_eq!(sim.mode, point.mode, "{ctx}");
+            assert_eq!(sim.completed, truth.completed, "{ctx}");
+            assert_eq!(sim.makespan.to_bits(), truth.makespan.to_bits(), "{ctx}");
+            assert_eq!(sim.recomputations, truth.recomputations, "{ctx}");
+            assert_eq!(sim.started, truth.started, "{ctx}");
+        }
+    }
+    assert!(it.next().is_none(), "no extra results");
+}
