@@ -11,7 +11,10 @@
 #   ./ci.sh --smoke     service/parity smokes + the replay-parity smoke
 #                       (multi-sigma vs per-sigma, sweep vs flat, scaffold
 #                       sweep vs per-point `memsched simulate`, warm/cold
-#                       --cache-dir with schedules_computed=0)
+#                       --cache-dir with schedules_computed=0) + the serve
+#                       round-trip smoke (daemon responses byte-identical
+#                       to `memsched batch`, warm second client computes
+#                       0 schedules, SIGTERM drains and exits 0)
 #   ./ci.sh --bench     bench_engine + bench_service + bench_replay at
 #                       tiny scale, emit BENCH_ci.json, and gate >2x
 #                       regressions against rust/benches/BENCH_baseline.json
@@ -172,6 +175,27 @@ EOF
   grep -Eq '"schedules_computed":0[,}]' "$TMP/e_warm.err" \
     || { echo "warm experiment did not report schedules_computed=0:"; cat "$TMP/e_warm.err"; exit 1; }
   echo "experiment tables cache-independent; warm experiment computed 0 schedules"
+
+  echo "== serve: daemon round-trip byte-identical to batch; SIGTERM drains and exits 0 =="
+  SOCK="$TMP/serve.sock"
+  "$BIN" serve --socket "$SOCK" --jobs 2 2>"$TMP/serve.err" &
+  SERVE_PID=$!
+  for _ in $(seq 1 100); do [ -S "$SOCK" ] && break; sleep 0.05; done
+  [ -S "$SOCK" ] || { echo "serve socket never appeared:"; cat "$TMP/serve.err"; exit 1; }
+  # Two clients submit the sweep job file used above; each response
+  # stream must be byte-identical to the `memsched batch` output for the
+  # same file ($TMP/sweep.jsonl), however warm the daemon's caches are.
+  "$BIN" client --socket "$SOCK" --input "$TMP/sweep_jobs.jsonl" \
+    > "$TMP/serve_c0.jsonl" 2>/dev/null
+  "$BIN" client --socket "$SOCK" --input "$TMP/sweep_jobs.jsonl" \
+    > "$TMP/serve_c1.jsonl" 2>/dev/null
+  cmp "$TMP/sweep.jsonl" "$TMP/serve_c0.jsonl"
+  cmp "$TMP/sweep.jsonl" "$TMP/serve_c1.jsonl"
+  kill -TERM "$SERVE_PID"
+  wait "$SERVE_PID"  # set -e: a non-zero daemon exit fails the smoke
+  grep -Eq '"name":"c1"[^}]*"schedules_computed":0' "$TMP/serve.err" \
+    || { echo "warm client did not report schedules_computed=0:"; cat "$TMP/serve.err"; exit 1; }
+  echo "serve responses byte-identical to batch; warm client computed 0 schedules; clean SIGTERM exit"
 }
 
 tier_bench() {

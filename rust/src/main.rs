@@ -8,6 +8,8 @@
 //! - `schedule`      compute a static schedule and report it
 //! - `simulate`      run the dynamic runtime system on a schedule
 //! - `batch`         run a JSONL job batch on the parallel scheduling service
+//! - `serve`         run a persistent scheduler daemon on a Unix socket / stdio
+//! - `client`        submit a job file to a running `serve` daemon
 //! - `experiment`    run an evaluation suite and print a figure's table
 //! - `bench-check`   compare bench JSONL against a baseline (CI gate)
 //!
@@ -20,7 +22,8 @@ use memsched::platform::Cluster;
 use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
 use memsched::ser::json::Value;
 use memsched::service::{
-    ClusterSpec, Job, JobSource, ReplaySweep, ScoreThreadSpec, ServiceConfig, SimJob, SimResult,
+    ClusterSpec, Job, JobSpec, ParseDefaults, ReplaySweep, ScoreThreadSpec, ServeOptions,
+    ServiceConfig, SimResult,
 };
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 use memsched::workflow;
@@ -61,6 +64,28 @@ COMMANDS:
                 mtime, oldest entries evicted first); a JSONL summary
                 record with the cache-hit / schedule-reuse / scaffold
                 counters goes to stderr
+  serve         --socket <path> | --stdio  [--jobs N] [--score-threads N|auto]
+                [--cache-bytes B] [--cache-dir DIR] [--cache-dir-bytes B]
+                [--cluster C] [--seed S] [--max-frame-bytes B]
+                [--max-queued-per-client N]
+                run a persistent scheduler daemon: clients submit
+                length-delimited job frames (the exact `batch --input`
+                line grammar; see DESIGN.md) over a Unix socket and
+                result frames stream back byte-identical to `memsched
+                batch` on the same lines; admission drains client queues
+                round-robin (fair share), each queue is capped
+                (--max-queued-per-client; overflow is rejected with a
+                structured error frame, never buffered unboundedly), and
+                the in-memory/disk schedule caches are shared live
+                across clients; SIGTERM/SIGINT or a {\"ctl\":\"shutdown\"}
+                frame drains in-flight work, prints a per-client summary
+                record to stderr, and exits 0
+  client        --socket <path> [--input jobs.jsonl] [--shutdown]
+                submit a JSONL job file (default: stdin) to a running
+                `memsched serve` daemon: result lines go to stdout
+                (byte-identical to `memsched batch --input` on the same
+                file), error frames to stderr; --shutdown asks the
+                daemon to drain and exit after this client's work
   experiment    --figure fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|validity
                 [--scale smoke|quick|full] [--seed S] [--jobs N]
                 [--sigmas 0.1,0.3] [--score-threads N|auto]
@@ -107,6 +132,8 @@ fn run() -> Result<()> {
         Some("simulate") => cmd_simulate(&mut args),
         Some("retrace") => cmd_retrace(&mut args),
         Some("batch") => cmd_batch(&mut args),
+        Some("serve") => cmd_serve(&mut args),
+        Some("client") => cmd_client(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("bench-check") => cmd_bench_check(&mut args),
         Some("help") | None => {
@@ -566,7 +593,7 @@ fn cmd_batch(args: &mut Args) -> Result<()> {
             if !sigmas.is_empty() {
                 bail!("--sigmas only applies to --suite batches; put a `sweep` array on the job lines instead");
             }
-            parse_jobs_file(path, &default_cluster, seed)?
+            parse_jobs_file(path, &ParseDefaults { cluster: default_cluster.clone(), seed })?
         }
         (None, Some(scale_str)) => {
             let scale: SuiteScale = scale_str.parse()?;
@@ -656,143 +683,38 @@ fn cmd_batch(args: &mut Args) -> Result<()> {
 }
 
 /// Parse a JSONL job file (one JSON object per line; `#` comments and
-/// blank lines ignored). `default_seed` (the CLI's `--seed`) applies to
-/// generated jobs whose lines omit an explicit `seed`. If any line
-/// carries a `sweep` array the whole batch runs through the replay
-/// engine (plain lines become one-point sweeps); the output bytes are
-/// identical either way.
-fn parse_jobs_file(path: &str, default_cluster: &str, default_seed: u64) -> Result<Batch> {
+/// blank lines ignored). `defaults` (the CLI's `--cluster`/`--seed`)
+/// applies to lines that omit those fields. One parser serves this path
+/// and the `serve` daemon's job frames ([`JobSpec::parse_line`]), so the
+/// two accept exactly the same grammar. If any line carries a `sweep`
+/// array the whole batch runs through the replay engine (plain lines
+/// become one-point sweeps); the output bytes are identical either way.
+fn parse_jobs_file(path: &str, defaults: &ParseDefaults) -> Result<Batch> {
     let text = std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
-    let mut parsed: Vec<(Job, Option<Vec<SimJob>>)> = Vec::new();
+    let mut parsed: Vec<JobSpec> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let v = Value::parse(line)
-            .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", lineno + 1))?;
         parsed.push(
-            parse_job(&v, default_cluster, default_seed)
+            JobSpec::parse_line(line, defaults)
                 .with_context(|| format!("{path}:{} (job {})", lineno + 1, parsed.len() + 1))?,
         );
     }
-    if parsed.iter().any(|(_, sweep)| sweep.is_some()) {
-        Ok(Batch::Sweeps(
+    if parsed.iter().any(|spec| matches!(spec, JobSpec::Sweep(_))) {
+        Ok(Batch::Sweeps(parsed.into_iter().map(JobSpec::into_sweep).collect()))
+    } else {
+        Ok(Batch::Jobs(
             parsed
                 .into_iter()
-                .map(|(job, sweep)| match sweep {
-                    Some(points) => ReplaySweep::from_job(job).with_points(points),
-                    None => ReplaySweep::from_job(job),
+                .map(|spec| match spec {
+                    JobSpec::Single(job) => job,
+                    JobSpec::Sweep(_) => unreachable!("sweep-free batch"),
                 })
                 .collect(),
         ))
-    } else {
-        Ok(Batch::Jobs(parsed.into_iter().map(|(job, _)| job).collect()))
     }
-}
-
-/// One parsed job line: the job itself plus, when the line carried a
-/// `sweep` array, its replay points.
-fn parse_job(v: &Value, default_cluster: &str, default_seed: u64) -> Result<(Job, Option<Vec<SimJob>>)> {
-    // Mirror Args::finish's strictness: a typo'd key must error, not
-    // silently fall back to a default.
-    const JOB_KEYS: [&str; 10] =
-        ["workflow", "model", "tasks", "input", "seed", "cluster", "algo", "eviction", "sim", "sweep"];
-    let fields = v.as_object().ok_or_else(|| anyhow::anyhow!("job line must be a JSON object"))?;
-    for (key, _) in fields {
-        if !JOB_KEYS.contains(&key.as_str()) {
-            bail!("unknown job field `{key}` (expected one of {})", JOB_KEYS.join(", "));
-        }
-    }
-    let source = match (v.get("workflow"), v.get("model")) {
-        (Some(wf), None) => {
-            // Generator-only knobs on a file job would be silently dead;
-            // reject them like any other unusable input.
-            for generator_key in ["tasks", "input", "seed"] {
-                if v.get(generator_key).is_some() {
-                    bail!(
-                        "`{generator_key}` only applies to generated jobs (`model`), not `workflow` files"
-                    );
-                }
-            }
-            let path = wf
-                .as_str()
-                .ok_or_else(|| anyhow::anyhow!("`workflow` must be a file path string"))?;
-            JobSource::File(std::path::PathBuf::from(path))
-        }
-        (None, Some(model)) => {
-            let family = model
-                .as_str()
-                .ok_or_else(|| anyhow::anyhow!("`model` must be a model name string"))?
-                .to_string();
-            let size = match v.get("tasks") {
-                None => None,
-                Some(t) => Some(
-                    t.as_usize()
-                        .ok_or_else(|| anyhow::anyhow!("`tasks` must be a non-negative integer"))?,
-                ),
-            };
-            let input = match v.get("input") {
-                None => 2,
-                Some(i) => i
-                    .as_usize()
-                    .ok_or_else(|| anyhow::anyhow!("`input` must be a non-negative integer"))?,
-            };
-            let seed = match v.get("seed") {
-                None => default_seed,
-                Some(s) => s.as_u64().ok_or_else(|| anyhow::anyhow!("`seed` must be an integer"))?,
-            };
-            JobSource::Generated(experiments::WorkloadSpec { family, size, input, seed })
-        }
-        _ => bail!("a job needs exactly one of `workflow` (file) or `model` (generator)"),
-    };
-    let cluster = ClusterSpec::Named(match v.get("cluster") {
-        None => default_cluster.to_string(),
-        Some(c) => c
-            .as_str()
-            .ok_or_else(|| anyhow::anyhow!("`cluster` must be a string"))?
-            .to_string(),
-    });
-    let algo: Algorithm = match v.get("algo") {
-        None => Algorithm::HeftmBl,
-        Some(a) => a
-            .as_str()
-            .ok_or_else(|| anyhow::anyhow!("`algo` must be a string"))?
-            .parse()?,
-    };
-    let policy: EvictionPolicy = match v.get("eviction") {
-        None => EvictionPolicy::LargestFirst,
-        Some(p) => p
-            .as_str()
-            .ok_or_else(|| anyhow::anyhow!("`eviction` must be a string"))?
-            .parse()?,
-    };
-    let sim = match v.get("sim") {
-        None => None,
-        Some(s) => Some(parse_sim_point(s, default_seed)?),
-    };
-    let sweep = match v.get("sweep") {
-        None => None,
-        Some(s) => {
-            if sim.is_some() {
-                bail!("a job takes `sim` (one point) or `sweep` (many points), not both");
-            }
-            let points = s
-                .as_array()
-                .ok_or_else(|| anyhow::anyhow!("`sweep` must be an array of sim points"))?;
-            Some(
-                points
-                    .iter()
-                    .enumerate()
-                    .map(|(i, p)| {
-                        parse_sim_point(p, default_seed)
-                            .with_context(|| format!("sweep point {}", i + 1))
-                    })
-                    .collect::<Result<Vec<SimJob>>>()?,
-            )
-        }
-    };
-    Ok((Job { source, cluster, algo, policy, sim }, sweep))
 }
 
 /// Compare a bench JSONL file (entries `{"id": ..., "throughput": ...,
@@ -862,23 +784,169 @@ fn cmd_bench_check(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// One simulation point (`sim` object or a `sweep` array element).
-fn parse_sim_point(s: &Value, default_seed: u64) -> Result<SimJob> {
-    const SIM_KEYS: [&str; 3] = ["mode", "sigma", "seed"];
-    let fields = s.as_object().ok_or_else(|| anyhow::anyhow!("sim point must be a JSON object"))?;
-    for (key, _) in fields {
-        if !SIM_KEYS.contains(&key.as_str()) {
-            bail!("unknown sim field `{key}` (expected one of {})", SIM_KEYS.join(", "));
+/// Run the persistent scheduler daemon (`memsched serve`): accept
+/// clients on a Unix socket (or serve one client over stdio), execute
+/// their job frames on the shared scheduling service, and stream result
+/// frames back. Returns — with exit code 0 — after a graceful drain
+/// (SIGTERM/SIGINT or a `{"ctl":"shutdown"}` frame); the per-client
+/// summary record goes to stderr, like `batch`'s summary line.
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let socket = args.opt_val("socket")?;
+    let stdio = args.flag("stdio");
+    let seed: u64 = args.opt_or("seed", 42)?;
+    let default_cluster = args.opt_val("cluster")?.unwrap_or_else(|| "default".into());
+    let cfg = service_config_args(args)?;
+    let max_frame_bytes: usize =
+        args.opt_or("max-frame-bytes", memsched::ser::frame::DEFAULT_MAX_FRAME_BYTES)?;
+    let max_queued_per_client: usize = args.opt_or("max-queued-per-client", 1024)?;
+    args.finish()?;
+    if max_frame_bytes == 0 {
+        bail!("--max-frame-bytes must be at least 1");
+    }
+    if max_queued_per_client == 0 {
+        bail!("--max-queued-per-client must be at least 1");
+    }
+
+    let opts = ServeOptions {
+        max_frame_bytes,
+        max_queued_per_client,
+        defaults: ParseDefaults { cluster: default_cluster, seed },
+    };
+    let service = cfg.build()?;
+    memsched::service::serve::install_signal_handlers();
+    let t0 = std::time::Instant::now();
+    let summary = match (&socket, stdio) {
+        (Some(path), false) => {
+            eprintln!("serve: listening on {path}");
+            memsched::service::serve::serve_unix(&service, std::path::Path::new(path), &opts)?
+        }
+        (None, true) => memsched::service::serve::serve_stdio(&service, &opts)?,
+        _ => bail!("serve requires exactly one of --socket <path> or --stdio"),
+    };
+
+    let stats = service.cache_stats();
+    eprintln!(
+        "serve: {} client(s), {} results ({} cache hits, {} failed), {} schedules computed, up {}",
+        summary.clients.len(),
+        summary.total_results(),
+        summary.total_cache_hits(),
+        summary.total_failed(),
+        stats.computed,
+        memsched::bench::fmt_duration(t0.elapsed())
+    );
+    // Machine-readable shutdown summary — the batch record plus a
+    // per-client `clients` array (ci.sh asserts on these counters).
+    eprintln!(
+        "{}",
+        service
+            .summary_json_with_clients(
+                summary.total_results(),
+                summary.total_cache_hits(),
+                summary.total_failed(),
+                &summary.clients,
+            )
+            .to_string_compact()
+    );
+    Ok(())
+}
+
+/// Submit a JSONL job file to a running `memsched serve` daemon and
+/// stream the result frames to stdout — byte-identical to `memsched
+/// batch --input` on the same file. Requests are written from a helper
+/// thread while this thread drains responses, so neither side can stall
+/// on a full socket buffer; a final `{"ctl":"drain"}` barrier tells us
+/// when every result has arrived.
+fn cmd_client(args: &mut Args) -> Result<()> {
+    use memsched::ser::frame::{read_frame, write_frame, DEFAULT_MAX_FRAME_BYTES};
+    use std::io::{Read as _, Write as _};
+
+    let socket = args.req_str("socket")?;
+    let input = args.opt_val("input")?;
+    let shutdown = args.flag("shutdown");
+    args.finish()?;
+
+    let text = match &input {
+        Some(path) => {
+            std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?
+        }
+        None => {
+            let mut buf = String::new();
+            std::io::stdin().read_to_string(&mut buf).context("reading jobs from stdin")?;
+            buf
+        }
+    };
+    // The same line discipline as `batch --input`: blank lines and `#`
+    // comments are the file format's, not the wire's — skip them here.
+    let lines: Vec<String> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect();
+    let submitted = lines.len();
+
+    let stream = std::os::unix::net::UnixStream::connect(&socket)
+        .with_context(|| format!("connecting to serve socket {socket}"))?;
+    let mut reader = stream.try_clone().context("cloning socket handle")?;
+    let mut writer = stream;
+    let sender = std::thread::spawn(move || -> std::io::Result<()> {
+        for line in &lines {
+            write_frame(&mut writer, line.as_bytes())?;
+        }
+        write_frame(&mut writer, b"{\"ctl\":\"drain\"}")?;
+        writer.flush()
+    });
+
+    let mut stdout = std::io::stdout();
+    let (mut results, mut failed) = (0usize, 0usize);
+    loop {
+        let payload = match read_frame(&mut reader, DEFAULT_MAX_FRAME_BYTES)? {
+            Some(p) => p,
+            None => bail!("server closed the connection before acking the drain"),
+        };
+        let parsed = std::str::from_utf8(&payload).ok().and_then(|s| Value::parse(s).ok());
+        let Some(v) = parsed else {
+            bail!("malformed frame payload from server: {}", String::from_utf8_lossy(&payload));
+        };
+        if v.get("id").is_some() {
+            // A result line: forward the exact payload bytes (this is
+            // what makes `client` output comparable to `batch` output).
+            results += 1;
+            if v.get("error").is_some() {
+                failed += 1;
+            }
+            stdout.write_all(&payload)?;
+            stdout.write_all(b"\n")?;
+            stdout.flush()?;
+        } else if let Some(err) = v.get("error").and_then(Value::as_str) {
+            // A rejected submission (parse error, backpressure, ...):
+            // no result slot, so it only shows up in the failure count.
+            failed += 1;
+            eprintln!("serve error: {err}");
+        } else if let Some(ok) = v.get("ok").and_then(Value::as_str) {
+            if ok == "drained" {
+                break;
+            }
+        } else {
+            eprintln!("unrecognized frame from server: {}", String::from_utf8_lossy(&payload));
         }
     }
-    let mode: SimMode = s.req_str("mode")?.parse()?;
-    let sigma = match s.get("sigma") {
-        None => 0.1,
-        Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("`sim.sigma` must be a number"))?,
-    };
-    let seed = match s.get("seed") {
-        None => default_seed,
-        Some(x) => x.as_u64().ok_or_else(|| anyhow::anyhow!("`sim.seed` must be an integer"))?,
-    };
-    Ok(SimJob { mode, sigma, seed })
+    sender
+        .join()
+        .map_err(|_| anyhow::anyhow!("request writer thread panicked"))?
+        .context("sending job frames")?;
+
+    if shutdown {
+        let mut w = reader.try_clone().context("cloning socket handle")?;
+        write_frame(&mut w, b"{\"ctl\":\"shutdown\"}")?;
+        w.flush()?;
+        // Wait for the ack (or the daemon closing the socket) so the
+        // drain request is known to have been admitted before we exit.
+        let _ = read_frame(&mut reader, DEFAULT_MAX_FRAME_BYTES)?;
+    }
+    eprintln!("client: {submitted} submitted, {results} results, {failed} failed");
+    if failed > 0 {
+        bail!("{failed} submission(s)/result(s) failed (see the error lines)");
+    }
+    Ok(())
 }

@@ -1,0 +1,238 @@
+//! Length-delimited frame codec for the `memsched serve` wire protocol.
+//!
+//! One frame = an 8-byte header followed by the payload bytes:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic + version, the ASCII bytes b"MSF1"
+//! 4       4     payload length, u32 little-endian
+//! 8       len   payload (UTF-8 JSON, one object per frame)
+//! ```
+//!
+//! The magic doubles as a protocol version: a future incompatible
+//! revision bumps the trailing digit, and mismatched peers fail fast
+//! with [`FrameError::BadMagic`] instead of mis-framing the stream.
+//!
+//! Decoding is defensive by design — the daemon feeds this from
+//! untrusted client sockets:
+//!
+//! - a frame longer than the decoder's cap is reported as
+//!   [`FrameError::Oversized`] **after skipping its payload**, so the
+//!   connection stays framed and usable;
+//! - a bad magic means the peer is not speaking this protocol (or the
+//!   stream lost sync) — unrecoverable, the caller should drop the
+//!   connection;
+//! - EOF in the middle of a header or payload is [`FrameError::Truncated`];
+//! - clean EOF **between** frames is `Ok(None)`, the normal end of a
+//!   session.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Magic + version prefix of every frame.
+pub const MAGIC: [u8; 4] = *b"MSF1";
+
+/// Frame header size in bytes (magic + u32 length).
+pub const HEADER_LEN: usize = 8;
+
+/// Default payload cap for decoders (`--max-frame-bytes`): far above
+/// any real job line, far below an allocation-of-death.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Decode failure. `Oversized` is recoverable (the stream is still
+/// framed); the rest should end the connection.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Payload length exceeded the decoder cap. The payload has been
+    /// read and discarded — the next read starts at the next frame.
+    Oversized { len: usize, cap: usize },
+    /// The 4 magic bytes did not match [`MAGIC`]: wrong protocol or a
+    /// desynchronized stream.
+    BadMagic([u8; 4]),
+    /// EOF inside a header or payload.
+    Truncated,
+    /// Underlying transport error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Oversized { len, cap } => {
+                write!(f, "frame payload of {len} bytes exceeds the {cap}-byte cap")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?} (expected {MAGIC:?})"),
+            FrameError::Truncated => write!(f, "truncated frame (EOF mid-header or mid-payload)"),
+            FrameError::Io(e) => write!(f, "frame I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+impl FrameError {
+    /// Whether the stream is still framed after this error (the caller
+    /// may report it and keep reading).
+    pub fn recoverable(&self) -> bool {
+        matches!(self, FrameError::Oversized { .. })
+    }
+}
+
+/// Encode and write one frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    let len: u32 = payload.len().try_into().map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "frame payload exceeds u32 length")
+    })?;
+    w.write_all(&MAGIC)?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame's payload. `Ok(None)` is clean EOF at a frame
+/// boundary; `Err(Oversized)` leaves the stream positioned at the next
+/// frame (the payload is skipped), every other error is terminal.
+pub fn read_frame(r: &mut impl Read, cap: usize) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    match read_exact_or_eof(r, &mut header)? {
+        ReadOutcome::CleanEof => return Ok(None),
+        ReadOutcome::Truncated => return Err(FrameError::Truncated),
+        ReadOutcome::Full => {}
+    }
+    let magic: [u8; 4] = header[..4].try_into().unwrap();
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let len = u32::from_le_bytes(header[4..].try_into().unwrap()) as usize;
+    if len > cap {
+        // Resync: consume the payload so the stream stays framed, then
+        // report. A short skip means the peer lied about the length —
+        // that *is* terminal.
+        match skip_bytes(r, len) {
+            Ok(true) => return Err(FrameError::Oversized { len, cap }),
+            Ok(false) => return Err(FrameError::Truncated),
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let mut payload = vec![0u8; len];
+    match read_exact_or_eof(r, &mut payload)? {
+        ReadOutcome::Full => Ok(Some(payload)),
+        _ => Err(FrameError::Truncated),
+    }
+}
+
+enum ReadOutcome {
+    Full,
+    CleanEof,
+    Truncated,
+}
+
+/// `read_exact` that distinguishes EOF-before-any-byte (clean) from
+/// EOF-mid-buffer (truncated).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<ReadOutcome, FrameError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Ok(if filled == 0 { ReadOutcome::CleanEof } else { ReadOutcome::Truncated })
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+/// Discard exactly `n` bytes; `Ok(false)` on early EOF.
+fn skip_bytes(r: &mut impl Read, mut n: usize) -> std::io::Result<bool> {
+    let mut scratch = [0u8; 4096];
+    while n > 0 {
+        let want = n.min(scratch.len());
+        match r.read(&mut scratch[..want]) {
+            Ok(0) => return Ok(false),
+            Ok(got) => n -= got,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn encode(payloads: &[&[u8]]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        for p in payloads {
+            write_frame(&mut buf, p).unwrap();
+        }
+        buf
+    }
+
+    #[test]
+    fn roundtrips_multiple_frames_and_clean_eof() {
+        let buf = encode(&[b"{\"a\":1}", b"", b"{\"b\":[1,2,3]}"]);
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, 1024).unwrap().unwrap(), b"{\"a\":1}");
+        assert_eq!(read_frame(&mut r, 1024).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r, 1024).unwrap().unwrap(), b"{\"b\":[1,2,3]}");
+        assert!(read_frame(&mut r, 1024).unwrap().is_none(), "clean EOF between frames");
+        // EOF is sticky.
+        assert!(read_frame(&mut r, 1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frame_reports_and_resyncs() {
+        let big = vec![b'x'; 100];
+        let buf = encode(&[&big, b"next"]);
+        let mut r = Cursor::new(buf);
+        match read_frame(&mut r, 64) {
+            Err(FrameError::Oversized { len: 100, cap: 64 }) => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // The oversized payload was skipped: the stream is still framed.
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), b"next");
+    }
+
+    #[test]
+    fn garbage_bytes_are_bad_magic_not_panic() {
+        // Arbitrary garbage: the first 4 bytes fail the magic check.
+        let mut r = Cursor::new(b"hello world, definitely not a frame".to_vec());
+        match read_frame(&mut r, 1024) {
+            Err(e @ FrameError::BadMagic(_)) => assert!(!e.recoverable()),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_is_detected_everywhere() {
+        let full = encode(&[b"{\"a\":1}"]);
+        // Mid-header, mid-payload, and lying-length truncations.
+        for cut in [3, HEADER_LEN + 2] {
+            let mut r = Cursor::new(full[..cut].to_vec());
+            assert!(matches!(read_frame(&mut r, 1024), Err(FrameError::Truncated)), "cut={cut}");
+        }
+        // Oversized frame whose payload ends early: terminal, not resync.
+        let mut lying = Vec::new();
+        lying.extend_from_slice(&MAGIC);
+        lying.extend_from_slice(&1000u32.to_le_bytes());
+        lying.extend_from_slice(b"short");
+        let mut r = Cursor::new(lying);
+        assert!(matches!(read_frame(&mut r, 64), Err(FrameError::Truncated)));
+    }
+
+    #[test]
+    fn empty_stream_is_clean_eof() {
+        let mut r = Cursor::new(Vec::new());
+        assert!(read_frame(&mut r, 1024).unwrap().is_none());
+    }
+}

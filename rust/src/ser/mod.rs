@@ -5,4 +5,5 @@
 //! writer ([`csv`]). Both are deliberately small, strict, and fully tested.
 
 pub mod csv;
+pub mod frame;
 pub mod json;

@@ -17,6 +17,8 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use anyhow::{bail, Context as _};
+
 use crate::experiments::WorkloadSpec;
 use crate::platform::Cluster;
 use crate::scheduler::{Algorithm, EvictionPolicy};
@@ -205,6 +207,189 @@ impl ReplaySweep {
             })
             .collect()
     }
+}
+
+/// Defaults a job line may omit: the CLI's `--cluster` and `--seed`
+/// flags for `batch --input`, the daemon's `serve --cluster/--seed` for
+/// frames. Keeping them in one struct guarantees the two entry points
+/// can be configured identically.
+#[derive(Debug, Clone)]
+pub struct ParseDefaults {
+    pub cluster: String,
+    pub seed: u64,
+}
+
+impl Default for ParseDefaults {
+    fn default() -> Self {
+        ParseDefaults { cluster: "default".into(), seed: 42 }
+    }
+}
+
+/// One submission: a plain job or a replay sweep. This is the unified
+/// wire unit — `batch --input` lines and `serve` frames both parse into
+/// a `JobSpec` through [`JobSpec::parse`], so the two front ends share
+/// one grammar, one strictness policy, and one set of error messages.
+#[derive(Debug, Clone)]
+pub enum JobSpec {
+    Single(Job),
+    Sweep(ReplaySweep),
+}
+
+impl JobSpec {
+    /// Parse one job object (a `batch --input` line or a serve frame
+    /// payload). Strict: unknown keys, type mismatches, and unusable
+    /// combinations (`sim` + `sweep`, generator knobs on file jobs) are
+    /// errors — malformed input yields a structured error, never a
+    /// panic or a silent default.
+    pub fn parse(v: &Value, defaults: &ParseDefaults) -> anyhow::Result<JobSpec> {
+        // Mirror Args::finish's strictness: a typo'd key must error, not
+        // silently fall back to a default.
+        const JOB_KEYS: [&str; 10] = [
+            "workflow", "model", "tasks", "input", "seed", "cluster", "algo", "eviction", "sim",
+            "sweep",
+        ];
+        let fields =
+            v.as_object().ok_or_else(|| anyhow::anyhow!("job line must be a JSON object"))?;
+        for (key, _) in fields {
+            if !JOB_KEYS.contains(&key.as_str()) {
+                bail!("unknown job field `{key}` (expected one of {})", JOB_KEYS.join(", "));
+            }
+        }
+        let source = match (v.get("workflow"), v.get("model")) {
+            (Some(wf), None) => {
+                // Generator-only knobs on a file job would be silently
+                // dead; reject them like any other unusable input.
+                for generator_key in ["tasks", "input", "seed"] {
+                    if v.get(generator_key).is_some() {
+                        bail!(
+                            "`{generator_key}` only applies to generated jobs (`model`), not `workflow` files"
+                        );
+                    }
+                }
+                let path = wf
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("`workflow` must be a file path string"))?;
+                JobSource::File(PathBuf::from(path))
+            }
+            (None, Some(model)) => {
+                let family = model
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("`model` must be a model name string"))?
+                    .to_string();
+                let size = match v.get("tasks") {
+                    None => None,
+                    Some(t) => Some(t.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("`tasks` must be a non-negative integer")
+                    })?),
+                };
+                let input = match v.get("input") {
+                    None => 2,
+                    Some(i) => i.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("`input` must be a non-negative integer")
+                    })?,
+                };
+                let seed = match v.get("seed") {
+                    None => defaults.seed,
+                    Some(s) => {
+                        s.as_u64().ok_or_else(|| anyhow::anyhow!("`seed` must be an integer"))?
+                    }
+                };
+                JobSource::Generated(WorkloadSpec { family, size, input, seed })
+            }
+            _ => bail!("a job needs exactly one of `workflow` (file) or `model` (generator)"),
+        };
+        let cluster = ClusterSpec::Named(match v.get("cluster") {
+            None => defaults.cluster.clone(),
+            Some(c) => c
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("`cluster` must be a string"))?
+                .to_string(),
+        });
+        let algo: Algorithm = match v.get("algo") {
+            None => Algorithm::HeftmBl,
+            Some(a) => a
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("`algo` must be a string"))?
+                .parse()?,
+        };
+        let policy: EvictionPolicy = match v.get("eviction") {
+            None => EvictionPolicy::LargestFirst,
+            Some(p) => p
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("`eviction` must be a string"))?
+                .parse()?,
+        };
+        let sim = match v.get("sim") {
+            None => None,
+            Some(s) => Some(parse_sim_point(s, defaults.seed)?),
+        };
+        let job = Job { source, cluster, algo, policy, sim };
+        match v.get("sweep") {
+            None => Ok(JobSpec::Single(job)),
+            Some(s) => {
+                if job.sim.is_some() {
+                    bail!("a job takes `sim` (one point) or `sweep` (many points), not both");
+                }
+                let points = s
+                    .as_array()
+                    .ok_or_else(|| anyhow::anyhow!("`sweep` must be an array of sim points"))?;
+                let points = points
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        parse_sim_point(p, defaults.seed)
+                            .with_context(|| format!("sweep point {}", i + 1))
+                    })
+                    .collect::<anyhow::Result<Vec<SimJob>>>()?;
+                Ok(JobSpec::Sweep(ReplaySweep::from_job(job).with_points(points)))
+            }
+        }
+    }
+
+    /// [`parse`](JobSpec::parse) from raw text (one JSON object).
+    pub fn parse_line(line: &str, defaults: &ParseDefaults) -> anyhow::Result<JobSpec> {
+        let v = Value::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        JobSpec::parse(&v, defaults)
+    }
+
+    /// Number of result lines this spec emits.
+    pub fn num_results(&self) -> usize {
+        match self {
+            JobSpec::Single(_) => 1,
+            JobSpec::Sweep(s) => s.num_results(),
+        }
+    }
+
+    /// The sweep form (a single job becomes a one/zero-point sweep);
+    /// byte-identical results either way.
+    pub fn into_sweep(self) -> ReplaySweep {
+        match self {
+            JobSpec::Single(job) => ReplaySweep::from_job(job),
+            JobSpec::Sweep(s) => s,
+        }
+    }
+}
+
+/// One simulation point (`sim` object or a `sweep` array element).
+fn parse_sim_point(s: &Value, default_seed: u64) -> anyhow::Result<SimJob> {
+    const SIM_KEYS: [&str; 3] = ["mode", "sigma", "seed"];
+    let fields =
+        s.as_object().ok_or_else(|| anyhow::anyhow!("sim point must be a JSON object"))?;
+    for (key, _) in fields {
+        if !SIM_KEYS.contains(&key.as_str()) {
+            bail!("unknown sim field `{key}` (expected one of {})", SIM_KEYS.join(", "));
+        }
+    }
+    let mode: SimMode = s.req_str("mode")?.parse()?;
+    let sigma = match s.get("sigma") {
+        None => 0.1,
+        Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("`sim.sigma` must be a number"))?,
+    };
+    let seed = match s.get("seed") {
+        None => default_seed,
+        Some(x) => x.as_u64().ok_or_else(|| anyhow::anyhow!("`sim.seed` must be an integer"))?,
+    };
+    Ok(SimJob { mode, sigma, seed })
 }
 
 /// Simulation outcome summary (deterministic fields only).
@@ -397,6 +582,58 @@ mod tests {
         let back = ReplaySweep::from_job(job.clone()).flatten();
         assert_eq!(back.len(), 1);
         assert_eq!(back[0].sim, job.sim);
+    }
+
+    #[test]
+    fn job_spec_parses_singles_and_sweeps_with_defaults() {
+        let d = ParseDefaults { cluster: "memory-constrained".into(), seed: 7 };
+        // Generated job: omitted seed/cluster fall back to the defaults.
+        let spec = JobSpec::parse_line(r#"{"model":"chipseq","tasks":50}"#, &d).unwrap();
+        assert_eq!(spec.num_results(), 1);
+        let JobSpec::Single(job) = &spec else { panic!("expected a single job") };
+        match &job.source {
+            JobSource::Generated(w) => {
+                assert_eq!(w.seed, 7);
+                assert_eq!(w.input, 2);
+            }
+            other => panic!("unexpected source {other:?}"),
+        }
+        assert_eq!(job.cluster.label(), "memory-constrained");
+        // Sweep: sim-point defaults (sigma 0.1, the shared seed).
+        let spec = JobSpec::parse_line(
+            r#"{"model":"eager","sweep":[{"mode":"recompute"},{"mode":"static","sigma":0.3,"seed":2}]}"#,
+            &d,
+        )
+        .unwrap();
+        assert_eq!(spec.num_results(), 2);
+        let JobSpec::Sweep(s) = spec else { panic!("expected a sweep") };
+        assert_eq!(s.points[0].sigma, 0.1);
+        assert_eq!(s.points[0].seed, 7);
+        assert_eq!(s.points[1].seed, 2);
+        // A single job converts into a one-point sweep losslessly.
+        let spec =
+            JobSpec::parse_line(r#"{"model":"bacass","sim":{"mode":"recompute"}}"#, &d).unwrap();
+        let sweep = spec.into_sweep();
+        assert_eq!(sweep.points.len(), 1);
+    }
+
+    #[test]
+    fn job_spec_rejects_malformed_input_with_errors() {
+        let d = ParseDefaults::default();
+        for (line, needle) in [
+            ("not json", "JSON parse error"),
+            ("[1,2]", "must be a JSON object"),
+            (r#"{"model":"x","typo":1}"#, "unknown job field `typo`"),
+            (r#"{"model":"x","workflow":"y"}"#, "exactly one of"),
+            (r#"{}"#, "exactly one of"),
+            (r#"{"workflow":"wf.json","seed":3}"#, "only applies to generated jobs"),
+            (r#"{"model":"x","sim":{"mode":"recompute"},"sweep":[]}"#, "not both"),
+            (r#"{"model":"x","sweep":[{"mode":"recompute","oops":1}]}"#, "unknown sim field"),
+            (r#"{"model":"x","tasks":"many"}"#, "non-negative integer"),
+        ] {
+            let err = format!("{:#}", JobSpec::parse_line(line, &d).unwrap_err());
+            assert!(err.contains(needle), "line {line}: error `{err}` missing `{needle}`");
+        }
     }
 
     #[test]

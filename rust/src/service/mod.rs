@@ -25,13 +25,16 @@
 //!    stream instead of buffering until the end.
 //!
 //! Two orthogonal parallelism axes compose here: `workers` shards the
-//! batch across jobs, while
-//! [`with_score_threads`](SchedulingService::with_score_threads) attaches
-//! a shared [`pool::ScorePool`] that parallelizes the *inside* of each
+//! batch across jobs, while [`ServiceConfig::score`] attaches a shared
+//! [`pool::ScorePool`] that parallelizes the *inside* of each
 //! schedule computation (per-processor tentative scoring — the lever for
 //! one huge workflow that would otherwise pin a single core;
 //! [`ScoreThreadSpec::Auto`] engages it per schedule only above the
 //! measured crossover). Both axes preserve byte-identical output.
+//! Construction goes through one surface —
+//! [`SchedulingService::from_config`] on a [`ServiceConfig`] — shared
+//! by the CLI commands, the experiment suites, and the `memsched
+//! serve` daemon ([`serve`]).
 //!
 //! On top of the per-job batch API sits the **replay engine**
 //! ([`SchedulingService::run_replay_sweeps_streaming`]): a
@@ -63,12 +66,16 @@ pub mod disk;
 pub mod fingerprint;
 pub mod job;
 pub mod pool;
+pub mod serve;
 
 pub use cache::{CacheStats, CachedSchedule, OnceMap, ScheduleCache};
 pub use disk::DiskStore;
 pub use fingerprint::Fingerprint;
-pub use job::{ClusterSpec, Job, JobResult, JobSource, ReplaySweep, SimJob, SimResult};
+pub use job::{
+    ClusterSpec, Job, JobResult, JobSource, JobSpec, ParseDefaults, ReplaySweep, SimJob, SimResult,
+};
 pub use pool::ScorePool;
+pub use serve::{ServeOptions, ServeSummary};
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -139,19 +146,9 @@ pub struct ServiceConfig {
 impl ServiceConfig {
     /// Build a service from this configuration (fails only if the cache
     /// directory cannot be created, or on an inconsistent combination).
+    /// Equivalent to [`SchedulingService::from_config`].
     pub fn build(&self) -> anyhow::Result<SchedulingService> {
-        let workers = if self.workers == 0 { pool::default_workers() } else { self.workers };
-        let mut svc = SchedulingService::new(workers)
-            .with_score_spec(self.score)
-            .with_cache_bytes(self.cache_bytes);
-        match (&self.cache_dir, self.cache_dir_bytes) {
-            (Some(dir), cap) => svc = svc.with_cache_dir_capped(dir, cap)?,
-            (None, Some(_)) => {
-                anyhow::bail!("--cache-dir-bytes requires --cache-dir")
-            }
-            (None, None) => {}
-        }
-        Ok(svc)
+        SchedulingService::from_config(self.clone())
     }
 }
 
@@ -270,74 +267,104 @@ impl SchedulingService {
         SchedulingService::new(pool::default_workers())
     }
 
-    /// Parallelize the *inside* of every schedule computation across
-    /// `threads` score threads (1 ⇒ serial scoring, the default). The
-    /// pool is shared by all service workers; schedules stay
-    /// byte-identical for any thread count.
-    pub fn with_score_threads(mut self, threads: usize) -> SchedulingService {
+    /// The single construction surface: build a fully-configured service
+    /// from a [`ServiceConfig`] (worker count, scoring threads, cache
+    /// layers). The CLI commands, the experiment suites, and the
+    /// `memsched serve` daemon all construct their services here; the
+    /// legacy `with_*` builders are thin deprecated shims over the same
+    /// helpers. Fails only if the cache directory cannot be created or
+    /// on an inconsistent combination (`cache_dir_bytes` without
+    /// `cache_dir`).
+    ///
+    /// Cache-cap determinism scope: every payload value (schedules,
+    /// makespans, sim outcomes) stays byte-identical under any
+    /// `cache_bytes` cap — evicted fingerprints recompute to the same
+    /// result. But LRU stamps follow execution order, so *which* entries
+    /// survive into the next batch can vary with thread timing; across
+    /// **multiple batches on one capped service**, `cache_hit` flags (a
+    /// residency observation, fixed per batch before execution) may
+    /// therefore differ between runs. Single-batch output is always
+    /// fully deterministic; leave the cap unbounded where cross-batch
+    /// flag stability matters.
+    pub fn from_config(cfg: ServiceConfig) -> anyhow::Result<SchedulingService> {
+        let workers = if cfg.workers == 0 { pool::default_workers() } else { cfg.workers };
+        let mut svc = SchedulingService::new(workers);
+        svc.set_score_spec(cfg.score);
+        svc.cache_bytes = cfg.cache_bytes;
+        match (&cfg.cache_dir, cfg.cache_dir_bytes) {
+            (Some(dir), cap) => {
+                svc.cache_disk = Some(Arc::new(DiskStore::open_capped(dir, cap)?));
+            }
+            (None, Some(_)) => anyhow::bail!("--cache-dir-bytes requires --cache-dir"),
+            (None, None) => {}
+        }
+        svc.rebuild_cache();
+        Ok(svc)
+    }
+
+    /// Apply a [`ScoreThreadSpec`]: `Fixed(n)` attaches an n-thread
+    /// scoring pool (n ≤ 1 ⇒ serial); `Auto` sizes the pool to all cores
+    /// but engages it per schedule only above the measured crossover
+    /// ([`crate::scheduler::auto_score_threads`]). Byte-identical output
+    /// either way.
+    fn set_score_spec(&mut self, spec: ScoreThreadSpec) {
+        let threads = match spec {
+            ScoreThreadSpec::Fixed(n) => n,
+            ScoreThreadSpec::Auto => pool::default_workers(),
+        };
         self.score_pool = if threads > 1 { Some(ScorePool::new(threads)) } else { None };
-        self.score_auto = false;
+        self.score_auto = matches!(spec, ScoreThreadSpec::Auto);
+    }
+
+    /// Recreate the schedule cache from the retained `cache_bytes` /
+    /// `cache_disk` configuration (construction-time only: replaces the
+    /// cache, dropping any cached schedules).
+    fn rebuild_cache(&mut self) {
+        self.schedules = ScheduleCache::with_config(self.cache_bytes, self.cache_disk.clone());
+    }
+
+    /// Parallelize the *inside* of every schedule computation across
+    /// `threads` score threads (1 ⇒ serial scoring, the default).
+    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
+    pub fn with_score_threads(mut self, threads: usize) -> SchedulingService {
+        self.set_score_spec(ScoreThreadSpec::Fixed(threads.max(1)));
         self
     }
 
-    /// Apply a [`ScoreThreadSpec`]: `Fixed(n)` behaves like
-    /// [`with_score_threads`](SchedulingService::with_score_threads);
-    /// `Auto` sizes the pool to all cores but engages it per schedule
-    /// only above the measured crossover
-    /// ([`crate::scheduler::auto_score_threads`]) — small instances keep
-    /// the (faster) serial path. Byte-identical output either way.
-    pub fn with_score_spec(self, spec: ScoreThreadSpec) -> SchedulingService {
-        match spec {
-            ScoreThreadSpec::Fixed(n) => self.with_score_threads(n),
-            ScoreThreadSpec::Auto => {
-                let mut svc = self.with_score_threads(pool::default_workers());
-                svc.score_auto = true;
-                svc
-            }
-        }
+    /// Apply a [`ScoreThreadSpec`] (see `ServiceConfig::score`).
+    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
+    pub fn with_score_spec(mut self, spec: ScoreThreadSpec) -> SchedulingService {
+        self.set_score_spec(spec);
+        self
     }
 
     /// Cap the schedule cache at approximately `cap_bytes` resident
-    /// bytes (LRU eviction; `None` = unbounded, the default). Replaces
-    /// the cache, so configure before the first batch.
-    ///
-    /// Determinism scope: every payload value (schedules, makespans,
-    /// sim outcomes) stays byte-identical under any cap — evicted
-    /// fingerprints recompute to the same result. But LRU stamps follow
-    /// execution order, so *which* entries survive into the next batch
-    /// can vary with thread timing; across **multiple batches on one
-    /// capped service**, `cache_hit` flags (a residency observation,
-    /// fixed per batch before execution) may therefore differ between
-    /// runs. Single-batch output is always fully deterministic; leave
-    /// the cap unbounded where cross-batch flag stability matters.
+    /// bytes (see `ServiceConfig::cache_bytes` for the determinism
+    /// scope). Replaces the cache, so configure before the first batch.
+    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
     pub fn with_cache_bytes(mut self, cap_bytes: Option<usize>) -> SchedulingService {
         self.cache_bytes = cap_bytes;
-        self.schedules = ScheduleCache::with_config(self.cache_bytes, self.cache_disk.clone());
+        self.rebuild_cache();
         self
     }
 
-    /// Attach a disk-backed schedule-cache layer at `dir` (`--cache-dir`):
-    /// memory misses load content-addressed entries from disk, fresh
-    /// computations are persisted (atomic rename), so repeated CLI
-    /// invocations and concurrent processes share schedules. Corrupt or
-    /// stale entries degrade to a recompute ([`disk`]). Replaces the
-    /// cache, so configure before the first batch. Fails only if `dir`
-    /// cannot be created.
+    /// Attach a disk-backed schedule-cache layer at `dir`
+    /// (`--cache-dir`; see `ServiceConfig::cache_dir`).
+    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
     pub fn with_cache_dir(self, dir: &Path) -> anyhow::Result<SchedulingService> {
         self.with_cache_dir_capped(dir, None)
     }
 
     /// [`with_cache_dir`](SchedulingService::with_cache_dir) with an
-    /// LRU-by-mtime byte cap on the store (`--cache-dir-bytes`): the
-    /// directory is pruned to the cap on open and after every write,
-    /// oldest-mtime entries first ([`disk::DiskStore::open_capped`]).
+    /// LRU-by-mtime byte cap on the store (`--cache-dir-bytes`).
+    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
     pub fn with_cache_dir_capped(
         mut self,
         dir: &Path,
         cap_bytes: Option<u64>,
     ) -> anyhow::Result<SchedulingService> {
         self.cache_disk = Some(Arc::new(DiskStore::open_capped(dir, cap_bytes)?));
-        self.schedules = ScheduleCache::with_config(self.cache_bytes, self.cache_disk.clone());
+        self.rebuild_cache();
         Ok(self)
     }
 
@@ -373,26 +400,52 @@ impl SchedulingService {
     /// `schedules_computed: 0` here while its JSONL results stay
     /// byte-identical to the cold run's.
     pub fn summary_json(&self, jobs: usize, result_cache_hits: usize, failed: usize) -> Value {
+        obj(vec![("summary", obj(self.summary_fields(jobs, result_cache_hits, failed)))])
+    }
+
+    /// [`summary_json`](SchedulingService::summary_json) plus a
+    /// `clients` array: one per-client counter object per serve-mode
+    /// session, in the given order. The daemon prints this on stderr at
+    /// shutdown — a warm client shows `schedules_computed: 0` here while
+    /// its response bytes stay identical to a cold `memsched batch`.
+    pub fn summary_json_with_clients(
+        &self,
+        jobs: usize,
+        result_cache_hits: usize,
+        failed: usize,
+        clients: &[ClientSession],
+    ) -> Value {
+        let mut fields = self.summary_fields(jobs, result_cache_hits, failed);
+        fields.push((
+            "clients",
+            Value::Array(clients.iter().map(ClientSession::summary_json).collect()),
+        ));
+        obj(vec![("summary", obj(fields))])
+    }
+
+    fn summary_fields(
+        &self,
+        jobs: usize,
+        result_cache_hits: usize,
+        failed: usize,
+    ) -> Vec<(&'static str, Value)> {
         let stats = self.cache_stats();
-        obj(vec![(
-            "summary",
-            obj(vec![
-                ("jobs", jobs.into()),
-                ("failed", failed.into()),
-                ("result_cache_hits", result_cache_hits.into()),
-                ("schedule_requests", stats.lookups.into()),
-                ("schedules_computed", stats.computed.into()),
-                ("schedule_reuse_hits", stats.hits().into()),
-                ("disk_cache_hits", stats.disk_hits.into()),
-                ("scaffolds_built", self.scaffolds_built().into()),
-                ("workers", self.workers.into()),
-                // Under `auto`, `score_threads` is the pool *size*; the
-                // per-schedule crossover gate may still have scored
-                // every schedule serially — `score_mode` disambiguates.
-                ("score_threads", self.score_threads().into()),
-                ("score_mode", if self.score_auto { "auto" } else { "fixed" }.into()),
-            ]),
-        )])
+        vec![
+            ("jobs", jobs.into()),
+            ("failed", failed.into()),
+            ("result_cache_hits", result_cache_hits.into()),
+            ("schedule_requests", stats.lookups.into()),
+            ("schedules_computed", stats.computed.into()),
+            ("schedule_reuse_hits", stats.hits().into()),
+            ("disk_cache_hits", stats.disk_hits.into()),
+            ("scaffolds_built", self.scaffolds_built().into()),
+            ("workers", self.workers.into()),
+            // Under `auto`, `score_threads` is the pool *size*; the
+            // per-schedule crossover gate may still have scored
+            // every schedule serially — `score_mode` disambiguates.
+            ("score_threads", self.score_threads().into()),
+            ("score_mode", if self.score_auto { "auto" } else { "fixed" }.into()),
+        ]
     }
 
     /// Memoized workflow materialization (one build per distinct source,
@@ -571,10 +624,16 @@ impl SchedulingService {
         self.workflows.prune_errors();
         self.clusters.prune_errors();
         self.prematerialize(sweeps.iter().map(|s| s.source.clone()));
+        let prepared = self.prepare_sweeps(sweeps);
+        self.stream_prepared(prepared, sink);
+    }
 
-        // Phase 1, sweep-grained: one materialize + schedule fingerprint
-        // per sweep, not per replay point — on a k-point sweep over an
-        // n-task workflow this saves k−1 O(n) fingerprint walks.
+    /// Phase 1, sweep-grained: one materialize + schedule fingerprint
+    /// per sweep, not per replay point — on a k-point sweep over an
+    /// n-task workflow this saves k−1 O(n) fingerprint walks. The
+    /// expansion into per-point prepared jobs is exactly
+    /// [`ReplaySweep::flatten`].
+    fn prepare_sweeps(&self, sweeps: Vec<ReplaySweep>) -> Vec<(Job, Result<Prepared, String>)> {
         type SweepPrep = (Arc<Workflow>, Arc<Cluster>, Fingerprint);
         let sweep_prepared: Vec<(ReplaySweep, Result<SweepPrep, String>)> =
             pool::run_ordered(sweeps, self.workers, |_, sweep| {
@@ -583,9 +642,8 @@ impl SchedulingService {
                 (sweep, prep)
             });
 
-        // Expand each sweep into its per-point jobs, deriving the cheap
-        // per-point job fingerprints from the sweep's schedule
-        // fingerprint. The expansion is exactly `ReplaySweep::flatten`.
+        // Derive the cheap per-point job fingerprints from the sweep's
+        // schedule fingerprint.
         let mut prepared: Vec<(Job, Result<Prepared, String>)> =
             Vec::with_capacity(sweep_prepared.iter().map(|(s, _)| s.num_results()).sum());
         for (sweep, prep) in &sweep_prepared {
@@ -608,8 +666,67 @@ impl SchedulingService {
                 prepared.push((job, p));
             }
         }
+        prepared
+    }
 
-        self.stream_prepared(prepared, sink);
+    /// Serve-mode submission path: run one client's [`JobSpec`] on the
+    /// shared pool and stream its results to `sink`, with result ids
+    /// continuing the client's stream and `cache_hit` flags replaying
+    /// the client's **own** submission history — the response bytes are
+    /// identical to what a cold `memsched batch` emits for the client's
+    /// submitted lines, however warm the shared schedule caches are.
+    /// Cache warmth (cross-client and cross-process reuse) shows up only
+    /// in the per-client counters, never in result bytes.
+    ///
+    /// Callers must serialize invocations per service for the
+    /// `schedules_computed` delta to be attributed correctly (the serve
+    /// dispatcher runs one submission at a time; parallelism lives
+    /// inside the submission, on the worker pool).
+    pub fn run_client_spec(
+        &self,
+        session: &mut ClientSession,
+        spec: JobSpec,
+        mut sink: impl FnMut(JobResult) + Send,
+    ) {
+        // Same batch-boundary hygiene as the batch entry points.
+        self.workflows.prune_errors();
+        self.clusters.prune_errors();
+        let sweeps = vec![spec.into_sweep()];
+        self.prematerialize(sweeps.iter().map(|s| s.source.clone()));
+        let prepared = self.prepare_sweeps(sweeps);
+        let fps: Vec<u128> =
+            prepared.iter().filter_map(|(_, p)| p.as_ref().ok().map(|p| p.job_fp.0)).collect();
+        let offset = session.next_id;
+        let submitted = prepared.len();
+        let computed_before = self.cache_stats().computed;
+
+        let (mut results, mut cache_hits, mut failed) = (0usize, 0usize, 0usize);
+        {
+            let seen = &session.seen;
+            self.stream_prepared_with(
+                prepared,
+                |p| seen.contains(&p.job_fp.0),
+                |mut r| {
+                    r.id += offset;
+                    results += 1;
+                    if r.cache_hit {
+                        cache_hits += 1;
+                    }
+                    if r.error.is_some() {
+                        failed += 1;
+                    }
+                    sink(r);
+                },
+            );
+        }
+
+        session.next_id += submitted;
+        session.seen.extend(fps);
+        session.counters.accepted += 1;
+        session.counters.results += results;
+        session.counters.result_cache_hits += cache_hits;
+        session.counters.failed += failed;
+        session.counters.schedules_computed += self.cache_stats().computed - computed_before;
     }
 
     /// Phase 0: pre-materialize unique sources in parallel. Without
@@ -635,6 +752,22 @@ impl SchedulingService {
         prepared: Vec<(Job, Result<Prepared, String>)>,
         sink: impl FnMut(JobResult) + Send,
     ) {
+        self.stream_prepared_with(prepared, |p| self.schedules.contains(p.sched_fp), sink);
+    }
+
+    /// [`stream_prepared`](SchedulingService::stream_prepared) with an
+    /// injectable residency observation: `resident` decides, per
+    /// prepared job and **before any execution**, whether the job is
+    /// reported as a pre-batch `cache_hit`. The batch paths observe the
+    /// in-memory schedule cache; the serve-mode client path replays the
+    /// client's own submission history instead, so a shared warm daemon
+    /// answers with the exact bytes a cold `memsched batch` would emit.
+    fn stream_prepared_with(
+        &self,
+        prepared: Vec<(Job, Result<Prepared, String>)>,
+        resident: impl Fn(&Prepared) -> bool,
+        sink: impl FnMut(JobResult) + Send,
+    ) {
         // Phase 2: deterministic grouping. The lowest-id job of each
         // fingerprint group is the computer; `cache_hit` flags are fixed
         // here, before execution, from (group position, cache state).
@@ -643,7 +776,7 @@ impl SchedulingService {
         for (i, (_, prep)) in prepared.iter().enumerate() {
             if let Ok(p) = prep {
                 representative.entry(p.job_fp.0).or_insert(i);
-                pre_cached.entry(p.job_fp.0).or_insert_with(|| self.schedules.contains(p.sched_fp));
+                pre_cached.entry(p.job_fp.0).or_insert_with(|| resident(p));
             }
         }
         let mut compute_order: Vec<usize> = Vec::new();
@@ -747,6 +880,73 @@ impl SchedulingService {
         // and any prefix skipped by contended opportunistic drains.
         drain(true);
         debug_assert_eq!(emitter.lock().unwrap().0, prepared.len(), "every job emitted");
+    }
+}
+
+/// Per-client serve-mode counters, reported in the daemon's shutdown
+/// summary ([`SchedulingService::summary_json_with_clients`]) and in
+/// per-client disconnect records. Counters never influence result
+/// bytes.
+#[derive(Debug, Clone, Default)]
+pub struct ClientCounters {
+    /// Submissions accepted into the client's queue (job or sweep
+    /// frames that parsed).
+    pub accepted: usize,
+    /// Submissions rejected by backpressure (queue at
+    /// `--max-queued-per-client`).
+    pub rejected: usize,
+    /// Result lines streamed back.
+    pub results: usize,
+    /// Results flagged `cache_hit` (duplicates within the client's own
+    /// stream).
+    pub result_cache_hits: usize,
+    /// Results that were structured job errors.
+    pub failed: usize,
+    /// Schedules this client's submissions actually computed — in-memory,
+    /// disk, and cross-client reuse all keep this at 0 for warm
+    /// workloads.
+    pub schedules_computed: usize,
+}
+
+/// One serve-mode client's submission state: result-id numbering and
+/// the job-fingerprint history that keeps its `cache_hit` flags
+/// byte-identical to a cold `memsched batch` over the same lines
+/// (see [`SchedulingService::run_client_spec`]).
+#[derive(Debug)]
+pub struct ClientSession {
+    /// Display name (`c0`, `c1`, … in accept order; `stdio`).
+    pub name: String,
+    /// Next result id of the client's stream (each submission's results
+    /// continue the numbering, exactly like lines of one batch file).
+    next_id: usize,
+    /// Job fingerprints of every prepared submission so far.
+    seen: std::collections::HashSet<u128>,
+    pub counters: ClientCounters,
+}
+
+impl ClientSession {
+    pub fn new(name: impl Into<String>) -> ClientSession {
+        ClientSession {
+            name: name.into(),
+            next_id: 0,
+            seen: std::collections::HashSet::new(),
+            counters: ClientCounters::default(),
+        }
+    }
+
+    /// The per-client summary object (an element of the daemon
+    /// summary's `clients` array).
+    pub fn summary_json(&self) -> Value {
+        let c = &self.counters;
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("accepted", c.accepted.into()),
+            ("rejected", c.rejected.into()),
+            ("results", c.results.into()),
+            ("result_cache_hits", c.result_cache_hits.into()),
+            ("failed", c.failed.into()),
+            ("schedules_computed", c.schedules_computed.into()),
+        ])
     }
 }
 
@@ -925,7 +1125,12 @@ mod tests {
         };
         let serial = SchedulingService::new(2);
         let r_serial = serial.run_batch(jobs(()));
-        let scored = SchedulingService::new(2).with_score_threads(4);
+        let scored = SchedulingService::from_config(ServiceConfig {
+            workers: 2,
+            score: ScoreThreadSpec::Fixed(4),
+            ..ServiceConfig::default()
+        })
+        .unwrap();
         assert_eq!(scored.score_threads(), 4);
         let r_scored = scored.run_batch(jobs(()));
         assert_eq!(to_jsonl(&r_serial), to_jsonl(&r_scored));
@@ -1051,8 +1256,9 @@ mod tests {
                 .map(|algo| spec_job("bacass", 1, algo, &cluster))
                 .collect()
         };
-        let serial = SchedulingService::new(2).with_score_spec(ScoreThreadSpec::Fixed(1));
-        let auto = SchedulingService::new(2).with_score_spec(ScoreThreadSpec::Auto);
+        let cfg = |score| ServiceConfig { workers: 2, score, ..ServiceConfig::default() };
+        let serial = SchedulingService::from_config(cfg(ScoreThreadSpec::Fixed(1))).unwrap();
+        let auto = SchedulingService::from_config(cfg(ScoreThreadSpec::Auto)).unwrap();
         assert_eq!(to_jsonl(&serial.run_batch(jobs(()))), to_jsonl(&auto.run_batch(jobs(()))));
     }
 
@@ -1077,14 +1283,19 @@ mod tests {
                 .map(|algo| spec_job("methylseq", 0, algo, &cluster))
                 .collect()
         };
-        let cold = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+        let disk_cfg = || ServiceConfig {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            ..ServiceConfig::default()
+        };
+        let cold = SchedulingService::from_config(disk_cfg()).unwrap();
         let cold_out = to_jsonl(&cold.run_batch(jobs(())));
         assert_eq!(cold.cache_stats().computed, 4);
         assert_eq!(cold.cache_stats().disk_hits, 0);
 
         // A fresh service ("new process") on the same directory loads
         // every schedule from disk and emits byte-identical results.
-        let warm = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+        let warm = SchedulingService::from_config(disk_cfg()).unwrap();
         let warm_out = to_jsonl(&warm.run_batch(jobs(())));
         assert_eq!(warm_out, cold_out, "warm disk cache must not change output bytes");
         assert_eq!(warm.cache_stats().computed, 0, "warm run computes nothing");
@@ -1099,6 +1310,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn cache_builders_compose_in_either_order() {
         let dir = std::env::temp_dir().join(format!("memsched_svc_compose_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -1118,6 +1330,128 @@ mod tests {
         assert_eq!(b.cache_stats().computed, 0, "disk layer must survive with_cache_bytes");
         assert_eq!(b.cache_stats().disk_hits, 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The deprecated `with_*` shims must configure exactly what
+    /// [`SchedulingService::from_config`] does (they delegate to the
+    /// same private helpers — this pins the equivalence).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_builders_match_from_config() {
+        let base = std::env::temp_dir().join(format!("memsched_svc_shim_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let cluster = Arc::new(small_cluster());
+        let jobs = |_: ()| -> Vec<Job> {
+            Algorithm::all()
+                .into_iter()
+                .map(|algo| spec_job("chipseq", 2, algo, &cluster))
+                .collect()
+        };
+        // Separate dirs: both services start cold.
+        let legacy = SchedulingService::new(2)
+            .with_score_spec(ScoreThreadSpec::Auto)
+            .with_cache_bytes(Some(1 << 20))
+            .with_cache_dir_capped(&base.join("legacy"), Some(1 << 20))
+            .unwrap();
+        let configured = SchedulingService::from_config(ServiceConfig {
+            workers: 2,
+            score: ScoreThreadSpec::Auto,
+            cache_bytes: Some(1 << 20),
+            cache_dir: Some(base.join("cfg")),
+            cache_dir_bytes: Some(1 << 20),
+        })
+        .unwrap();
+        assert_eq!(legacy.workers(), configured.workers());
+        assert_eq!(legacy.score_threads(), configured.score_threads());
+        let r_legacy = legacy.run_batch(jobs(()));
+        let r_configured = configured.run_batch(jobs(()));
+        assert_eq!(to_jsonl(&r_legacy), to_jsonl(&r_configured));
+        assert_eq!(legacy.cache_stats().computed, configured.cache_stats().computed);
+        // The summary records agree on every configuration-derived field.
+        assert_eq!(
+            legacy.summary_json(4, 0, 0).to_string_compact(),
+            configured.summary_json(4, 0, 0).to_string_compact()
+        );
+        // Fixed score threads via the shim and via the config agree too.
+        let s1 = SchedulingService::new(1).with_score_threads(3);
+        let s2 = SchedulingService::from_config(ServiceConfig {
+            workers: 1,
+            score: ScoreThreadSpec::Fixed(3),
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        assert_eq!(s1.score_threads(), s2.score_threads());
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// The serve-mode client path answers with the exact bytes a cold
+    /// batch emits for the same lines, however warm the shared caches
+    /// are — warmth lands in the counters instead.
+    #[test]
+    fn client_sessions_replay_cold_batch_bytes_on_a_warm_service() {
+        let defaults = ParseDefaults::default();
+        let cluster = Arc::new(small_cluster());
+        let lines = [
+            r#"{"model":"bacass","input":1,"seed":5}"#,
+            r#"{"model":"bacass","input":1,"seed":5,"algo":"heftm-mm"}"#,
+            // Duplicate of the first line: cache_hit within the client.
+            r#"{"model":"bacass","input":1,"seed":5}"#,
+            r#"{"model":"bacass","input":1,"seed":5,"sweep":[{"mode":"recompute","seed":9},{"mode":"static","seed":9}]}"#,
+        ];
+        let parse_all = |svc_cluster: &Arc<Cluster>| -> Vec<JobSpec> {
+            lines
+                .iter()
+                .map(|l| {
+                    let spec = JobSpec::parse_line(l, &defaults).unwrap();
+                    // Pin the inline test cluster (named specs would hit
+                    // the preset loader).
+                    match spec {
+                        JobSpec::Single(mut j) => {
+                            j.cluster = ClusterSpec::Inline(svc_cluster.clone());
+                            JobSpec::Single(j)
+                        }
+                        JobSpec::Sweep(mut s) => {
+                            s.cluster = ClusterSpec::Inline(svc_cluster.clone());
+                            JobSpec::Sweep(s)
+                        }
+                    }
+                })
+                .collect()
+        };
+
+        // Baseline: one cold service, all lines as one sweep batch.
+        let cold = SchedulingService::new(2);
+        let baseline = cold
+            .run_replay_sweeps(parse_all(&cluster).into_iter().map(JobSpec::into_sweep).collect());
+
+        // Serve-mode: a first client warms the shared service, then a
+        // second client submits the same lines one frame at a time.
+        let shared = SchedulingService::new(2);
+        let mut first = ClientSession::new("c0");
+        let mut first_out = Vec::new();
+        for spec in parse_all(&cluster) {
+            shared.run_client_spec(&mut first, spec, |r| first_out.push(r));
+        }
+        assert_eq!(to_jsonl(&first_out), to_jsonl(&baseline), "cold client == cold batch");
+        assert!(first.counters.schedules_computed > 0);
+
+        let mut second = ClientSession::new("c1");
+        let mut second_out = Vec::new();
+        for spec in parse_all(&cluster) {
+            shared.run_client_spec(&mut second, spec, |r| second_out.push(r));
+        }
+        assert_eq!(to_jsonl(&second_out), to_jsonl(&baseline), "warm client == cold batch");
+        assert_eq!(second.counters.schedules_computed, 0, "warm client computes nothing");
+        assert_eq!(second.counters.results, baseline.len());
+        assert_eq!(second.counters.failed, 0);
+        // Only the intra-client duplicate line is a result cache hit —
+        // cross-client warmth must not leak into flags.
+        assert_eq!(second.counters.result_cache_hits, first.counters.result_cache_hits);
+        let total = first.counters.results + second.counters.results;
+        let clients = vec![first, second];
+        let summary = shared.summary_json_with_clients(total, 0, 0, &clients).to_string_compact();
+        assert!(summary.contains("\"name\":\"c1\""), "{summary}");
+        assert!(summary.contains("\"schedules_computed\":0"), "{summary}");
     }
 
     #[test]

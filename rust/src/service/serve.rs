@@ -1,0 +1,551 @@
+//! `memsched serve`: a long-running scheduler daemon with streaming
+//! admission (see DESIGN.md §Serve).
+//!
+//! Clients connect over a Unix socket (or the process's stdio) and
+//! exchange length-delimited JSON frames ([`crate::ser::frame`]). Each
+//! request frame is either a **job line** — the exact grammar of a
+//! `memsched batch --input` line, parsed by the shared
+//! [`JobSpec`] parser — or a **control object** `{"ctl": ...}`:
+//!
+//! | request                | response                              |
+//! |------------------------|---------------------------------------|
+//! | job / sweep line       | one result frame per result line      |
+//! | `{"ctl":"drain"}`      | `{"ok":"drained"}` after all earlier  |
+//! |                        | submissions' results                  |
+//! | `{"ctl":"ping"}`       | `{"ok":"pong"}` immediately           |
+//! | `{"ctl":"shutdown"}`   | `{"ok":"shutting down"}`; the daemon  |
+//! |                        | drains every queue and exits          |
+//!
+//! Malformed frames (bad JSON, unknown fields, oversized payloads)
+//! answer with a structured `{"error": ...}` frame — connection and
+//! process stay alive; only an unframable stream (bad magic, truncation)
+//! drops that one connection. Result frames carry **exactly** the JSONL
+//! line bytes `memsched batch` would emit for the same submitted lines:
+//! per-client ids continue across frames and `cache_hit` flags replay
+//! the client's own history ([`SchedulingService::run_client_spec`]),
+//! so a shared warm daemon is byte-indistinguishable from a cold batch
+//! — cache warmth shows up only in the per-client counters.
+//!
+//! **Admission** is fair-share: one queue per client, capped at
+//! [`ServeOptions::max_queued_per_client`] (overflow rejects with an
+//! error frame instead of buffering unboundedly), drained round-robin
+//! by a single dispatcher thread — one submission at a time, each
+//! fanning out internally across the service's worker pool. **Shutdown**
+//! (SIGTERM/SIGINT via [`install_signal_handlers`], or a `shutdown`
+//! frame) stops admission, drains every queued submission, and returns
+//! cleanly — `memsched serve` then exits 0.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::os::unix::net::UnixListener;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::ser::frame::{self, FrameError};
+use crate::ser::json::{obj, Value};
+
+use super::{ClientSession, JobSpec, ParseDefaults, SchedulingService};
+
+/// Poll interval for the accept loop and the dispatcher's signal check.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Process-wide graceful-shutdown flag, set only by the real signal
+/// handler (`shutdown` frames flip per-serve state instead, so embedded
+/// servers — tests — never leak shutdown across runs).
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_sig: libc::c_int) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGTERM/SIGINT handlers that request a graceful drain (the
+/// daemon finishes queued work, then exits). Call once, from `main`.
+pub fn install_signal_handlers() {
+    let handler: extern "C" fn(libc::c_int) = on_signal;
+    unsafe {
+        libc::signal(libc::SIGTERM, handler as libc::sighandler_t);
+        libc::signal(libc::SIGINT, handler as libc::sighandler_t);
+    }
+}
+
+/// Daemon knobs (all CLI-exposed).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Frame-payload cap (`--max-frame-bytes`); oversized frames are
+    /// rejected with an error frame, the connection stays framed.
+    pub max_frame_bytes: usize,
+    /// Per-client admission-queue cap (`--max-queued-per-client`).
+    pub max_queued_per_client: usize,
+    /// Defaults applied to job lines that omit `cluster`/`seed` —
+    /// mirror `batch --cluster/--seed` for byte-identical parses.
+    pub defaults: ParseDefaults,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_frame_bytes: frame::DEFAULT_MAX_FRAME_BYTES,
+            max_queued_per_client: 1024,
+            defaults: ParseDefaults::default(),
+        }
+    }
+}
+
+/// What a serve run did: one [`ClientSession`] per client, in
+/// disconnect order (clients still connected at shutdown last, by
+/// accept order).
+#[derive(Debug)]
+pub struct ServeSummary {
+    pub clients: Vec<ClientSession>,
+}
+
+impl ServeSummary {
+    pub fn total_results(&self) -> usize {
+        self.clients.iter().map(|c| c.counters.results).sum()
+    }
+
+    pub fn total_cache_hits(&self) -> usize {
+        self.clients.iter().map(|c| c.counters.result_cache_hits).sum()
+    }
+
+    pub fn total_failed(&self) -> usize {
+        self.clients.iter().map(|c| c.counters.failed).sum()
+    }
+}
+
+/// One queued client request.
+enum QueueItem {
+    Spec(JobSpec),
+    /// Barrier: acked (`{"ok":"drained"}`) strictly after every earlier
+    /// submission's results have been written.
+    Drain,
+}
+
+type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+
+struct ClientSlot {
+    id: u64,
+    name: String,
+    queue: VecDeque<QueueItem>,
+    writer: SharedWriter,
+    /// Taken (`None`) only while the dispatcher executes this client's
+    /// work; a slot is reaped only with its session present, so a
+    /// session can never be lost mid-submission.
+    session: Option<ClientSession>,
+    /// Backpressure rejections recorded by the reader (merged into the
+    /// session's counters at reap, since the session may be taken).
+    rejected: usize,
+    /// Reader saw EOF or a terminal frame error.
+    closed: bool,
+}
+
+struct ServeState {
+    clients: Vec<ClientSlot>,
+    /// Round-robin cursor: the smallest client id not yet preferred.
+    cursor: u64,
+    next_client: u64,
+    /// `shutdown` frame received (per-serve; the signal flag is global).
+    shutdown: bool,
+    /// Sessions of disconnected-and-drained clients.
+    finished: Vec<ClientSession>,
+}
+
+type Shared = Arc<(Mutex<ServeState>, Condvar)>;
+
+fn new_shared() -> Shared {
+    Arc::new((
+        Mutex::new(ServeState {
+            clients: Vec::new(),
+            cursor: 0,
+            next_client: 0,
+            shutdown: false,
+            finished: Vec::new(),
+        }),
+        Condvar::new(),
+    ))
+}
+
+/// Round-robin pick: the eligible client (non-empty queue, session at
+/// rest) with the smallest id ≥ cursor, wrapping to the smallest
+/// overall.
+fn pick(state: &ServeState) -> Option<usize> {
+    let eligible = |c: &ClientSlot| !c.queue.is_empty() && c.session.is_some();
+    let mut first: Option<usize> = None;
+    let mut first_ge: Option<usize> = None;
+    for (i, c) in state.clients.iter().enumerate() {
+        if !eligible(c) {
+            continue;
+        }
+        if first.map_or(true, |f| c.id < state.clients[f].id) {
+            first = Some(i);
+        }
+        if c.id >= state.cursor && first_ge.map_or(true, |f| c.id < state.clients[f].id) {
+            first_ge = Some(i);
+        }
+    }
+    first_ge.or(first)
+}
+
+fn send_payload(writer: &SharedWriter, payload: &[u8]) {
+    // Write errors mean the client vanished; its reader will observe
+    // EOF and close the slot — nothing useful to do here.
+    let mut w = writer.lock().unwrap();
+    let _ = frame::write_frame(&mut *w, payload);
+    let _ = w.flush();
+}
+
+fn send_error(writer: &SharedWriter, msg: &str) {
+    send_payload(writer, obj(vec![("error", msg.into())]).to_string_compact().as_bytes());
+}
+
+fn send_ok(writer: &SharedWriter, what: &str) {
+    send_payload(writer, obj(vec![("ok", what.into())]).to_string_compact().as_bytes());
+}
+
+/// Register a connection: create its slot and spawn its reader thread
+/// (detached — it parks in `read` until the peer sends or hangs up, and
+/// dies with the process).
+fn register_client(
+    shared: &Shared,
+    reader: impl Read + Send + 'static,
+    writer: SharedWriter,
+    name: Option<String>,
+    opts: &ServeOptions,
+) {
+    let (lock, cvar) = &**shared;
+    let id = {
+        let mut state = lock.lock().unwrap();
+        let id = state.next_client;
+        state.next_client += 1;
+        let name = name.unwrap_or_else(|| format!("c{id}"));
+        state.clients.push(ClientSlot {
+            id,
+            name: name.clone(),
+            queue: VecDeque::new(),
+            writer: writer.clone(),
+            session: Some(ClientSession::new(name)),
+            rejected: 0,
+            closed: false,
+        });
+        id
+    };
+    cvar.notify_all();
+    let shared = shared.clone();
+    let opts = opts.clone();
+    std::thread::spawn(move || reader_loop(reader, writer, shared, id, opts));
+}
+
+/// Per-connection reader: decode frames, admit work, answer protocol
+/// errors. Never touches the scheduling service.
+fn reader_loop(
+    mut reader: impl Read,
+    writer: SharedWriter,
+    shared: Shared,
+    client_id: u64,
+    opts: ServeOptions,
+) {
+    let (lock, cvar) = &*shared;
+    loop {
+        match frame::read_frame(&mut reader, opts.max_frame_bytes) {
+            Ok(None) => break,
+            Ok(Some(payload)) => {
+                let Ok(text) = std::str::from_utf8(&payload) else {
+                    send_error(&writer, "frame payload is not UTF-8");
+                    continue;
+                };
+                let v = match Value::parse(text) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        send_error(&writer, &format!("bad frame payload: {e}"));
+                        continue;
+                    }
+                };
+                if let Some(ctl) = v.get("ctl") {
+                    match ctl.as_str() {
+                        Some("shutdown") => {
+                            lock.lock().unwrap().shutdown = true;
+                            cvar.notify_all();
+                            send_ok(&writer, "shutting down");
+                        }
+                        Some("ping") => send_ok(&writer, "pong"),
+                        Some("drain") => {
+                            // A drain barrier is always admitted (it
+                            // frees the queue; rejecting it could
+                            // deadlock a well-behaved client).
+                            let mut state = lock.lock().unwrap();
+                            if let Some(c) =
+                                state.clients.iter_mut().find(|c| c.id == client_id)
+                            {
+                                c.queue.push_back(QueueItem::Drain);
+                            }
+                            drop(state);
+                            cvar.notify_all();
+                        }
+                        other => send_error(
+                            &writer,
+                            &format!(
+                                "unknown ctl {:?} (expected shutdown, ping, drain)",
+                                other.unwrap_or("<non-string>")
+                            ),
+                        ),
+                    }
+                    continue;
+                }
+                match JobSpec::parse(&v, &opts.defaults) {
+                    Err(e) => send_error(&writer, &format!("bad job line: {e:#}")),
+                    Ok(spec) => {
+                        let mut state = lock.lock().unwrap();
+                        let shutting_down = state.shutdown || SHUTDOWN.load(Ordering::SeqCst);
+                        let Some(c) = state.clients.iter_mut().find(|c| c.id == client_id)
+                        else {
+                            break;
+                        };
+                        if shutting_down {
+                            c.rejected += 1;
+                            drop(state);
+                            send_error(&writer, "rejected: daemon is shutting down");
+                        } else if c.queue.len() >= opts.max_queued_per_client {
+                            // Backpressure: structured rejection instead
+                            // of unbounded buffering.
+                            c.rejected += 1;
+                            let queued = c.queue.len();
+                            drop(state);
+                            send_error(
+                                &writer,
+                                &format!(
+                                    "rejected: client queue is full ({queued} queued, cap {})",
+                                    opts.max_queued_per_client
+                                ),
+                            );
+                        } else {
+                            c.queue.push_back(QueueItem::Spec(spec));
+                            drop(state);
+                            cvar.notify_all();
+                        }
+                    }
+                }
+            }
+            Err(e) if e.recoverable() => send_error(&writer, &e.to_string()),
+            Err(e) => {
+                // Unframable stream: report best-effort and drop this
+                // connection (the daemon itself stays up).
+                send_error(&writer, &e.to_string());
+                break;
+            }
+        }
+    }
+    let mut state = lock.lock().unwrap();
+    if let Some(c) = state.clients.iter_mut().find(|c| c.id == client_id) {
+        c.closed = true;
+    }
+    drop(state);
+    cvar.notify_all();
+}
+
+/// Move closed, fully-drained clients out of the active set.
+fn reap(state: &mut ServeState) {
+    let mut i = 0;
+    while i < state.clients.len() {
+        let c = &state.clients[i];
+        if c.closed && c.queue.is_empty() && c.session.is_some() {
+            let slot = state.clients.remove(i);
+            let mut session = slot.session.unwrap();
+            session.counters.rejected += slot.rejected;
+            state.finished.push(session);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// The dispatcher: runs on the calling thread until shutdown (or, in
+/// stdio mode, until the one client disconnects and drains). One
+/// submission executes at a time — fairness comes from the round-robin
+/// queue pick, parallelism from the service's worker pool inside each
+/// submission; serial dispatch is also what makes the per-client
+/// `schedules_computed` attribution exact.
+fn dispatch(svc: &SchedulingService, shared: &Shared, stdio_mode: bool) -> Vec<ClientSession> {
+    let (lock, cvar) = &**shared;
+    let mut state = lock.lock().unwrap();
+    loop {
+        reap(&mut state);
+        let shutting_down = state.shutdown || SHUTDOWN.load(Ordering::SeqCst);
+        if let Some(pos) = pick(&state) {
+            let slot = &mut state.clients[pos];
+            let id = slot.id;
+            let item = slot.queue.pop_front().unwrap();
+            let mut session = slot.session.take().unwrap();
+            let writer = slot.writer.clone();
+            state.cursor = id + 1;
+            drop(state);
+            match item {
+                QueueItem::Spec(spec) => {
+                    // Result frames carry exactly the JSONL line bytes
+                    // `memsched batch` emits for the same lines.
+                    svc.run_client_spec(&mut session, spec, |r| {
+                        send_payload(&writer, r.to_jsonl().as_bytes());
+                    });
+                }
+                QueueItem::Drain => send_ok(&writer, "drained"),
+            }
+            state = lock.lock().unwrap();
+            if let Some(c) = state.clients.iter_mut().find(|c| c.id == id) {
+                c.session = Some(session);
+            } else {
+                // Unreachable (reap requires the session present), but
+                // never lose a session's counters.
+                state.finished.push(session);
+            }
+            continue;
+        }
+        if shutting_down {
+            break;
+        }
+        if stdio_mode && state.clients.is_empty() {
+            break;
+        }
+        // Idle: wait for admission (condvar) or a signal (timeout poll).
+        state = cvar.wait_timeout(state, POLL).unwrap().0;
+    }
+    // Shutdown: queues are drained (pick() found nothing). Collect the
+    // remaining (still-connected) sessions after the finished ones.
+    let mut out = std::mem::take(&mut state.finished);
+    for slot in state.clients.drain(..) {
+        if let Some(mut session) = slot.session {
+            session.counters.rejected += slot.rejected;
+            out.push(session);
+        }
+    }
+    out
+}
+
+/// Serve an already-bound listener until shutdown. The test-facing
+/// entry point: `memsched serve --socket` wraps it via [`serve_unix`].
+pub fn serve_listener(
+    svc: &SchedulingService,
+    listener: UnixListener,
+    opts: &ServeOptions,
+) -> anyhow::Result<ServeSummary> {
+    listener.set_nonblocking(true)?;
+    let shared = new_shared();
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Detached acceptor: polls so it can observe `done` and exit
+    // instead of pinning the listener forever.
+    {
+        let shared = shared.clone();
+        let done = done.clone();
+        let opts = opts.clone();
+        std::thread::spawn(move || {
+            while !done.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let writer: SharedWriter = match stream.try_clone() {
+                            Ok(w) => Arc::new(Mutex::new(Box::new(w))),
+                            Err(_) => continue,
+                        };
+                        register_client(&shared, stream, writer, None, &opts);
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(POLL);
+                    }
+                    Err(_) => std::thread::sleep(POLL),
+                }
+            }
+        });
+    }
+
+    let clients = dispatch(svc, &shared, false);
+    done.store(true, Ordering::SeqCst);
+    Ok(ServeSummary { clients })
+}
+
+/// Bind `path` (removing any stale socket file first), serve until
+/// shutdown, remove the socket file.
+pub fn serve_unix(
+    svc: &SchedulingService,
+    path: &Path,
+    opts: &ServeOptions,
+) -> anyhow::Result<ServeSummary> {
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)
+        .map_err(|e| anyhow::anyhow!("binding {}: {e}", path.display()))?;
+    let summary = serve_listener(svc, listener, opts);
+    let _ = std::fs::remove_file(path);
+    summary
+}
+
+/// Serve one client over the process's stdin/stdout (`--stdio`); returns
+/// when stdin closes (and the queue is drained) or on shutdown.
+pub fn serve_stdio(svc: &SchedulingService, opts: &ServeOptions) -> anyhow::Result<ServeSummary> {
+    let shared = new_shared();
+    let writer: SharedWriter = Arc::new(Mutex::new(Box::new(std::io::stdout())));
+    register_client(&shared, std::io::stdin(), writer, Some("stdio".into()), opts);
+    let clients = dispatch(svc, &shared, true);
+    Ok(ServeSummary { clients })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(id: u64, queued: usize) -> ClientSlot {
+        let mut queue = VecDeque::new();
+        for _ in 0..queued {
+            queue.push_back(QueueItem::Drain);
+        }
+        ClientSlot {
+            id,
+            name: format!("c{id}"),
+            queue,
+            writer: Arc::new(Mutex::new(Box::new(std::io::sink()))),
+            session: Some(ClientSession::new(format!("c{id}"))),
+            rejected: 0,
+            closed: false,
+        }
+    }
+
+    fn state_with(clients: Vec<ClientSlot>) -> ServeState {
+        ServeState { clients, cursor: 0, next_client: 0, shutdown: false, finished: Vec::new() }
+    }
+
+    #[test]
+    fn round_robin_alternates_between_backlogged_clients() {
+        // Two clients with deep queues must alternate strictly, however
+        // much work either has queued — that's the fair-share property.
+        let mut state = state_with(vec![slot(0, 3), slot(1, 1), slot(2, 2)]);
+        let mut served = Vec::new();
+        while let Some(pos) = pick(&state) {
+            let id = state.clients[pos].id;
+            state.clients[pos].queue.pop_front();
+            state.cursor = id + 1;
+            served.push(id);
+        }
+        assert_eq!(served, vec![0, 1, 2, 0, 2, 0]);
+    }
+
+    #[test]
+    fn pick_skips_executing_and_empty_clients() {
+        let mut state = state_with(vec![slot(0, 1), slot(1, 1), slot(2, 0)]);
+        // Client 0 is mid-execution (session taken): never picked.
+        state.clients[0].session = None;
+        assert_eq!(pick(&state).map(|p| state.clients[p].id), Some(1));
+        state.clients[1].queue.clear();
+        assert!(pick(&state).is_none());
+    }
+
+    #[test]
+    fn reap_merges_rejections_and_keeps_busy_clients() {
+        let mut state = state_with(vec![slot(0, 0), slot(1, 2), slot(2, 0)]);
+        state.clients[0].closed = true;
+        state.clients[0].rejected = 3;
+        state.clients[1].closed = true; // still has queued work
+        reap(&mut state);
+        assert_eq!(state.clients.len(), 2);
+        assert_eq!(state.finished.len(), 1);
+        assert_eq!(state.finished[0].name, "c0");
+        assert_eq!(state.finished[0].counters.rejected, 3);
+    }
+}

@@ -8,10 +8,21 @@ use memsched::experiments::{dynamic_suite_specs, dynamic_suite_sweeps, SuiteScal
 use memsched::platform::presets::small_cluster;
 use memsched::scheduler::Algorithm;
 use memsched::service::{
-    to_jsonl, ClusterSpec, Job, ReplaySweep, SchedulingService, ScoreThreadSpec,
+    to_jsonl, ClusterSpec, Job, ReplaySweep, SchedulingService, ScoreThreadSpec, ServiceConfig,
 };
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// A service with a disk-backed schedule cache at `dir` (the
+/// `ServiceConfig`-only construction surface).
+fn disk_svc(workers: usize, dir: &Path) -> SchedulingService {
+    SchedulingService::from_config(ServiceConfig {
+        workers,
+        cache_dir: Some(dir.to_path_buf()),
+        ..ServiceConfig::default()
+    })
+    .unwrap()
+}
 
 const SIGMAS: [f64; 2] = [0.1, 0.3];
 
@@ -59,7 +70,7 @@ fn warm_and_cold_cache_dir_keep_sweep_bytes_identical() {
     let no_cache = to_jsonl(&SchedulingService::new(4).run_replay_sweeps(sweeps.clone()));
 
     // Cold disk cache: everything computed, everything persisted.
-    let cold = SchedulingService::new(4).with_cache_dir(&dir).unwrap();
+    let cold = disk_svc(4, &dir);
     let cold_out = to_jsonl(&cold.run_replay_sweeps(sweeps.clone()));
     assert_eq!(cold_out, no_cache, "a cold cache dir must not change output bytes");
     assert_eq!(cold.cache_stats().computed, n_schedules);
@@ -69,7 +80,7 @@ fn warm_and_cold_cache_dir_keep_sweep_bytes_identical() {
     // zero schedules computed, byte-identical results — across both
     // worker counts.
     for workers in [1, 4] {
-        let warm = SchedulingService::new(workers).with_cache_dir(&dir).unwrap();
+        let warm = disk_svc(workers, &dir);
         let warm_out = to_jsonl(&warm.run_replay_sweeps(sweeps.clone()));
         assert_eq!(warm_out, no_cache, "warm cache dir must not change output bytes");
         let stats = warm.cache_stats();
@@ -85,14 +96,15 @@ fn warm_and_cold_cache_dir_keep_sweep_bytes_identical() {
 #[test]
 fn sweeps_with_auto_score_threads_match_serial_bytes() {
     let sweeps = smoke_sweeps();
+    let cfg = |score| ServiceConfig { workers: 2, score, ..ServiceConfig::default() };
     let serial = to_jsonl(
-        &SchedulingService::new(2)
-            .with_score_spec(ScoreThreadSpec::Fixed(1))
+        &SchedulingService::from_config(cfg(ScoreThreadSpec::Fixed(1)))
+            .unwrap()
             .run_replay_sweeps(sweeps.clone()),
     );
     let auto = to_jsonl(
-        &SchedulingService::new(2)
-            .with_score_spec(ScoreThreadSpec::Auto)
+        &SchedulingService::from_config(cfg(ScoreThreadSpec::Auto))
+            .unwrap()
             .run_replay_sweeps(sweeps),
     );
     assert_eq!(serial, auto, "auto score threads must preserve bytes");
@@ -105,7 +117,7 @@ fn corrupted_store_recovers_per_entry() {
     let dir = temp_dir("repair");
     let sweeps = smoke_sweeps();
     let n_schedules = sweeps.len();
-    let cold = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+    let cold = disk_svc(2, &dir);
     let expected = to_jsonl(&cold.run_replay_sweeps(sweeps.clone()));
 
     let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
@@ -124,7 +136,7 @@ fn corrupted_store_recovers_per_entry() {
     std::fs::write(&entries[1], versioned).unwrap();
     std::fs::write(&entries[2], b"fingerprint-collision-shaped garbage").unwrap();
 
-    let repaired = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+    let repaired = disk_svc(2, &dir);
     let out = to_jsonl(&repaired.run_replay_sweeps(sweeps.clone()));
     assert_eq!(out, expected, "corruption must never change results");
     let stats = repaired.cache_stats();
@@ -132,7 +144,7 @@ fn corrupted_store_recovers_per_entry() {
     assert_eq!(stats.disk_hits, n_schedules - 3);
 
     // The recomputes re-persisted their entries: a third pass is fully warm.
-    let warm = SchedulingService::new(2).with_cache_dir(&dir).unwrap();
+    let warm = disk_svc(2, &dir);
     assert_eq!(to_jsonl(&warm.run_replay_sweeps(sweeps)), expected);
     assert_eq!(warm.cache_stats().computed, 0);
     std::fs::remove_dir_all(&dir).ok();

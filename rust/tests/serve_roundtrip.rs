@@ -1,0 +1,256 @@
+//! End-to-end acceptance tests for `memsched serve` (ISSUE 6): clients
+//! talking length-delimited frames to a live daemon over a Unix socket
+//! get responses **byte-identical** to `memsched batch` on the same job
+//! lines; a warm second client computes zero schedules; malformed and
+//! oversized frames degrade per-connection, never the process; and a
+//! shutdown request drains queued work before the daemon returns.
+
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use memsched::ser::frame::{read_frame, write_frame, DEFAULT_MAX_FRAME_BYTES};
+use memsched::service::serve::{serve_unix, ServeSummary};
+use memsched::service::{
+    to_jsonl, JobSpec, ParseDefaults, SchedulingService, ServeOptions,
+};
+
+fn socket_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("memsched_serve_it_{tag}_{}.sock", std::process::id()))
+}
+
+/// Start a daemon on `path` in a background thread; returns its join
+/// handle (the serve summary plus the service's computed-schedule
+/// count).
+fn spawn_daemon(
+    path: PathBuf,
+    opts: ServeOptions,
+    workers: usize,
+) -> std::thread::JoinHandle<(ServeSummary, usize)> {
+    std::thread::spawn(move || {
+        let svc = SchedulingService::new(workers);
+        let summary = serve_unix(&svc, &path, &opts).expect("serve_unix failed");
+        (summary, svc.cache_stats().computed)
+    })
+}
+
+fn connect(path: &Path) -> UnixStream {
+    for _ in 0..500 {
+        if let Ok(s) = UnixStream::connect(path) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("serve socket {} never appeared", path.display());
+}
+
+/// A test client: send raw payloads, receive raw payloads.
+struct Client {
+    stream: UnixStream,
+}
+
+impl Client {
+    fn new(path: &Path) -> Client {
+        Client { stream: connect(path) }
+    }
+
+    fn send(&mut self, payload: &str) {
+        write_frame(&mut self.stream, payload.as_bytes()).unwrap();
+    }
+
+    fn recv(&mut self) -> Option<String> {
+        read_frame(&mut self.stream, DEFAULT_MAX_FRAME_BYTES)
+            .expect("client-side frame decode failed")
+            .map(|p| String::from_utf8(p).expect("non-UTF-8 frame payload"))
+    }
+
+    /// Send a drain barrier and collect everything up to its ack:
+    /// (result lines, error frames).
+    fn drain(&mut self) -> (Vec<String>, Vec<String>) {
+        self.send(r#"{"ctl":"drain"}"#);
+        let (mut results, mut errors) = (Vec::new(), Vec::new());
+        loop {
+            let frame = self.recv().expect("connection closed before the drain ack");
+            if frame == r#"{"ok":"drained"}"# {
+                return (results, errors);
+            }
+            // Result lines always lead with their id; error frames
+            // (`{"error":...}`) have no id.
+            if frame.starts_with("{\"id\":") {
+                results.push(frame);
+            } else {
+                errors.push(frame);
+            }
+        }
+    }
+}
+
+/// What `memsched batch` emits for these lines on a cold service —
+/// the byte-level contract every serve response must match.
+fn batch_baseline(lines: &[&str]) -> String {
+    let defaults = ParseDefaults::default();
+    let sweeps = lines
+        .iter()
+        .map(|l| JobSpec::parse_line(l, &defaults).unwrap().into_sweep())
+        .collect();
+    to_jsonl(&SchedulingService::new(1).run_replay_sweeps(sweeps))
+}
+
+fn joined(results: &[String]) -> String {
+    results.iter().map(|r| format!("{r}\n")).collect()
+}
+
+const LINES_A: [&str; 3] = [
+    r#"{"model":"bacass","input":1,"seed":5}"#,
+    r#"{"model":"bacass","input":1,"seed":5,"algo":"heftm-mm"}"#,
+    // Duplicate of the first line: an intra-client cache_hit.
+    r#"{"model":"bacass","input":1,"seed":5}"#,
+];
+
+const LINES_B: [&str; 2] = [
+    r#"{"model":"chipseq","input":0,"seed":7}"#,
+    r#"{"model":"chipseq","input":0,"seed":7,"sweep":[{"mode":"recompute","seed":9},{"mode":"static","seed":9}]}"#,
+];
+
+#[test]
+fn interleaved_clients_match_batch_bytes_and_warm_client_computes_nothing() {
+    let path = socket_path("roundtrip");
+    let daemon = spawn_daemon(path.clone(), ServeOptions::default(), 2);
+
+    let expected_a = batch_baseline(&LINES_A);
+    let expected_b = batch_baseline(&LINES_B);
+
+    // Two clients interleave their submissions frame by frame; each
+    // stream must come back byte-identical to its own cold batch.
+    let mut a = Client::new(&path);
+    a.send(r#"{"ctl":"ping"}"#);
+    assert_eq!(a.recv().as_deref(), Some(r#"{"ok":"pong"}"#));
+    let mut b = Client::new(&path);
+    for i in 0..LINES_A.len().max(LINES_B.len()) {
+        if let Some(line) = LINES_A.get(i) {
+            a.send(line);
+        }
+        if let Some(line) = LINES_B.get(i) {
+            b.send(line);
+        }
+    }
+    let (results_a, errors_a) = a.drain();
+    let (results_b, errors_b) = b.drain();
+    assert!(errors_a.is_empty(), "{errors_a:?}");
+    assert!(errors_b.is_empty(), "{errors_b:?}");
+    assert_eq!(joined(&results_a), expected_a, "client A must match its cold batch");
+    assert_eq!(joined(&results_b), expected_b, "client B must match its cold batch");
+    drop(a);
+    drop(b);
+
+    // A third client re-submits A's lines against the now-warm daemon:
+    // same bytes, zero schedules computed for this client.
+    let mut c = Client::new(&path);
+    for line in LINES_A {
+        c.send(line);
+    }
+    let (results_c, errors_c) = c.drain();
+    assert!(errors_c.is_empty(), "{errors_c:?}");
+    assert_eq!(joined(&results_c), expected_a, "warm client must match the cold batch");
+
+    c.send(r#"{"ctl":"shutdown"}"#);
+    assert_eq!(c.recv().as_deref(), Some(r#"{"ok":"shutting down"}"#));
+    assert_eq!(c.recv(), None, "daemon closes the socket after the drain");
+
+    let (summary, computed) = daemon.join().unwrap();
+    assert!(computed > 0, "the cold submissions computed schedules");
+    assert_eq!(summary.total_failed(), 0);
+    assert_eq!(
+        summary.total_results(),
+        LINES_A.len() * 2 + 1 + 2 // A + C (3 results each), B (1 + 2-point sweep)
+    );
+    let c2 = summary
+        .clients
+        .iter()
+        .find(|c| c.name == "c2")
+        .expect("warm client session in the shutdown summary");
+    assert_eq!(c2.counters.schedules_computed, 0, "warm client computes nothing");
+    assert_eq!(c2.counters.results, LINES_A.len());
+    assert_eq!(c2.counters.rejected, 0);
+    assert!(!path.exists(), "socket file removed on shutdown");
+}
+
+#[test]
+fn garbage_and_oversized_frames_fail_per_connection_not_the_daemon() {
+    let path = socket_path("defense");
+    // A tight payload cap so an ordinary string trips the oversize path.
+    let opts = ServeOptions { max_frame_bytes: 64, ..ServeOptions::default() };
+    let daemon = spawn_daemon(path.clone(), opts, 1);
+
+    // Client 1 writes raw garbage (not a frame): it gets an error frame
+    // and its connection is dropped — the process survives.
+    {
+        let mut garbage = connect(&path);
+        use std::io::Write as _;
+        garbage.write_all(b"definitely not a frame").unwrap();
+        garbage.flush().unwrap();
+        let mut c = Client { stream: garbage };
+        let err = c.recv().expect("an error frame before the hangup");
+        assert!(err.contains("error"), "{err}");
+        assert_eq!(c.recv(), None, "unframable connection is dropped");
+    }
+
+    // Client 2, on the same daemon: an oversized frame is rejected with
+    // a structured error, and the *same connection* keeps working.
+    let mut c = Client::new(&path);
+    let big = format!(r#"{{"model":"{}"}}"#, "x".repeat(128));
+    c.send(&big);
+    let err = c.recv().expect("oversize rejection frame");
+    assert!(err.contains("exceeds"), "{err}");
+    c.send(r#"{"model":"bacass","input":1,"seed":5}"#);
+    let (results, errors) = c.drain();
+    assert!(errors.is_empty(), "{errors:?}");
+    assert_eq!(joined(&results), batch_baseline(&[r#"{"model":"bacass","input":1,"seed":5}"#]));
+
+    // A malformed-but-framed job line answers with an error frame and
+    // the connection still drains cleanly.
+    c.send(r#"{"model":"bacass","typo":1}"#);
+    let (results, errors) = c.drain();
+    assert!(results.is_empty());
+    assert_eq!(errors.len(), 1);
+    assert!(errors[0].contains("unknown job field"), "{}", errors[0]);
+
+    c.send(r#"{"ctl":"shutdown"}"#);
+    assert_eq!(c.recv().as_deref(), Some(r#"{"ok":"shutting down"}"#));
+    let (summary, _) = daemon.join().unwrap();
+    // Only client 2 ran jobs; the garbage connection contributed no
+    // sessions' results.
+    assert_eq!(summary.total_results(), 1);
+    assert_eq!(summary.total_failed(), 0);
+}
+
+#[test]
+fn shutdown_drains_queued_work_before_returning() {
+    let path = socket_path("drainout");
+    let daemon = spawn_daemon(path.clone(), ServeOptions::default(), 2);
+    let expected = batch_baseline(&LINES_A);
+
+    // Queue work and request shutdown immediately — no drain barrier.
+    // Every already-admitted job must still produce its result frame.
+    let mut c = Client::new(&path);
+    for line in LINES_A {
+        c.send(line);
+    }
+    c.send(r#"{"ctl":"shutdown"}"#);
+    let mut results = Vec::new();
+    loop {
+        let Some(frame) = c.recv() else {
+            break; // daemon drained, answered, and hung up
+        };
+        if frame.starts_with("{\"id\":") {
+            results.push(frame);
+        } else {
+            assert_eq!(frame, r#"{"ok":"shutting down"}"#, "unexpected frame");
+        }
+    }
+    assert_eq!(joined(&results), expected, "queued work drains through shutdown");
+
+    let (summary, _) = daemon.join().unwrap();
+    assert_eq!(summary.total_results(), LINES_A.len());
+    assert_eq!(summary.total_failed(), 0);
+}

@@ -8,7 +8,9 @@ use std::sync::Arc;
 use memsched::experiments::{SuiteScale, WorkloadSpec};
 use memsched::platform::presets::small_cluster;
 use memsched::scheduler::Algorithm;
-use memsched::service::{self, ClusterSpec, Job, JobSource, SchedulingService, SimJob};
+use memsched::service::{
+    self, ClusterSpec, Job, JobSource, SchedulingService, ScoreThreadSpec, ServiceConfig, SimJob,
+};
 use memsched::simulator::SimMode;
 
 /// A seeded 22-job batch: 4 workloads × 4 algorithms, two simulation
@@ -93,7 +95,12 @@ fn score_threads_do_not_change_jsonl_bytes() {
     let baseline = SchedulingService::new(2);
     let r_base = baseline.run_batch(batch());
     for score_threads in [2, 8] {
-        let svc = SchedulingService::new(2).with_score_threads(score_threads);
+        let svc = SchedulingService::from_config(ServiceConfig {
+            workers: 2,
+            score: ScoreThreadSpec::Fixed(score_threads),
+            ..ServiceConfig::default()
+        })
+        .unwrap();
         let r = svc.run_batch(batch());
         assert_eq!(
             service::to_jsonl(&r_base),

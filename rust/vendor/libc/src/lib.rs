@@ -8,8 +8,12 @@ pub type sighandler_t = usize;
 
 /// Default signal handling.
 pub const SIG_DFL: sighandler_t = 0;
+/// Interrupt from keyboard (Linux signal number).
+pub const SIGINT: c_int = 2;
 /// Broken pipe (Linux signal number).
 pub const SIGPIPE: c_int = 13;
+/// Termination request (Linux signal number).
+pub const SIGTERM: c_int = 15;
 
 extern "C" {
     /// `signal(2)` from the platform C library.
