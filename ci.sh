@@ -153,17 +153,39 @@ EOF
   done
   echo "scaffold-path sweep sim fields byte-identical to per-point memsched simulate"
 
+  echo "== obs: memsched trace renders a valid Chrome trace =="
+  # --check re-parses the rendered bytes and validates them in-process
+  # (every named processor track has >=1 task slice, timestamps monotone
+  # non-decreasing), so the smoke needs no external JSON tooling.
+  "$BIN" trace --workflow "$TMP/wf.json" --check --out "$TMP/trace.json" 2>"$TMP/trace.err"
+  grep -q '"traceEvents"' "$TMP/trace.json" \
+    || { echo "trace output missing traceEvents:"; cat "$TMP/trace.json"; exit 1; }
+  grep -q '"ph":"X"' "$TMP/trace.json" \
+    || { echo "trace output has no task slices:"; cat "$TMP/trace.json"; exit 1; }
+  grep -q '"ph":"C"' "$TMP/trace.json" \
+    || { echo "trace output has no memory counter track:"; cat "$TMP/trace.json"; exit 1; }
+  grep -q 'check passed' "$TMP/trace.err" \
+    || { echo "trace --check did not pass:"; cat "$TMP/trace.err"; exit 1; }
+  echo "trace self-validates: per-processor slices, memory counter track, monotone timestamps"
+
   echo "== replay: warm/cold --cache-dir byte-identity + schedules_computed==0 =="
   "$BIN" batch --suite smoke --sigmas 0.1,0.3 --jobs 1 --out "$TMP/nocache.jsonl" 2>/dev/null
   "$BIN" batch --suite smoke --sigmas 0.1,0.3 --jobs 4 --cache-dir "$TMP/cache" \
     --out "$TMP/cold.jsonl" 2>"$TMP/cold.err"
   "$BIN" batch --suite smoke --sigmas 0.1,0.3 --jobs 4 --cache-dir "$TMP/cache" \
-    --out "$TMP/warm.jsonl" 2>"$TMP/warm.err"
+    --metrics-json "$TMP/metrics.jsonl" --out "$TMP/warm.jsonl" 2>"$TMP/warm.err"
   cmp "$TMP/nocache.jsonl" "$TMP/cold.jsonl"
   cmp "$TMP/nocache.jsonl" "$TMP/warm.jsonl"
   grep -Eq '"schedules_computed":0[,}]' "$TMP/warm.err" \
     || { echo "warm run did not report schedules_computed=0:"; cat "$TMP/warm.err"; exit 1; }
-  echo "multi-sigma batch byte-identical across jobs and warm/cold cache-dir; warm run computed 0 schedules"
+  # --metrics-json enables tracing for the run (the byte-compare above
+  # therefore also exercises the traced==untraced invariant) and writes
+  # versioned counter + span-histogram records.
+  grep -Eq '"schema":1[,}]' "$TMP/metrics.jsonl" \
+    || { echo "metrics JSONL missing schema field:"; cat "$TMP/metrics.jsonl"; exit 1; }
+  grep -q '"span"' "$TMP/metrics.jsonl" \
+    || { echo "metrics JSONL has no span histograms:"; cat "$TMP/metrics.jsonl"; exit 1; }
+  echo "multi-sigma batch byte-identical across jobs and warm/cold cache-dir (warm run traced); warm run computed 0 schedules; metrics JSONL well-formed"
 
   echo "== replay: warm --cache-dir experiment reuses every schedule =="
   "$BIN" experiment --figure fig8 --scale smoke --sigmas 0.1,0.3 --jobs 4 \
@@ -191,11 +213,18 @@ EOF
     > "$TMP/serve_c1.jsonl" 2>/dev/null
   cmp "$TMP/sweep.jsonl" "$TMP/serve_c0.jsonl"
   cmp "$TMP/sweep.jsonl" "$TMP/serve_c1.jsonl"
+  # A live stats probe: the daemon answers {"ctl":"stats"} with its
+  # global counters and per-session summaries, without disturbing it.
+  "$BIN" client --socket "$SOCK" --stats > "$TMP/stats.json" 2>/dev/null
+  grep -q '"stats"' "$TMP/stats.json" \
+    || { echo "stats probe got no stats reply:"; cat "$TMP/stats.json"; exit 1; }
+  grep -q '"counters"' "$TMP/stats.json" \
+    || { echo "stats reply missing counters:"; cat "$TMP/stats.json"; exit 1; }
   kill -TERM "$SERVE_PID"
   wait "$SERVE_PID"  # set -e: a non-zero daemon exit fails the smoke
   grep -Eq '"name":"c1"[^}]*"schedules_computed":0' "$TMP/serve.err" \
     || { echo "warm client did not report schedules_computed=0:"; cat "$TMP/serve.err"; exit 1; }
-  echo "serve responses byte-identical to batch; warm client computed 0 schedules; clean SIGTERM exit"
+  echo "serve responses byte-identical to batch; warm client computed 0 schedules; live stats answered; clean SIGTERM exit"
 }
 
 tier_bench() {

@@ -31,6 +31,12 @@
 //!   bytes are identical for any worker count (DESIGN.md §Service). The
 //!   experiments suite and the `memsched batch` subcommand both run
 //!   through it.
+//! - [`obs`]: crate-wide observability — typed events and timing spans
+//!   recorded into per-thread ring buffers behind a single enable flag,
+//!   exported as Chrome trace-event JSON (`memsched trace`), versioned
+//!   metrics JSONL (`--metrics-json`), and live daemon stats
+//!   (`{"ctl":"stats"}`). Side-channel only: result streams are
+//!   byte-identical with tracing on or off.
 //! - [`ser`], [`cli`], [`bench`], [`testing`]: in-tree substrates (JSON,
 //!   arg parsing, bench statistics, property testing) — the build
 //!   environment is offline, so these common utilities are implemented
@@ -44,6 +50,7 @@ pub mod experiments;
 pub mod generator;
 pub mod memdag;
 pub mod metrics;
+pub mod obs;
 pub mod platform;
 pub mod runtime;
 pub mod scheduler;

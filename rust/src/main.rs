@@ -7,6 +7,7 @@
 //! - `cluster-info`  print a cluster configuration (Table II presets)
 //! - `schedule`      compute a static schedule and report it
 //! - `simulate`      run the dynamic runtime system on a schedule
+//! - `trace`         render one simulated execution as Chrome trace-event JSON
 //! - `batch`         run a JSONL job batch on the parallel scheduling service
 //! - `serve`         run a persistent scheduler daemon on a Unix socket / stdio
 //! - `client`        submit a job file to a running `serve` daemon
@@ -47,10 +48,20 @@ COMMANDS:
                 (the `sim` object of a batch result line, full precision)
   retrace       --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
                 [--lose-proc J]...   assess deviation impact on a schedule (§V)
+  trace         --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
+                [--no-recompute] [--check] [--out trace.json]
+                simulate once with event tracing on and render the
+                execution as Chrome trace-event JSON (load in Perfetto /
+                chrome://tracing): one process track per processor with
+                a slice per executed task, a per-processor
+                memory-waterline counter track, and recomputation
+                instants; --check re-parses the rendered output and
+                fails unless it is well-formed (>=1 task slice per
+                track, monotone timestamps)
   batch         --input jobs.jsonl | --suite smoke|quick|full  [--jobs N]
                 [--sigmas 0.1,0.2,...] [--score-threads N|auto] [--cache-bytes B]
                 [--cache-dir DIR] [--cache-dir-bytes B] [--repeat K] [--seed S]
-                [--cluster C] [--out results.jsonl]
+                [--cluster C] [--out results.jsonl] [--metrics-json PATH]
                 run a job batch on the multi-threaded scheduling service;
                 results stream incrementally as JSONL (in job order, as
                 each ordered slot completes), byte-identical for any
@@ -61,13 +72,15 @@ COMMANDS:
                 in-memory schedule cache (LRU by approximate bytes),
                 --cache-dir adds a disk-backed cache shared across
                 invocations and --cache-dir-bytes bounds it (LRU by
-                mtime, oldest entries evicted first); a JSONL summary
-                record with the cache-hit / schedule-reuse / scaffold
-                counters goes to stderr
+                mtime, oldest entries evicted first); a versioned JSONL
+                summary record with the cache-hit / schedule-reuse /
+                scaffold counters goes to stderr; --metrics-json enables
+                event tracing (result bytes unchanged) and writes the
+                aggregated counters + span histograms as JSONL to PATH
   serve         --socket <path> | --stdio  [--jobs N] [--score-threads N|auto]
                 [--cache-bytes B] [--cache-dir DIR] [--cache-dir-bytes B]
                 [--cluster C] [--seed S] [--max-frame-bytes B]
-                [--max-queued-per-client N]
+                [--max-queued-per-client N] [--metrics-json PATH]
                 run a persistent scheduler daemon: clients submit
                 length-delimited job frames (the exact `batch --input`
                 line grammar; see DESIGN.md) over a Unix socket and
@@ -79,17 +92,22 @@ COMMANDS:
                 the in-memory/disk schedule caches are shared live
                 across clients; SIGTERM/SIGINT or a {\"ctl\":\"shutdown\"}
                 frame drains in-flight work, prints a per-client summary
-                record to stderr, and exits 0
-  client        --socket <path> [--input jobs.jsonl] [--shutdown]
+                record to stderr, and exits 0; a {\"ctl\":\"stats\"} frame
+                answers with live global counters + per-client summaries
+  client        --socket <path> [--input jobs.jsonl] [--stats] [--shutdown]
                 submit a JSONL job file (default: stdin) to a running
                 `memsched serve` daemon: result lines go to stdout
                 (byte-identical to `memsched batch --input` on the same
-                file), error frames to stderr; --shutdown asks the
-                daemon to drain and exit after this client's work
+                file), error frames to stderr; --stats then asks for the
+                daemon's live {\"ctl\":\"stats\"} metrics and prints the
+                reply (with --stats and no --input, stdin is not read —
+                a stats-only probe); --shutdown asks the daemon to drain
+                and exit after this client's work
   experiment    --figure fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|validity
                 [--scale smoke|quick|full] [--seed S] [--jobs N]
                 [--sigmas 0.1,0.3] [--score-threads N|auto]
                 [--cache-dir DIR] [--cache-dir-bytes B] [--markdown]
+                [--metrics-json PATH]
                 --sigmas (dynamic figures fig8/validity only) prints one
                 table per sigma, scheduling each workload exactly once
   bench-check   --current BENCH_ci.json --baseline <file> [--tolerance 2.0]
@@ -131,6 +149,7 @@ fn run() -> Result<()> {
         Some("schedule") => cmd_schedule(&mut args),
         Some("simulate") => cmd_simulate(&mut args),
         Some("retrace") => cmd_retrace(&mut args),
+        Some("trace") => cmd_trace(&mut args),
         Some("batch") => cmd_batch(&mut args),
         Some("serve") => cmd_serve(&mut args),
         Some("client") => cmd_client(&mut args),
@@ -374,6 +393,58 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Simulate one execution with event tracing on and render it as Chrome
+/// trace-event JSON (`ui.perfetto.dev` / `chrome://tracing`): a process
+/// track per processor with one slice per executed task, a per-processor
+/// memory-waterline counter track, and recomputation instants.
+fn cmd_trace(args: &mut Args) -> Result<()> {
+    let wf = load_workflow(args)?;
+    let cluster = load_cluster(args)?;
+    let algo: Algorithm = args.opt_or("algo", Algorithm::HeftmBl)?;
+    let sigma: f64 = args.opt_or("sigma", 0.1)?;
+    let seed: u64 = args.opt_or("seed", 42)?;
+    let no_recompute = args.flag("no-recompute");
+    let check = args.flag("check");
+    let out = args.opt_val("out")?;
+    args.finish()?;
+
+    let schedule = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+    if !schedule.valid {
+        bail!("initial schedule invalid; execution not attempted");
+    }
+    let mode = if no_recompute { SimMode::FollowStatic } else { SimMode::Recompute };
+    let cfg = SimConfig::new(mode, DeviationModel::new(sigma, seed));
+    // Recording brackets exactly this simulation.
+    memsched::obs::set_enabled(true);
+    let outcome = simulate(&wf, &cluster, &schedule, &cfg);
+    memsched::obs::set_enabled(false);
+    let recs = memsched::obs::drain();
+    let text = memsched::obs::chrome::render(&recs).to_string_compact();
+    if check {
+        // Round-trip through the parser: validates exactly the bytes a
+        // consumer would load (the ci.sh trace smoke drives this).
+        let parsed = Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("rendered trace does not re-parse: {e}"))?;
+        memsched::obs::chrome::validate(&parsed)
+            .map_err(|e| anyhow::anyhow!("trace check failed: {e}"))?;
+    }
+    match &out {
+        Some(path) => std::fs::write(path, text + "\n")
+            .with_context(|| format!("writing trace to {path}"))?,
+        None => println!("{text}"),
+    }
+    eprintln!(
+        "trace: {} events ({} dropped), completed={} makespan={:.3} recomputations={}{}",
+        recs.len(),
+        memsched::obs::dropped(),
+        outcome.completed,
+        outcome.makespan,
+        outcome.recomputations,
+        if check { ", check passed" } else { "" }
+    );
+    Ok(())
+}
+
 /// §V: compute a schedule, apply a deviation, and retrace it — reporting
 /// whether the schedule survives and the updated makespan.
 fn cmd_retrace(args: &mut Args) -> Result<()> {
@@ -446,6 +517,31 @@ fn service_config_args(args: &mut Args) -> Result<ServiceConfig> {
     })
 }
 
+/// `--metrics-json PATH`: turn crate-wide event tracing on for this run
+/// (result bytes are unaffected — the obs layer is a side channel) and
+/// return the output path for [`write_metrics_json`].
+fn metrics_json_arg(args: &mut Args) -> Result<Option<String>> {
+    let path = args.opt_val("metrics-json")?;
+    if path.is_some() {
+        memsched::obs::set_enabled(true);
+    }
+    Ok(path)
+}
+
+/// Drain every recorded event and write the aggregated metrics (one
+/// versioned `counters` record + one span-histogram record per observed
+/// span kind) as JSONL to `path`.
+fn write_metrics_json(path: &str) -> Result<()> {
+    memsched::obs::set_enabled(false);
+    let recs = memsched::obs::drain();
+    let mut out = String::new();
+    for rec in memsched::obs::metrics_records(&recs) {
+        out.push_str(&rec.to_string_compact());
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing metrics to {path}"))
+}
+
 fn cmd_experiment(args: &mut Args) -> Result<()> {
     let figure = args.req_str("figure")?;
     let scale: SuiteScale = args.opt_or("scale", SuiteScale::Quick)?;
@@ -453,6 +549,7 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
     let cfg = service_config_args(args)?;
     let sigmas: Vec<f64> = args.list_of("sigmas")?;
     let markdown = args.flag("markdown");
+    let metrics_json = metrics_json_arg(args)?;
     args.finish()?;
 
     let dynamic_figure = matches!(figure.as_str(), "fig8" | "validity");
@@ -528,6 +625,9 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
         other => bail!("unknown figure `{other}`"),
     };
     print!("{out}");
+    if let Some(path) = &metrics_json {
+        write_metrics_json(path)?;
+    }
     Ok(())
 }
 
@@ -586,6 +686,7 @@ fn cmd_batch(args: &mut Args) -> Result<()> {
         bail!("--repeat must be at least 1");
     }
     let out = args.opt_val("out")?;
+    let metrics_json = metrics_json_arg(args)?;
     args.finish()?;
 
     let base: Batch = match (&input, &suite) {
@@ -676,6 +777,9 @@ fn cmd_batch(args: &mut Args) -> Result<()> {
     // Machine-readable summary record (stderr: the JSONL result stream
     // on stdout/--out must stay byte-identical across warm/cold caches).
     eprintln!("{}", service.summary_json(emitted, dedup_hits, failed).to_string_compact());
+    if let Some(path) = &metrics_json {
+        write_metrics_json(path)?;
+    }
     if failed > 0 {
         bail!("{failed} of {emitted} jobs failed (see the `error` lines)");
     }
@@ -799,6 +903,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let max_frame_bytes: usize =
         args.opt_or("max-frame-bytes", memsched::ser::frame::DEFAULT_MAX_FRAME_BYTES)?;
     let max_queued_per_client: usize = args.opt_or("max-queued-per-client", 1024)?;
+    let metrics_json = metrics_json_arg(args)?;
     args.finish()?;
     if max_frame_bytes == 0 {
         bail!("--max-frame-bytes must be at least 1");
@@ -847,6 +952,9 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
             )
             .to_string_compact()
     );
+    if let Some(path) = &metrics_json {
+        write_metrics_json(path)?;
+    }
     Ok(())
 }
 
@@ -863,12 +971,16 @@ fn cmd_client(args: &mut Args) -> Result<()> {
     let socket = args.req_str("socket")?;
     let input = args.opt_val("input")?;
     let shutdown = args.flag("shutdown");
+    let stats = args.flag("stats");
     args.finish()?;
 
     let text = match &input {
         Some(path) => {
             std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?
         }
+        // A stats-only probe: don't block on stdin when there is no job
+        // input — the point is to ask a live daemon a question and exit.
+        None if stats => String::new(),
         None => {
             let mut buf = String::new();
             std::io::stdin().read_to_string(&mut buf).context("reading jobs from stdin")?;
@@ -935,6 +1047,20 @@ fn cmd_client(args: &mut Args) -> Result<()> {
         .join()
         .map_err(|_| anyhow::anyhow!("request writer thread panicked"))?
         .context("sending job frames")?;
+
+    if stats {
+        let mut w = reader.try_clone().context("cloning socket handle")?;
+        write_frame(&mut w, b"{\"ctl\":\"stats\"}")?;
+        w.flush()?;
+        match read_frame(&mut reader, DEFAULT_MAX_FRAME_BYTES)? {
+            Some(payload) => {
+                stdout.write_all(&payload)?;
+                stdout.write_all(b"\n")?;
+                stdout.flush()?;
+            }
+            None => bail!("server closed the connection before answering the stats request"),
+        }
+    }
 
     if shutdown {
         let mut w = reader.try_clone().context("cloning socket handle")?;

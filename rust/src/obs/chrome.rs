@@ -1,0 +1,230 @@
+//! Chrome trace-event rendering (`memsched trace`).
+//!
+//! Maps drained simulator events onto the Chrome/Perfetto trace-event
+//! JSON format (load the output in `ui.perfetto.dev` or
+//! `chrome://tracing`):
+//!
+//! - one **process track per processor** (`pid` = processor id, named
+//!   via `process_name` metadata): each simulated task execution is a
+//!   complete (`ph:"X"`) slice from its actual start for its actual
+//!   duration;
+//! - a **memory-waterline counter track** per processor (`ph:"C"`,
+//!   name `memory`): resident bytes after every residency change;
+//! - recomputations as global instant events (`ph:"i"`, scope `g`).
+//!
+//! Timestamps are the *simulated* clock converted to microseconds (the
+//! trace format's native unit), so slice lengths are simulated task
+//! durations, not host wall time.
+
+use super::event::Event;
+use super::sink::Rec;
+use crate::ser::json::{obj, Value};
+
+/// Simulated seconds → trace microseconds.
+fn us(t: f64) -> Value {
+    Value::Number(t * 1e6)
+}
+
+/// Render drained records as one Chrome trace-event JSON document.
+/// Non-simulator records are ignored — the caller typically enables
+/// tracing around exactly one simulation.
+pub fn render(recs: &[Rec]) -> Value {
+    // (ts, rendered event): record order is event-loop order, but a task's
+    // actual start can exceed the loop time that scheduled it (input
+    // arrival), so a stable ts sort is needed for a monotone timeline.
+    let mut timeline: Vec<(f64, Value)> = Vec::new();
+    let mut procs: Vec<u32> = Vec::new();
+    let mut seen_proc = |p: u32, procs: &mut Vec<u32>| {
+        if !procs.contains(&p) {
+            procs.push(p);
+        }
+    };
+    for r in recs {
+        match r.ev {
+            Event::TaskStart { task, proc, t, dur } => {
+                seen_proc(proc, &mut procs);
+                timeline.push((t, obj(vec![
+                    ("name", format!("task {task}").into()),
+                    ("cat", "task".into()),
+                    ("ph", "X".into()),
+                    ("ts", us(t)),
+                    ("dur", us(dur)),
+                    ("pid", proc.into()),
+                    ("tid", 0u64.into()),
+                    ("args", obj(vec![("task", task.into())])),
+                ])));
+            }
+            Event::TaskFinish { .. } => {
+                // The start slice already carries the duration; finishes
+                // exist for metrics/counters, not the timeline.
+            }
+            Event::MemLevel { proc, t, used } => {
+                seen_proc(proc, &mut procs);
+                timeline.push((t, obj(vec![
+                    ("name", "memory".into()),
+                    ("ph", "C".into()),
+                    ("ts", us(t)),
+                    ("pid", proc.into()),
+                    ("args", obj(vec![("used_bytes", used.into())])),
+                ])));
+            }
+            Event::RecomputeTriggered { t } => {
+                timeline.push((t, obj(vec![
+                    ("name", "recompute".into()),
+                    ("cat", "scheduler".into()),
+                    ("ph", "i".into()),
+                    ("ts", us(t)),
+                    ("pid", 0u64.into()),
+                    ("tid", 0u64.into()),
+                    ("s", "g".into()),
+                ])));
+            }
+            _ => {}
+        }
+    }
+    // Stable: equal timestamps keep record (event-loop) order.
+    timeline.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut events: Vec<Value> = timeline.into_iter().map(|(_, v)| v).collect();
+    // Metadata after the fact (ts-less; viewers accept any position, and
+    // keeping the event list itself ts-ordered simplifies validation).
+    procs.sort_unstable();
+    for p in &procs {
+        events.push(obj(vec![
+            ("name", "process_name".into()),
+            ("ph", "M".into()),
+            ("pid", (*p).into()),
+            ("args", obj(vec![("name", format!("proc {p}").into())])),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Value::Array(events)),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+/// Validate a (re-parsed) trace document: `traceEvents` exists, every
+/// named processor track carries at least one task slice, and the
+/// timestamps of timeline events are monotone non-decreasing in emission
+/// order. Backs `memsched trace --check` (and through it the CI smoke).
+pub fn validate(trace: &Value) -> Result<(), String> {
+    let events = match trace.get("traceEvents") {
+        Some(Value::Array(evs)) => evs,
+        _ => return Err("missing traceEvents array".into()),
+    };
+    let field_f64 = |v: &Value, key: &str| -> Option<f64> {
+        match v.get(key) {
+            Some(Value::Number(n)) => Some(*n),
+            _ => None,
+        }
+    };
+    let field_str = |v: &Value, key: &str| -> Option<String> {
+        match v.get(key) {
+            Some(Value::String(s)) => Some(s.clone()),
+            _ => None,
+        }
+    };
+    let mut named_procs: Vec<i64> = Vec::new();
+    let mut sliced_procs: Vec<i64> = Vec::new();
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut slices = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = field_str(ev, "ph").ok_or_else(|| format!("event {i}: missing ph"))?;
+        let pid = field_f64(ev, "pid").ok_or_else(|| format!("event {i}: missing pid"))? as i64;
+        if ph == "M" {
+            named_procs.push(pid);
+            continue;
+        }
+        let ts = field_f64(ev, "ts").ok_or_else(|| format!("event {i}: missing ts"))?;
+        if ts < last_ts {
+            return Err(format!("event {i}: ts {ts} < previous {last_ts} (not monotone)"));
+        }
+        last_ts = ts;
+        if ph == "X" {
+            slices += 1;
+            if field_f64(ev, "dur").is_none_or(|d| d < 0.0) {
+                return Err(format!("event {i}: X slice without a non-negative dur"));
+            }
+            if !sliced_procs.contains(&pid) {
+                sliced_procs.push(pid);
+            }
+        }
+    }
+    if slices == 0 {
+        return Err("no task slices in the trace".into());
+    }
+    for p in &named_procs {
+        if !sliced_procs.contains(p) {
+            return Err(format!("processor track pid={p} has no task slice"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::Event;
+
+    fn rec(seq: u64, ev: Event) -> Rec {
+        Rec { seq, tid: 0, wall_us: seq, ev }
+    }
+
+    #[test]
+    fn render_round_trips_and_validates() {
+        let recs = vec![
+            rec(0, Event::TaskStart { task: 0, proc: 0, t: 0.0, dur: 1.5 }),
+            rec(1, Event::MemLevel { proc: 0, t: 0.0, used: 64.0 }),
+            rec(2, Event::RecomputeTriggered { t: 0.5 }),
+            rec(3, Event::TaskStart { task: 1, proc: 1, t: 1.5, dur: 2.0 }),
+            rec(4, Event::MemLevel { proc: 1, t: 1.5, used: 32.0 }),
+            rec(5, Event::TaskFinish { task: 1, proc: 1, t: 3.5 }),
+        ];
+        let trace = render(&recs);
+        let text = trace.to_string_compact();
+        let parsed = Value::parse(&text).expect("rendered trace must re-parse");
+        validate(&parsed).expect("rendered trace must validate");
+        assert!(text.contains("\"ph\":\"X\""), "{text}");
+        assert!(text.contains("\"ph\":\"C\""), "{text}");
+        assert!(text.contains("\"process_name\""), "{text}");
+    }
+
+    #[test]
+    fn render_sorts_out_of_order_starts() {
+        // Simulator record order is event-loop order, not start order: a
+        // task can start later than the loop time that scheduled it. The
+        // rendered timeline must still be ts-monotone.
+        let recs = vec![
+            rec(0, Event::TaskStart { task: 0, proc: 0, t: 2.0, dur: 1.0 }),
+            rec(1, Event::TaskStart { task: 1, proc: 0, t: 1.0, dur: 1.0 }),
+        ];
+        validate(&render(&recs)).expect("render must sort the timeline");
+    }
+
+    #[test]
+    fn validate_rejects_non_monotone_and_empty_tracks() {
+        // A hand-built trace with descending timestamps (render() sorts,
+        // so a malformed document has to be constructed directly).
+        let slice = |task: u64, ts: f64| {
+            obj(vec![
+                ("name", format!("task {task}").into()),
+                ("ph", "X".into()),
+                ("ts", Value::Number(ts)),
+                ("dur", Value::Number(1.0)),
+                ("pid", 0u64.into()),
+            ])
+        };
+        let bad = obj(vec![(
+            "traceEvents",
+            Value::Array(vec![slice(0, 2e6), slice(1, 1e6)]),
+        )]);
+        assert!(validate(&bad).unwrap_err().contains("monotone"));
+        assert!(validate(&Value::Null).is_err());
+        // A processor named by metadata but carrying only counter events
+        // fails the ≥1-slice-per-track requirement.
+        let sliceless = vec![
+            rec(0, Event::TaskStart { task: 0, proc: 0, t: 0.0, dur: 1.0 }),
+            rec(1, Event::MemLevel { proc: 1, t: 0.5, used: 8.0 }),
+        ];
+        assert!(validate(&render(&sliceless)).unwrap_err().contains("no task slice"));
+    }
+}

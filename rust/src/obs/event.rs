@@ -1,0 +1,127 @@
+//! Typed observability events.
+//!
+//! Every variant is `Copy` with no heap payload: events are written into
+//! fixed-capacity per-thread rings from hot loops, so constructing one
+//! must never allocate. Identifiers are the scheduler's/simulator's own
+//! `usize` indices narrowed to `u32`; simulated timestamps are `f64`
+//! seconds (the simulator's clock); wall-clock quantities are integer
+//! microseconds since the process-wide epoch ([`super::sink::wall_us`]).
+
+/// What a wall-clock timing span measured. [`name`](SpanKind::name) is
+/// the stable string used in metrics output — treat renames as schema
+/// changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// One schedule computation inside the cache's compute closure.
+    ScheduleCompute,
+    /// Service phase 1: materialize workflows + fingerprints.
+    Materialize,
+    /// Service phases 2–4: group, execute on the pool, drain in order.
+    Stream,
+    /// One unique job's execution (schedule lookup + optional sim).
+    Execute,
+    /// One replay point through the thread-local `SimRun` arena.
+    Simulate,
+    /// One `pool::run_ordered` job on a worker (worker utilization: the
+    /// per-`tid` share of total span time is that worker's busy time).
+    WorkerJob,
+    /// One dispatched queue item in the serve daemon.
+    Dispatch,
+}
+
+impl SpanKind {
+    /// Every kind, in the stable order metrics records are emitted in.
+    pub const ALL: [SpanKind; 7] = [
+        SpanKind::ScheduleCompute,
+        SpanKind::Materialize,
+        SpanKind::Stream,
+        SpanKind::Execute,
+        SpanKind::Simulate,
+        SpanKind::WorkerJob,
+        SpanKind::Dispatch,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::ScheduleCompute => "schedule_compute",
+            SpanKind::Materialize => "materialize",
+            SpanKind::Stream => "stream",
+            SpanKind::Execute => "execute",
+            SpanKind::Simulate => "simulate",
+            SpanKind::WorkerJob => "worker_job",
+            SpanKind::Dispatch => "dispatch",
+        }
+    }
+}
+
+/// One recorded observation. Scheduler/service events carry wall-clock
+/// context via their [`Rec`](super::sink::Rec) wrapper; simulator events
+/// (`TaskStart`/`TaskFinish`/`MemLevel`/`RecomputeTriggered`) carry the
+/// *simulated* clock `t` in their payload — those are what the Chrome
+/// trace renders.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// A schedule computation began (cache miss on both layers).
+    ScheduleStart { tasks: u32 },
+    /// The computation finished after `micros` of wall time.
+    ScheduleEnd { tasks: u32, micros: u64 },
+    /// The engine chose processor `proc` for task `task` (recorded once
+    /// per assignment, at the winning tentative — not per candidate).
+    TaskScored { task: u32, proc: u32 },
+    /// Committing `task` on `proc` evicted file (edge) `edge` into the
+    /// communication buffer.
+    EvictionChosen { task: u32, proc: u32, edge: u32 },
+    /// The simulated runtime warned the scheduler and a recomputation of
+    /// all unstarted placements ran at simulated time `t`.
+    RecomputeTriggered { t: f64 },
+    /// Schedule served from the in-memory cache layer.
+    CacheHitMem,
+    /// Schedule loaded from the disk cache layer (`--cache-dir`).
+    CacheHitDisk,
+    /// A `SimScaffold` was constructed (one per sweep / plain sim job).
+    ScaffoldBuilt { tasks: u32 },
+    /// One replay point executed on a `SimRun` arena.
+    PointReplayed,
+    /// The serve daemon admitted a job frame into client `client`'s queue.
+    FrameAdmitted { client: u32 },
+    /// The daemon rejected a frame (backpressure or shutdown).
+    FrameRejected { client: u32 },
+    /// The fair-share dispatcher picked client `client`'s queue head.
+    DispatchPick { client: u32 },
+    /// Simulated execution of `task` started on `proc` at sim time `t`
+    /// and will run for `dur` (actual, post-deviation duration).
+    TaskStart { task: u32, proc: u32, t: f64, dur: f64 },
+    /// Simulated execution of `task` finished on `proc` at sim time `t`.
+    TaskFinish { task: u32, proc: u32, t: f64 },
+    /// Memory waterline: `used` bytes resident on `proc` at sim time `t`
+    /// (capacity minus available; recorded after each residency change).
+    MemLevel { proc: u32, t: f64, used: f64 },
+    /// A completed timing span (recorded at guard drop; `start_us` +
+    /// `dur_us` nest naturally on the wall-clock timeline).
+    Span { kind: SpanKind, start_us: u64, dur_us: u64 },
+}
+
+impl Event {
+    /// Stable snake_case key for counter aggregation (`None` for spans,
+    /// which aggregate into histograms instead).
+    pub fn counter_key(&self) -> Option<&'static str> {
+        Some(match self {
+            Event::ScheduleStart { .. } => "schedule_starts",
+            Event::ScheduleEnd { .. } => "schedule_ends",
+            Event::TaskScored { .. } => "tasks_scored",
+            Event::EvictionChosen { .. } => "evictions_chosen",
+            Event::RecomputeTriggered { .. } => "recomputes_triggered",
+            Event::CacheHitMem => "cache_hits_mem",
+            Event::CacheHitDisk => "cache_hits_disk",
+            Event::ScaffoldBuilt { .. } => "scaffolds_built",
+            Event::PointReplayed => "points_replayed",
+            Event::FrameAdmitted { .. } => "frames_admitted",
+            Event::FrameRejected { .. } => "frames_rejected",
+            Event::DispatchPick { .. } => "dispatch_picks",
+            Event::TaskStart { .. } => "sim_task_starts",
+            Event::TaskFinish { .. } => "sim_task_finishes",
+            Event::MemLevel { .. } => "sim_mem_levels",
+            Event::Span { .. } => return None,
+        })
+    }
+}

@@ -1,0 +1,36 @@
+//! Crate-wide observability: typed events, timing spans, per-thread
+//! ring-buffer recording, and exporters.
+//!
+//! The subsystem is a **side channel**: it never touches result bytes.
+//! Every JSONL result stream the crate produces is byte-identical with
+//! tracing on or off (asserted by the determinism integration tests);
+//! traces, metrics and counters flow only to stderr summaries, the
+//! `--metrics-json` file, the `memsched trace` output, and the serve
+//! daemon's `{"ctl":"stats"}` reply.
+//!
+//! Layout:
+//!
+//! - [`event`] — the [`Event`] taxonomy and [`SpanKind`]s; all `Copy`,
+//!   no heap payloads.
+//! - [`sink`] — the process-global enable flag, per-thread rings,
+//!   [`drain`], the [`Counters`] summary object, and
+//!   [`metrics_records`] aggregation.
+//! - [`span`] — the [`Span`] drop-guard timer.
+//! - [`chrome`] — Chrome/Perfetto trace-event rendering + validation
+//!   for `memsched trace`.
+//!
+//! Hot-path contract: call sites are written
+//! `if obs::enabled() { obs::record(...) }` so the disabled path is a
+//! single relaxed load and a branch — no event is even constructed.
+
+pub mod chrome;
+pub mod event;
+pub mod sink;
+pub mod span;
+
+pub use event::{Event, SpanKind};
+pub use sink::{
+    drain, dropped, enabled, metrics_records, record, set_enabled, wall_us, Counters, Rec,
+    SCHEMA_VERSION,
+};
+pub use span::{span, Span};

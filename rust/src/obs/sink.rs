@@ -1,0 +1,293 @@
+//! The event sink: a process-global enable flag, per-thread ring
+//! buffers, and drain/aggregation.
+//!
+//! **Zero-cost-when-disabled contract.** [`enabled`] is a single relaxed
+//! atomic load; every record site in the crate is written
+//! `if obs::enabled() { obs::record(...) }`, so with tracing off the hot
+//! paths (engine scoring loop, `SimRun` replay loop) execute a couple of
+//! branch instructions and allocate nothing — pinned by the arena
+//! pointer-stability and determinism-under-tracing tests.
+//!
+//! **Recording** is lock-cheap, not lock-free: each thread owns one
+//! fixed-capacity `Vec<Rec>` behind a `Mutex` that only [`drain`] ever
+//! contends on (an uncontended lock is a few atomic ops). A global
+//! sequence counter orders records across threads; rings that fill up
+//! drop further records (counted in [`dropped`]) rather than growing or
+//! blocking.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::event::{Event, SpanKind};
+use crate::ser::json::{obj, Value};
+
+/// Schema version of every metrics record ([`metrics_records`]) and of
+/// the summary records built around [`Counters`]. Bump on any field
+/// rename/reorder; external tooling keys off it.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Per-thread ring capacity (records). A smoke-scale trace is a few
+/// thousand records; production sweeps that overflow this drop the
+/// excess (counted) instead of growing without bound.
+const RING_CAPACITY: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SEQ: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+/// Whether event recording is on. Relaxed load — the only thing hot
+/// paths pay when tracing is disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip event recording (process-global). `memsched trace` and
+/// `--metrics-json` turn it on; it is off by default.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-wide tracing epoch (first use).
+pub fn wall_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// One recorded event with its cross-thread ordering context.
+#[derive(Clone, Copy, Debug)]
+pub struct Rec {
+    /// Global sequence number: drain order across all threads.
+    pub seq: u64,
+    /// Small dense id of the recording thread (assignment order).
+    pub tid: u32,
+    /// Wall-clock record time ([`wall_us`]).
+    pub wall_us: u64,
+    pub ev: Event,
+}
+
+type Ring = Arc<Mutex<Vec<Rec>>>;
+
+fn registry() -> &'static Mutex<Vec<Ring>> {
+    static REGISTRY: Mutex<Vec<Ring>> = Mutex::new(Vec::new());
+    &REGISTRY
+}
+
+thread_local! {
+    static LOCAL: (Ring, u32) = {
+        let ring: Ring = Arc::new(Mutex::new(Vec::with_capacity(RING_CAPACITY)));
+        registry().lock().unwrap().push(ring.clone());
+        (ring, NEXT_TID.fetch_add(1, Ordering::Relaxed))
+    };
+}
+
+/// Record one event into this thread's ring. Callers on hot paths guard
+/// with [`enabled`] *before* constructing the event; the internal check
+/// here only covers stragglers racing a [`set_enabled`]`(false)`.
+#[inline]
+pub fn record(ev: Event) {
+    if !enabled() {
+        return;
+    }
+    record_always(ev);
+}
+
+#[cold]
+fn record_always(ev: Event) {
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let wall = wall_us();
+    // `try_with`: a TLS key is inaccessible during thread teardown, and
+    // observability must never take the process down — drop the record.
+    let stored = LOCAL.try_with(|(ring, tid)| {
+        let mut g = ring.lock().unwrap();
+        if g.len() < RING_CAPACITY {
+            g.push(Rec { seq, tid: *tid, wall_us: wall, ev });
+            true
+        } else {
+            false
+        }
+    });
+    if !stored.unwrap_or(false) {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Take every buffered record from every thread's ring, ordered by the
+/// global sequence number. Rings are emptied (their capacity is kept);
+/// recording may continue concurrently — records racing the drain land
+/// in the next one.
+pub fn drain() -> Vec<Rec> {
+    let rings: Vec<Ring> = registry().lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in rings {
+        out.append(&mut ring.lock().unwrap());
+    }
+    out.sort_unstable_by_key(|r| r.seq);
+    out
+}
+
+/// Records dropped on full rings since the last call (resets to 0).
+pub fn dropped() -> u64 {
+    DROPPED.swap(0, Ordering::Relaxed)
+}
+
+/// The canonical counter sub-object of the run summaries: one stable
+/// name and nesting for the reuse counters that batch and serve records
+/// previously reported with drifting shapes. Filled by the service from
+/// its cache statistics — the counters are *always* present in
+/// summaries, whether or not event tracing is enabled.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Schedule lookups (one per prepared unique job + deduped jobs).
+    pub schedule_requests: u64,
+    /// Schedules actually computed (miss on every cache layer).
+    pub schedules_computed: u64,
+    /// Requests satisfied without computing (memory hits, batch dedupe,
+    /// disk loads together).
+    pub schedule_reuse_hits: u64,
+    /// Schedules loaded from the disk layer (`--cache-dir`).
+    pub disk_hits: u64,
+    /// `SimScaffold`s constructed (one per sweep that simulates).
+    pub scaffolds_built: u64,
+}
+
+impl Counters {
+    /// The `counters` object, fields in declaration order (stable —
+    /// part of the versioned summary schema).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("schedule_requests", self.schedule_requests.into()),
+            ("schedules_computed", self.schedules_computed.into()),
+            ("schedule_reuse_hits", self.schedule_reuse_hits.into()),
+            ("disk_hits", self.disk_hits.into()),
+            ("scaffolds_built", self.scaffolds_built.into()),
+        ])
+    }
+}
+
+/// Aggregate drained records into versioned metrics JSONL values: one
+/// `kind:"counters"` record (event counts by stable key, plus records
+/// dropped on full rings), then one `kind:"span"` record per span kind
+/// observed, in [`SpanKind::ALL`] order, each a duration histogram
+/// summary in microseconds.
+pub fn metrics_records(recs: &[Rec]) -> Vec<Value> {
+    use std::collections::BTreeMap;
+    let mut counts: BTreeMap<&'static str, u64> = BTreeMap::new();
+    let mut spans: BTreeMap<SpanKind, Vec<u64>> = BTreeMap::new();
+    for r in recs {
+        match r.ev {
+            Event::Span { kind, dur_us, .. } => spans.entry(kind).or_default().push(dur_us),
+            ev => {
+                if let Some(key) = ev.counter_key() {
+                    *counts.entry(key).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(1 + spans.len());
+    let count_fields: Vec<(&str, Value)> =
+        counts.into_iter().map(|(k, v)| (k, v.into())).collect();
+    out.push(obj(vec![
+        ("schema", SCHEMA_VERSION.into()),
+        ("kind", "counters".into()),
+        ("events", recs.len().into()),
+        ("events_dropped", dropped().into()),
+        ("counts", obj(count_fields)),
+    ]));
+    for kind in SpanKind::ALL {
+        let Some(mut durs) = spans.remove(&kind) else { continue };
+        durs.sort_unstable();
+        let total: u64 = durs.iter().sum();
+        let pct = |p: f64| -> u64 {
+            let idx = ((durs.len() - 1) as f64 * p).round() as usize;
+            durs[idx]
+        };
+        out.push(obj(vec![
+            ("schema", SCHEMA_VERSION.into()),
+            ("kind", "span".into()),
+            ("name", kind.name().into()),
+            ("count", durs.len().into()),
+            ("total_us", total.into()),
+            ("min_us", durs[0].into()),
+            ("p50_us", pct(0.5).into()),
+            ("p90_us", pct(0.9).into()),
+            ("max_us", (*durs.last().unwrap()).into()),
+        ]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The enable flag and the rings are process-global; tests that flip
+    /// or drain them must not interleave (the test harness runs threads).
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = test_lock();
+        set_enabled(false);
+        record(Event::PointReplayed);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn drain_orders_across_threads_and_aggregates() {
+        let _g = test_lock();
+        set_enabled(true);
+        let h = std::thread::spawn(|| {
+            for _ in 0..5 {
+                record(Event::CacheHitMem);
+            }
+        });
+        for _ in 0..5 {
+            record(Event::CacheHitDisk);
+        }
+        record(Event::Span { kind: SpanKind::Execute, start_us: 1, dur_us: 10 });
+        record(Event::Span { kind: SpanKind::Execute, start_us: 2, dur_us: 30 });
+        h.join().unwrap();
+        set_enabled(false);
+        let recs = drain();
+        assert!(recs.windows(2).all(|w| w[0].seq < w[1].seq), "drain must be seq-ordered");
+        let metrics = metrics_records(&recs);
+        let line = metrics[0].to_string_compact();
+        assert!(line.contains("\"kind\":\"counters\""), "{line}");
+        assert!(line.contains("\"cache_hits_mem\":"), "{line}");
+        assert!(line.contains("\"cache_hits_disk\":"), "{line}");
+        let span_line = metrics
+            .iter()
+            .map(Value::to_string_compact)
+            .find(|l| l.contains("\"name\":\"execute\""))
+            .expect("execute span record");
+        assert!(span_line.contains("\"schema\":1"), "{span_line}");
+        assert!(span_line.contains("\"min_us\":10"), "{span_line}");
+        assert!(span_line.contains("\"max_us\":30"), "{span_line}");
+    }
+
+    #[test]
+    fn counters_object_has_stable_field_order() {
+        let c = Counters {
+            schedule_requests: 9,
+            schedules_computed: 3,
+            schedule_reuse_hits: 6,
+            disk_hits: 2,
+            scaffolds_built: 1,
+        };
+        assert_eq!(
+            c.to_json().to_string_compact(),
+            "{\"schedule_requests\":9,\"schedules_computed\":3,\
+             \"schedule_reuse_hits\":6,\"disk_hits\":2,\"scaffolds_built\":1}"
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! Drop-guard timing spans.
+//!
+//! [`span`] returns a guard that records one [`Event::Span`] when it
+//! drops; nesting guards on one thread nests the recorded intervals on
+//! the wall-clock timeline. With tracing disabled the guard is inert —
+//! no clock read, no event, nothing allocated.
+
+use super::event::{Event, SpanKind};
+use super::sink::{enabled, record, wall_us};
+
+/// An in-flight timing span; the measurement is recorded on drop.
+#[must_use = "a span guard measures until it drops — bind it to a variable"]
+#[derive(Debug)]
+pub struct Span {
+    kind: SpanKind,
+    start_us: u64,
+    armed: bool,
+}
+
+/// Start timing `kind`. Returns an inert guard when tracing is disabled
+/// (the disabled path is one relaxed load and a struct literal).
+#[inline]
+pub fn span(kind: SpanKind) -> Span {
+    if enabled() {
+        Span { kind, start_us: wall_us(), armed: true }
+    } else {
+        Span { kind, start_us: 0, armed: false }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        // `enabled` re-checked so spans crossing a set_enabled(false)
+        // don't record into a drained world.
+        if self.armed && enabled() {
+            let dur_us = wall_us().saturating_sub(self.start_us);
+            record(Event::Span { kind: self.kind, start_us: self.start_us, dur_us });
+        }
+    }
+}

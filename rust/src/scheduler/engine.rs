@@ -32,6 +32,7 @@
 
 use super::state::{EvictCache, EvictionPolicy, PlatformState};
 use super::Algorithm;
+use crate::obs;
 use crate::platform::{Cluster, ProcId};
 use crate::service::pool::ScorePool;
 use crate::workflow::{EdgeId, TaskId, Workflow};
@@ -545,6 +546,13 @@ impl<'a> Engine<'a> {
             self.state.procs[j].avail_mem += size;
             self.state.procs[j].buffered.insert(e, size);
             self.state.procs[j].avail_buf -= size;
+            if obs::enabled() {
+                obs::record(obs::Event::EvictionChosen {
+                    task: v as u32,
+                    proc: j as u32,
+                    edge: e as u32,
+                });
+            }
             evicted_ids.push(e);
         }
 
@@ -665,6 +673,9 @@ impl<'a> Engine<'a> {
                 if t.res < 0.0 && !self.memory_aware {
                     // Baseline HEFT exceeded the memory: record and go on.
                     self.failures.push(Failure::Overcommit { task: v, proc: j });
+                }
+                if obs::enabled() {
+                    obs::record(obs::Event::TaskScored { task: v as u32, proc: j as u32 });
                 }
                 self.commit(v, j, t);
                 true

@@ -47,6 +47,7 @@ use std::hash::Hash;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::obs;
 use crate::scheduler::Schedule;
 
 use super::disk::DiskStore;
@@ -323,13 +324,19 @@ impl ScheduleCache {
         compute: F,
     ) -> CachedSchedule {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        self.map.get_or_init(
+        // Distinguishes a memory hit (closure never ran) for the obs layer.
+        let ran = std::cell::Cell::new(false);
+        let out = self.map.get_or_init(
             &fp.0,
             || {
+                ran.set(true);
                 if let Some(disk) = &self.disk {
                     if let Some(cached) = disk.load(fp) {
                         if expect_tasks.is_none_or(|n| cached.schedule.tasks.len() == n) {
                             self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                            if obs::enabled() {
+                                obs::record(obs::Event::CacheHitDisk);
+                            }
                             return cached;
                         }
                     }
@@ -343,7 +350,11 @@ impl ScheduleCache {
                 cached
             },
             |cs| cs.schedule.approx_bytes(),
-        )
+        );
+        if !ran.get() && obs::enabled() {
+            obs::record(obs::Event::CacheHitMem);
+        }
+        out
     }
 
     /// Record `n` requests satisfied upstream by batch-level

@@ -79,10 +79,11 @@ pub use serve::{ServeOptions, ServeSummary};
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::obs;
 use crate::platform::Cluster;
 use crate::scheduler::{compute_schedule_with, Schedule};
 use crate::ser::json::{obj, Value};
@@ -198,10 +199,10 @@ pub struct SchedulingService {
     /// heuristic ([`crate::scheduler::auto_score_threads`]).
     score_auto: bool,
     schedules: ScheduleCache,
-    /// Cache configuration retained so the two cache builders
-    /// ([`with_cache_bytes`](SchedulingService::with_cache_bytes),
-    /// [`with_cache_dir`](SchedulingService::with_cache_dir)) compose in
-    /// either order.
+    /// Cache configuration retained so [`rebuild_cache`]
+    /// (construction-time) can recreate the cache with both layers.
+    ///
+    /// [`rebuild_cache`]: SchedulingService::rebuild_cache
     cache_bytes: Option<usize>,
     cache_disk: Option<Arc<DiskStore>>,
     workflows: Memo<Arc<Workflow>>,
@@ -270,11 +271,9 @@ impl SchedulingService {
     /// The single construction surface: build a fully-configured service
     /// from a [`ServiceConfig`] (worker count, scoring threads, cache
     /// layers). The CLI commands, the experiment suites, and the
-    /// `memsched serve` daemon all construct their services here; the
-    /// legacy `with_*` builders are thin deprecated shims over the same
-    /// helpers. Fails only if the cache directory cannot be created or
-    /// on an inconsistent combination (`cache_dir_bytes` without
-    /// `cache_dir`).
+    /// `memsched serve` daemon all construct their services here. Fails
+    /// only if the cache directory cannot be created or on an
+    /// inconsistent combination (`cache_dir_bytes` without `cache_dir`).
     ///
     /// Cache-cap determinism scope: every payload value (schedules,
     /// makespans, sim outcomes) stays byte-identical under any
@@ -323,51 +322,6 @@ impl SchedulingService {
         self.schedules = ScheduleCache::with_config(self.cache_bytes, self.cache_disk.clone());
     }
 
-    /// Parallelize the *inside* of every schedule computation across
-    /// `threads` score threads (1 ⇒ serial scoring, the default).
-    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
-    pub fn with_score_threads(mut self, threads: usize) -> SchedulingService {
-        self.set_score_spec(ScoreThreadSpec::Fixed(threads.max(1)));
-        self
-    }
-
-    /// Apply a [`ScoreThreadSpec`] (see `ServiceConfig::score`).
-    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
-    pub fn with_score_spec(mut self, spec: ScoreThreadSpec) -> SchedulingService {
-        self.set_score_spec(spec);
-        self
-    }
-
-    /// Cap the schedule cache at approximately `cap_bytes` resident
-    /// bytes (see `ServiceConfig::cache_bytes` for the determinism
-    /// scope). Replaces the cache, so configure before the first batch.
-    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
-    pub fn with_cache_bytes(mut self, cap_bytes: Option<usize>) -> SchedulingService {
-        self.cache_bytes = cap_bytes;
-        self.rebuild_cache();
-        self
-    }
-
-    /// Attach a disk-backed schedule-cache layer at `dir`
-    /// (`--cache-dir`; see `ServiceConfig::cache_dir`).
-    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
-    pub fn with_cache_dir(self, dir: &Path) -> anyhow::Result<SchedulingService> {
-        self.with_cache_dir_capped(dir, None)
-    }
-
-    /// [`with_cache_dir`](SchedulingService::with_cache_dir) with an
-    /// LRU-by-mtime byte cap on the store (`--cache-dir-bytes`).
-    #[deprecated(note = "construct via SchedulingService::from_config / ServiceConfig::build")]
-    pub fn with_cache_dir_capped(
-        mut self,
-        dir: &Path,
-        cap_bytes: Option<u64>,
-    ) -> anyhow::Result<SchedulingService> {
-        self.cache_disk = Some(Arc::new(DiskStore::open_capped(dir, cap_bytes)?));
-        self.rebuild_cache();
-        Ok(self)
-    }
-
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -393,9 +347,27 @@ impl SchedulingService {
         self.scaffolds_built.load(Ordering::Relaxed)
     }
 
+    /// The service's schedule-reuse counters in the canonical
+    /// [`obs::Counters`](crate::obs::Counters) shape (filled from the
+    /// cache statistics — present whether or not event tracing is on).
+    pub fn counters(&self) -> crate::obs::Counters {
+        let stats = self.cache_stats();
+        crate::obs::Counters {
+            schedule_requests: stats.lookups as u64,
+            schedules_computed: stats.computed as u64,
+            schedule_reuse_hits: stats.hits() as u64,
+            disk_hits: stats.disk_hits as u64,
+            scaffolds_built: self.scaffolds_built() as u64,
+        }
+    }
+
     /// The run-summary record surfacing the cache-hit / schedule-reuse
-    /// counters as one JSONL object. Emitters print it on **stderr** (or
-    /// a side file) — never into the result stream, whose bytes must not
+    /// counters as one JSONL object (versioned: `"schema"` is
+    /// [`obs::SCHEMA_VERSION`](crate::obs::SCHEMA_VERSION), field order
+    /// is stable, and the reuse counters sit in one nested `counters`
+    /// object shared verbatim with the serve summary — see DESIGN.md
+    /// §Observability). Emitters print it on **stderr** (or a side
+    /// file) — never into the result stream, whose bytes must not
     /// depend on cache residency: a warm `--cache-dir` run reports
     /// `schedules_computed: 0` here while its JSONL results stay
     /// byte-identical to the cold run's.
@@ -429,22 +401,18 @@ impl SchedulingService {
         result_cache_hits: usize,
         failed: usize,
     ) -> Vec<(&'static str, Value)> {
-        let stats = self.cache_stats();
         vec![
+            ("schema", crate::obs::SCHEMA_VERSION.into()),
             ("jobs", jobs.into()),
             ("failed", failed.into()),
             ("result_cache_hits", result_cache_hits.into()),
-            ("schedule_requests", stats.lookups.into()),
-            ("schedules_computed", stats.computed.into()),
-            ("schedule_reuse_hits", stats.hits().into()),
-            ("disk_cache_hits", stats.disk_hits.into()),
-            ("scaffolds_built", self.scaffolds_built().into()),
             ("workers", self.workers.into()),
             // Under `auto`, `score_threads` is the pool *size*; the
             // per-schedule crossover gate may still have scored
             // every schedule serially — `score_mode` disambiguates.
             ("score_threads", self.score_threads().into()),
             ("score_mode", if self.score_auto { "auto" } else { "fixed" }.into()),
+            ("counters", self.counters().to_json()),
         ]
     }
 
@@ -496,18 +464,26 @@ impl SchedulingService {
     fn run_point(&self, prep: &Prepared, schedule: &Arc<Schedule>, cfg: &SimConfig) -> SimOutcome {
         let build = || {
             self.scaffolds_built.fetch_add(1, Ordering::Relaxed);
+            if obs::enabled() {
+                obs::record(obs::Event::ScaffoldBuilt { tasks: prep.wf.num_tasks() as u32 });
+            }
             Arc::new(SimScaffold::new(prep.wf.clone(), prep.cluster.clone(), schedule.clone()))
         };
         let scaffold = match &prep.scaffold {
             Some(cell) => cell.get_or_init(build).clone(),
             None => build(),
         };
+        let _sim_span = obs::span(obs::SpanKind::Simulate);
+        if obs::enabled() {
+            obs::record(obs::Event::PointReplayed);
+        }
         // Summary variant: `SimResult` never carries finish_times, so
         // skip the O(n) per-point clone of them.
         SIM_ARENA.with(|arena| arena.borrow_mut().simulate_summary(&scaffold, cfg))
     }
 
     fn execute(&self, job: &Job, prep: &Prepared) -> Executed {
+        let _exec_span = obs::span(obs::SpanKind::Execute);
         // Auto mode: small instances skip the pool (serial scoring wins
         // below the crossover); schedules are byte-identical either way.
         let score_pool = if self.score_auto
@@ -521,6 +497,11 @@ impl SchedulingService {
             prep.sched_fp,
             Some(prep.wf.num_tasks()),
             || {
+                let tasks = prep.wf.num_tasks() as u32;
+                if obs::enabled() {
+                    obs::record(obs::Event::ScheduleStart { tasks });
+                }
+                let _compute_span = obs::span(obs::SpanKind::ScheduleCompute);
                 let t0 = std::time::Instant::now();
                 let s = compute_schedule_with(
                     &prep.wf,
@@ -530,6 +511,12 @@ impl SchedulingService {
                     score_pool,
                 );
                 let seconds = t0.elapsed().as_secs_f64();
+                if obs::enabled() {
+                    obs::record(obs::Event::ScheduleEnd {
+                        tasks,
+                        micros: (seconds * 1e6) as u64,
+                    });
+                }
                 (s, seconds)
             },
         );
@@ -587,11 +574,13 @@ impl SchedulingService {
         self.prematerialize(jobs.iter().map(|j| j.source.clone()));
 
         // Phase 1: materialize + fingerprint.
-        let prepared: Vec<(Job, Result<Prepared, String>)> =
+        let prepared: Vec<(Job, Result<Prepared, String>)> = {
+            let _mat_span = obs::span(obs::SpanKind::Materialize);
             pool::run_ordered(jobs, self.workers, |_, job| {
                 let prep = self.prepare(&job);
                 (job, prep)
-            });
+            })
+        };
 
         self.stream_prepared(prepared, sink);
     }
@@ -624,7 +613,10 @@ impl SchedulingService {
         self.workflows.prune_errors();
         self.clusters.prune_errors();
         self.prematerialize(sweeps.iter().map(|s| s.source.clone()));
-        let prepared = self.prepare_sweeps(sweeps);
+        let prepared = {
+            let _mat_span = obs::span(obs::SpanKind::Materialize);
+            self.prepare_sweeps(sweeps)
+        };
         self.stream_prepared(prepared, sink);
     }
 
@@ -768,6 +760,9 @@ impl SchedulingService {
         resident: impl Fn(&Prepared) -> bool,
         sink: impl FnMut(JobResult) + Send,
     ) {
+        // Phases 2–4 under one Stream span (grouping, pool execution,
+        // ordered drain — the whole streaming tail of a batch).
+        let _stream_span = obs::span(obs::SpanKind::Stream);
         // Phase 2: deterministic grouping. The lowest-id job of each
         // fingerprint group is the computer; `cache_hit` flags are fixed
         // here, before execution, from (group position, cache state).
@@ -935,7 +930,9 @@ impl ClientSession {
     }
 
     /// The per-client summary object (an element of the daemon
-    /// summary's `clients` array).
+    /// summary's `clients` array). Admission/stream fields sit at the
+    /// top level; the schedule-reuse counter nests under `counters`,
+    /// mirroring the global summary's shape (DESIGN.md §Observability).
     pub fn summary_json(&self) -> Value {
         let c = &self.counters;
         obj(vec![
@@ -945,7 +942,7 @@ impl ClientSession {
             ("results", c.results.into()),
             ("result_cache_hits", c.result_cache_hits.into()),
             ("failed", c.failed.into()),
-            ("schedules_computed", c.schedules_computed.into()),
+            ("counters", obj(vec![("schedules_computed", c.schedules_computed.into())])),
         ])
     }
 }
@@ -1305,40 +1302,39 @@ mod tests {
         let summary = warm.summary_json(4, 0, 0);
         let line = summary.to_string_compact();
         assert!(line.contains("\"schedules_computed\":0"), "{line}");
-        assert!(line.contains("\"disk_cache_hits\":4"), "{line}");
+        assert!(line.contains("\"disk_hits\":4"), "{line}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn cache_builders_compose_in_either_order() {
+    fn byte_cap_and_disk_layer_compose() {
         let dir = std::env::temp_dir().join(format!("memsched_svc_compose_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let cluster = Arc::new(small_cluster());
         let job = spec_job("eager", 1, Algorithm::HeftmBl, &cluster);
-        // bytes-then-dir and dir-then-bytes must both keep the disk layer.
-        let a = SchedulingService::new(1)
-            .with_cache_bytes(Some(1 << 30))
-            .with_cache_dir(&dir)
-            .unwrap();
+        let cfg = || ServiceConfig {
+            workers: 1,
+            cache_bytes: Some(1 << 30),
+            cache_dir: Some(dir.clone()),
+            ..ServiceConfig::default()
+        };
+        let a = SchedulingService::from_config(cfg()).unwrap();
         a.run_batch(vec![job.clone()]);
-        let b = SchedulingService::new(1)
-            .with_cache_dir(&dir)
-            .unwrap()
-            .with_cache_bytes(Some(1 << 30));
+        // Both layers configured together: the disk layer serves a fresh
+        // service even with the in-memory byte cap active.
+        let b = SchedulingService::from_config(cfg()).unwrap();
         b.run_batch(vec![job]);
-        assert_eq!(b.cache_stats().computed, 0, "disk layer must survive with_cache_bytes");
+        assert_eq!(b.cache_stats().computed, 0, "disk layer must survive the byte cap");
         assert_eq!(b.cache_stats().disk_hits, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 
-    /// The deprecated `with_*` shims must configure exactly what
-    /// [`SchedulingService::from_config`] does (they delegate to the
-    /// same private helpers — this pins the equivalence).
+    /// [`ServiceConfig::build`] is exactly
+    /// [`SchedulingService::from_config`] on the same configuration (the
+    /// one construction surface since the `with_*` builders' removal).
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_builders_match_from_config() {
-        let base = std::env::temp_dir().join(format!("memsched_svc_shim_{}", std::process::id()));
+    fn service_config_build_matches_from_config() {
+        let base = std::env::temp_dir().join(format!("memsched_svc_cfg_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&base);
         let cluster = Arc::new(small_cluster());
         let jobs = |_: ()| -> Vec<Job> {
@@ -1347,40 +1343,31 @@ mod tests {
                 .map(|algo| spec_job("chipseq", 2, algo, &cluster))
                 .collect()
         };
-        // Separate dirs: both services start cold.
-        let legacy = SchedulingService::new(2)
-            .with_score_spec(ScoreThreadSpec::Auto)
-            .with_cache_bytes(Some(1 << 20))
-            .with_cache_dir_capped(&base.join("legacy"), Some(1 << 20))
-            .unwrap();
-        let configured = SchedulingService::from_config(ServiceConfig {
+        let cfg = |dir: &str| ServiceConfig {
             workers: 2,
             score: ScoreThreadSpec::Auto,
             cache_bytes: Some(1 << 20),
-            cache_dir: Some(base.join("cfg")),
+            cache_dir: Some(base.join(dir)),
             cache_dir_bytes: Some(1 << 20),
-        })
-        .unwrap();
-        assert_eq!(legacy.workers(), configured.workers());
-        assert_eq!(legacy.score_threads(), configured.score_threads());
-        let r_legacy = legacy.run_batch(jobs(()));
+        };
+        // Separate dirs: both services start cold.
+        let built = cfg("built").build().unwrap();
+        let configured = SchedulingService::from_config(cfg("cfg")).unwrap();
+        assert_eq!(built.workers(), configured.workers());
+        assert_eq!(built.score_threads(), configured.score_threads());
+        let r_built = built.run_batch(jobs(()));
         let r_configured = configured.run_batch(jobs(()));
-        assert_eq!(to_jsonl(&r_legacy), to_jsonl(&r_configured));
-        assert_eq!(legacy.cache_stats().computed, configured.cache_stats().computed);
+        assert_eq!(to_jsonl(&r_built), to_jsonl(&r_configured));
+        assert_eq!(built.cache_stats().computed, configured.cache_stats().computed);
         // The summary records agree on every configuration-derived field.
         assert_eq!(
-            legacy.summary_json(4, 0, 0).to_string_compact(),
+            built.summary_json(4, 0, 0).to_string_compact(),
             configured.summary_json(4, 0, 0).to_string_compact()
         );
-        // Fixed score threads via the shim and via the config agree too.
-        let s1 = SchedulingService::new(1).with_score_threads(3);
-        let s2 = SchedulingService::from_config(ServiceConfig {
-            workers: 1,
-            score: ScoreThreadSpec::Fixed(3),
-            ..ServiceConfig::default()
-        })
-        .unwrap();
-        assert_eq!(s1.score_threads(), s2.score_threads());
+        // An inconsistent combination fails identically through both.
+        let bad = ServiceConfig { cache_dir_bytes: Some(1), ..ServiceConfig::default() };
+        assert!(bad.build().is_err());
+        assert!(SchedulingService::from_config(bad).is_err());
         std::fs::remove_dir_all(&base).ok();
     }
 
@@ -1466,7 +1453,12 @@ mod tests {
         let unbounded = SchedulingService::new(2);
         let r_unbounded = unbounded.run_batch(jobs(()));
         // A 1-byte budget evicts aggressively; outputs must not change.
-        let capped = SchedulingService::new(2).with_cache_bytes(Some(1));
+        let capped = SchedulingService::from_config(ServiceConfig {
+            workers: 2,
+            cache_bytes: Some(1),
+            ..ServiceConfig::default()
+        })
+        .unwrap();
         let r_capped = capped.run_batch(jobs(()));
         assert_eq!(to_jsonl(&r_unbounded), to_jsonl(&r_capped));
     }

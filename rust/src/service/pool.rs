@@ -48,7 +48,14 @@ where
     let n = items.len();
     let workers = workers.max(1).min(n.max(1));
     if workers == 1 {
-        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        return items
+            .into_iter()
+            .enumerate()
+            .map(|(i, x)| {
+                let _job = crate::obs::span(crate::obs::SpanKind::WorkerJob);
+                f(i, x)
+            })
+            .collect();
     }
 
     // Round-robin sharding over per-worker deques.
@@ -82,7 +89,11 @@ where
                 }
                 match task {
                     Some((i, x)) => {
+                        // Per-worker busy time: the per-tid share of this
+                        // span's total is that worker's utilization.
+                        let job = crate::obs::span(crate::obs::SpanKind::WorkerJob);
                         let r = f_ref(i, x);
+                        drop(job);
                         *slots_ref[i].lock().unwrap() = Some(r);
                     }
                     None => break,

@@ -13,6 +13,8 @@
 //! | `{"ctl":"drain"}`      | `{"ok":"drained"}` after all earlier  |
 //! |                        | submissions' results                  |
 //! | `{"ctl":"ping"}`       | `{"ok":"pong"}` immediately           |
+//! | `{"ctl":"stats"}`      | one `{"stats": ...}` frame: live      |
+//! |                        | global counters + per-client summaries|
 //! | `{"ctl":"shutdown"}`   | `{"ok":"shutting down"}`; the daemon  |
 //! |                        | drains every queue and exits          |
 //!
@@ -43,6 +45,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::obs;
 use crate::ser::frame::{self, FrameError};
 use crate::ser::json::{obj, Value};
 
@@ -121,6 +124,10 @@ enum QueueItem {
     /// Barrier: acked (`{"ok":"drained"}`) strictly after every earlier
     /// submission's results have been written.
     Drain,
+    /// Live metrics snapshot, answered by the dispatcher (readers never
+    /// touch the service). Queued like a drain so the reply observes
+    /// every earlier submission of this client.
+    Stats,
 }
 
 type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
@@ -270,15 +277,21 @@ fn reader_loop(
                             send_ok(&writer, "shutting down");
                         }
                         Some("ping") => send_ok(&writer, "pong"),
-                        Some("drain") => {
-                            // A drain barrier is always admitted (it
-                            // frees the queue; rejecting it could
-                            // deadlock a well-behaved client).
+                        Some(kind @ ("drain" | "stats")) => {
+                            // Barrier-like items are always admitted
+                            // (they free or merely observe the queue;
+                            // rejecting a drain could deadlock a
+                            // well-behaved client).
+                            let item = if kind == "drain" {
+                                QueueItem::Drain
+                            } else {
+                                QueueItem::Stats
+                            };
                             let mut state = lock.lock().unwrap();
                             if let Some(c) =
                                 state.clients.iter_mut().find(|c| c.id == client_id)
                             {
-                                c.queue.push_back(QueueItem::Drain);
+                                c.queue.push_back(item);
                             }
                             drop(state);
                             cvar.notify_all();
@@ -286,7 +299,7 @@ fn reader_loop(
                         other => send_error(
                             &writer,
                             &format!(
-                                "unknown ctl {:?} (expected shutdown, ping, drain)",
+                                "unknown ctl {:?} (expected shutdown, ping, drain, stats)",
                                 other.unwrap_or("<non-string>")
                             ),
                         ),
@@ -305,6 +318,11 @@ fn reader_loop(
                         if shutting_down {
                             c.rejected += 1;
                             drop(state);
+                            if obs::enabled() {
+                                obs::record(obs::Event::FrameRejected {
+                                    client: client_id as u32,
+                                });
+                            }
                             send_error(&writer, "rejected: daemon is shutting down");
                         } else if c.queue.len() >= opts.max_queued_per_client {
                             // Backpressure: structured rejection instead
@@ -312,6 +330,11 @@ fn reader_loop(
                             c.rejected += 1;
                             let queued = c.queue.len();
                             drop(state);
+                            if obs::enabled() {
+                                obs::record(obs::Event::FrameRejected {
+                                    client: client_id as u32,
+                                });
+                            }
                             send_error(
                                 &writer,
                                 &format!(
@@ -322,6 +345,11 @@ fn reader_loop(
                         } else {
                             c.queue.push_back(QueueItem::Spec(spec));
                             drop(state);
+                            if obs::enabled() {
+                                obs::record(obs::Event::FrameAdmitted {
+                                    client: client_id as u32,
+                                });
+                            }
                             cvar.notify_all();
                         }
                     }
@@ -360,6 +388,31 @@ fn reap(state: &mut ServeState) {
     }
 }
 
+/// The `{"ctl":"stats"}` reply: live global counters plus one summary
+/// per client session — finished sessions first (disconnect order), then
+/// the live ones in slot order. `asking` is the session the dispatcher
+/// checked out of its slot to serve this very request (serial dispatch:
+/// it is the only one absent from the slots).
+fn stats_json(svc: &SchedulingService, state: &ServeState, asking: &ClientSession) -> Value {
+    let mut clients: Vec<Value> =
+        state.finished.iter().map(ClientSession::summary_json).collect();
+    for slot in &state.clients {
+        match &slot.session {
+            Some(s) => clients.push(s.summary_json()),
+            None => clients.push(asking.summary_json()),
+        }
+    }
+    obj(vec![(
+        "stats",
+        obj(vec![
+            ("schema", crate::obs::SCHEMA_VERSION.into()),
+            ("tracing", crate::obs::enabled().into()),
+            ("counters", svc.counters().to_json()),
+            ("clients", Value::Array(clients)),
+        ]),
+    )])
+}
+
 /// The dispatcher: runs on the calling thread until shutdown (or, in
 /// stdio mode, until the one client disconnects and drains). One
 /// submission executes at a time — fairness comes from the round-robin
@@ -379,7 +432,20 @@ fn dispatch(svc: &SchedulingService, shared: &Shared, stdio_mode: bool) -> Vec<C
             let mut session = slot.session.take().unwrap();
             let writer = slot.writer.clone();
             state.cursor = id + 1;
+            // Stats snapshots need the lock-protected session set, so the
+            // reply is rendered before the state guard drops (serial
+            // dispatch: only this client's session is checked out).
+            let stats_payload = match item {
+                QueueItem::Stats => {
+                    Some(stats_json(svc, &state, &session).to_string_compact())
+                }
+                _ => None,
+            };
             drop(state);
+            if obs::enabled() {
+                obs::record(obs::Event::DispatchPick { client: id as u32 });
+            }
+            let dispatch_span = obs::span(obs::SpanKind::Dispatch);
             match item {
                 QueueItem::Spec(spec) => {
                     // Result frames carry exactly the JSONL line bytes
@@ -389,7 +455,11 @@ fn dispatch(svc: &SchedulingService, shared: &Shared, stdio_mode: bool) -> Vec<C
                     });
                 }
                 QueueItem::Drain => send_ok(&writer, "drained"),
+                QueueItem::Stats => {
+                    send_payload(&writer, stats_payload.unwrap().as_bytes())
+                }
             }
+            drop(dispatch_span);
             state = lock.lock().unwrap();
             if let Some(c) = state.clients.iter_mut().find(|c| c.id == id) {
                 c.session = Some(session);

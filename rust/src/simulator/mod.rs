@@ -42,6 +42,7 @@ pub mod deviation;
 
 pub use deviation::DeviationModel;
 
+use crate::obs;
 use crate::platform::{Cluster, ProcId};
 use crate::scheduler::engine::{Engine, Schedule, TaskSchedule};
 use crate::scheduler::state::{PendingSet, PlatformState};
@@ -551,10 +552,21 @@ impl SimRun {
             let edge = sc.wf.edge(e);
             let pu = self.plan[edge.src].proc;
             if pu != j {
-                if let Some(size) = self.pending[pu].remove(e) {
+                let freed = if let Some(size) = self.pending[pu].remove(e) {
                     self.avail_mem[pu] += size;
+                    true
                 } else if let Some(size) = self.buffered[pu].remove(e) {
                     self.avail_buf[pu] += size;
+                    false
+                } else {
+                    false
+                };
+                if freed && obs::enabled() {
+                    obs::record(obs::Event::MemLevel {
+                        proc: pu as u32,
+                        t: self.time,
+                        used: sc.cluster.processors[pu].memory - self.avail_mem[pu],
+                    });
                 }
             }
         }
@@ -569,6 +581,14 @@ impl SimRun {
         self.heap.push(Reverse((time_key(st + dur), v)));
         self.scratch_local = local;
         self.scratch_evict = evict;
+        if obs::enabled() {
+            obs::record(obs::Event::TaskStart { task: v as u32, proc: j as u32, t: st, dur });
+            obs::record(obs::Event::MemLevel {
+                proc: j as u32,
+                t: st,
+                used: sc.cluster.processors[j].memory - self.avail_mem[j],
+            });
+        }
 
         // Significant execution-time/memory deviation → warn the scheduler.
         if cfg.mode == SimMode::Recompute {
@@ -672,6 +692,9 @@ impl SimRun {
         self.plan_dirty = true;
         self.rebuild_queues(sc);
         self.recomputations += 1;
+        if obs::enabled() {
+            obs::record(obs::Event::RecomputeTriggered { t: self.time });
+        }
     }
 
     /// Sweep all idle processors; start whatever is startable.
@@ -737,6 +760,14 @@ impl SimRun {
         // Outputs become pending files (space already reserved at start).
         for &e in sc.wf.out_edge_ids(v) {
             self.pending[j].insert(e, sc.wf.edge(e).data);
+        }
+        if obs::enabled() {
+            obs::record(obs::Event::TaskFinish { task: v as u32, proc: j as u32, t: self.time });
+            obs::record(obs::Event::MemLevel {
+                proc: j as u32,
+                t: self.time,
+                used: sc.cluster.processors[j].memory - self.avail_mem[j],
+            });
         }
     }
 

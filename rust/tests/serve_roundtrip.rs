@@ -176,6 +176,82 @@ fn interleaved_clients_match_batch_bytes_and_warm_client_computes_nothing() {
 }
 
 #[test]
+fn tracing_enabled_daemon_still_matches_batch_bytes() {
+    // The observability invariant end to end: a daemon with event
+    // recording on answers with exactly the bytes an untraced cold
+    // batch produces. (The flag is process-global; the invariant itself
+    // — tracing never changes result bytes — is what keeps concurrent
+    // tests in this binary unaffected.)
+    let path = socket_path("traced");
+    let expected = batch_baseline(&LINES_A);
+    memsched::obs::set_enabled(true);
+    let daemon = spawn_daemon(path.clone(), ServeOptions::default(), 2);
+    let mut c = Client::new(&path);
+    for line in LINES_A {
+        c.send(line);
+    }
+    let (results, errors) = c.drain();
+    c.send(r#"{"ctl":"shutdown"}"#);
+    assert_eq!(c.recv().as_deref(), Some(r#"{"ok":"shutting down"}"#));
+    let (summary, _) = daemon.join().unwrap();
+    memsched::obs::set_enabled(false);
+    let recs = memsched::obs::drain();
+    assert!(errors.is_empty(), "{errors:?}");
+    assert_eq!(joined(&results), expected, "traced daemon must match the untraced batch");
+    assert_eq!(summary.total_failed(), 0);
+    assert!(!recs.is_empty(), "the traced daemon recorded no events");
+}
+
+#[test]
+fn stats_request_reports_counters_and_sessions() {
+    use memsched::ser::json::Value;
+
+    let path = socket_path("stats");
+    let daemon = spawn_daemon(path.clone(), ServeOptions::default(), 1);
+
+    let mut c = Client::new(&path);
+    for line in LINES_A {
+        c.send(line);
+    }
+    // The stats item queues behind the submissions, so the reply
+    // observes all three results.
+    c.send(r#"{"ctl":"stats"}"#);
+    let (mut frames, mut stats_frame) = (0usize, None);
+    loop {
+        let frame = c.recv().expect("connection closed before the stats reply");
+        if frame.starts_with("{\"id\":") {
+            frames += 1;
+            continue;
+        }
+        stats_frame = Some(frame);
+        break;
+    }
+    assert_eq!(frames, LINES_A.len(), "stats reply must queue behind the submissions");
+    let reply = Value::parse(&stats_frame.unwrap()).expect("stats reply must be JSON");
+    let stats = reply.get("stats").expect("reply wraps a stats object");
+    assert_eq!(stats.get("schema"), Some(&Value::Number(1.0)));
+    assert!(stats.get("tracing").is_some());
+    let counters = stats.get("counters").expect("global counters object");
+    // Three submissions, one duplicate: two schedules computed, one reuse.
+    assert_eq!(counters.get("schedules_computed"), Some(&Value::Number(2.0)));
+    assert_eq!(counters.get("schedule_reuse_hits"), Some(&Value::Number(1.0)));
+    let Some(Value::Array(clients)) = stats.get("clients") else {
+        panic!("stats reply must list client sessions");
+    };
+    assert_eq!(clients.len(), 1, "one live session at stats time");
+    let session = &clients[0];
+    assert_eq!(session.get("name").and_then(Value::as_str), Some("c0"));
+    assert_eq!(session.get("results"), Some(&Value::Number(3.0)));
+    let session_counters = session.get("counters").expect("per-session counters");
+    assert_eq!(session_counters.get("schedules_computed"), Some(&Value::Number(2.0)));
+
+    c.send(r#"{"ctl":"shutdown"}"#);
+    assert_eq!(c.recv().as_deref(), Some(r#"{"ok":"shutting down"}"#));
+    let (summary, _) = daemon.join().unwrap();
+    assert_eq!(summary.total_results(), LINES_A.len());
+}
+
+#[test]
 fn garbage_and_oversized_frames_fail_per_connection_not_the_daemon() {
     let path = socket_path("defense");
     // A tight payload cap so an ordinary string trips the oversize path.

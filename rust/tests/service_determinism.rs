@@ -112,6 +112,26 @@ fn score_threads_do_not_change_jsonl_bytes() {
 }
 
 #[test]
+fn tracing_does_not_change_jsonl_bytes() {
+    // Observability is a side channel: enabling event recording must not
+    // perturb the result stream by a single byte. (Each integration test
+    // binary is its own process, so flipping the process-global flag here
+    // cannot leak into other test files; within this binary the flag is
+    // restored before the test ends.)
+    let (baseline, computed, hits) = run(2);
+    memsched::obs::set_enabled(true);
+    let traced = run(2);
+    memsched::obs::set_enabled(false);
+    let recs = memsched::obs::drain();
+    assert_eq!(baseline, traced.0, "JSONL diverged with tracing enabled");
+    assert_eq!(computed, traced.1);
+    assert_eq!(hits, traced.2);
+    // The run actually produced events — otherwise this test proves nothing.
+    assert!(!recs.is_empty(), "tracing-enabled run recorded no events");
+    assert!(!memsched::obs::metrics_records(&recs).is_empty());
+}
+
+#[test]
 fn suite_grid_byte_deterministic_through_the_service() {
     // The CLI `batch --suite smoke` path: the experiments grid itself
     // must be byte-deterministic across worker counts.
