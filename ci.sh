@@ -19,6 +19,16 @@
 #                       tiny scale, emit BENCH_ci.json, and gate >2x
 #                       regressions against rust/benches/BENCH_baseline.json
 #                       when that baseline exists
+#   ./ci.sh --bench --seed-baseline
+#                       additionally copy the fresh BENCH_ci.json to
+#                       rust/benches/BENCH_baseline.json (after the gate
+#                       runs against the old baseline, if any); run on a
+#                       representative toolchain box and commit the file
+#                       so `memsched bench-check` actually gates
+#   ./ci.sh --crossover full-scale serial-vs-pooled scoring sweep over the
+#                       cluster × fan-in work axis; prints the measured
+#                       suggestion for scheduler::SCORE_PARALLEL_CROSSOVER
+#                       (update the constant + its boundary test if moved)
 #
 # .github/workflows/ci.yml runs the tiers as separate jobs.
 set -euo pipefail
@@ -27,22 +37,28 @@ cd "$(dirname "$0")"
 BIN=target/release/memsched
 
 usage() {
-  sed -n '2,20p' "$0" | sed 's/^# \{0,1\}//'
+  sed -n '2,32p' "$0" | sed 's/^# \{0,1\}//'
 }
 
 TIERS=()
+SEED_BASELINE=0
 for arg in "$@"; do
   case "$arg" in
     --tier1) TIERS+=(tier1) ;;
     --lint) TIERS+=(lint) ;;
     --smoke) TIERS+=(smoke) ;;
     --bench) TIERS+=(bench) ;;
+    --crossover) TIERS+=(crossover) ;;
+    --seed-baseline) SEED_BASELINE=1 ;;
     -h|--help) usage; exit 0 ;;
     *) echo "unknown option: $arg" >&2; usage >&2; exit 2 ;;
   esac
 done
 if [ ${#TIERS[@]} -eq 0 ]; then
   TIERS=(tier1 lint smoke bench)
+fi
+if [ "$SEED_BASELINE" = 1 ] && [[ " ${TIERS[*]} " != *" bench "* ]]; then
+  TIERS+=(bench)
 fi
 
 ensure_bin() {
@@ -248,9 +264,19 @@ tier_bench() {
     echo "== bench: regression gate (>2x vs $BASELINE fails) =="
     "$BIN" bench-check --current BENCH_ci.json --baseline "$BASELINE" --tolerance 2.0
   else
-    echo "no checked-in baseline at $BASELINE; copy BENCH_ci.json there (from a"
-    echo "representative machine) to enable the regression gate"
+    echo "no checked-in baseline at $BASELINE; run ./ci.sh --bench --seed-baseline"
+    echo "on a representative machine and commit the file to enable the gate"
   fi
+  if [ "$SEED_BASELINE" = 1 ]; then
+    cp BENCH_ci.json "$BASELINE"
+    echo "seeded $BASELINE from this run -- commit it so bench-check gates regressions"
+  fi
+}
+
+tier_crossover() {
+  ensure_bin
+  echo "== crossover: serial vs pooled scoring across the cluster x fan-in work axis =="
+  MEMSCHED_BENCH_CROSSOVER=1 cargo bench --bench bench_engine
 }
 
 for tier in "${TIERS[@]}"; do

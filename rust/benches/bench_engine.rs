@@ -12,6 +12,9 @@
 //! Knobs: `MEMSCHED_BENCH_TASKS` (default 30000; also runs a 10000-task
 //! point), `MEMSCHED_SCORE_THREADS` (default: all cores),
 //! `MEMSCHED_BENCH_FAST=1` shrinks the task counts for smoke runs.
+//! `MEMSCHED_BENCH_CROSSOVER=1` runs the crossover sweep instead (see
+//! [`run_crossover`]) — the measuring harness behind
+//! `scheduler::SCORE_PARALLEL_CROSSOVER`.
 //!
 //! One-shot wall-clock timings (schedules this size run seconds, not
 //! microseconds — the sampling harness would only add noise).
@@ -19,7 +22,7 @@
 mod common;
 
 use memsched::experiments::WorkloadSpec;
-use memsched::platform::presets::memory_constrained_cluster;
+use memsched::platform::presets::{default_cluster, memory_constrained_cluster, small_cluster};
 use memsched::scheduler::{compute_schedule_with, Algorithm, EvictionPolicy, Schedule};
 use memsched::service::{pool, ScorePool};
 
@@ -39,6 +42,76 @@ fn fingerprint(s: &Schedule) -> (bool, u64, usize) {
     (s.valid, h, s.tasks.iter().map(|t| t.evicted.len()).sum())
 }
 
+/// Sweep the `cluster.len() × mean fan-in` work axis (the quantity
+/// [`memsched::scheduler::auto_score_threads`] thresholds on) across the
+/// preset clusters × workload families, timing serial vs pooled scoring
+/// at each point, and print the smallest work value where the pool wins
+/// — the measured refresh for `scheduler::SCORE_PARALLEL_CROSSOVER`
+/// (currently 64.0, an estimate). Run via `ci.sh --crossover` on a
+/// toolchain box; update the constant (and its boundary test) when the
+/// suggestion moves materially.
+fn run_crossover(threads: usize, fast: bool) {
+    let tasks = if fast { 400 } else { 2000 };
+    let reps = if fast { 2 } else { 5 };
+    let threads = threads.max(2);
+    let pool = ScorePool::new(threads);
+    let clusters = [small_cluster(), default_cluster(), memory_constrained_cluster()];
+    let families = ["eager", "bacass", "chipseq"];
+    println!(
+        "== bench_engine crossover: work = cluster × mean fan-in, serial vs {threads}-thread pool, {tasks} tasks ==",
+    );
+
+    let mut points: Vec<(f64, f64, String)> = Vec::new();
+    for cluster in &clusters {
+        for family in families {
+            let spec =
+                WorkloadSpec { family: family.into(), size: Some(tasks), input: 2, seed: common::SEED };
+            let Ok(wf) = spec.build() else { continue };
+            let work = cluster.len() as f64 * wf.num_edges() as f64 / wf.num_tasks().max(1) as f64;
+            // Min over reps: scheduling at this size runs milliseconds,
+            // so take the least-noisy observation.
+            let time = |p: Option<&ScorePool>| {
+                (0..reps)
+                    .map(|_| {
+                        let t0 = std::time::Instant::now();
+                        std::hint::black_box(compute_schedule_with(
+                            &wf,
+                            cluster,
+                            Algorithm::HeftmBl,
+                            EvictionPolicy::LargestFirst,
+                            p,
+                        ));
+                        t0.elapsed().as_secs_f64()
+                    })
+                    .fold(f64::INFINITY, f64::min)
+            };
+            let serial = time(None);
+            let pooled = time(Some(&pool));
+            points.push((work, serial / pooled, format!("{}/{family}", cluster.name)));
+        }
+    }
+    points.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    println!("{:>36}  {:>8}  {:>8}", "point", "work", "speedup");
+    let mut crossover: Option<f64> = None;
+    for (work, speedup, name) in &points {
+        println!("{name:>36}  {work:>8.1}  {speedup:>7.2}x");
+        if crossover.is_none() && *speedup > 1.0 {
+            crossover = Some(*work);
+        }
+    }
+    match crossover {
+        Some(w) => println!(
+            "suggested scheduler::SCORE_PARALLEL_CROSSOVER ≈ {w:.0} (first work value where \
+             the pool wins; currently 64.0)"
+        ),
+        None => println!(
+            "pool never beat serial on this sweep — keep serial below work {:.0}",
+            points.last().map_or(0.0, |p| p.0)
+        ),
+    }
+}
+
 fn main() {
     let fast = std::env::var("MEMSCHED_BENCH_FAST").ok().is_some_and(|v| v != "0");
     let top: usize = std::env::var("MEMSCHED_BENCH_TASKS")
@@ -51,6 +124,9 @@ fn main() {
         .and_then(|s| s.parse::<usize>().ok())
         .map(|n| n.max(1))
         .unwrap_or_else(pool::default_workers);
+    if std::env::var("MEMSCHED_BENCH_CROSSOVER").ok().is_some_and(|v| v != "0") {
+        return run_crossover(threads, fast);
+    }
     let cluster = memory_constrained_cluster();
     let algo = Algorithm::HeftmBl;
     let policy = EvictionPolicy::LargestFirst;

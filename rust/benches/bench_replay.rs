@@ -10,6 +10,11 @@
 //! (FollowStatic isolates the replay core; Recompute points spend their
 //! time in the scheduling engine instead).
 //!
+//! Four variants over the same grid, all asserted bit-identical:
+//! per-point rebuild (the `simulate()` shim), scaffold reuse (the fast
+//! path), scaffold with the calendar event queue, and scaffold with
+//! `obs` tracing enabled (the `--metrics-json` overhead number).
+//!
 //! Knobs: `MEMSCHED_BENCH_TASKS` (default 5000), `MEMSCHED_BENCH_FAST=1`
 //! shrinks the instance and the point grid for smoke runs. One-shot
 //! wall-clock timings, like the other figure benches.
@@ -19,7 +24,9 @@ mod common;
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::default_cluster;
 use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
-use memsched::simulator::{DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold};
+use memsched::simulator::{
+    DeviationModel, EventQueueKind, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold,
+};
 use std::sync::Arc;
 
 fn outcome_digest(out: &SimOutcome) -> (bool, u64, usize, usize) {
@@ -89,6 +96,31 @@ fn main() {
 
     assert_eq!(rebuilt, reused, "scaffold path must be bit-identical to per-point rebuild");
 
+    // Calendar-queue variant: same arena, same grid, bucketed event
+    // queue instead of the binary heap — pop order (and therefore every
+    // outcome bit) is identical; only the wall clock may differ.
+    run.set_event_queue(EventQueueKind::Calendar);
+    let t0 = std::time::Instant::now();
+    let calendar: Vec<_> =
+        points.iter().map(|cfg| outcome_digest(&run.simulate(&scaffold, cfg))).collect();
+    let calendar_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(rebuilt, calendar, "calendar event queue must be bit-identical to the heap");
+    run.set_event_queue(EventQueueKind::Heap);
+
+    // Tracing-overhead variant: same grid with the obs layer enabled
+    // and a metrics sink draining afterwards — measures what
+    // `--metrics-json` costs the replay hot loop (result bytes are
+    // unaffected; only time is).
+    memsched::obs::set_enabled(true);
+    let t0 = std::time::Instant::now();
+    let traced: Vec<_> =
+        points.iter().map(|cfg| outcome_digest(&run.simulate(&scaffold, cfg))).collect();
+    let traced_secs = t0.elapsed().as_secs_f64();
+    memsched::obs::set_enabled(false);
+    let recs = memsched::obs::drain();
+    let sunk = memsched::obs::metrics_records(&recs).len();
+    assert_eq!(rebuilt, traced, "tracing must not perturb outcomes");
+
     let n = points.len() as f64;
     println!(
         "{:>10}  {:>10.3}s  ({:>8.1} points/s)",
@@ -101,8 +133,29 @@ fn main() {
         n / scaffold_secs,
         rebuild_secs / scaffold_secs
     );
+    println!(
+        "{:>10}  {:>10.3}s  ({:>8.1} points/s)   vs heap {:.2}x, identical outcomes",
+        "calendar",
+        calendar_secs,
+        n / calendar_secs,
+        scaffold_secs / calendar_secs
+    );
+    println!(
+        "{:>10}  {:>10.3}s  ({:>8.1} points/s)   tracing overhead {:+.1}%, {} metric records",
+        "traced",
+        traced_secs,
+        n / traced_secs,
+        (traced_secs / scaffold_secs - 1.0) * 100.0,
+        sunk
+    );
     // Replay-axis throughput for the CI regression gate (ids keyed on
     // the requested size so they stay stable across machines).
     common::emit_bench_entry(&format!("replay/tasks={tasks}/rebuild"), n / rebuild_secs, rebuild_secs);
     common::emit_bench_entry(&format!("replay/tasks={tasks}/scaffold"), n / scaffold_secs, scaffold_secs);
+    common::emit_bench_entry(&format!("replay/tasks={tasks}/calendar"), n / calendar_secs, calendar_secs);
+    common::emit_bench_entry(
+        &format!("replay/tasks={tasks}/scaffold_traced"),
+        n / traced_secs,
+        traced_secs,
+    );
 }

@@ -59,8 +59,9 @@ COMMANDS:
                 fails unless it is well-formed (>=1 task slice per
                 track, monotone timestamps)
   batch         --input jobs.jsonl | --suite smoke|quick|full  [--jobs N]
-                [--sigmas 0.1,0.2,...] [--score-threads N|auto] [--cache-bytes B]
-                [--cache-dir DIR] [--cache-dir-bytes B] [--repeat K] [--seed S]
+                [--sigmas 0.1,0.2,...] [--score-threads N|auto] [--score-pools P]
+                [--cache-bytes B] [--cache-dir DIR] [--cache-dir-bytes B]
+                [--repeat K] [--seed S]
                 [--cluster C] [--out results.jsonl] [--metrics-json PATH]
                 run a job batch on the multi-threaded scheduling service;
                 results stream incrementally as JSONL (in job order, as
@@ -78,7 +79,8 @@ COMMANDS:
                 event tracing (result bytes unchanged) and writes the
                 aggregated counters + span histograms as JSONL to PATH
   serve         --socket <path> | --stdio  [--jobs N] [--score-threads N|auto]
-                [--cache-bytes B] [--cache-dir DIR] [--cache-dir-bytes B]
+                [--score-pools P] [--cache-bytes B] [--cache-dir DIR]
+                [--cache-dir-bytes B]
                 [--cluster C] [--seed S] [--max-frame-bytes B]
                 [--max-queued-per-client N] [--metrics-json PATH]
                 run a persistent scheduler daemon: clients submit
@@ -105,7 +107,7 @@ COMMANDS:
                 and exit after this client's work
   experiment    --figure fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|validity
                 [--scale smoke|quick|full] [--seed S] [--jobs N]
-                [--sigmas 0.1,0.3] [--score-threads N|auto]
+                [--sigmas 0.1,0.3] [--score-threads N|auto] [--score-pools P]
                 [--cache-dir DIR] [--cache-dir-bytes B] [--markdown]
                 [--metrics-json PATH]
                 --sigmas (dynamic figures fig8/validity only) prints one
@@ -505,12 +507,15 @@ fn score_threads_arg(args: &mut Args) -> Result<ScoreThreadSpec> {
 }
 
 /// The service configuration shared by `batch` and `experiment`:
-/// `--jobs`, `--score-threads`, `--cache-bytes`, `--cache-dir`,
-/// `--cache-dir-bytes`.
+/// `--jobs`, `--score-threads`, `--score-pools`, `--cache-bytes`,
+/// `--cache-dir`, `--cache-dir-bytes`. `--score-pools N` spreads the
+/// batch workers round-robin over `N` independent score pools (0/1 =
+/// one shared pool) — output bytes are identical either way.
 fn service_config_args(args: &mut Args) -> Result<ServiceConfig> {
     Ok(ServiceConfig {
         workers: workers_arg(args)?,
         score: score_threads_arg(args)?,
+        score_pools: args.opt_or("score-pools", 1usize)?,
         cache_bytes: args.opt("cache-bytes")?,
         cache_dir: args.opt_val("cache-dir")?.map(std::path::PathBuf::from),
         cache_dir_bytes: args.opt("cache-dir-bytes")?,

@@ -85,7 +85,9 @@ impl std::str::FromStr for Algorithm {
 /// win and serial scoring is faster (`bench_engine` is the measuring
 /// harness: the paper's 72-processor cluster with chipseq-like fan-in
 /// sits comfortably above, the 4–8 processor presets far below).
-/// Refresh from a `ci.sh --bench` run whenever the scoring loop changes.
+/// Refresh from a `ci.sh --crossover` run (the dedicated sweep in
+/// `bench_engine`, `MEMSCHED_BENCH_CROSSOVER=1`) whenever the scoring
+/// loop changes; it prints the measured suggestion for this constant.
 pub const SCORE_PARALLEL_CROSSOVER: f64 = 64.0;
 
 /// Adaptive score-thread choice (`--score-threads auto`): serial when

@@ -14,10 +14,47 @@ use crate::platform::{Cluster, ProcId};
 use crate::workflow::EdgeId;
 use std::collections::HashMap;
 
+/// Deterministic single-multiply hasher for [`EdgeId`] keys.
+///
+/// Pending-set probes sit on the replay fast path (every simulated
+/// start/finish event probes or mutates `PD_j`), and the keys are small
+/// dense integers — SipHash's DoS resistance buys nothing here while
+/// costing a full round per lookup. A Fibonacci multiply spreads the
+/// low bits across the word in one instruction. Map *iteration order*
+/// changes with the hasher, but the only iterating consumers
+/// ([`PendingSet::iter`] via [`PendingSet::candidates`]) fully sort by
+/// `(size, edge id)` before use, so every observable byte of scheduler
+/// and simulator output is unaffected.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EdgeIdHasher(u64);
+
+impl std::hash::Hasher for EdgeIdHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        // Generic fallback (EdgeId keys take the integer paths): FNV-1a.
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn write_u64(&mut self, n: u64) {
+        self.0 = (self.0 ^ n).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+}
+
+type EdgeIdBuildHasher = std::hash::BuildHasherDefault<EdgeIdHasher>;
+
 /// Pending-data set `PD_j`: files resident in a processor's memory.
 #[derive(Debug, Clone, Default)]
 pub struct PendingSet {
-    files: HashMap<EdgeId, f64>,
+    files: HashMap<EdgeId, f64, EdgeIdBuildHasher>,
     total: f64,
 }
 
@@ -265,6 +302,21 @@ mod tests {
         pd.insert(3, 10.0);
         let c = pd.candidates(EvictionPolicy::LargestFirst);
         assert_eq!(c.iter().map(|x| x.0).collect::<Vec<_>>(), vec![3, 5]);
+    }
+
+    #[test]
+    fn edge_id_hasher_is_deterministic_and_spreads_small_ids() {
+        use std::hash::{BuildHasher, BuildHasherDefault};
+        let bh = BuildHasherDefault::<EdgeIdHasher>::default();
+        let h = |n: usize| bh.hash_one(n);
+        // Stable across calls (the map's behaviour must not depend on
+        // process-level randomness, unlike RandomState).
+        assert_eq!(h(42), h(42));
+        // Dense small ids — the only keys PendingSet sees — land in
+        // distinct, well-spread slots (top bits differ, which is what
+        // hashbrown's bucket selection uses).
+        let tops: std::collections::HashSet<u64> = (0..1000).map(|n| h(n) >> 48).collect();
+        assert!(tops.len() > 900, "only {} distinct top-16-bit patterns", tops.len());
     }
 
     #[test]

@@ -135,6 +135,16 @@ pub struct ServiceConfig {
     /// Batch worker threads (0 ⇒ all cores).
     pub workers: usize,
     pub score: ScoreThreadSpec,
+    /// Independent intra-schedule scoring pools (`--score-pools`; 0 or
+    /// 1 ⇒ one shared pool). [`pool::ScorePool::scoped_for`] serializes
+    /// concurrent callers, so with `workers > 1` and large schedules the
+    /// single shared pool is a structural bottleneck: worker threads
+    /// queue on its caller lock. `N > 1` builds N pools and sticks each
+    /// worker thread to one (round-robin), letting up to N schedule
+    /// computations score in parallel. Output bytes are identical for
+    /// any value; total scoring threads are `score × score_pools`, so
+    /// size the product to the machine.
+    pub score_pools: usize,
     /// LRU byte cap on the in-memory schedule cache (`None` = unbounded).
     pub cache_bytes: Option<usize>,
     /// Disk-backed schedule cache directory (`--cache-dir`).
@@ -193,8 +203,13 @@ impl<V: Clone> Memo<V> {
 #[derive(Debug)]
 pub struct SchedulingService {
     workers: usize,
-    /// Shared intra-schedule scoring pool (None ⇒ serial scoring).
-    score_pool: Option<ScorePool>,
+    /// Intra-schedule scoring pools (empty ⇒ serial scoring). Usually a
+    /// single shared pool; [`ServiceConfig::score_pools`] `> 1` builds
+    /// several and each worker thread sticks to one
+    /// ([`pick_score_pool`](Self::pick_score_pool)).
+    score_pools: Vec<ScorePool>,
+    /// Round-robin cursor handing worker threads their pool slot.
+    pool_slot: AtomicUsize,
     /// Auto mode: gate the pool per schedule via the fan-in crossover
     /// heuristic ([`crate::scheduler::auto_score_threads`]).
     score_auto: bool,
@@ -252,7 +267,8 @@ impl SchedulingService {
     pub fn new(workers: usize) -> SchedulingService {
         SchedulingService {
             workers: workers.max(1),
-            score_pool: None,
+            score_pools: Vec::new(),
+            pool_slot: AtomicUsize::new(0),
             score_auto: false,
             schedules: ScheduleCache::new(),
             cache_bytes: None,
@@ -288,7 +304,7 @@ impl SchedulingService {
     pub fn from_config(cfg: ServiceConfig) -> anyhow::Result<SchedulingService> {
         let workers = if cfg.workers == 0 { pool::default_workers() } else { cfg.workers };
         let mut svc = SchedulingService::new(workers);
-        svc.set_score_spec(cfg.score);
+        svc.set_score_spec(cfg.score, cfg.score_pools);
         svc.cache_bytes = cfg.cache_bytes;
         match (&cfg.cache_dir, cfg.cache_dir_bytes) {
             (Some(dir), cap) => {
@@ -301,18 +317,51 @@ impl SchedulingService {
         Ok(svc)
     }
 
-    /// Apply a [`ScoreThreadSpec`]: `Fixed(n)` attaches an n-thread
-    /// scoring pool (n ≤ 1 ⇒ serial); `Auto` sizes the pool to all cores
-    /// but engages it per schedule only above the measured crossover
-    /// ([`crate::scheduler::auto_score_threads`]). Byte-identical output
-    /// either way.
-    fn set_score_spec(&mut self, spec: ScoreThreadSpec) {
+    /// Apply a [`ScoreThreadSpec`]: `Fixed(n)` attaches n-thread scoring
+    /// pools (n ≤ 1 ⇒ serial); `Auto` sizes pools to all cores but
+    /// engages them per schedule only above the measured crossover
+    /// ([`crate::scheduler::auto_score_threads`]). `pools` (0 ⇒ 1)
+    /// controls how many independent pools are built — see
+    /// [`ServiceConfig::score_pools`]. Byte-identical output whatever
+    /// the combination.
+    fn set_score_spec(&mut self, spec: ScoreThreadSpec, pools: usize) {
         let threads = match spec {
             ScoreThreadSpec::Fixed(n) => n,
             ScoreThreadSpec::Auto => pool::default_workers(),
         };
-        self.score_pool = if threads > 1 { Some(ScorePool::new(threads)) } else { None };
+        self.score_pools = if threads > 1 {
+            (0..pools.max(1)).map(|_| ScorePool::new(threads)).collect()
+        } else {
+            Vec::new()
+        };
         self.score_auto = matches!(spec, ScoreThreadSpec::Auto);
+    }
+
+    /// The scoring pool this worker thread should use: the shared pool
+    /// when one exists, otherwise the thread's sticky round-robin slot
+    /// among the N configured pools. Pool choice never affects output —
+    /// scoring is deterministic whichever pool computes it.
+    fn pick_score_pool(&self) -> Option<&ScorePool> {
+        match self.score_pools.len() {
+            0 => None,
+            1 => Some(&self.score_pools[0]),
+            n => {
+                thread_local! {
+                    /// This thread's slot ticket (`usize::MAX` = unassigned).
+                    /// Process-global and taken modulo the pool count, so
+                    /// one thread serving several services keeps a stable
+                    /// slot in each.
+                    static SLOT: std::cell::Cell<usize> = std::cell::Cell::new(usize::MAX);
+                }
+                let slot = SLOT.with(|s| {
+                    if s.get() == usize::MAX {
+                        s.set(self.pool_slot.fetch_add(1, Ordering::Relaxed));
+                    }
+                    s.get()
+                });
+                Some(&self.score_pools[slot % n])
+            }
+        }
     }
 
     /// Recreate the schedule cache from the retained `cache_bytes` /
@@ -326,9 +375,14 @@ impl SchedulingService {
         self.workers
     }
 
-    /// Threads applied to intra-schedule scoring (1 = serial).
+    /// Threads applied to intra-schedule scoring (1 = serial), per pool.
     pub fn score_threads(&self) -> usize {
-        self.score_pool.as_ref().map_or(1, |p| p.threads())
+        self.score_pools.first().map_or(1, |p| p.threads())
+    }
+
+    /// Number of independent scoring pools (0 = serial scoring).
+    pub fn score_pool_count(&self) -> usize {
+        self.score_pools.len()
     }
 
     /// Schedule-cache counters (lookups / computed / hits).
@@ -491,7 +545,7 @@ impl SchedulingService {
         {
             None
         } else {
-            self.score_pool.as_ref()
+            self.pick_score_pool()
         };
         let cached = self.schedules.get_or_compute_checked(
             prep.sched_fp,
@@ -1134,6 +1188,41 @@ mod tests {
     }
 
     #[test]
+    fn score_pools_preserve_batch_bytes() {
+        // Per-worker scoring pools (the `--score-pools` contention
+        // knob) must not change a single output byte vs the shared
+        // single pool, or vs serial scoring.
+        let cluster = Arc::new(small_cluster());
+        let jobs = |_: ()| -> Vec<Job> {
+            Algorithm::all()
+                .into_iter()
+                .map(|algo| spec_job("methylseq", 1, algo, &cluster))
+                .collect()
+        };
+        let baseline = SchedulingService::new(2).run_batch(jobs(()));
+        let pooled = SchedulingService::from_config(ServiceConfig {
+            workers: 2,
+            score: ScoreThreadSpec::Fixed(2),
+            score_pools: 2,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        assert_eq!(pooled.score_pool_count(), 2);
+        assert_eq!(pooled.score_threads(), 2);
+        assert_eq!(to_jsonl(&baseline), to_jsonl(&pooled.run_batch(jobs(()))));
+        // Serial scoring ignores the pool count entirely.
+        let serial = SchedulingService::from_config(ServiceConfig {
+            workers: 2,
+            score: ScoreThreadSpec::Fixed(1),
+            score_pools: 3,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        assert_eq!(serial.score_pool_count(), 0);
+        assert_eq!(to_jsonl(&baseline), to_jsonl(&serial.run_batch(jobs(()))));
+    }
+
+    #[test]
     fn replay_sweeps_match_flattened_batch_bytes() {
         let cluster = Arc::new(small_cluster());
         let points: Vec<SimJob> = [0.1, 0.3]
@@ -1349,6 +1438,7 @@ mod tests {
             cache_bytes: Some(1 << 20),
             cache_dir: Some(base.join(dir)),
             cache_dir_bytes: Some(1 << 20),
+            ..ServiceConfig::default()
         };
         // Separate dirs: both services start cold.
         let built = cfg("built").build().unwrap();

@@ -1,0 +1,305 @@
+//! Event queues for the discrete-event replay loop.
+//!
+//! The replay frontier holds at most one finish event per processor —
+//! [`SimRun`](super::SimRun) starts at most one task per processor and
+//! pushes exactly one finish event per start — so the queue never
+//! exceeds `k = |cluster|` entries (6–72 on the preset clusters). At
+//! that size a binary heap's `O(log k)` push/pop is a handful of
+//! branches and the heap stays in one cache line, which is why
+//! [`EventQueueKind::Heap`] is the default. The calendar queue
+//! ([`EventQueueKind::Calendar`]) is the classic alternative for large
+//! frontiers (`O(1)` amortized when events spread evenly over buckets);
+//! it is kept selectable so `bench_replay` can measure both on the same
+//! grid — see DESIGN.md's replay-core section for the comparison.
+//!
+//! Both variants pop in the exact same total order — ascending
+//! `(time bits, task id)` — so outcomes are bit-identical whichever is
+//! selected; `calendar_pops_in_heap_order` pins that below.
+
+use crate::workflow::TaskId;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Which event-queue implementation a [`super::SimRun`] drives its
+/// discrete-event loop with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EventQueueKind {
+    /// `BinaryHeap` keyed on `(time bits, task)` — the default: the
+    /// frontier is bounded by the processor count, where a heap wins.
+    #[default]
+    Heap,
+    /// Calendar (bucketed) queue: events hash into day-wide buckets by
+    /// `floor(t / width)`; pops scan the current day for the minimum.
+    Calendar,
+}
+
+/// Number of calendar buckets. Fixed: the frontier is small (≤ one
+/// event per processor), so resizing heuristics would never trigger.
+const CALENDAR_BUCKETS: usize = 64;
+
+/// A classic calendar queue over `(time bits, task)` events.
+///
+/// Days are absolute (`floor(t / width)`), mapped onto a fixed ring of
+/// [`CALENDAR_BUCKETS`] slots; a slot may alias events of several days,
+/// so pops filter by the current day and fall back to a direct
+/// minimum-day jump after one fruitless cycle (sparse far-future
+/// events). Within a day the minimum `(bits, task)` entry is selected,
+/// which makes the pop order identical to the heap's.
+#[derive(Debug, Default)]
+pub struct CalendarQueue {
+    /// `buckets[d % CALENDAR_BUCKETS]` holds the events of day `d`
+    /// (plus aliased events of other days).
+    buckets: Vec<Vec<(u64, TaskId)>>,
+    /// Bucket width in simulated time units.
+    width: f64,
+    /// Absolute day cursor: no remaining event lies before this day.
+    day: u64,
+    len: usize,
+}
+
+impl CalendarQueue {
+    fn day_of(width: f64, key: u64) -> u64 {
+        (f64::from_bits(key) / width) as u64
+    }
+
+    /// Empty the queue (keeping bucket allocations) and re-derive the
+    /// bucket width from the expected event horizon.
+    fn reset(&mut self, horizon: f64) {
+        let width = horizon / CALENDAR_BUCKETS as f64;
+        self.width = if width.is_finite() && width > 0.0 { width } else { 1.0 };
+        self.buckets.resize_with(CALENDAR_BUCKETS, Vec::new);
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.day = 0;
+        self.len = 0;
+    }
+
+    fn push(&mut self, key: u64, v: TaskId) {
+        let d = Self::day_of(self.width, key);
+        // Events are pushed at or after the current simulated time, so
+        // `d >= self.day` in practice; stay correct if a caller doesn't.
+        if d < self.day {
+            self.day = d;
+        }
+        let slot = (d % self.buckets.len() as u64) as usize;
+        self.buckets[slot].push((key, v));
+        self.len += 1;
+    }
+
+    /// Remove and return the minimum `(key, task)` event of day `d`, if
+    /// its slot holds any event of that day.
+    fn take_min_of_day(&mut self, d: u64) -> Option<(u64, TaskId)> {
+        let width = self.width;
+        let slot = (d % self.buckets.len() as u64) as usize;
+        let bucket = &mut self.buckets[slot];
+        let mut best: Option<usize> = None;
+        for (i, &ev) in bucket.iter().enumerate() {
+            if Self::day_of(width, ev.0) == d && best.is_none_or(|b| ev < bucket[b]) {
+                best = Some(i);
+            }
+        }
+        let i = best?;
+        self.len -= 1;
+        Some(bucket.swap_remove(i))
+    }
+
+    fn pop(&mut self) -> Option<(u64, TaskId)> {
+        if self.len == 0 {
+            return None;
+        }
+        // Scan forward at most one ring cycle from the day cursor.
+        for _ in 0..self.buckets.len() {
+            if let Some(ev) = self.take_min_of_day(self.day) {
+                return Some(ev);
+            }
+            self.day += 1;
+        }
+        // Every remaining event lies beyond a full cycle: jump straight
+        // to the earliest populated day.
+        let width = self.width;
+        let min_day = self
+            .buckets
+            .iter()
+            .flatten()
+            .map(|&(key, _)| Self::day_of(width, key))
+            .min()
+            .expect("len > 0 implies a populated bucket");
+        self.day = min_day;
+        self.take_min_of_day(min_day)
+    }
+}
+
+/// The replay loop's event queue, in the caller-selected implementation
+/// ([`super::SimRun::set_event_queue`]). Both variants pop in ascending
+/// `(time bits, task id)` order — bit-identical outcomes either way.
+#[derive(Debug)]
+pub enum EventQueue {
+    Heap(BinaryHeap<Reverse<(u64, TaskId)>>),
+    Calendar(CalendarQueue),
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::Heap(BinaryHeap::new())
+    }
+}
+
+impl EventQueue {
+    pub fn new(kind: EventQueueKind) -> EventQueue {
+        match kind {
+            EventQueueKind::Heap => EventQueue::Heap(BinaryHeap::new()),
+            EventQueueKind::Calendar => EventQueue::Calendar(CalendarQueue::default()),
+        }
+    }
+
+    pub fn kind(&self) -> EventQueueKind {
+        match self {
+            EventQueue::Heap(_) => EventQueueKind::Heap,
+            EventQueue::Calendar(_) => EventQueueKind::Calendar,
+        }
+    }
+
+    /// Empty the queue for a fresh run, keeping allocations. `horizon`
+    /// (the planned makespan) sizes the calendar's bucket width; the
+    /// heap ignores it.
+    pub fn reset(&mut self, horizon: f64) {
+        match self {
+            EventQueue::Heap(h) => h.clear(),
+            EventQueue::Calendar(c) => c.reset(horizon),
+        }
+    }
+
+    pub fn push(&mut self, key: u64, v: TaskId) {
+        match self {
+            EventQueue::Heap(h) => h.push(Reverse((key, v))),
+            EventQueue::Calendar(c) => c.push(key, v),
+        }
+    }
+
+    /// Pop the earliest event, ties broken by task id.
+    pub fn pop(&mut self) -> Option<(u64, TaskId)> {
+        match self {
+            EventQueue::Heap(h) => h.pop().map(|Reverse(ev)| ev),
+            EventQueue::Calendar(c) => c.pop(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            EventQueue::Heap(h) => h.is_empty(),
+            EventQueue::Calendar(c) => c.len == 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-times in [0, 4·horizon) — some beyond the
+    /// nominal horizon, like late finish events under deviation.
+    fn lcg_times(n: usize, horizon: f64) -> Vec<f64> {
+        let mut x = 0x2545_f491_4f6c_dd1du64;
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 11) as f64 / (1u64 << 53) as f64 * 4.0 * horizon
+            })
+            .collect()
+    }
+
+    fn drain(q: &mut EventQueue) -> Vec<(u64, TaskId)> {
+        let mut out = Vec::new();
+        while let Some(ev) = q.pop() {
+            out.push(ev);
+        }
+        out
+    }
+
+    #[test]
+    fn calendar_pops_in_heap_order() {
+        let horizon = 100.0;
+        let times = lcg_times(500, horizon);
+        let mut heap = EventQueue::new(EventQueueKind::Heap);
+        let mut cal = EventQueue::new(EventQueueKind::Calendar);
+        heap.reset(horizon);
+        cal.reset(horizon);
+        for (v, &t) in times.iter().enumerate() {
+            heap.push(t.to_bits(), v);
+            cal.push(t.to_bits(), v);
+        }
+        assert_eq!(drain(&mut heap), drain(&mut cal));
+        assert!(heap.is_empty() && cal.is_empty());
+    }
+
+    #[test]
+    fn calendar_interleaved_push_pop_matches_heap() {
+        // The replay loop's actual shape: pop the minimum, push a few
+        // events at or after the popped time.
+        let horizon = 50.0;
+        let mut heap = EventQueue::new(EventQueueKind::Heap);
+        let mut cal = EventQueue::new(EventQueueKind::Calendar);
+        heap.reset(horizon);
+        cal.reset(horizon);
+        let mut x = 7u64;
+        let mut next_id = 0usize;
+        for t in [0.5, 1.0, 3.0, 40.0] {
+            heap.push(t.to_bits(), next_id);
+            cal.push(t.to_bits(), next_id);
+            next_id += 1;
+        }
+        for _ in 0..200 {
+            let a = heap.pop();
+            let b = cal.pop();
+            assert_eq!(a, b);
+            let Some((bits, _)) = a else { break };
+            let now = f64::from_bits(bits);
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            for _ in 0..(x % 3) {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let dt = (x >> 11) as f64 / (1u64 << 53) as f64 * horizon;
+                heap.push((now + dt).to_bits(), next_id);
+                cal.push((now + dt).to_bits(), next_id);
+                next_id += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn calendar_handles_sparse_far_future_events() {
+        // Two events hundreds of days apart: the pop after the first
+        // must take the min-day jump path, not spin day by day.
+        let mut cal = EventQueue::new(EventQueueKind::Calendar);
+        cal.reset(64.0); // width 1.0
+        cal.push(0.5f64.to_bits(), 0);
+        cal.push(100_000.25f64.to_bits(), 1);
+        assert_eq!(cal.pop(), Some((0.5f64.to_bits(), 0)));
+        assert_eq!(cal.pop(), Some((100_000.25f64.to_bits(), 1)));
+        assert_eq!(cal.pop(), None);
+    }
+
+    #[test]
+    fn calendar_degenerate_horizon_falls_back_to_unit_width() {
+        for horizon in [0.0, -3.0, f64::INFINITY, f64::NAN] {
+            let mut cal = EventQueue::new(EventQueueKind::Calendar);
+            cal.reset(horizon);
+            cal.push(2.0f64.to_bits(), 0);
+            cal.push(1.0f64.to_bits(), 1);
+            assert_eq!(cal.pop(), Some((1.0f64.to_bits(), 1)));
+            assert_eq!(cal.pop(), Some((2.0f64.to_bits(), 0)));
+        }
+    }
+
+    #[test]
+    fn reset_clears_between_runs() {
+        let mut cal = EventQueue::new(EventQueueKind::Calendar);
+        cal.reset(10.0);
+        cal.push(5.0f64.to_bits(), 3);
+        cal.reset(10.0);
+        assert!(cal.is_empty());
+        assert_eq!(cal.pop(), None);
+        cal.push(1.0f64.to_bits(), 4);
+        assert_eq!(cal.pop(), Some((1.0f64.to_bits(), 4)));
+    }
+}

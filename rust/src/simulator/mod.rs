@@ -37,18 +37,41 @@
 //! (see `service::SchedulingService::run_replay_sweeps_streaming`);
 //! [`simulate`] remains as a thin compatibility shim (scaffold build +
 //! one run) with bit-identical outcomes.
+//!
+//! ## The replay fast path
+//!
+//! Three structures keep the per-event inner loop off the workflow's
+//! edge table entirely on the common path:
+//!
+//! - **Hoisted edge partitions** — the scaffold precomputes, per task,
+//!   the local/remote split of its in-edges against the *initial* plan
+//!   (CSR slices of local `(edge, size)` pairs and remote
+//!   `(edge, producer, size)` triples, plus the summed remote input
+//!   size), and the `(edge, child, size)` view of its out-edges. A run
+//!   consults a per-task dirty overlay ([`SimRun`]`::part_dirty`) that
+//!   only a recompute can set; clean tasks — every task of a
+//!   FollowStatic point — never call `wf.edge()` at start or finish.
+//! - **Ready counters** — instead of scanning all parents per queue
+//!   head, each task carries a remaining-unfinished-parents countdown
+//!   seeded from its in-degree and decremented per out-edge at finish
+//!   events; memory-deferred tasks are woken by an O(1) epoch bump per
+//!   finish rather than an O(n) flag clear.
+//! - **A pluggable event queue** ([`events`]) — binary heap by default
+//!   (the frontier holds at most one event per processor), with a
+//!   calendar-queue alternative selectable for measurement; both pop in
+//!   the same total order, so outcomes are bit-identical.
 
 pub mod deviation;
+pub mod events;
 
 pub use deviation::DeviationModel;
+pub use events::{EventQueue, EventQueueKind};
 
 use crate::obs;
 use crate::platform::{Cluster, ProcId};
 use crate::scheduler::engine::{Engine, Schedule, TaskSchedule};
 use crate::scheduler::state::{PendingSet, PlatformState};
 use crate::workflow::{EdgeId, TaskId, Workflow};
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 /// Execution mode of the runtime system.
@@ -194,6 +217,28 @@ pub struct SimScaffold {
     est_mem: Vec<f64>,
     /// Total outgoing data per task (`sum of c_{u,v}` over children).
     total_out: Vec<f64>,
+    /// CSR partition of each task's in-edges against the initial plan:
+    /// inputs produced on the task's own processor ([`in_local`]
+    /// slices)...
+    ///
+    /// [`in_local`]: SimScaffold::in_local
+    in_local: Vec<(EdgeId, f64)>,
+    in_local_start: Vec<usize>,
+    /// ...and inputs produced elsewhere, with their producer
+    /// ([`in_remote`](SimScaffold::in_remote) slices).
+    in_remote: Vec<(EdgeId, TaskId, f64)>,
+    in_remote_start: Vec<usize>,
+    /// Per-task total remote input size, summed in in-edge order — the
+    /// exact addition sequence of the former per-attempt walk, so the
+    /// hoisted sum is bit-identical to the derived one.
+    remote_in: Vec<f64>,
+    /// CSR out-edges as `(edge, child, size)` triples. Plan-independent:
+    /// usable by dirty and clean tasks alike (finish events, recompute
+    /// snapshots, ready-counter decrements).
+    out_tri: Vec<(EdgeId, TaskId, f64)>,
+    out_start: Vec<usize>,
+    /// Static in-degrees seeding each run's ready counters.
+    in_deg: Vec<u32>,
 }
 
 impl SimScaffold {
@@ -222,7 +267,59 @@ impl SimScaffold {
         let est_work = wf.tasks().iter().map(|t| t.work).collect();
         let est_mem = wf.tasks().iter().map(|t| t.memory).collect();
         let total_out = (0..n).map(|v| wf.total_out_data(v)).collect();
-        SimScaffold { wf, cluster, schedule, rank_pos, initial_queues, est_work, est_mem, total_out }
+        // Local/remote in-edge partition under the initial placements
+        // (the overwhelmingly common case at runtime: FollowStatic never
+        // deviates from them, Recompute only after a recompute).
+        let mut in_local = Vec::new();
+        let mut in_local_start = Vec::with_capacity(n + 1);
+        let mut in_remote = Vec::new();
+        let mut in_remote_start = Vec::with_capacity(n + 1);
+        let mut remote_in = vec![0.0f64; n];
+        in_local_start.push(0);
+        in_remote_start.push(0);
+        for v in 0..n {
+            let j = schedule.tasks[v].proc;
+            for &e in wf.in_edge_ids(v) {
+                let edge = wf.edge(e);
+                if schedule.tasks[edge.src].proc == j {
+                    in_local.push((e, edge.data));
+                } else {
+                    remote_in[v] += edge.data;
+                    in_remote.push((e, edge.src, edge.data));
+                }
+            }
+            in_local_start.push(in_local.len());
+            in_remote_start.push(in_remote.len());
+        }
+        let mut out_tri = Vec::with_capacity(wf.edges().len());
+        let mut out_start = Vec::with_capacity(n + 1);
+        out_start.push(0);
+        for v in 0..n {
+            for &e in wf.out_edge_ids(v) {
+                let edge = wf.edge(e);
+                out_tri.push((e, edge.dst, edge.data));
+            }
+            out_start.push(out_tri.len());
+        }
+        let in_deg = (0..n).map(|v| wf.in_degree(v) as u32).collect();
+        SimScaffold {
+            wf,
+            cluster,
+            schedule,
+            rank_pos,
+            initial_queues,
+            est_work,
+            est_mem,
+            total_out,
+            in_local,
+            in_local_start,
+            in_remote,
+            in_remote_start,
+            remote_in,
+            out_tri,
+            out_start,
+            in_deg,
+        }
     }
 
     pub fn workflow(&self) -> &Arc<Workflow> {
@@ -235,6 +332,21 @@ impl SimScaffold {
 
     pub fn schedule(&self) -> &Arc<Schedule> {
         &self.schedule
+    }
+
+    /// In-edges of `v` produced on `v`'s initial processor.
+    fn in_local(&self, v: TaskId) -> &[(EdgeId, f64)] {
+        &self.in_local[self.in_local_start[v]..self.in_local_start[v + 1]]
+    }
+
+    /// In-edges of `v` produced elsewhere, as `(edge, producer, size)`.
+    fn in_remote(&self, v: TaskId) -> &[(EdgeId, TaskId, f64)] {
+        &self.in_remote[self.in_remote_start[v]..self.in_remote_start[v + 1]]
+    }
+
+    /// Out-edges of `v` as `(edge, child, size)` (plan-independent).
+    fn out_tri(&self, v: TaskId) -> &[(EdgeId, TaskId, f64)] {
+        &self.out_tri[self.out_start[v]..self.out_start[v + 1]]
     }
 }
 
@@ -281,16 +393,40 @@ pub struct SimRun {
     /// Per-processor queues of unstarted tasks in plan order (reversed;
     /// pop from the back).
     queues: Vec<Vec<TaskId>>,
-    heap: BinaryHeap<Reverse<(u64, TaskId)>>, // (finish-time bits, task)
+    /// Finish events keyed on `(finish-time bits, task)`; implementation
+    /// selectable via [`set_event_queue`](SimRun::set_event_queue).
+    events: EventQueue,
     recomputations: usize,
     started: usize,
     /// Guards against recompute→fail→recompute loops per task.
     recompute_tried: Vec<bool>,
-    /// Tasks deferred until the next finish event (waiting for memory).
-    deferred: Vec<bool>,
+    /// Ready counters: remaining unfinished parents per task, seeded
+    /// from the scaffold's in-degrees and decremented per out-edge at
+    /// finish events; a task is dependency-ready at 0. Replaces the
+    /// O(in-degree) all-parents scan per queue-head inspection.
+    unfinished: Vec<u32>,
+    /// Epoch stamp of the finish event each memory-deferred task is
+    /// waiting out: deferred iff `deferred_at[v] == finish_epoch`.
+    /// Advancing the epoch (one increment per finish event) un-defers
+    /// everything at once — the former `Vec<bool>` wholesale clear cost
+    /// O(n) per finish.
+    deferred_at: Vec<u64>,
+    finish_epoch: u64,
+    /// Overlay over the scaffold's hoisted in-edge partitions: true iff
+    /// a recompute moved `v` or one of its parents off the initial
+    /// placements, invalidating the hoisted split for `v`. All-false at
+    /// reset and for the whole of a FollowStatic run.
+    part_dirty: Vec<bool>,
     // Scratch buffers (reused across `try_start` calls) ------------------
     scratch_local: Vec<(EdgeId, f64)>,
+    scratch_remote: Vec<(EdgeId, TaskId, f64)>,
     scratch_evict: Vec<(EdgeId, f64)>,
+    // Hot-loop contract counters (tests only): every `wf.edge()` touch
+    // must be accounted to exactly one declared partition walk.
+    #[cfg(test)]
+    edge_touches: usize,
+    #[cfg(test)]
+    walked_in_edges: usize,
 }
 
 /// Total-order bits for a non-negative f64 (times are ≥ 0).
@@ -329,6 +465,21 @@ impl SimRun {
     /// An empty arena; sized lazily by the first [`simulate`](SimRun::simulate).
     pub fn new() -> SimRun {
         SimRun::default()
+    }
+
+    /// Select the event-queue implementation for subsequent runs. Both
+    /// variants pop in the same total order ([`events`]), so outcomes
+    /// are bit-identical either way; the heap default wins at replay's
+    /// frontier size (at most one event per processor) and this knob
+    /// exists so `bench_replay` can measure the alternative.
+    pub fn set_event_queue(&mut self, kind: EventQueueKind) {
+        if self.events.kind() != kind {
+            self.events = EventQueue::new(kind);
+        }
+    }
+
+    pub fn event_queue_kind(&self) -> EventQueueKind {
+        self.events.kind()
     }
 
     /// Execute one replay point of `sc` under `cfg`, resetting the arena
@@ -380,8 +531,23 @@ impl SimRun {
         reset_vec(&mut self.ft_act, n, NEVER_STARTED);
         reset_vec(&mut self.held, n, 0.0);
         reset_vec(&mut self.recompute_tried, n, false);
-        reset_vec(&mut self.deferred, n, false);
-        self.heap.clear();
+        // Ready counters restart from the static in-degrees; `u64::MAX`
+        // never equals a restarting epoch (≤ n finish events per run).
+        self.unfinished.clear();
+        self.unfinished.extend_from_slice(&sc.in_deg);
+        reset_vec(&mut self.deferred_at, n, u64::MAX);
+        self.finish_epoch = 0;
+        // Partitions start clean: the plan is restored to the scaffold's
+        // schedule below whenever the previous point dirtied it, so a
+        // FollowStatic point following a Recompute point on this arena
+        // sees pristine hoisted partitions.
+        reset_vec(&mut self.part_dirty, n, false);
+        self.events.reset(sc.schedule.makespan);
+        #[cfg(test)]
+        {
+            self.edge_touches = 0;
+            self.walked_in_edges = 0;
+        }
         // Queues restart from the scaffold's pristine planned queues;
         // `clone_from` reuses each queue's buffer.
         self.queues.resize_with(k, Vec::new);
@@ -437,28 +603,6 @@ impl SimRun {
         }
     }
 
-    fn parents_done(&self, v: TaskId, sc: &SimScaffold) -> bool {
-        sc.wf.parents(v).all(|(u, _)| self.state_of[u] == TState::Done)
-    }
-
-    /// Arrival time of all remote inputs of `v` on `j`, advancing channel
-    /// ready times (mirrors the scheduler's bookkeeping).
-    fn input_arrival(&mut self, v: TaskId, j: ProcId, sc: &SimScaffold) -> f64 {
-        let k = self.queues.len();
-        let mut arrival = 0.0f64;
-        for &e in sc.wf.in_edge_ids(v) {
-            let edge = sc.wf.edge(e);
-            let pu = self.plan[edge.src].proc;
-            if pu != j {
-                let channel = self.comm_rt[pu * k + j].max(self.ft_act[edge.src]);
-                let t = channel + edge.data / sc.cluster.bandwidth;
-                self.comm_rt[pu * k + j] = t;
-                arrival = arrival.max(t);
-            }
-        }
-        arrival
-    }
-
     /// Attempt to start task `v` on its planned processor. Returns:
     /// - `Ok(true)`  — started;
     /// - `Ok(false)` — recomputation happened instead (Recompute mode);
@@ -472,19 +616,45 @@ impl SimRun {
             self.known.as_mut().unwrap().set_task_params(v, w_act, m_act);
         }
 
-        // Memory feasibility with actual values (read-only phase; the
-        // scratch buffers are moved out and restored on every exit path).
-        let mut remote_in = 0.0f64;
-        let mut local = std::mem::take(&mut self.scratch_local);
-        local.clear();
-        for &e in sc.wf.in_edge_ids(v) {
-            let edge = sc.wf.edge(e);
-            if self.plan[edge.src].proc == j {
-                local.push((e, edge.data));
-            } else {
-                remote_in += edge.data;
+        // Local/remote partition of v's in-edges. Clean tasks — always,
+        // in FollowStatic mode — read the scaffold's hoisted slices and
+        // precomputed remote sum; dirty tasks (placements moved by a
+        // recompute) re-derive the partition with ONE walk into the
+        // scratch buffers, which the arrival and producer-free phases
+        // below reuse. Either way nothing in this function touches
+        // `wf.edge()` more than once per in-edge. (The scratch buffers
+        // are moved out and restored on every exit path.)
+        let dirty = self.part_dirty[v];
+        let mut local_buf = std::mem::take(&mut self.scratch_local);
+        let mut remote_buf = std::mem::take(&mut self.scratch_remote);
+        let remote_in: f64;
+        if dirty {
+            #[cfg(test)]
+            {
+                self.walked_in_edges += sc.wf.in_degree(v);
             }
+            local_buf.clear();
+            remote_buf.clear();
+            let mut sum = 0.0f64;
+            for &e in sc.wf.in_edge_ids(v) {
+                #[cfg(test)]
+                {
+                    self.edge_touches += 1;
+                }
+                let edge = sc.wf.edge(e);
+                if self.plan[edge.src].proc == j {
+                    local_buf.push((e, edge.data));
+                } else {
+                    sum += edge.data;
+                    remote_buf.push((e, edge.src, edge.data));
+                }
+            }
+            remote_in = sum;
+        } else {
+            remote_in = sc.remote_in[v];
         }
+        let local: &[(EdgeId, f64)] = if dirty { &local_buf } else { sc.in_local(v) };
+        let remote: &[(EdgeId, TaskId, f64)] = if dirty { &remote_buf } else { sc.in_remote(v) };
         let out = sc.total_out[v];
 
         // Planned evictions first (skip files already gone).
@@ -532,7 +702,8 @@ impl SimRun {
             }
         }
         if let Some(buffer) = problem {
-            self.scratch_local = local;
+            self.scratch_local = local_buf;
+            self.scratch_remote = remote_buf;
             self.scratch_evict = evict;
             return self.memory_problem(v, j, buffer, sc, cfg);
         }
@@ -544,30 +715,40 @@ impl SimRun {
             self.buffered[j].insert(e, size);
             self.avail_buf[j] -= size;
         }
-        let arrival = self.input_arrival(v, j, sc);
+        // Remote inputs arrive, advancing channel ready times (mirrors
+        // the scheduler's bookkeeping).
+        let k = self.queues.len();
+        let mut arrival = 0.0f64;
+        for &(_, src, data) in remote {
+            let pu = self.plan[src].proc;
+            debug_assert_ne!(pu, j, "remote partition entry on the consumer's processor");
+            let channel = self.comm_rt[pu * k + j].max(self.ft_act[src]);
+            let t = channel + data / sc.cluster.bandwidth;
+            self.comm_rt[pu * k + j] = t;
+            arrival = arrival.max(t);
+        }
         let st = self.proc_free[j].max(arrival).max(self.time);
         let dur = sc.cluster.exec_time(w_act, j);
-        // Producer-side frees for remote inputs (files are sent now).
-        for &e in sc.wf.in_edge_ids(v) {
-            let edge = sc.wf.edge(e);
-            let pu = self.plan[edge.src].proc;
-            if pu != j {
-                let freed = if let Some(size) = self.pending[pu].remove(e) {
-                    self.avail_mem[pu] += size;
-                    true
-                } else if let Some(size) = self.buffered[pu].remove(e) {
-                    self.avail_buf[pu] += size;
-                    false
-                } else {
-                    false
-                };
-                if freed && obs::enabled() {
-                    obs::record(obs::Event::MemLevel {
-                        proc: pu as u32,
-                        t: self.time,
-                        used: sc.cluster.processors[pu].memory - self.avail_mem[pu],
-                    });
-                }
+        // Producer-side frees for the same remote inputs (files are sent
+        // now) — reusing the partition; this used to be a third
+        // `in_edge_ids` walk re-deriving each producer's placement.
+        for &(e, src, _) in remote {
+            let pu = self.plan[src].proc;
+            let freed = if let Some(size) = self.pending[pu].remove(e) {
+                self.avail_mem[pu] += size;
+                true
+            } else if let Some(size) = self.buffered[pu].remove(e) {
+                self.avail_buf[pu] += size;
+                false
+            } else {
+                false
+            };
+            if freed && obs::enabled() {
+                obs::record(obs::Event::MemLevel {
+                    proc: pu as u32,
+                    t: self.time,
+                    used: sc.cluster.processors[pu].memory - self.avail_mem[pu],
+                });
             }
         }
         self.avail_mem[j] -= m_act + remote_in + out;
@@ -578,8 +759,9 @@ impl SimRun {
         self.running[j] = Some(v);
         self.proc_free[j] = st + dur;
         self.started += 1;
-        self.heap.push(Reverse((time_key(st + dur), v)));
-        self.scratch_local = local;
+        self.events.push(time_key(st + dur), v);
+        self.scratch_local = local_buf;
+        self.scratch_remote = remote_buf;
         self.scratch_evict = evict;
         if obs::enabled() {
             obs::record(obs::Event::TaskStart { task: v as u32, proc: j as u32, t: st, dur });
@@ -623,12 +805,14 @@ impl SimRun {
             self.recompute(sc);
             return Ok(false);
         }
-        if !self.heap.is_empty() {
+        if !self.events.is_empty() {
             // Tasks are still running: waiting may free memory. Defer v
-            // until the next finish event. (`recompute_tried` stays set:
-            // one recomputation per memory issue — repeated recomputes per
-            // retry would cost O(n·k) each for no new information.)
-            self.deferred[v] = true;
+            // until the next finish event — stamping the current epoch;
+            // the epoch bump at that event wakes it. (`recompute_tried`
+            // stays set: one recomputation per memory issue — repeated
+            // recomputes per retry would cost O(n·k) each for no new
+            // information.)
+            self.deferred_at[v] = self.finish_epoch;
             self.rebuild_queues(sc); // restore v (it was pre-popped)
             return Ok(false);
         }
@@ -655,8 +839,8 @@ impl SimRun {
             // but not yet in the pending set; pre-insert them so Step 1
             // sees them when placing their children.
             if let Some(r) = self.running[j] {
-                for &e in sc.wf.out_edge_ids(r) {
-                    state.procs[j].pending.insert(e, sc.wf.edge(e).data);
+                for &(e, _, data) in sc.out_tri(r) {
+                    state.procs[j].pending.insert(e, data);
                 }
             }
             for to in 0..k {
@@ -691,9 +875,30 @@ impl SimRun {
         self.plan = new.tasks;
         self.plan_dirty = true;
         self.rebuild_queues(sc);
+        self.refresh_partition_overlay(sc);
         self.recomputations += 1;
         if obs::enabled() {
             obs::record(obs::Event::RecomputeTriggered { t: self.time });
+        }
+    }
+
+    /// Recompute the dirty overlay over the scaffold's hoisted in-edge
+    /// partitions: task `v` is dirty iff its own placement or any
+    /// parent's differs from the *initial* plan the scaffold partitioned
+    /// against. Exact, not cumulative — a later recompute that moves a
+    /// task back to its initial processor cleans it again. O(n + m),
+    /// negligible next to the engine re-run that precedes it.
+    fn refresh_partition_overlay(&mut self, sc: &SimScaffold) {
+        let init = &sc.schedule.tasks;
+        for v in 0..self.plan.len() {
+            self.part_dirty[v] = self.plan[v].proc != init[v].proc;
+        }
+        for u in 0..self.plan.len() {
+            if self.plan[u].proc != init[u].proc {
+                for &(_, child, _) in sc.out_tri(u) {
+                    self.part_dirty[child] = true;
+                }
+            }
         }
     }
 
@@ -716,10 +921,10 @@ impl SimRun {
                     }
                 }
                 let Some(&v) = self.queues[j].last() else { continue };
-                if !self.parents_done(v, sc) {
+                if self.unfinished[v] != 0 {
                     continue; // predecessor not finished: wait
                 }
-                if self.deferred[v] {
+                if self.deferred_at[v] == self.finish_epoch {
                     continue; // waiting for memory until the next event
                 }
                 // Pop before attempting: any recompute inside try_start
@@ -748,18 +953,39 @@ impl SimRun {
         self.state_of[v] = TState::Done;
         // Free the transient (task memory + remote inputs).
         self.avail_mem[j] += self.held[v];
-        // Local inputs leave the pending set.
-        for &e in sc.wf.in_edge_ids(v) {
-            let edge = sc.wf.edge(e);
-            if self.plan[edge.src].proc == j {
+        // Local inputs leave the pending set — via the hoisted partition
+        // while the placements still match the initial plan, one walk
+        // otherwise.
+        if !self.part_dirty[v] {
+            for &(e, _) in sc.in_local(v) {
                 if let Some(size) = self.pending[j].remove(e) {
                     self.avail_mem[j] += size;
                 }
             }
+        } else {
+            #[cfg(test)]
+            {
+                self.walked_in_edges += sc.wf.in_degree(v);
+            }
+            for &e in sc.wf.in_edge_ids(v) {
+                #[cfg(test)]
+                {
+                    self.edge_touches += 1;
+                }
+                let edge = sc.wf.edge(e);
+                if self.plan[edge.src].proc == j {
+                    if let Some(size) = self.pending[j].remove(e) {
+                        self.avail_mem[j] += size;
+                    }
+                }
+            }
         }
-        // Outputs become pending files (space already reserved at start).
-        for &e in sc.wf.out_edge_ids(v) {
-            self.pending[j].insert(e, sc.wf.edge(e).data);
+        // Outputs become pending files (space already reserved at
+        // start), and each child's ready counter ticks down — the
+        // O(out-degree) share of the ready-counter scheme.
+        for &(e, child, data) in sc.out_tri(v) {
+            self.pending[j].insert(e, data);
+            self.unfinished[child] -= 1;
         }
         if obs::enabled() {
             obs::record(obs::Event::TaskFinish { task: v as u32, proc: j as u32, t: self.time });
@@ -778,13 +1004,14 @@ impl SimRun {
             if let Err(f) = self.try_starts(sc, cfg) {
                 return (false, Some(f));
             }
-            let Some(Reverse((tk, v))) = self.heap.pop() else {
+            let Some((tk, v)) = self.events.pop() else {
                 break;
             };
             self.time = f64::from_bits(tk);
             self.finish_task(v, sc);
-            // Freed memory: deferred tasks get another chance.
-            self.deferred.iter_mut().for_each(|d| *d = false);
+            // Freed memory: the epoch bump wakes every deferred task in
+            // O(1) (deferral is `deferred_at[v] == finish_epoch`).
+            self.finish_epoch += 1;
             done += 1;
             if done == n {
                 break;
@@ -1070,5 +1297,131 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<SimScaffold>();
         assert_send_sync::<SimRun>();
+    }
+
+    #[test]
+    fn followstatic_hot_loop_never_touches_wf_edge() {
+        // The fast-path contract: a FollowStatic point runs entirely on
+        // the scaffold's hoisted partitions — zero `wf.edge()` touches
+        // in the start/finish hot loop.
+        let (wf, cluster) = sample(8, 9);
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let scaffold = SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(s));
+        let mut run = SimRun::new();
+        for sigma in [0.0, 0.1, 0.3] {
+            let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::new(sigma, 5));
+            let out = run.simulate(&scaffold, &cfg);
+            assert!(out.completed || out.failure.is_some());
+            assert_eq!(run.edge_touches, 0, "sigma {sigma}: hot loop touched wf.edge()");
+        }
+    }
+
+    #[test]
+    fn dirty_path_walks_each_in_edge_once() {
+        // Pin against re-derivation: after a recompute, a dirty task's
+        // partition comes from exactly ONE in-edge walk per start (and
+        // one per finish) — the arrival and producer-free phases reuse
+        // it. Every `wf.edge()` touch must be accounted to a declared
+        // walk; a second derivation site breaks the equality.
+        let (wf, cluster) = sample(6, 4);
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        let scaffold = SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(s));
+        let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.3, 5));
+        let mut run = SimRun::new();
+        let out = run.simulate(&scaffold, &cfg);
+        assert!(out.recomputations > 0, "test wants the overlay exercised");
+        assert_eq!(run.edge_touches, run.walked_in_edges);
+    }
+
+    #[test]
+    fn followstatic_point_after_recompute_point_sees_clean_partitions() {
+        // The overlay edge case: a Recompute point dirties the plan (and
+        // with it the partition overlay); the next FollowStatic point on
+        // the SAME scaffold and arena must observe pristine hoisted
+        // partitions — zero edge touches and bit-parity with a fresh
+        // run.
+        let (wf, cluster) = sample(6, 4);
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        let scaffold = SimScaffold::new(
+            Arc::new(wf.clone()),
+            Arc::new(cluster.clone()),
+            Arc::new(s.clone()),
+        );
+        let mut run = SimRun::new();
+        let dirtying = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.3, 5));
+        let first = run.simulate(&scaffold, &dirtying);
+        assert!(first.recomputations > 0, "test wants the overlay dirtied");
+        for sigma in [0.0, 0.1] {
+            let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::new(sigma, 7));
+            let reused = run.simulate(&scaffold, &cfg);
+            assert_eq!(run.edge_touches, 0, "stale overlay leaked into the FollowStatic point");
+            outcomes_bit_equal(&reused, &simulate(&wf, &cluster, &s, &cfg));
+        }
+        // And a Recompute point after a Recompute point resets cleanly
+        // too (the overlay is per-point state, not per-arena).
+        outcomes_bit_equal(&run.simulate(&scaffold, &dirtying), &first);
+    }
+
+    #[test]
+    fn calendar_event_queue_outcomes_bit_equal_heap() {
+        // The two event-queue implementations must pop in the same total
+        // order, making every outcome bit-identical across them, in both
+        // modes.
+        let (wf, cluster) = sample(8, 9);
+        for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
+            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let scaffold = SimScaffold::new(
+                Arc::new(wf.clone()),
+                Arc::new(cluster.clone()),
+                Arc::new(s),
+            );
+            let mut heap_run = SimRun::new();
+            let mut cal_run = SimRun::new();
+            assert_eq!(heap_run.event_queue_kind(), EventQueueKind::Heap);
+            cal_run.set_event_queue(EventQueueKind::Calendar);
+            assert_eq!(cal_run.event_queue_kind(), EventQueueKind::Calendar);
+            for mode in [SimMode::FollowStatic, SimMode::Recompute] {
+                for sigma in [0.0, 0.1, 0.3] {
+                    let cfg = SimConfig::new(mode, DeviationModel::new(sigma, 7));
+                    outcomes_bit_equal(
+                        &heap_run.simulate(&scaffold, &cfg),
+                        &cal_run.simulate(&scaffold, &cfg),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hoisted_partitions_match_a_fresh_derivation() {
+        // Structural check on the scaffold build: partitions, remote
+        // sums, out-triples, and in-degrees agree with a direct walk.
+        let (wf, cluster) = sample(8, 3);
+        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let sc = SimScaffold::new(Arc::new(wf.clone()), Arc::new(cluster), Arc::new(s.clone()));
+        for v in 0..wf.num_tasks() {
+            let j = s.tasks[v].proc;
+            let mut local = Vec::new();
+            let mut remote = Vec::new();
+            let mut sum = 0.0f64;
+            for &e in wf.in_edge_ids(v) {
+                let edge = wf.edge(e);
+                if s.tasks[edge.src].proc == j {
+                    local.push((e, edge.data));
+                } else {
+                    sum += edge.data;
+                    remote.push((e, edge.src, edge.data));
+                }
+            }
+            assert_eq!(sc.in_local(v), &local[..]);
+            assert_eq!(sc.in_remote(v), &remote[..]);
+            assert_eq!(sc.remote_in[v].to_bits(), sum.to_bits());
+            assert_eq!(sc.in_deg[v] as usize, wf.in_degree(v));
+            let out: Vec<_> =
+                wf.out_edge_ids(v).iter().map(|&e| (e, wf.edge(e).dst, wf.edge(e).data)).collect();
+            assert_eq!(sc.out_tri(v), &out[..]);
+        }
     }
 }

@@ -15,10 +15,11 @@ use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::small_cluster;
 use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
 use memsched::service::{
-    to_jsonl, ClusterSpec, Job, JobSource, ReplaySweep, SchedulingService, SimJob,
+    to_jsonl, ClusterSpec, Job, JobSource, ReplaySweep, SchedulingService, ScoreThreadSpec,
+    ServiceConfig, SimJob,
 };
 use memsched::simulator::{
-    simulate, DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold,
+    simulate, DeviationModel, EventQueueKind, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold,
 };
 use std::sync::Arc;
 
@@ -80,6 +81,37 @@ fn scaffold_outcomes_bit_equal_point_by_point_simulate() {
     }
 }
 
+#[test]
+fn calendar_event_queue_bit_equal_across_modes_and_sigmas() {
+    // The event-queue choice is a pure implementation detail: the
+    // calendar variant must replay every (mode, sigma) point bit-equal
+    // to both the heap-backed arena and a fresh `simulate()`.
+    let wf = spec().build().unwrap();
+    let cluster = small_cluster();
+    for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
+        let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        assert!(s.valid);
+        let scaffold = SimScaffold::new(
+            Arc::new(wf.clone()),
+            Arc::new(cluster.clone()),
+            Arc::new(s.clone()),
+        );
+        let mut run = SimRun::new();
+        run.set_event_queue(EventQueueKind::Calendar);
+        assert_eq!(run.event_queue_kind(), EventQueueKind::Calendar);
+        for point in points() {
+            let cfg = SimConfig::new(point.mode, DeviationModel::new(point.sigma, point.seed));
+            let fresh = simulate(&wf, &cluster, &s, &cfg);
+            let reused = run.simulate(&scaffold, &cfg);
+            outcomes_bit_equal(
+                &fresh,
+                &reused,
+                &format!("calendar {algo:?} {:?} sigma={}", point.mode, point.sigma),
+            );
+        }
+    }
+}
+
 fn sweeps(cluster: &Arc<memsched::platform::Cluster>) -> Vec<ReplaySweep> {
     [Algorithm::HeftmBl, Algorithm::HeftmMm]
         .into_iter()
@@ -117,6 +149,23 @@ fn sweep_jsonl_bytes_identical_across_jobs_and_to_flat_batch() {
     // Acceptance counter: one scaffold per sweep, at any worker count.
     assert_eq!(svc1.scaffolds_built(), 2);
     assert_eq!(svc4.scaffolds_built(), 2);
+
+    // Per-worker score pools (the `--score-pools` contention relief)
+    // must not perturb a single byte either.
+    let pooled = SchedulingService::from_config(ServiceConfig {
+        workers: 4,
+        score: ScoreThreadSpec::Fixed(2),
+        score_pools: 2,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let mut jobs_pooled = Vec::new();
+    pooled.run_replay_sweeps_streaming(sweeps(&cluster), |r| jobs_pooled.push(r));
+    assert_eq!(
+        to_jsonl(&jobs1),
+        to_jsonl(&jobs_pooled),
+        "sweep JSONL must not depend on --score-pools"
+    );
 }
 
 #[test]
