@@ -14,7 +14,7 @@ mod common;
 
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::memory_constrained_cluster;
-use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
 
 fn workloads() -> Vec<memsched::workflow::Workflow> {
     let mut out = Vec::new();
@@ -51,7 +51,7 @@ fn main() {
             let ok = wfs
                 .iter()
                 .filter(|wf| {
-                    compute_schedule(wf, &cluster, algo, EvictionPolicy::LargestFirst).valid
+                    ScheduleRequest::new(wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run().valid
                 })
                 .count();
             rates.push(100.0 * ok as f64 / wfs.len() as f64);
@@ -65,7 +65,7 @@ fn main() {
     for policy in [EvictionPolicy::LargestFirst, EvictionPolicy::SmallestFirst] {
         let (mut ok, mut evictions, mut makespan_sum, mut valid_n) = (0usize, 0usize, 0.0, 0usize);
         for wf in &wfs {
-            let s = compute_schedule(wf, &cluster, Algorithm::HeftmBl, policy);
+            let s = ScheduleRequest::new(wf, &cluster).algo(Algorithm::HeftmBl).policy(policy).run();
             if s.valid {
                 ok += 1;
                 makespan_sum += s.makespan;
@@ -89,7 +89,7 @@ fn main() {
         cluster.bandwidth *= scale;
         let (mut sum, mut n, mut ok) = (0.0, 0usize, 0usize);
         for wf in &wfs {
-            let s = compute_schedule(wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+            let s = ScheduleRequest::new(wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
             if s.valid {
                 sum += s.makespan;
                 n += 1;

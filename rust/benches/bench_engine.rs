@@ -23,7 +23,7 @@ mod common;
 
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::{default_cluster, memory_constrained_cluster, small_cluster};
-use memsched::scheduler::{compute_schedule_with, Algorithm, EvictionPolicy, Schedule};
+use memsched::scheduler::{Algorithm, EvictionPolicy, Schedule, ScheduleRequest};
 use memsched::service::{pool, ScorePool};
 
 fn fingerprint(s: &Schedule) -> (bool, u64, usize) {
@@ -74,13 +74,13 @@ fn run_crossover(threads: usize, fast: bool) {
                 (0..reps)
                     .map(|_| {
                         let t0 = std::time::Instant::now();
-                        std::hint::black_box(compute_schedule_with(
-                            &wf,
-                            cluster,
-                            Algorithm::HeftmBl,
-                            EvictionPolicy::LargestFirst,
-                            p,
-                        ));
+                        std::hint::black_box(
+                            ScheduleRequest::new(&wf, cluster)
+                                .algo(Algorithm::HeftmBl)
+                                .policy(EvictionPolicy::LargestFirst)
+                                .score_pool(p)
+                                .run(),
+                        );
                         t0.elapsed().as_secs_f64()
                     })
                     .fold(f64::INFINITY, f64::min)
@@ -146,11 +146,15 @@ fn main() {
         let wf = spec.build().expect("workload builds");
 
         let t0 = std::time::Instant::now();
-        let serial = compute_schedule_with(&wf, &cluster, algo, policy, None);
+        let serial = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(policy).run();
         let serial_secs = t0.elapsed().as_secs_f64();
 
         let t0 = std::time::Instant::now();
-        let parallel = compute_schedule_with(&wf, &cluster, algo, policy, Some(&pool));
+        let parallel = ScheduleRequest::new(&wf, &cluster)
+            .algo(algo)
+            .policy(policy)
+            .score_pool(Some(&pool))
+            .run();
         let parallel_secs = t0.elapsed().as_secs_f64();
 
         assert_eq!(

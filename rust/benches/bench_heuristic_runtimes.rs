@@ -11,7 +11,7 @@ mod common;
 use memsched::bench::{black_box, fmt_duration, Harness};
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::memory_constrained_cluster;
-use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
 
 fn main() {
     let sizes: Vec<usize> = match common::scale_from_env() {
@@ -30,9 +30,9 @@ fn main() {
             WorkloadSpec { family: "chipseq".into(), size: Some(n), input: 3, seed: common::SEED };
         let wf = spec.build().expect("workload builds");
         let mut row = format!("{:>8}", wf.num_tasks());
-        for algo in Algorithm::all() {
+        for &algo in Algorithm::all() {
             let stats = h.bench(&format!("{}_{n}", algo.label()), || {
-                black_box(compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst))
+                black_box(ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run())
             });
             let mean = stats.map(|s| s.mean).unwrap_or_default();
             row.push_str(&format!(" {:>14}", fmt_duration(mean)));

@@ -8,7 +8,7 @@ use memsched::bench::{black_box, Harness};
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::{default_cluster, memory_constrained_cluster};
 use memsched::scheduler::engine::ParentInfo;
-use memsched::scheduler::{compute_schedule, Algorithm, Engine, EvictionPolicy, ScoreBuffers};
+use memsched::scheduler::{Algorithm, Engine, EvictionPolicy, ScheduleRequest, ScoreBuffers};
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 
 /// Fill a reusable scoring arena (the engine's per-task pattern).
@@ -42,7 +42,7 @@ fn main() {
     let default = default_cluster();
     for algo in [Algorithm::Heft, Algorithm::HeftmBl, Algorithm::HeftmMm] {
         h.bench(&format!("schedule_2k_{}", algo.label()), || {
-            black_box(compute_schedule(&wf, &constrained, algo, EvictionPolicy::LargestFirst))
+            black_box(ScheduleRequest::new(&wf, &constrained).algo(algo).policy(EvictionPolicy::LargestFirst).run())
         });
     }
 
@@ -55,7 +55,7 @@ fn main() {
     });
 
     // Runtime simulator (dynamic mode) on the same instance.
-    let schedule = compute_schedule(&wf, &default, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+    let schedule = ScheduleRequest::new(&wf, &default).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
     let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.1, 7));
     h.bench("simulate_recompute_2k", || black_box(simulate(&wf, &default, &schedule, &cfg)));
     let cfg2 = SimConfig::new(SimMode::FollowStatic, DeviationModel::new(0.1, 7));

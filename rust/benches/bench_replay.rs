@@ -23,7 +23,7 @@ mod common;
 
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::default_cluster;
-use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
 use memsched::simulator::{
     DeviationModel, EventQueueKind, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold,
 };
@@ -54,7 +54,7 @@ fn main() {
     // replay points execute the whole workflow instead of failing early.
     let schedule = [Algorithm::HeftmBl, Algorithm::HeftmMm, Algorithm::HeftmBlc]
         .into_iter()
-        .map(|algo| compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst))
+        .map(|algo| ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run())
         .find(|s| s.valid)
         .expect("some memory-aware schedule is valid on the default cluster");
 

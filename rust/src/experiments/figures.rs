@@ -8,13 +8,12 @@ use crate::scheduler::Algorithm;
 use crate::ser::csv::CsvWriter;
 use crate::workflow::SizeGroup;
 
-fn algo_labels() -> [&'static str; 4] {
-    [
-        Algorithm::Heft.label(),
-        Algorithm::HeftmBl.label(),
-        Algorithm::HeftmBlc.label(),
-        Algorithm::HeftmMm.label(),
-    ]
+/// One label per standalone algorithm, in [`Algorithm::all`]'s order
+/// (HEFT first — the `[1..]` slices below drop the normalization row).
+/// Derived, not hardcoded, so a new algorithm variant cannot silently
+/// skip a suite column.
+fn algo_labels() -> Vec<&'static str> {
+    Algorithm::all().iter().map(|a| a.label()).collect()
 }
 
 /// Figs 1 / 5: success rate (%) by size group and algorithm.
@@ -91,7 +90,9 @@ pub fn heuristic_runtimes(results: &[StaticResult]) -> CsvWriter {
         }
     }
     sizes.sort_unstable();
-    let mut w = CsvWriter::new(vec!["tasks", "HEFT", "HEFTM-BL", "HEFTM-BLC", "HEFTM-MM"]);
+    let mut header = vec!["tasks"];
+    header.extend(algo_labels());
+    let mut w = CsvWriter::new(header);
     for n in sizes {
         let mut row = vec![n.to_string()];
         for label in algo_labels() {
@@ -116,7 +117,7 @@ pub fn dynamic_validity(results: &[DynamicResult]) -> CsvWriter {
         "valid_without_recompute",
         "mean_recomputations",
     ]);
-    for algo in Algorithm::all() {
+    for &algo in Algorithm::all() {
         let rs: Vec<&DynamicResult> = results.iter().filter(|r| r.algo == algo).collect();
         if rs.is_empty() {
             continue;
@@ -191,7 +192,7 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.contains("HEFT,50.0"));
         assert!(csv.contains("HEFTM-BL,100.0"));
-        assert_eq!(t.len(), 4); // one row per algorithm
+        assert_eq!(t.len(), Algorithm::all().len()); // one row per algorithm
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod figures;
 
 use crate::generator::{self, models};
 use crate::platform::Cluster;
-use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy, Schedule};
+use crate::scheduler::{Algorithm, EvictionPolicy, Schedule, ScheduleRequest};
 use crate::service::{
     ClusterSpec, Job, JobResult, JobSource, ReplaySweep, SchedulingService, ServiceConfig, SimJob,
 };
@@ -151,15 +151,16 @@ pub struct StaticResult {
     pub sched_seconds: f64,
 }
 
-/// Run the static evaluation of one workload against all four algorithms.
+/// Run the static evaluation of one workload against every standalone
+/// algorithm ([`Algorithm::all`]).
 pub fn run_static(spec: &WorkloadSpec, cluster: &Cluster) -> anyhow::Result<Vec<StaticResult>> {
     let wf = spec.build()?;
     let group = SizeGroup::of(wf.num_tasks());
-    let mut results = Vec::with_capacity(4);
+    let mut results = Vec::with_capacity(Algorithm::all().len());
     let mut heft_makespan = f64::NAN;
-    for algo in Algorithm::all() {
+    for &algo in Algorithm::all() {
         let t0 = std::time::Instant::now();
-        let s = compute_schedule(&wf, cluster, algo, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
         let dt = t0.elapsed().as_secs_f64();
         if algo == Algorithm::Heft {
             heft_makespan = s.makespan;
@@ -220,7 +221,7 @@ pub fn run_dynamic(
 ) -> anyhow::Result<DynamicResult> {
     let wf = spec.build()?;
     let group = SizeGroup::of(wf.num_tasks());
-    let schedule: Schedule = compute_schedule(&wf, cluster, algo, EvictionPolicy::LargestFirst);
+    let schedule: Schedule = ScheduleRequest::new(&wf, cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
     let initially_valid = schedule.valid;
     let dev = DeviationModel::new(sigma, spec.seed ^ 0xdeu64);
     let (rec, stat): (SimOutcome, SimOutcome) = if initially_valid {
@@ -313,7 +314,7 @@ pub fn static_suite_jobs(scale: SuiteScale, seed: u64, cluster: &ClusterSpec) ->
 fn jobs_for_specs(specs: &[WorkloadSpec], cluster: &ClusterSpec) -> Vec<Job> {
     let mut jobs = Vec::with_capacity(specs.len() * Algorithm::all().len());
     for spec in specs {
-        for algo in Algorithm::all() {
+        for &algo in Algorithm::all() {
             jobs.push(Job {
                 source: JobSource::Generated(spec.clone()),
                 cluster: cluster.clone(),
@@ -415,7 +416,7 @@ pub fn dynamic_suite_sweeps(
     let mut sweeps = Vec::with_capacity(specs.len() * Algorithm::all().len());
     for spec in specs {
         let dev_seed = spec.seed ^ 0xdeu64;
-        for algo in Algorithm::all() {
+        for &algo in Algorithm::all() {
             let points: Vec<SimJob> = sigmas
                 .iter()
                 .flat_map(|&sigma| {
@@ -477,7 +478,7 @@ pub fn run_dynamic_suite(
         sigmas.iter().map(|_| Vec::with_capacity(specs.len() * Algorithm::all().len())).collect();
     let mut it = results.iter();
     for spec in &specs {
-        for algo in Algorithm::all() {
+        for &algo in Algorithm::all() {
             for per_sigma in out.iter_mut() {
                 let rec = it.next().expect("one Recompute row per (spec, algo, sigma)");
                 let stat = it.next().expect("one FollowStatic row per (spec, algo, sigma)");
@@ -539,7 +540,7 @@ mod tests {
         let spec = WorkloadSpec { family: "bacass".into(), size: None, input: 0, seed: 2 };
         let cluster = presets::small_cluster();
         let rs = run_static(&spec, &cluster).unwrap();
-        assert_eq!(rs.len(), 4);
+        assert_eq!(rs.len(), Algorithm::all().len());
         assert!(rs.iter().any(|r| r.algo == Algorithm::Heft));
         // HEFT makespan recorded for normalization on every row.
         assert!(rs.iter().all(|r| r.heft_makespan > 0.0));
@@ -592,7 +593,7 @@ mod tests {
         assert_eq!(pooled.len(), 1, "one table per sigma");
         let mut serial = Vec::new();
         for spec in suite(SuiteScale::Smoke, 1) {
-            for algo in Algorithm::all() {
+            for &algo in Algorithm::all() {
                 serial.push(run_dynamic(&spec, &cluster, algo, 0.1).unwrap());
             }
         }

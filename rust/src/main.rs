@@ -20,7 +20,7 @@ use anyhow::{bail, Context as _, Result};
 use memsched::cli::Args;
 use memsched::experiments::{self, figures, SuiteScale};
 use memsched::platform::Cluster;
-use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
 use memsched::ser::json::Value;
 use memsched::service::{
     ClusterSpec, Job, JobSpec, ParseDefaults, ReplaySweep, ScoreThreadSpec, ServeOptions,
@@ -39,9 +39,13 @@ COMMANDS:
   generate      --model <name> [--tasks N] [--seed S] [--input 0..4] --out wf.json
   info          --workflow <file.json|.dot>
   cluster-info  [--cluster default|memory-constrained|file.json]
-  schedule      --workflow <file> [--cluster C] [--algo heft|heftm-bl|heftm-blc|heftm-mm]
+  schedule      --workflow <file> [--cluster C]
+                [--algo heft|heftm-bl|heftm-blc|heftm-mm|peft|lookahead|dls|portfolio]
                 [--eviction largest|smallest] [--scorer native|xla]
                 [--score-threads N|auto] [--out schedule.json]
+                `portfolio` runs every algorithm and commits the best
+                candidate; every result row reports the workload's
+                makespan lower bound and the schedule's optimality gap
   simulate      --workflow <file> [--cluster C] [--algo A] [--sigma 0.1] [--seed S]
                 [--no-recompute] [--json]
                 --json prints the simulation outcome as one JSONL object
@@ -270,7 +274,11 @@ fn cmd_schedule(args: &mut Args) -> Result<()> {
             // Parallel tentative scoring (byte-identical to serial).
             let pool = (score_threads > 1)
                 .then(|| memsched::service::ScorePool::new(score_threads));
-            memsched::scheduler::compute_schedule_with(&wf, &cluster, algo, policy, pool.as_ref())
+            ScheduleRequest::new(&wf, &cluster)
+                .algo(algo)
+                .policy(policy)
+                .score_pool(pool.as_ref())
+                .run()
         }
         "xla" => {
             // Only nag about an *explicit* thread request; the `auto`
@@ -282,6 +290,11 @@ fn cmd_schedule(args: &mut Args) -> Result<()> {
                          batched scorer already orders all processors in one call"
                     );
                 }
+            }
+            // The portfolio is a meta-algorithm over the builder path;
+            // it cannot be driven through a raw Engine.
+            if algo == Algorithm::Portfolio {
+                bail!("--scorer xla does not support --algo portfolio (use --scorer native)");
             }
             let scorer = memsched::runtime::scorer::XlaScorer::load_default()?;
             let order = algo.rank_order(&wf, &cluster);
@@ -356,7 +369,7 @@ fn cmd_simulate(args: &mut Args) -> Result<()> {
     let json = args.flag("json");
     args.finish()?;
 
-    let schedule = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+    let schedule = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
     if !json {
         println!("static schedule: valid={} makespan={:.3}", schedule.valid, schedule.makespan);
     }
@@ -410,7 +423,7 @@ fn cmd_trace(args: &mut Args) -> Result<()> {
     let out = args.opt_val("out")?;
     args.finish()?;
 
-    let schedule = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+    let schedule = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
     if !schedule.valid {
         bail!("initial schedule invalid; execution not attempted");
     }
@@ -462,7 +475,7 @@ fn cmd_retrace(args: &mut Args) -> Result<()> {
         .collect::<Result<_>>()?;
     args.finish()?;
 
-    let schedule = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+    let schedule = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
     println!("static schedule: valid={} makespan={:.3}", schedule.valid, schedule.makespan);
     if !schedule.valid {
         anyhow::bail!("initial schedule invalid; nothing to retrace");

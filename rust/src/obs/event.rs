@@ -82,6 +82,9 @@ pub enum Event {
     ScaffoldBuilt { tasks: u32 },
     /// One replay point executed on a `SimRun` arena.
     PointReplayed,
+    /// A portfolio job committed the candidate at index `algo` of
+    /// `Algorithm::all()` (after σ=0 replay-scoring every candidate).
+    PortfolioCommitted { algo: u32 },
     /// The serve daemon admitted a job frame into client `client`'s queue.
     FrameAdmitted { client: u32 },
     /// The daemon rejected a frame (backpressure or shutdown).
@@ -115,6 +118,7 @@ impl Event {
             Event::CacheHitDisk => "cache_hits_disk",
             Event::ScaffoldBuilt { .. } => "scaffolds_built",
             Event::PointReplayed => "points_replayed",
+            Event::PortfolioCommitted { .. } => "portfolio_commits",
             Event::FrameAdmitted { .. } => "frames_admitted",
             Event::FrameRejected { .. } => "frames_rejected",
             Event::DispatchPick { .. } => "dispatch_picks",

@@ -25,7 +25,10 @@ use crate::ser::json::{obj, Value};
 /// Schema version of every metrics record ([`metrics_records`]) and of
 /// the summary records built around [`Counters`]. Bump on any field
 /// rename/reorder; external tooling keys off it.
-pub const SCHEMA_VERSION: u64 = 1;
+///
+/// v2: `counters` gained `portfolio_commits`; result rows gained
+/// `lower_bound` / `optimality_gap` (and `portfolio` on portfolio jobs).
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Per-thread ring capacity (records). A smoke-scale trace is a few
 /// thousand records; production sweeps that overflow this drop the
@@ -153,8 +156,11 @@ pub struct Counters {
     pub schedule_reuse_hits: u64,
     /// Schedules loaded from the disk layer (`--cache-dir`).
     pub disk_hits: u64,
-    /// `SimScaffold`s constructed (one per sweep that simulates).
+    /// `SimScaffold`s constructed (one per sweep that simulates, plus
+    /// one per portfolio candidate replay).
     pub scaffolds_built: u64,
+    /// Portfolio decisions committed (`--algo portfolio` jobs executed).
+    pub portfolio_commits: u64,
 }
 
 impl Counters {
@@ -167,6 +173,7 @@ impl Counters {
             ("schedule_reuse_hits", self.schedule_reuse_hits.into()),
             ("disk_hits", self.disk_hits.into()),
             ("scaffolds_built", self.scaffolds_built.into()),
+            ("portfolio_commits", self.portfolio_commits.into()),
         ])
     }
 }
@@ -270,7 +277,7 @@ mod tests {
             .map(Value::to_string_compact)
             .find(|l| l.contains("\"name\":\"execute\""))
             .expect("execute span record");
-        assert!(span_line.contains("\"schema\":1"), "{span_line}");
+        assert!(span_line.contains("\"schema\":2"), "{span_line}");
         assert!(span_line.contains("\"min_us\":10"), "{span_line}");
         assert!(span_line.contains("\"max_us\":30"), "{span_line}");
     }
@@ -283,11 +290,13 @@ mod tests {
             schedule_reuse_hits: 6,
             disk_hits: 2,
             scaffolds_built: 1,
+            portfolio_commits: 4,
         };
         assert_eq!(
             c.to_json().to_string_compact(),
             "{\"schedule_requests\":9,\"schedules_computed\":3,\
-             \"schedule_reuse_hits\":6,\"disk_hits\":2,\"scaffolds_built\":1}"
+             \"schedule_reuse_hits\":6,\"disk_hits\":2,\"scaffolds_built\":1,\
+             \"portfolio_commits\":4}"
         );
     }
 }

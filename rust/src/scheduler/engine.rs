@@ -30,6 +30,7 @@
 //!   [`Engine::resume`] from a mid-execution platform state);
 //! - as the oracle inside [`super::retrace`].
 
+use super::ranking;
 use super::state::{EvictCache, EvictionPolicy, PlatformState};
 use super::Algorithm;
 use crate::obs;
@@ -367,6 +368,50 @@ impl<'a> ScoringCtx<'a> {
         Some(Tentative { start: st, finish: ft, evictions, res, used })
     }
 
+    /// Lookahead selection key: the worst (max) estimated EFT over `v`'s
+    /// children, assuming `v` runs on `j` as `t` says. Each child's EFT
+    /// is optimistically minimized over processors, with its start
+    /// bounded by the processor ready time (adjusted for `v` occupying
+    /// `j`), `v`'s data arrival, and every *already placed* parent's
+    /// arrival; unplaced parents other than `v` are ignored (one-level
+    /// lookahead — they will be ranked after `v` anyway). Childless
+    /// tasks fall back to `t.finish`, i.e. plain HEFT.
+    fn lookahead_key(&self, v: TaskId, j: ProcId, t: &Tentative) -> f64 {
+        let k = self.cluster.len();
+        let beta = self.cluster.bandwidth;
+        let mut worst = t.finish;
+        for (c, data) in self.wf.children(v) {
+            let mut best_eft = f64::INFINITY;
+            for q in 0..k {
+                let ready =
+                    if q == j { t.finish } else { self.state.procs[q].ready_time };
+                let arrival_v = if q == j { t.finish } else { t.finish + data / beta };
+                let mut st = ready.max(arrival_v);
+                for (p, pdata) in self.wf.parents(c) {
+                    if p == v {
+                        continue;
+                    }
+                    if let Some(ps) = self.placed[p].as_ref() {
+                        let arr = if ps.proc == q {
+                            ps.finish
+                        } else {
+                            ps.finish + pdata / beta
+                        };
+                        st = st.max(arr);
+                    }
+                }
+                let eft = st + self.cluster.exec_time(self.wf.task(c).work, q);
+                if eft < best_eft {
+                    best_eft = eft;
+                }
+            }
+            if best_eft > worst {
+                worst = best_eft;
+            }
+        }
+        worst
+    }
+
     /// Fill the batched-scoring arena for task `v` (see [`ScoreQuery`]).
     pub fn fill_query(&self, v: TaskId, buf: &mut ScoreBuffers) {
         let k = self.cluster.len();
@@ -399,6 +444,32 @@ impl<'a> ScoringCtx<'a> {
     }
 }
 
+/// Processor-selection rule applied in [`Engine::assign`]'s reduction
+/// over feasible tentatives. Built once per engine from the algorithm —
+/// including on the [`Engine::resume`] path, so dynamic rescheduling
+/// reconstructs PEFT's OCT table from the schedule's algorithm tag.
+enum Selector {
+    /// Minimize the tentative finish time (HEFT/HEFTM family; also what
+    /// the DLS driver uses once it has fixed the task).
+    MinFinish,
+    /// PEFT: minimize `finish + OCT[v·k + j]` (row-major `n × k` table,
+    /// see [`ranking::oct_table`]).
+    OctAdjusted(Vec<f64>),
+    /// Lookahead: minimize the worst estimated child EFT
+    /// ([`ScoringCtx::lookahead_key`]).
+    Lookahead,
+}
+
+impl Selector {
+    fn for_algorithm(algo: Algorithm, wf: &Workflow, cluster: &Cluster) -> Selector {
+        match algo {
+            Algorithm::Peft => Selector::OctAdjusted(ranking::oct_table(wf, cluster)),
+            Algorithm::Lookahead => Selector::Lookahead,
+            _ => Selector::MinFinish,
+        }
+    }
+}
+
 /// The assignment engine. See module docs.
 pub struct Engine<'a> {
     wf: &'a Workflow,
@@ -423,6 +494,8 @@ pub struct Engine<'a> {
     /// Per-processor result slots for the parallel scoring phase (reused
     /// across tasks; reduced serially for determinism).
     slots: Vec<Mutex<Option<Tentative>>>,
+    /// Processor-selection rule (PEFT's OCT table lives here).
+    selector: Selector,
 }
 
 impl<'a> Engine<'a> {
@@ -447,6 +520,7 @@ impl<'a> Engine<'a> {
             evict_cache: EvictCache::new(cluster.len()),
             buffers: ScoreBuffers::default(),
             slots: (0..cluster.len()).map(|_| Mutex::new(None)).collect(),
+            selector: Selector::for_algorithm(algorithm, wf, cluster),
         }
     }
 
@@ -492,6 +566,7 @@ impl<'a> Engine<'a> {
             evict_cache: EvictCache::new(cluster.len()),
             buffers: ScoreBuffers::default(),
             slots: (0..cluster.len()).map(|_| Mutex::new(None)).collect(),
+            selector: Selector::for_algorithm(algorithm, wf, cluster),
         }
     }
 
@@ -594,8 +669,24 @@ impl<'a> Engine<'a> {
         });
     }
 
+    /// The algorithm's selection key for a feasible tentative — smaller
+    /// is better. HEFT/HEFTM reduce on the finish time; PEFT adds the
+    /// optimistic cost table entry; Lookahead estimates the worst child
+    /// EFT. Always evaluated in the serial reduction (never on pool
+    /// workers), so parallel scoring stays byte-identical to serial for
+    /// every selector.
+    fn selection_key(&self, ctx: &ScoringCtx<'_>, v: TaskId, j: ProcId, t: &Tentative) -> f64 {
+        match &self.selector {
+            Selector::MinFinish => t.finish,
+            Selector::OctAdjusted(oct) => t.finish + oct[v * self.cluster.len() + j],
+            Selector::Lookahead => ctx.lookahead_key(v, j, t),
+        }
+    }
+
     /// Score `v` against every processor and return the winner —
-    /// deterministic min finish time, ties to the lowest `ProcId`.
+    /// deterministic minimum selection key, ties to the smaller finish
+    /// time, then to the lowest `ProcId`. (For `MinFinish` the key *is*
+    /// the finish time, so this is exactly the original reduction.)
     ///
     /// With a [`ScorePool`] attached the per-processor tentatives run on
     /// the pool's workers (each writes its own slot; no shared mutable
@@ -619,6 +710,7 @@ impl<'a> Engine<'a> {
             });
         }
         let mut best: Option<(ProcId, Tentative)> = None;
+        let mut best_key = f64::INFINITY;
         for j in 0..k {
             let t = if parallel.is_some() {
                 self.slots[j].lock().unwrap().take()
@@ -626,11 +718,13 @@ impl<'a> Engine<'a> {
                 ctx.tentative(v, j)
             };
             if let Some(t) = t {
+                let key = self.selection_key(&ctx, v, j, &t);
                 let better = match &best {
                     None => true,
-                    Some((_, bt)) => t.finish < bt.finish,
+                    Some((_, bt)) => key < best_key || (key == best_key && t.finish < bt.finish),
                 };
                 if better {
+                    best_key = key;
                     best = Some((j, t));
                 }
             }
@@ -646,7 +740,10 @@ impl<'a> Engine<'a> {
         debug_assert!(self.placed[v].is_none());
         let k = self.cluster.len();
         let mut best: Option<(ProcId, Tentative)> = None;
-        if let Some(scorer) = self.scorer {
+        // The batched-scorer shortcut assumes the selection key *is* the
+        // finish time; PEFT/Lookahead selectors take the exact reduction.
+        let batched = self.scorer.filter(|_| matches!(self.selector, Selector::MinFinish));
+        if let Some(scorer) = batched {
             // Accelerated path: one batched scoring call orders the
             // processors; the exact check stops at the first feasible one
             // (the scores are the Step-3 finish times, so the first
@@ -717,14 +814,114 @@ impl<'a> Engine<'a> {
     }
 
     /// Run phase 2 over the given rank order and produce the schedule.
+    /// DLS ignores the static order and re-ranks per step (see
+    /// [`Engine::run_dynamic_level`]) — dispatched here so the resume
+    /// path (`Engine::resume(..).run(..)`) re-plans DLS schedules with
+    /// DLS semantics too.
     pub fn run(mut self, order: &[TaskId]) -> Schedule {
         debug_assert!(self.wf.is_topological_order(order));
+        if self.algorithm == Algorithm::Dls {
+            return self.run_dynamic_level(order);
+        }
         for &v in order {
             if self.placed[v].is_none() {
                 self.assign(v);
             }
         }
         self.into_schedule(order.to_vec())
+    }
+
+    /// DLS (Sih & Lee): every step commits the feasible (ready task,
+    /// processor) pair maximizing the dynamic level
+    /// `DL(v, j) = SL(v) − start(v, j) + Δ(v, j)` with the speed
+    /// adjustment `Δ(v, j) = w_v/s̄ − w_v/s_j`; ties break to the lowest
+    /// task id, then the lowest processor id, so the commit sequence is
+    /// deterministic (and independent of any score pool — the per-step
+    /// sweep is serial by construction). Memory feasibility runs through
+    /// the same `tentative` machinery as the HEFTM family; when *no*
+    /// (task, processor) pair is feasible, the max-SL ready task goes
+    /// through [`Engine::assign`]'s memory-oblivious fallback, recording
+    /// the out-of-memory failure exactly like the static algorithms.
+    ///
+    /// Fresh runs record the actual commit order as the schedule's
+    /// `rank_order`; resumed runs (some tasks pre-placed) keep the
+    /// caller's full order, since a partial commit order is not a
+    /// complete task permutation.
+    fn run_dynamic_level(mut self, order: &[TaskId]) -> Schedule {
+        let n = self.wf.num_tasks();
+        let sl = ranking::static_levels(self.wf, self.cluster);
+        let s_mean = self.cluster.mean_speed();
+        let resumed = self.placed.iter().any(|p| p.is_some());
+        // Unplaced-parent counts; pre-placed tasks (resume) count as done.
+        let mut missing: Vec<usize> = (0..n)
+            .map(|v| self.wf.parents(v).filter(|&(p, _)| self.placed[p].is_none()).count())
+            .collect();
+        // Ascending task ids: the tie-break scan below prefers lower ids.
+        let mut ready: Vec<TaskId> =
+            (0..n).filter(|&v| self.placed[v].is_none() && missing[v] == 0).collect();
+        let mut committed: Vec<TaskId> = Vec::with_capacity(n);
+        while !ready.is_empty() {
+            let mut pick: Option<(usize, ProcId, Tentative)> = None; // (ready idx, proc, t)
+            let mut pick_dl = f64::NEG_INFINITY;
+            {
+                let ctx = self.scoring_ctx();
+                for (i, &v) in ready.iter().enumerate() {
+                    let mean_exec = self.wf.task(v).work / s_mean;
+                    for j in 0..self.cluster.len() {
+                        if let Some(t) = ctx.tentative(v, j) {
+                            let delta = mean_exec - self.cluster.exec_time(self.wf.task(v).work, j);
+                            let dl = sl[v] - t.start + delta;
+                            // Strict `>` keeps the first (lowest task id,
+                            // lowest proc id) maximizer on ties.
+                            if pick.is_none() || dl > pick_dl {
+                                pick_dl = dl;
+                                pick = Some((i, j, t));
+                            }
+                        }
+                    }
+                }
+            }
+            let v = match pick {
+                Some((i, j, t)) => {
+                    let v = ready[i];
+                    if t.res < 0.0 && !self.memory_aware {
+                        self.failures.push(Failure::Overcommit { task: v, proc: j });
+                    }
+                    if obs::enabled() {
+                        obs::record(obs::Event::TaskScored { task: v as u32, proc: j as u32 });
+                    }
+                    self.commit(v, j, t);
+                    ready.remove(i);
+                    v
+                }
+                None => {
+                    // No feasible pair at all: the max-SL ready task takes
+                    // the standard infeasibility path (failure recorded,
+                    // memory-oblivious fallback placement). Strict `>`
+                    // keeps the lowest task id on SL ties.
+                    let mut i = 0;
+                    for idx in 1..ready.len() {
+                        if sl[ready[idx]] > sl[ready[i]] {
+                            i = idx;
+                        }
+                    }
+                    let v = ready[i];
+                    self.assign(v);
+                    ready.remove(i);
+                    v
+                }
+            };
+            committed.push(v);
+            for (c, _) in self.wf.children(v) {
+                missing[c] -= 1;
+                if missing[c] == 0 && self.placed[c].is_none() {
+                    let at = ready.partition_point(|&r| r < c);
+                    ready.insert(at, c);
+                }
+            }
+        }
+        let rank_order = if resumed { order.to_vec() } else { committed };
+        self.into_schedule(rank_order)
     }
 
     /// Finalize into a [`Schedule`].
@@ -760,7 +957,7 @@ mod tests {
     use super::*;
     use crate::platform::presets::{small_cluster, GB};
     use crate::platform::Processor;
-    use crate::scheduler::{compute_schedule, Algorithm};
+    use crate::scheduler::{Algorithm, ScheduleRequest};
     use crate::workflow::WorkflowBuilder;
 
     fn two_proc_cluster(mem0: f64, mem1: f64, buf_factor: f64) -> Cluster {
@@ -800,7 +997,7 @@ mod tests {
     fn heft_prefers_fast_processor() {
         let cluster = two_proc_cluster(1e9, 1e9, 10.0);
         let wf = chain3(10.0, 100.0, 1.0);
-        let s = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::Heft).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         // All three tasks on the fast processor (no comm needed, speed 2).
         assert!(s.tasks.iter().all(|t| t.proc == 1), "{:?}", s.tasks);
@@ -811,8 +1008,8 @@ mod tests {
     fn dependence_times_respected() {
         let cluster = two_proc_cluster(1e9, 1e9, 10.0);
         let wf = chain3(10.0, 100.0, 1.0);
-        for algo in Algorithm::all() {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        for &algo in Algorithm::all() {
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             // Child starts after parent finishes (+ comm if cross-proc).
             for e in wf.edges() {
                 let (ts, td) = (&s.tasks[e.src], &s.tasks[e.dst]);
@@ -851,7 +1048,7 @@ mod tests {
             b.edge(src, t, 0.3 * GB);
         }
         let wf = b.build().unwrap();
-        let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+        let heft = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::Heft).policy(EvictionPolicy::LargestFirst).run();
         assert!(!heft.valid, "HEFT should overcommit");
         assert!(heft.mem_peak_frac.iter().cloned().fold(0.0, f64::max) > 1.0);
     }
@@ -866,7 +1063,7 @@ mod tests {
             b.edge(src, t, 0.03 * GB);
         }
         let wf = b.build().unwrap();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid, "failures: {:?}", s.failures);
         assert!(s.mem_peak_frac.iter().all(|&f| f <= 1.0 + 1e-9), "{:?}", s.mem_peak_frac);
     }
@@ -889,7 +1086,7 @@ mod tests {
         b.edge(a, d, 10.0);
         b.edge(d, e, 5.0);
         let wf = b.build().unwrap();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         // Schedule must be valid; task e (id 3) must have evicted the
         // 400-byte file if placed on p0 while it was still pending.
         assert!(s.valid, "failures: {:?}", s.failures);
@@ -908,7 +1105,7 @@ mod tests {
         let mut b = WorkflowBuilder::new("huge");
         b.task("a", "t", 1.0, 500.0);
         let wf = b.build().unwrap();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(!s.valid);
         assert!(matches!(s.failures[0], Failure::OutOfMemory { task: 0 }));
         // Fallback still placed it (schedule complete).
@@ -927,9 +1124,9 @@ mod tests {
             9,
         );
         let wf = crate::traces::bind_weights(&wf, &data, 1);
-        let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+        let heft = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::Heft).policy(EvictionPolicy::LargestFirst).run();
         for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc] {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             if s.valid {
                 assert!(
                     s.makespan + 1e-6 >= heft.makespan * 0.999,
@@ -945,7 +1142,7 @@ mod tests {
     fn schedule_stats_helpers() {
         let cluster = two_proc_cluster(1e9, 1e9, 10.0);
         let wf = chain3(10.0, 100.0, 1.0);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.procs_used() >= 1);
         assert!(s.mean_mem_usage() >= 0.0);
         assert!(s.approx_bytes() > 0);
@@ -1005,7 +1202,7 @@ mod tests {
         let (wf, cluster) = eviction_heavy_instance();
         for threads in [2, 3, 8] {
             let pool = ScorePool::new(threads);
-            for algo in Algorithm::all() {
+            for &algo in Algorithm::all() {
                 let order = algo.rank_order(&wf, &cluster);
                 let policy = EvictionPolicy::LargestFirst;
                 let serial = Engine::new(&wf, &cluster, algo, policy).run(&order);

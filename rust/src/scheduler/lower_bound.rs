@@ -1,0 +1,146 @@
+//! Makespan lower bound per (workflow, cluster).
+//!
+//! Two classic relaxations, both provable lower bounds on the makespan of
+//! *any* schedule (valid or invalid, memory-aware or not), and therefore
+//! on any σ = 0 simulated replay of one:
+//!
+//! - the **critical-path bound**: the longest dependency chain with every
+//!   task running at the fastest processor speed and communication free —
+//!   dropping resource contention, memory, and comm can only shorten a
+//!   schedule, and precedence still forces the chain to serialize;
+//! - the **total-work bound**: all work spread perfectly over the
+//!   aggregate speed `Σ_j s_j` — no schedule can process operations
+//!   faster than every processor running flat out.
+//!
+//! The reported bound is the max of the two. Result rows derive
+//! `optimality_gap = (makespan − lb) / lb` from it, so every batch /
+//! experiment / serve row carries a distance-from-optimal estimate
+//! rather than a bare makespan.
+
+use crate::platform::Cluster;
+use crate::workflow::Workflow;
+
+/// Provable makespan lower bound: `max(critical-path, total-work)`.
+/// Returns 0 for empty or zero-work workflows.
+pub fn makespan_lower_bound(wf: &Workflow, cluster: &Cluster) -> f64 {
+    let n = wf.num_tasks();
+    if n == 0 || cluster.is_empty() {
+        return 0.0;
+    }
+    let s_max = cluster.processors.iter().map(|p| p.speed).fold(0.0f64, f64::max);
+    let s_sum: f64 = cluster.processors.iter().map(|p| p.speed).sum();
+
+    // Critical path at the fastest speed, ignoring communication.
+    let mut down = vec![0.0f64; n];
+    let mut cp = 0.0f64;
+    for &v in &wf.topological_order() {
+        let longest_in = wf.parents(v).map(|(p, _)| down[p]).fold(0.0, f64::max);
+        down[v] = longest_in + wf.task(v).work / s_max;
+        cp = cp.max(down[v]);
+    }
+
+    // Total work over aggregate speed.
+    let total: f64 = (0..n).map(|v| wf.task(v).work).sum::<f64>() / s_sum;
+
+    cp.max(total)
+}
+
+/// Relative optimality gap `(makespan − lb) / lb`, clamped at 0 (σ > 0
+/// replays can dip below an estimate-based bound; the static analytic
+/// makespan never does). Returns 0 when the bound is degenerate
+/// (zero-work workflows) and NaN when the makespan is NaN, so JSON rows
+/// render `null` exactly when the makespan does.
+pub fn optimality_gap(makespan: f64, lower_bound: f64) -> f64 {
+    if makespan.is_nan() {
+        return f64::NAN;
+    }
+    if lower_bound > 0.0 && makespan.is_finite() {
+        ((makespan - lower_bound) / lower_bound).max(0.0)
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::small_cluster;
+    use crate::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
+    use crate::workflow::WorkflowBuilder;
+
+    fn chain(n: usize, work: f64) -> Workflow {
+        let mut b = WorkflowBuilder::new("chain");
+        let ids: Vec<_> = (0..n).map(|i| b.task(format!("t{i}"), "t", work, 1.0)).collect();
+        for w in ids.windows(2) {
+            b.edge(w[0], w[1], 1.0);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn chain_bound_is_critical_path() {
+        let cluster = small_cluster();
+        let s_max = cluster.processors.iter().map(|p| p.speed).fold(0.0f64, f64::max);
+        let wf = chain(5, 10.0);
+        // A chain's critical path dominates its total-work bound.
+        let lb = makespan_lower_bound(&wf, &cluster);
+        assert!((lb - 5.0 * 10.0 / s_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wide_bound_is_total_work() {
+        let cluster = small_cluster();
+        let s_sum: f64 = cluster.processors.iter().map(|p| p.speed).sum();
+        let s_max = cluster.processors.iter().map(|p| p.speed).fold(0.0f64, f64::max);
+        // 100 independent tasks: total work dominates one task's exec.
+        let mut b = WorkflowBuilder::new("wide");
+        for i in 0..100 {
+            b.task(format!("t{i}"), "t", 7.0, 1.0);
+        }
+        let wf = b.build().unwrap();
+        let lb = makespan_lower_bound(&wf, &cluster);
+        assert!((lb - 700.0 / s_sum).abs() < 1e-9);
+        assert!(lb >= 7.0 / s_max);
+    }
+
+    #[test]
+    fn bound_below_every_algorithm() {
+        let spec = crate::experiments::WorkloadSpec {
+            family: "chipseq".into(),
+            size: Some(120),
+            input: 3,
+            seed: 11,
+        };
+        let wf = spec.build().unwrap();
+        let cluster = small_cluster();
+        let lb = makespan_lower_bound(&wf, &cluster);
+        assert!(lb > 0.0);
+        for &algo in Algorithm::all() {
+            let s = ScheduleRequest::new(&wf, &cluster)
+                .algo(algo)
+                .policy(EvictionPolicy::LargestFirst)
+                .run();
+            assert!(
+                s.makespan + 1e-9 >= lb,
+                "{algo:?}: makespan {} < lower bound {lb}",
+                s.makespan
+            );
+            let gap = optimality_gap(s.makespan, lb);
+            assert!(gap >= 0.0 && gap.is_finite());
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let cluster = small_cluster();
+        let mut b = WorkflowBuilder::new("zero-work");
+        b.task("t0", "t", 0.0, 1.0);
+        let wf = b.build().unwrap();
+        assert_eq!(makespan_lower_bound(&wf, &cluster), 0.0);
+        assert_eq!(optimality_gap(5.0, 0.0), 0.0);
+        assert_eq!(optimality_gap(f64::INFINITY, 1.0), 0.0);
+        assert!(optimality_gap(f64::NAN, 1.0).is_nan());
+        assert!((optimality_gap(3.0, 2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(optimality_gap(1.0, 2.0), 0.0);
+    }
+}

@@ -1,17 +1,35 @@
-//! Scheduling heuristics (paper §IV): the memory-oblivious HEFT baseline
-//! and the three memory-aware variants HEFTM-BL, HEFTM-BLC, HEFTM-MM.
+//! Scheduling heuristics (paper §IV): the memory-oblivious HEFT baseline,
+//! the three memory-aware variants HEFTM-BL, HEFTM-BLC, HEFTM-MM, and the
+//! literature extensions PEFT, Lookahead, and DLS — all behind one
+//! [`ScheduleRequest`] entrypoint.
 //!
-//! All four share the two-phase list-scheduling skeleton: (1) compute a
+//! The list schedulers share the two-phase skeleton: (1) compute a
 //! priority order over tasks ([`ranking`]), (2) greedily assign each task
-//! to the processor minimizing its finish time ([`engine`]). The HEFTM
-//! variants additionally enforce the per-processor memory constraint,
-//! evicting pending files into communication buffers when needed
-//! ([`state`]), and may declare a placement infeasible.
+//! to the processor optimizing its selection key ([`engine`]). The
+//! memory-aware variants additionally enforce the per-processor memory
+//! constraint, evicting pending files into communication buffers when
+//! needed ([`state`]), and may declare a placement infeasible.
 //!
+//! Beyond the paper's four algorithms:
+//! - **PEFT** ranks by the optimistic cost table (OCT) and picks the
+//!   processor minimizing `EFT + OCT` ([`ranking::oct_table`]);
+//! - **Lookahead** ranks like HEFT but picks the processor minimizing the
+//!   worst estimated child EFT (one-level lookahead);
+//! - **DLS** abandons the static order entirely: every step commits the
+//!   (ready task, processor) pair with the highest dynamic level;
+//! - **Portfolio** is a meta-scheduler: it runs every standalone
+//!   algorithm and commits the best candidate. At this layer "best" is
+//!   the minimum analytic makespan (valid before invalid); the service
+//!   layer supersedes this with replay-scored selection through the
+//!   simulator's `SimScaffold` path (see `service::SchedulingService`).
+//!
+//! [`lower_bound`] gives a provable makespan lower bound per
+//! (workflow, cluster) so results can report an optimality gap.
 //! [`retrace`] re-validates a committed schedule after task parameters
 //! deviate (paper §V).
 
 pub mod engine;
+pub mod lower_bound;
 pub mod ranking;
 pub mod retrace;
 pub mod state;
@@ -23,7 +41,8 @@ use crate::platform::Cluster;
 use crate::service::pool::ScorePool;
 use crate::workflow::{TaskId, Workflow};
 
-/// The four scheduling algorithms of the paper.
+/// The scheduling algorithms: the paper's four plus PEFT, Lookahead, DLS,
+/// and the Portfolio meta-scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Baseline HEFT [30]: memory-oblivious; may produce invalid schedules.
@@ -34,6 +53,18 @@ pub enum Algorithm {
     HeftmBlc,
     /// HEFTM-MM: memory-aware, MemDag minimum-memory traversal ranking.
     HeftmMm,
+    /// PEFT (Arabnejad & Barbosa): optimistic-cost-table rank, `EFT + OCT`
+    /// processor selection; memory-aware.
+    Peft,
+    /// HEFT ranking with one-level lookahead processor selection
+    /// (minimize the worst estimated child EFT); memory-aware.
+    Lookahead,
+    /// DLS (Sih & Lee): dynamic levels, re-ranked at every step;
+    /// memory-aware.
+    Dls,
+    /// Meta-scheduler: run every algorithm in [`Algorithm::all`] and
+    /// commit the best candidate (replay-scored in the service layer).
+    Portfolio,
 }
 
 impl Algorithm {
@@ -41,25 +72,78 @@ impl Algorithm {
         !matches!(self, Algorithm::Heft)
     }
 
+    /// Human-facing label (result rows, figures).
     pub fn label(self) -> &'static str {
         match self {
             Algorithm::Heft => "HEFT",
             Algorithm::HeftmBl => "HEFTM-BL",
             Algorithm::HeftmBlc => "HEFTM-BLC",
             Algorithm::HeftmMm => "HEFTM-MM",
+            Algorithm::Peft => "PEFT",
+            Algorithm::Lookahead => "LOOKAHEAD",
+            Algorithm::Dls => "DLS",
+            Algorithm::Portfolio => "PORTFOLIO",
         }
     }
 
-    pub fn all() -> [Algorithm; 4] {
-        [Algorithm::Heft, Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm]
+    /// Canonical CLI/job-spec name; `from_str` accepts exactly these
+    /// (plus legacy aliases), so `as_str`/`from_str` round-trip.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Algorithm::Heft => "heft",
+            Algorithm::HeftmBl => "heftm-bl",
+            Algorithm::HeftmBlc => "heftm-blc",
+            Algorithm::HeftmMm => "heftm-mm",
+            Algorithm::Peft => "peft",
+            Algorithm::Lookahead => "lookahead",
+            Algorithm::Dls => "dls",
+            Algorithm::Portfolio => "portfolio",
+        }
     }
 
-    /// Compute this algorithm's rank order (phase 1).
+    /// The standalone schedulable algorithms, HEFT first (experiment
+    /// suites normalize against the leading HEFT row). Excludes
+    /// [`Algorithm::Portfolio`], which fans out over exactly this slice —
+    /// callers iterating `all()` therefore never recurse.
+    pub fn all() -> &'static [Algorithm] {
+        &[
+            Algorithm::Heft,
+            Algorithm::HeftmBl,
+            Algorithm::HeftmBlc,
+            Algorithm::HeftmMm,
+            Algorithm::Peft,
+            Algorithm::Lookahead,
+            Algorithm::Dls,
+        ]
+    }
+
+    /// Every variant, including [`Algorithm::Portfolio`] (name/tag maps).
+    pub fn variants() -> &'static [Algorithm] {
+        &[
+            Algorithm::Heft,
+            Algorithm::HeftmBl,
+            Algorithm::HeftmBlc,
+            Algorithm::HeftmMm,
+            Algorithm::Peft,
+            Algorithm::Lookahead,
+            Algorithm::Dls,
+            Algorithm::Portfolio,
+        ]
+    }
+
+    /// Compute this algorithm's rank order (phase 1). DLS re-ranks
+    /// dynamically inside the engine; its static order here (and
+    /// Portfolio's nominal HEFT order) only seeds resume paths and
+    /// debug topology checks.
     pub fn rank_order(self, wf: &Workflow, cluster: &Cluster) -> Vec<TaskId> {
         match self {
-            Algorithm::Heft | Algorithm::HeftmBl => ranking::rank_bl(wf, cluster),
+            Algorithm::Heft | Algorithm::HeftmBl | Algorithm::Lookahead | Algorithm::Portfolio => {
+                ranking::rank_bl(wf, cluster)
+            }
             Algorithm::HeftmBlc => ranking::rank_blc(wf, cluster),
             Algorithm::HeftmMm => ranking::rank_mm(wf),
+            Algorithm::Peft => ranking::rank_peft(wf, cluster),
+            Algorithm::Dls => ranking::rank_dls(wf, cluster),
         }
     }
 }
@@ -67,15 +151,22 @@ impl Algorithm {
 impl std::str::FromStr for Algorithm {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
-            "heft" => Ok(Algorithm::Heft),
-            "heftm-bl" | "bl" => Ok(Algorithm::HeftmBl),
-            "heftm-blc" | "blc" => Ok(Algorithm::HeftmBlc),
-            "heftm-mm" | "mm" => Ok(Algorithm::HeftmMm),
-            other => anyhow::bail!(
-                "unknown algorithm `{other}` (expected heft, heftm-bl, heftm-blc, heftm-mm)"
-            ),
-        }
+        let lower = s.to_ascii_lowercase();
+        // Legacy aliases kept from the original four-algorithm CLI.
+        let canonical = match lower.as_str() {
+            "bl" => "heftm-bl",
+            "blc" => "heftm-blc",
+            "mm" => "heftm-mm",
+            other => other,
+        };
+        Algorithm::variants()
+            .iter()
+            .copied()
+            .find(|a| a.as_str() == canonical)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Algorithm::variants().iter().map(|a| a.as_str()).collect();
+                anyhow::anyhow!("unknown algorithm `{s}` (expected one of: {})", names.join(", "))
+            })
     }
 }
 
@@ -106,21 +197,119 @@ pub fn auto_score_threads(wf: &Workflow, cluster: &Cluster) -> usize {
     }
 }
 
+/// The one scheduling entrypoint: a builder over (workflow, cluster)
+/// with algorithm, eviction policy, and optional parallel scoring.
+///
+/// ```ignore
+/// let s = ScheduleRequest::new(&wf, &cluster)
+///     .algo(Algorithm::Peft)
+///     .policy(EvictionPolicy::LargestFirst)
+///     .score_pool(Some(&pool))
+///     .run();
+/// ```
+///
+/// Defaults: `HeftmBl`, `LargestFirst`, serial scoring. The former free
+/// functions `compute_schedule` / `compute_schedule_with` are deprecated
+/// shims over this builder and produce bit-identical schedules.
+#[derive(Clone, Copy)]
+pub struct ScheduleRequest<'a> {
+    wf: &'a Workflow,
+    cluster: &'a Cluster,
+    algo: Algorithm,
+    policy: EvictionPolicy,
+    score_pool: Option<&'a ScorePool>,
+}
+
+impl<'a> ScheduleRequest<'a> {
+    pub fn new(wf: &'a Workflow, cluster: &'a Cluster) -> ScheduleRequest<'a> {
+        ScheduleRequest {
+            wf,
+            cluster,
+            algo: Algorithm::HeftmBl,
+            policy: EvictionPolicy::LargestFirst,
+            score_pool: None,
+        }
+    }
+
+    pub fn algo(mut self, algo: Algorithm) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn policy(mut self, policy: EvictionPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Fan intra-schedule tentative scoring across `pool`'s workers;
+    /// schedules are byte-identical for any thread count (deterministic
+    /// reduction — see [`Engine::with_parallel_scoring`]). `None` keeps
+    /// serial scoring, so callers can pass an `Option` through.
+    pub fn score_pool(mut self, pool: Option<&'a ScorePool>) -> Self {
+        self.score_pool = pool;
+        self
+    }
+
+    /// Compute the schedule (phases 1 + 2).
+    pub fn run(&self) -> Schedule {
+        if self.algo == Algorithm::Portfolio {
+            return self.run_portfolio();
+        }
+        self.run_single(self.algo)
+    }
+
+    fn run_single(&self, algo: Algorithm) -> Schedule {
+        let order = algo.rank_order(self.wf, self.cluster);
+        let mut engine = Engine::new(self.wf, self.cluster, algo, self.policy);
+        if let Some(pool) = self.score_pool {
+            engine = engine.with_parallel_scoring(pool);
+        }
+        engine.run(&order)
+    }
+
+    /// Scheduler-layer portfolio: run every standalone algorithm and keep
+    /// the analytically best candidate — valid beats invalid, then
+    /// minimum makespan, ties to the lowest [`Algorithm::all`] index.
+    /// The returned schedule keeps the *winner's* `algorithm` tag so
+    /// downstream resume/retrace paths reconstruct the right selector.
+    ///
+    /// The service layer replaces the analytic criterion with the
+    /// simulated (σ = 0 replay) makespan; for valid schedules the two
+    /// agree up to simulation modeling of the identical timeline.
+    fn run_portfolio(&self) -> Schedule {
+        let mut best: Option<Schedule> = None;
+        for &algo in Algorithm::all() {
+            let s = self.run_single(algo);
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    (s.valid && !b.valid) || (s.valid == b.valid && s.makespan < b.makespan)
+                }
+            };
+            if better {
+                best = Some(s);
+            }
+        }
+        best.expect("Algorithm::all() is non-empty")
+    }
+}
+
 /// Compute a full static schedule (phases 1 + 2).
+#[deprecated(since = "0.9.0", note = "use `ScheduleRequest::new(wf, cluster).algo(..).run()`")]
 pub fn compute_schedule(
     wf: &Workflow,
     cluster: &Cluster,
     algo: Algorithm,
     policy: EvictionPolicy,
 ) -> Schedule {
-    compute_schedule_with(wf, cluster, algo, policy, None)
+    ScheduleRequest::new(wf, cluster).algo(algo).policy(policy).run()
 }
 
-/// [`compute_schedule`] with optional intra-schedule parallel scoring:
-/// when a [`ScorePool`] is given, every task's per-processor tentative
-/// scoring fans out across its workers. The resulting schedule is
-/// byte-identical to the serial one for any thread count (deterministic
-/// reduction — see [`Engine::with_parallel_scoring`]).
+/// `compute_schedule` with optional intra-schedule parallel scoring.
+#[deprecated(
+    since = "0.9.0",
+    note = "use `ScheduleRequest::new(wf, cluster).algo(..).score_pool(..).run()`"
+)]
 pub fn compute_schedule_with(
     wf: &Workflow,
     cluster: &Cluster,
@@ -128,12 +317,7 @@ pub fn compute_schedule_with(
     policy: EvictionPolicy,
     score_pool: Option<&ScorePool>,
 ) -> Schedule {
-    let order = algo.rank_order(wf, cluster);
-    let mut engine = Engine::new(wf, cluster, algo, policy);
-    if let Some(pool) = score_pool {
-        engine = engine.with_parallel_scoring(pool);
-    }
-    engine.run(&order)
+    ScheduleRequest::new(wf, cluster).algo(algo).policy(policy).score_pool(score_pool).run()
 }
 
 #[cfg(test)]
@@ -185,5 +369,69 @@ mod tests {
         assert_eq!(SCORE_PARALLEL_CROSSOVER, 64.0);
         assert_eq!(auto_score_threads(&wf_with_edges(50, 533 - 49), &small), 1);
         assert_eq!(auto_score_threads(&wf_with_edges(50, 534 - 49), &small), all_cores);
+    }
+
+    #[test]
+    fn algorithm_names_round_trip() {
+        for &algo in Algorithm::variants() {
+            let parsed: Algorithm = algo.as_str().parse().unwrap();
+            assert_eq!(parsed, algo, "canonical name must round-trip");
+            // Labels are the uppercase rendering of distinct algorithms:
+            // parsing a label is not supported, but labels stay unique.
+        }
+        let labels: std::collections::HashSet<_> =
+            Algorithm::variants().iter().map(|a| a.label()).collect();
+        assert_eq!(labels.len(), Algorithm::variants().len());
+        let names: std::collections::HashSet<_> =
+            Algorithm::variants().iter().map(|a| a.as_str()).collect();
+        assert_eq!(names.len(), Algorithm::variants().len());
+        // Legacy aliases still parse.
+        assert_eq!("bl".parse::<Algorithm>().unwrap(), Algorithm::HeftmBl);
+        assert_eq!("blc".parse::<Algorithm>().unwrap(), Algorithm::HeftmBlc);
+        assert_eq!("mm".parse::<Algorithm>().unwrap(), Algorithm::HeftmMm);
+        // Unknown names produce an error naming the full registry.
+        let err = "definitely-not-an-algo".parse::<Algorithm>().unwrap_err().to_string();
+        assert!(err.contains("portfolio") && err.contains("peft"), "{err}");
+        // HEFT leads `all()` (experiment normalization depends on it) and
+        // Portfolio is not a standalone candidate.
+        assert_eq!(Algorithm::all()[0], Algorithm::Heft);
+        assert!(!Algorithm::all().contains(&Algorithm::Portfolio));
+        assert_eq!(Algorithm::variants().len(), Algorithm::all().len() + 1);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_builder_bitwise() {
+        let wf = wf_with_edges(40, 25);
+        let cluster = presets::small_cluster();
+        for &algo in Algorithm::variants() {
+            let via_builder =
+                ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
+            let via_shim = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let via_shim_with =
+                compute_schedule_with(&wf, &cluster, algo, EvictionPolicy::LargestFirst, None);
+            for other in [&via_shim, &via_shim_with] {
+                assert_eq!(via_builder.algorithm, other.algorithm, "{algo:?}");
+                assert_eq!(via_builder.rank_order, other.rank_order, "{algo:?}");
+                assert_eq!(via_builder.tasks, other.tasks, "{algo:?}");
+                assert_eq!(via_builder.makespan.to_bits(), other.makespan.to_bits(), "{algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn portfolio_commits_an_all_candidate() {
+        let wf = wf_with_edges(30, 10);
+        let cluster = presets::small_cluster();
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::Portfolio).run();
+        // The winner carries its own algorithm tag, never Portfolio.
+        assert!(Algorithm::all().contains(&s.algorithm));
+        // Analytic argmin: no standalone candidate beats the winner.
+        for &algo in Algorithm::all() {
+            let c = ScheduleRequest::new(&wf, &cluster).algo(algo).run();
+            if c.valid == s.valid {
+                assert!(s.makespan <= c.makespan + 1e-9, "{algo:?} beat the portfolio");
+            }
+        }
     }
 }

@@ -75,6 +75,119 @@ pub fn rank_mm(wf: &Workflow) -> Vec<TaskId> {
     crate::memdag::min_memory_traversal(wf).order
 }
 
+/// Finite `f64` priority for the ready-list heap below: total order via
+/// `partial_cmp` (keys are finite by construction — works and speeds are
+/// finite, comm times are finite).
+#[derive(PartialEq, PartialOrd)]
+struct Priority(f64);
+
+impl Eq for Priority {}
+impl Ord for Priority {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Deterministic priority-list topological order: repeatedly emit the
+/// *ready* task with the largest key, ties to the lowest task id.
+///
+/// Unlike [`order_by_key_desc`], this never relies on
+/// `key(parent) ≥ key(child)` along edges — a property bottom-level keys
+/// have but PEFT's average-OCT rank and DLS static levels do not (on
+/// heterogeneous speeds the averages are not monotone along edges), so a
+/// plain stable sort could emit a child before its parent.
+pub fn priority_topo_order(wf: &Workflow, key: &[f64]) -> Vec<TaskId> {
+    let n = wf.num_tasks();
+    let mut missing: Vec<usize> = (0..n).map(|v| wf.parents(v).count()).collect();
+    let mut heap: std::collections::BinaryHeap<(Priority, std::cmp::Reverse<TaskId>)> =
+        (0..n).filter(|&v| missing[v] == 0).map(|v| (Priority(key[v]), std::cmp::Reverse(v))).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some((_, std::cmp::Reverse(v))) = heap.pop() {
+        order.push(v);
+        for (c, _) in wf.children(v) {
+            missing[c] -= 1;
+            if missing[c] == 0 {
+                heap.push((Priority(key[c]), std::cmp::Reverse(c)));
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), n, "workflow must be acyclic");
+    debug_assert!(wf.is_topological_order(&order));
+    order
+}
+
+/// PEFT's optimistic cost table, row-major `n × k`: `oct[v·k + j]` is the
+/// optimistic remaining time *after* `v` finishes on processor `j` — the
+/// worst child's best-case completion chain,
+///
+/// `OCT(v, j) = max_c min_q [ OCT(c, q) + w_c/s_q + (q ≠ j ? c_{v,c}/β : 0) ]`,
+///
+/// recursing to 0 at sinks. Dense row-major layout so the engine's
+/// per-processor selection key reads `oct[v*k + j]` with unit stride.
+pub fn oct_table(wf: &Workflow, cluster: &Cluster) -> Vec<f64> {
+    let n = wf.num_tasks();
+    let k = cluster.len();
+    let beta = cluster.bandwidth;
+    let order = wf.topological_order();
+    let mut oct = vec![0.0f64; n * k];
+    for &u in order.iter().rev() {
+        for j in 0..k {
+            let mut worst = 0.0f64;
+            for (c, data) in wf.children(u) {
+                let mut best = f64::INFINITY;
+                for q in 0..k {
+                    let comm = if q == j { 0.0 } else { data / beta };
+                    let cost = oct[c * k + q] + cluster.exec_time(wf.task(c).work, q) + comm;
+                    if cost < best {
+                        best = cost;
+                    }
+                }
+                if best > worst {
+                    worst = best;
+                }
+            }
+            oct[u * k + j] = worst;
+        }
+    }
+    oct
+}
+
+/// PEFT ranks: the per-task average of [`oct_table`]'s rows.
+pub fn oct_ranks(wf: &Workflow, cluster: &Cluster) -> Vec<f64> {
+    let k = cluster.len();
+    let oct = oct_table(wf, cluster);
+    (0..wf.num_tasks()).map(|v| oct[v * k..(v + 1) * k].iter().sum::<f64>() / k as f64).collect()
+}
+
+/// Rank order for PEFT: priority-list order by average OCT.
+pub fn rank_peft(wf: &Workflow, cluster: &Cluster) -> Vec<TaskId> {
+    priority_topo_order(wf, &oct_ranks(wf, cluster))
+}
+
+/// DLS static levels: `SL(v) = w_v/s̄ + max_c SL(c)` — the bottom level
+/// *without* communication terms (Sih & Lee's definition, converted to
+/// time over the mean speed like the other ranks).
+pub fn static_levels(wf: &Workflow, cluster: &Cluster) -> Vec<f64> {
+    let s = cluster.mean_speed();
+    let order = wf.topological_order();
+    let mut sl = vec![0.0f64; wf.num_tasks()];
+    for &u in order.iter().rev() {
+        let mut best = 0.0f64;
+        for (v, _) in wf.children(u) {
+            best = best.max(sl[v]);
+        }
+        sl[u] = wf.task(u).work / s + best;
+    }
+    sl
+}
+
+/// Nominal rank order for DLS: priority-list order by static level. The
+/// engine re-ranks dynamically at every step; this order seeds resume
+/// paths and the topological debug check only.
+pub fn rank_dls(wf: &Workflow, cluster: &Cluster) -> Vec<TaskId> {
+    priority_topo_order(wf, &static_levels(wf, cluster))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +256,60 @@ mod tests {
         assert!(wf.is_topological_order(&rank_bl(&wf, &cluster)));
         assert!(wf.is_topological_order(&rank_blc(&wf, &cluster)));
         assert!(wf.is_topological_order(&rank_mm(&wf)));
+    }
+
+    #[test]
+    fn oct_table_and_peft_rank() {
+        let wf = wf();
+        let cluster = small_cluster();
+        let k = cluster.len();
+        let oct = oct_table(&wf, &cluster);
+        // Sinks have zero OCT on every processor.
+        assert!(oct[3 * k..4 * k].iter().all(|&x| x == 0.0));
+        // Non-sinks are strictly positive (children have positive work).
+        for v in 0..3 {
+            assert!(oct[v * k..(v + 1) * k].iter().all(|&x| x > 0.0), "task {v}");
+        }
+        // OCT of a parent dominates the child's best-case chain: for any
+        // j, OCT(0, j) ≥ min_q (OCT(1, q) + w_1/s_q) (comm ≥ 0).
+        let best_child: f64 = (0..k)
+            .map(|q| oct[k + q] + cluster.exec_time(wf.task(1).work, q))
+            .fold(f64::INFINITY, f64::min);
+        for j in 0..k {
+            assert!(oct[j] + 1e-9 >= best_child);
+        }
+        let order = rank_peft(&wf, &cluster);
+        assert!(wf.is_topological_order(&order));
+    }
+
+    #[test]
+    fn static_levels_and_dls_rank() {
+        let wf = wf();
+        let cluster = small_cluster();
+        let sl = static_levels(&wf, &cluster);
+        let bl = bottom_levels(&wf, &cluster);
+        // SL is bl without comm terms: never larger, monotone along edges.
+        for u in 0..wf.num_tasks() {
+            assert!(sl[u] <= bl[u] + 1e-12);
+        }
+        for e in wf.edges() {
+            assert!(sl[e.src] > sl[e.dst]);
+        }
+        assert!(wf.is_topological_order(&rank_dls(&wf, &cluster)));
+    }
+
+    #[test]
+    fn priority_topo_order_handles_non_monotone_keys() {
+        // Keys *inverted* along every edge: a plain descending sort would
+        // emit children first; the ready-list order must stay topological
+        // and, within the ready set, prefer the largest key.
+        let wf = wf();
+        let inverted: Vec<f64> = (0..wf.num_tasks()).map(|v| v as f64).collect();
+        let order = priority_topo_order(&wf, &inverted);
+        assert!(wf.is_topological_order(&order));
+        // After the source, tasks 1 and 2 are both ready: 2 has the
+        // larger key and must come first.
+        assert_eq!(order, vec![0, 2, 1, 3]);
     }
 
     #[test]

@@ -94,7 +94,7 @@ pub fn retrace(
 mod tests {
     use super::*;
     use crate::platform::presets::small_cluster;
-    use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+    use crate::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
     use crate::workflow::{Workflow, WorkflowBuilder};
 
     fn sample_wf() -> Workflow {
@@ -137,7 +137,7 @@ mod tests {
         let wf = sample_wf();
         let cluster = small_cluster();
         for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm] {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             assert!(s.valid, "{algo:?}");
             let r = retrace(&wf, &cluster, &s, EvictionPolicy::LargestFirst, &[]);
             assert!(r.valid, "{algo:?}: {:?}", r.failure);
@@ -154,7 +154,7 @@ mod tests {
     fn longer_tasks_delay_makespan_but_stay_valid() {
         let wf = sample_wf();
         let cluster = small_cluster();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         let slower = scale_works(&wf, 1.5);
         let r = retrace(&slower, &cluster, &s, EvictionPolicy::LargestFirst, &[]);
@@ -166,7 +166,7 @@ mod tests {
     fn memory_blowup_invalidates() {
         let wf = sample_wf();
         let cluster = small_cluster();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         // 50× memory cannot fit anywhere.
         let heavy = scale_mems(&wf, 50.0);
@@ -179,7 +179,7 @@ mod tests {
     fn lost_processor_invalidates() {
         let wf = sample_wf();
         let cluster = small_cluster();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         let used_proc = s.tasks[0].proc;
         let r = retrace(&wf, &cluster, &s, EvictionPolicy::LargestFirst, &[used_proc]);
         assert!(!r.valid);
@@ -196,7 +196,7 @@ mod tests {
     fn small_deviation_usually_survives() {
         let wf = sample_wf();
         let cluster = small_cluster();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         // ±3% memory deviation: plenty of slack on the default-ish cluster.
         let wobble = scale_mems(&wf, 1.03);

@@ -377,7 +377,7 @@ impl ScheduleCache {
 mod tests {
     use super::*;
     use crate::platform::presets::small_cluster;
-    use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+    use crate::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
     use crate::service::fingerprint::schedule_fingerprint;
     use crate::workflow::WorkflowBuilder;
 
@@ -398,7 +398,7 @@ mod tests {
         for _ in 0..3 {
             let cs = cache.get_or_compute(fp, || {
                 computes += 1;
-                (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.01)
+                (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run(), 0.01)
             });
             assert!(cs.schedule.valid);
         }
@@ -424,7 +424,7 @@ mod tests {
                     cache.get_or_compute(fp, || {
                         computes.fetch_add(1, Ordering::Relaxed);
                         (
-                            compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst),
+                            ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run(),
                             0.0,
                         )
                     });
@@ -512,7 +512,7 @@ mod tests {
 
         let cold = ScheduleCache::with_config(None, Some(store.clone()));
         let first = cold.get_or_compute_checked(fp, Some(wf.num_tasks()), || {
-            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.25)
+            (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run(), 0.25)
         });
         assert_eq!(cold.stats().computed, 1);
         assert_eq!(cold.stats().disk_hits, 0);
@@ -536,7 +536,7 @@ mod tests {
         let (dir, store) = disk_store("corrupt");
         let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
         ScheduleCache::with_config(None, Some(store.clone())).get_or_compute(fp, || {
-            (compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst), 0.0)
+            (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run(), 0.0)
         });
         let path = dir.join(format!("{fp}.sched"));
         let good = std::fs::read(&path).unwrap();
@@ -550,7 +550,7 @@ mod tests {
             let mut recomputed = false;
             cache.get_or_compute(fp, || {
                 recomputed = true;
-                (compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst), 0.0)
+                (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run(), 0.0)
             });
             assert!(recomputed);
             assert_eq!(cache.stats().disk_hits, 0);
@@ -564,7 +564,7 @@ mod tests {
         let (dir, store) = disk_store("mismatch");
         let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
         ScheduleCache::with_config(None, Some(store.clone())).get_or_compute(fp, || {
-            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.0)
+            (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run(), 0.0)
         });
         // A collision-shaped entry: valid bytes, but the requester's
         // workflow has a different task count.
@@ -572,7 +572,7 @@ mod tests {
         let mut recomputed = false;
         cache.get_or_compute_checked(fp, Some(wf.num_tasks() + 1), || {
             recomputed = true;
-            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.0)
+            (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run(), 0.0)
         });
         assert!(recomputed, "mismatched task count must force a recompute");
         std::fs::remove_dir_all(&dir).ok();
@@ -583,7 +583,8 @@ mod tests {
         let (wf, cluster) = sample();
         let (dir, _) = disk_store("race");
         let fps: Vec<(Algorithm, Fingerprint)> = Algorithm::all()
-            .into_iter()
+            .iter()
+            .copied()
             .map(|a| (a, schedule_fingerprint(&wf, &cluster, a, EvictionPolicy::LargestFirst)))
             .collect();
         std::thread::scope(|s| {
@@ -596,7 +597,7 @@ mod tests {
                     let cache = ScheduleCache::with_config(None, Some(store));
                     for &(algo, fp) in fps {
                         cache.get_or_compute(fp, || {
-                            (compute_schedule(wf, cluster, algo, EvictionPolicy::LargestFirst), 0.0)
+                            (ScheduleRequest::new(wf, cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run(), 0.0)
                         });
                     }
                 });
@@ -628,14 +629,14 @@ mod tests {
         let fp_bl = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
         let fp_mm = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
         cache.get_or_compute(fp_bl, || {
-            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.0)
+            (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run(), 0.0)
         });
         cache.get_or_compute(fp_mm, || {
-            (compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst), 0.0)
+            (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run(), 0.0)
         });
         assert!(!cache.contains(fp_bl), "evicted by the second schedule");
         cache.get_or_compute(fp_bl, || {
-            (compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst), 0.0)
+            (ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run(), 0.0)
         });
         // 3 lookups, 3 computations (one was a post-eviction recompute).
         assert_eq!(cache.stats().computed, 3);

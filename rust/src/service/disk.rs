@@ -427,7 +427,7 @@ impl<'a> Reader<'a> {
 mod tests {
     use super::*;
     use crate::platform::presets::small_cluster;
-    use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+    use crate::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
     use crate::service::fingerprint::schedule_fingerprint;
     use crate::workflow::WorkflowBuilder;
     use std::sync::Arc;
@@ -442,7 +442,7 @@ mod tests {
         let wf = b.build().unwrap();
         let cluster = small_cluster();
         let fp = schedule_fingerprint(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         (fp, CachedSchedule { schedule: Arc::new(s), seconds: 0.125 })
     }
 
@@ -581,10 +581,11 @@ mod tests {
         let wf = b.build().unwrap();
         let cluster = small_cluster();
         Algorithm::all()
-            .into_iter()
+            .iter()
+            .copied()
             .map(|algo| {
                 let fp = schedule_fingerprint(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
-                let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+                let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
                 (fp, CachedSchedule { schedule: Arc::new(s), seconds: 0.0 })
             })
             .collect()
@@ -690,7 +691,7 @@ mod tests {
 
     #[test]
     fn tag_round_trips_match_fingerprint_tags() {
-        for algo in Algorithm::all() {
+        for &algo in Algorithm::all() {
             assert_eq!(algo_from_tag(algo_tag(algo)), Some(algo));
         }
         for policy in [EvictionPolicy::LargestFirst, EvictionPolicy::SmallestFirst] {

@@ -96,12 +96,20 @@ pub(crate) fn algo_tag(algo: Algorithm) -> u64 {
         Algorithm::HeftmBl => 1,
         Algorithm::HeftmBlc => 2,
         Algorithm::HeftmMm => 3,
+        // Tags are append-only: 0–3 predate the portfolio work and are
+        // baked into existing disk caches.
+        Algorithm::Peft => 4,
+        Algorithm::Lookahead => 5,
+        Algorithm::Dls => 6,
+        Algorithm::Portfolio => 7,
     }
 }
 
 /// Inverse of [`algo_tag`]; `None` for unknown tags (corrupt files).
+/// Searches [`Algorithm::variants`] (not `all()`) so the portfolio
+/// meta-algorithm's own tag round-trips too.
 pub(crate) fn algo_from_tag(tag: u64) -> Option<Algorithm> {
-    Algorithm::all().into_iter().find(|&a| algo_tag(a) == tag)
+    Algorithm::variants().iter().copied().find(|&a| algo_tag(a) == tag)
 }
 
 /// Canonical numeric tag of an eviction policy (see [`algo_tag`]).
@@ -243,6 +251,20 @@ mod tests {
         assert_ne!(none, rec);
         assert_ne!(rec, stat);
         assert_ne!(rec, seed2);
+    }
+
+    #[test]
+    fn algo_tags_unique_and_round_trip() {
+        let mut seen = std::collections::HashSet::new();
+        for &a in Algorithm::variants() {
+            let tag = algo_tag(a);
+            assert!(seen.insert(tag), "duplicate algo tag {tag}");
+            assert_eq!(algo_from_tag(tag), Some(a), "tag {tag} must round-trip");
+        }
+        // Pre-portfolio caches encode exactly these tags; keep them frozen.
+        assert_eq!(algo_tag(Algorithm::Heft), 0);
+        assert_eq!(algo_tag(Algorithm::HeftmMm), 3);
+        assert_eq!(algo_from_tag(999), None);
     }
 
     #[test]

@@ -392,6 +392,51 @@ fn parse_sim_point(s: &Value, default_seed: u64) -> anyhow::Result<SimJob> {
     Ok(SimJob { mode, sigma, seed })
 }
 
+/// One algorithm's entry in a portfolio run: its schedule validity and
+/// the σ=0 replay makespan it was ranked by (`NaN` → serialized `null`
+/// for invalid/incomplete candidates, which are never chosen while any
+/// candidate completes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PortfolioCandidate {
+    pub algo: Algorithm,
+    pub valid: bool,
+    pub sim_makespan: f64,
+}
+
+/// The deterministic record of one portfolio decision: every candidate
+/// in [`Algorithm::all`] order plus the committed winner. Attached to a
+/// result line only when the job ran `--algo portfolio`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortfolioOutcome {
+    pub chosen: Algorithm,
+    pub candidates: Vec<PortfolioCandidate>,
+}
+
+impl PortfolioOutcome {
+    /// The `portfolio` object of a result line (stable field order —
+    /// part of the wire format).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("chosen", self.chosen.as_str().into()),
+            (
+                "candidates",
+                Value::Array(
+                    self.candidates
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("algorithm", c.algo.as_str().into()),
+                                ("valid", c.valid.into()),
+                                ("sim_makespan", c.sim_makespan.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// Simulation outcome summary (deterministic fields only).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
@@ -450,12 +495,22 @@ pub struct JobResult {
     pub cache_hit: bool,
     pub valid: bool,
     pub makespan: f64,
+    /// Makespan lower bound of the (workflow, cluster) pair
+    /// ([`crate::scheduler::lower_bound::makespan_lower_bound`]) —
+    /// algorithm-independent, so equal across a workload's rows.
+    pub lower_bound: f64,
+    /// `(makespan − lower_bound) / lower_bound`, clamped at 0
+    /// ([`crate::scheduler::lower_bound::optimality_gap`]); `NaN`
+    /// (serialized `null`) when the makespan itself is `NaN`.
+    pub optimality_gap: f64,
     pub mem_usage: f64,
     pub procs_used: usize,
     pub evictions: usize,
     /// Wall seconds of the schedule computation (shared by cache hits).
     /// Not serialized: wall times would break byte-determinism.
     pub seconds: f64,
+    /// The portfolio decision record (`--algo portfolio` jobs only).
+    pub portfolio: Option<PortfolioOutcome>,
     pub sim: Option<SimResult>,
 }
 
@@ -472,10 +527,13 @@ impl JobResult {
             cache_hit: false,
             valid: false,
             makespan: f64::NAN,
+            lower_bound: f64::NAN,
+            optimality_gap: f64::NAN,
             mem_usage: f64::NAN,
             procs_used: 0,
             evictions: 0,
             seconds: 0.0,
+            portfolio: None,
             sim: None,
         }
     }
@@ -495,10 +553,15 @@ impl JobResult {
             ("cache_hit", self.cache_hit.into()),
             ("valid", self.valid.into()),
             ("makespan", self.makespan.into()),
+            ("lower_bound", self.lower_bound.into()),
+            ("optimality_gap", self.optimality_gap.into()),
             ("mem_usage", self.mem_usage.into()),
             ("procs_used", self.procs_used.into()),
             ("evictions", self.evictions.into()),
         ];
+        if let Some(p) = &self.portfolio {
+            fields.push(("portfolio", p.to_json()));
+        }
         if let Some(sim) = &self.sim {
             fields.push(("sim", sim.to_json()));
         }
@@ -528,10 +591,13 @@ mod tests {
             cache_hit: true,
             valid: true,
             makespan: 12.5,
+            lower_bound: 10.0,
+            optimality_gap: 0.25,
             mem_usage: 0.25,
             procs_used: 3,
             evictions: 1,
             seconds: 0.5,
+            portfolio: None,
             sim: Some(SimResult {
                 mode: SimMode::Recompute,
                 completed: true,
@@ -544,9 +610,31 @@ mod tests {
         assert!(line.starts_with("{\"id\":3,\"workflow\":\"wf\""), "{line}");
         let v = Value::parse(&line).unwrap();
         assert_eq!(v.req_f64("makespan").unwrap(), 12.5);
+        assert_eq!(v.req_f64("lower_bound").unwrap(), 10.0);
+        assert_eq!(v.req_f64("optimality_gap").unwrap(), 0.25);
         assert_eq!(v.get("sim").unwrap().req_usize("recomputations").unwrap(), 2);
         // Wall time must not leak into the line.
         assert!(!line.contains("seconds"));
+    }
+
+    #[test]
+    fn portfolio_outcome_serializes_candidates_in_order() {
+        let p = PortfolioOutcome {
+            chosen: Algorithm::HeftmMm,
+            candidates: vec![
+                PortfolioCandidate { algo: Algorithm::Heft, valid: false, sim_makespan: f64::NAN },
+                PortfolioCandidate { algo: Algorithm::HeftmMm, valid: true, sim_makespan: 9.5 },
+            ],
+        };
+        let line = p.to_json().to_string_compact();
+        assert!(line.starts_with("{\"chosen\":\"heftm-mm\""), "{line}");
+        // NaN scores (invalid candidates) serialize as null, not as
+        // invalid JSON.
+        assert!(line.contains("\"sim_makespan\":null"), "{line}");
+        assert!(line.contains("\"sim_makespan\":9.5"), "{line}");
+        let heft = line.find("\"heft\"").unwrap();
+        let mm = line.rfind("\"heftm-mm\"").unwrap();
+        assert!(heft < mm, "candidates keep Algorithm::all() order: {line}");
     }
 
     #[test]

@@ -72,7 +72,8 @@ pub use cache::{CacheStats, CachedSchedule, OnceMap, ScheduleCache};
 pub use disk::DiskStore;
 pub use fingerprint::Fingerprint;
 pub use job::{
-    ClusterSpec, Job, JobResult, JobSource, JobSpec, ParseDefaults, ReplaySweep, SimJob, SimResult,
+    ClusterSpec, Job, JobResult, JobSource, JobSpec, ParseDefaults, PortfolioCandidate,
+    PortfolioOutcome, ReplaySweep, SimJob, SimResult,
 };
 pub use pool::ScorePool;
 pub use serve::{ServeOptions, ServeSummary};
@@ -85,9 +86,10 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::obs;
 use crate::platform::Cluster;
-use crate::scheduler::{compute_schedule_with, Schedule};
+use crate::scheduler::lower_bound::{makespan_lower_bound, optimality_gap};
+use crate::scheduler::{Algorithm, EvictionPolicy, Schedule, ScheduleRequest};
 use crate::ser::json::{obj, Value};
-use crate::simulator::{DeviationModel, SimConfig, SimOutcome, SimRun, SimScaffold};
+use crate::simulator::{DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold};
 use crate::workflow::Workflow;
 
 thread_local! {
@@ -223,8 +225,12 @@ pub struct SchedulingService {
     workflows: Memo<Arc<Workflow>>,
     clusters: Memo<Arc<Cluster>>,
     /// [`SimScaffold`]s constructed: one per replay sweep (shared by all
-    /// of its points via a `OnceLock`), one per plain simulation job.
+    /// of its points via a `OnceLock`), one per plain simulation job,
+    /// one per portfolio candidate replay.
     scaffolds_built: AtomicUsize,
+    /// Portfolio decisions committed (one per executed `--algo
+    /// portfolio` job; deduped portfolio jobs reuse the original's).
+    portfolio_commits: AtomicUsize,
 }
 
 impl Default for SchedulingService {
@@ -243,6 +249,10 @@ struct Prepared {
     cluster: Arc<Cluster>,
     sched_fp: Fingerprint,
     job_fp: Fingerprint,
+    /// Makespan lower bound of the (workflow, cluster) pair — computed
+    /// once per preparation (per sweep on the sweep path) and reported
+    /// on every result row as `lower_bound` / `optimality_gap`.
+    lower_bound: f64,
     /// Simulation-scaffold cell shared by every replay point of one
     /// sweep, so the scaffold is built exactly once per sweep (by
     /// whichever point executes first). `None` for plain jobs — each
@@ -259,6 +269,8 @@ struct Executed {
     procs_used: usize,
     evictions: usize,
     seconds: f64,
+    /// The portfolio decision record (`--algo portfolio` jobs only).
+    portfolio: Option<PortfolioOutcome>,
     sim: Option<SimResult>,
 }
 
@@ -276,6 +288,7 @@ impl SchedulingService {
             workflows: Memo::default(),
             clusters: Memo::default(),
             scaffolds_built: AtomicUsize::new(0),
+            portfolio_commits: AtomicUsize::new(0),
         }
     }
 
@@ -412,6 +425,7 @@ impl SchedulingService {
             schedule_reuse_hits: stats.hits() as u64,
             disk_hits: stats.disk_hits as u64,
             scaffolds_built: self.scaffolds_built() as u64,
+            portfolio_commits: self.portfolio_commits.load(Ordering::Relaxed) as u64,
         }
     }
 
@@ -496,20 +510,23 @@ impl SchedulingService {
         &self,
         source: &JobSource,
         cluster: &ClusterSpec,
-        algo: crate::scheduler::Algorithm,
-        policy: crate::scheduler::EvictionPolicy,
-    ) -> Result<(Arc<Workflow>, Arc<Cluster>, Fingerprint), String> {
+        algo: Algorithm,
+        policy: EvictionPolicy,
+    ) -> Result<(Arc<Workflow>, Arc<Cluster>, Fingerprint, f64), String> {
         let wf = self.workflow(source)?;
         let cluster = self.cluster(cluster)?;
         let sched_fp = fingerprint::schedule_fingerprint(&wf, &cluster, algo, policy);
-        Ok((wf, cluster, sched_fp))
+        // Algorithm-independent, O(n + m): one bound per preparation
+        // (per sweep on the sweep path), shared by all of its results.
+        let lower_bound = makespan_lower_bound(&wf, &cluster);
+        Ok((wf, cluster, sched_fp, lower_bound))
     }
 
     fn prepare(&self, job: &Job) -> Result<Prepared, String> {
-        let (wf, cluster, sched_fp) =
+        let (wf, cluster, sched_fp, lower_bound) =
             self.prepare_schedule(&job.source, &job.cluster, job.algo, job.policy)?;
         let job_fp = fingerprint::job_fingerprint(sched_fp, job.sim.as_ref());
-        Ok(Prepared { wf, cluster, sched_fp, job_fp, scaffold: None })
+        Ok(Prepared { wf, cluster, sched_fp, job_fp, lower_bound, scaffold: None })
     }
 
     /// Execute one replay point: resolve the simulation scaffold (the
@@ -536,62 +553,74 @@ impl SchedulingService {
         SIM_ARENA.with(|arena| arena.borrow_mut().simulate_summary(&scaffold, cfg))
     }
 
-    fn execute(&self, job: &Job, prep: &Prepared) -> Executed {
-        let _exec_span = obs::span(obs::SpanKind::Execute);
-        // Auto mode: small instances skip the pool (serial scoring wins
-        // below the crossover); schedules are byte-identical either way.
-        let score_pool = if self.score_auto
-            && crate::scheduler::auto_score_threads(&prep.wf, &prep.cluster) == 1
-        {
+    /// The scoring pool this execution should apply, with the auto-mode
+    /// gate: small instances skip the pool (serial scoring wins below
+    /// the crossover); schedules are byte-identical either way.
+    fn score_pool_for(&self, prep: &Prepared) -> Option<&ScorePool> {
+        if self.score_auto && crate::scheduler::auto_score_threads(&prep.wf, &prep.cluster) == 1 {
             None
         } else {
             self.pick_score_pool()
-        };
-        let cached = self.schedules.get_or_compute_checked(
-            prep.sched_fp,
-            Some(prep.wf.num_tasks()),
-            || {
-                let tasks = prep.wf.num_tasks() as u32;
-                if obs::enabled() {
-                    obs::record(obs::Event::ScheduleStart { tasks });
-                }
-                let _compute_span = obs::span(obs::SpanKind::ScheduleCompute);
-                let t0 = std::time::Instant::now();
-                let s = compute_schedule_with(
-                    &prep.wf,
-                    &prep.cluster,
-                    job.algo,
-                    job.policy,
-                    score_pool,
-                );
-                let seconds = t0.elapsed().as_secs_f64();
-                if obs::enabled() {
-                    obs::record(obs::Event::ScheduleEnd {
-                        tasks,
-                        micros: (seconds * 1e6) as u64,
-                    });
-                }
-                (s, seconds)
-            },
-        );
-        let schedule = &cached.schedule;
-        let sim = job.sim.map(|sj| {
-            if !schedule.valid {
-                // Mirrors `experiments::run_dynamic`: executions of
-                // invalid schedules are not attempted.
-                SimResult {
-                    mode: sj.mode,
-                    completed: false,
-                    makespan: f64::NAN,
-                    recomputations: 0,
-                    started: 0,
-                }
-            } else {
-                let cfg = SimConfig::new(sj.mode, DeviationModel::new(sj.sigma, sj.seed));
-                let out = self.run_point(prep, &cached.schedule, &cfg);
-                SimResult::from_outcome(sj.mode, &out)
+        }
+    }
+
+    /// Compute (or cache-hit) one schedule under `fp` — the single
+    /// compute closure of the plain and portfolio execution paths.
+    fn compute_cached(
+        &self,
+        fp: Fingerprint,
+        algo: Algorithm,
+        policy: EvictionPolicy,
+        prep: &Prepared,
+        score_pool: Option<&ScorePool>,
+    ) -> CachedSchedule {
+        self.schedules.get_or_compute_checked(fp, Some(prep.wf.num_tasks()), || {
+            let tasks = prep.wf.num_tasks() as u32;
+            if obs::enabled() {
+                obs::record(obs::Event::ScheduleStart { tasks });
             }
-        });
+            let _compute_span = obs::span(obs::SpanKind::ScheduleCompute);
+            let t0 = std::time::Instant::now();
+            let s = ScheduleRequest::new(&prep.wf, &prep.cluster)
+                .algo(algo)
+                .policy(policy)
+                .score_pool(score_pool)
+                .run();
+            let seconds = t0.elapsed().as_secs_f64();
+            if obs::enabled() {
+                obs::record(obs::Event::ScheduleEnd { tasks, micros: (seconds * 1e6) as u64 });
+            }
+            (s, seconds)
+        })
+    }
+
+    /// Run one job-level simulation point against a committed schedule.
+    /// Mirrors `experiments::run_dynamic`: executions of invalid
+    /// schedules are not attempted.
+    fn job_sim(&self, prep: &Prepared, schedule: &Arc<Schedule>, sj: SimJob) -> SimResult {
+        if !schedule.valid {
+            return SimResult {
+                mode: sj.mode,
+                completed: false,
+                makespan: f64::NAN,
+                recomputations: 0,
+                started: 0,
+            };
+        }
+        let cfg = SimConfig::new(sj.mode, DeviationModel::new(sj.sigma, sj.seed));
+        let out = self.run_point(prep, schedule, &cfg);
+        SimResult::from_outcome(sj.mode, &out)
+    }
+
+    fn execute(&self, job: &Job, prep: &Prepared) -> Executed {
+        if job.algo == Algorithm::Portfolio {
+            return self.execute_portfolio(job, prep);
+        }
+        let _exec_span = obs::span(obs::SpanKind::Execute);
+        let score_pool = self.score_pool_for(prep);
+        let cached = self.compute_cached(prep.sched_fp, job.algo, job.policy, prep, score_pool);
+        let schedule = &cached.schedule;
+        let sim = job.sim.map(|sj| self.job_sim(prep, schedule, sj));
         Executed {
             valid: schedule.valid,
             makespan: schedule.makespan,
@@ -599,6 +628,96 @@ impl SchedulingService {
             procs_used: schedule.procs_used(),
             evictions: schedule.tasks.iter().map(|t| t.evicted.len()).sum(),
             seconds: cached.seconds,
+            portfolio: None,
+            sim,
+        }
+    }
+
+    /// `--algo portfolio`: compute every standalone candidate (each
+    /// through the shared schedule cache under its **own** algorithm's
+    /// fingerprint — never the portfolio fingerprint, so candidate
+    /// schedules are shared with plain jobs and warm/cold runs emit
+    /// identical bytes), score each valid candidate by a deterministic
+    /// σ=0 FollowStatic replay, and commit the minimum simulated
+    /// makespan. Ties break to the lowest [`Algorithm::all`] index; if
+    /// no candidate completes its replay, the minimum analytic makespan
+    /// wins instead. The loop is serial per job — parallelism lives in
+    /// the scoring pool inside each candidate computation and across
+    /// jobs on the batch pool — so the decision is independent of
+    /// worker count by construction.
+    fn execute_portfolio(&self, job: &Job, prep: &Prepared) -> Executed {
+        let _exec_span = obs::span(obs::SpanKind::Execute);
+        let score_pool = self.score_pool_for(prep);
+        // Candidate replays must not populate a sweep's shared scaffold
+        // cell — that belongs to the winner's replay points. Score
+        // through a cell-less view of the same preparation.
+        let cand_prep = Prepared { scaffold: None, ..prep.clone() };
+        let mut cands: Vec<(Algorithm, CachedSchedule, f64)> =
+            Vec::with_capacity(Algorithm::all().len());
+        for &algo in Algorithm::all() {
+            let fp = fingerprint::schedule_fingerprint(&prep.wf, &prep.cluster, algo, job.policy);
+            let cached = self.compute_cached(fp, algo, job.policy, prep, score_pool);
+            let sim_makespan = if cached.schedule.valid {
+                let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::new(0.0, 0));
+                let out = self.run_point(&cand_prep, &cached.schedule, &cfg);
+                if out.completed {
+                    out.makespan
+                } else {
+                    f64::NAN
+                }
+            } else {
+                f64::NAN
+            };
+            cands.push((algo, cached, sim_makespan));
+        }
+        // Argmin simulated makespan; strict `<` keeps the lowest index
+        // on ties.
+        let mut winner: Option<usize> = None;
+        for (i, c) in cands.iter().enumerate() {
+            if c.2.is_finite() && winner.is_none_or(|w| c.2 < cands[w].2) {
+                winner = Some(i);
+            }
+        }
+        // All candidates invalid/incomplete: fall back to the analytic
+        // makespan so the row still reports the least-bad schedule.
+        let winner = winner.unwrap_or_else(|| {
+            let mut best = 0;
+            for i in 1..cands.len() {
+                let (m, b) = (cands[i].1.schedule.makespan, cands[best].1.schedule.makespan);
+                if m < b || (m.is_finite() && !b.is_finite()) {
+                    best = i;
+                }
+            }
+            best
+        });
+        self.portfolio_commits.fetch_add(1, Ordering::Relaxed);
+        if obs::enabled() {
+            obs::record(obs::Event::PortfolioCommitted { algo: winner as u32 });
+        }
+        let outcome = PortfolioOutcome {
+            chosen: cands[winner].0,
+            candidates: cands
+                .iter()
+                .map(|&(algo, ref c, sim_makespan)| PortfolioCandidate {
+                    algo,
+                    valid: c.schedule.valid,
+                    sim_makespan,
+                })
+                .collect(),
+        };
+        let cached = &cands[winner].1;
+        let schedule = &cached.schedule;
+        // "Cost of this schedule": the portfolio paid for every candidate.
+        let seconds: f64 = cands.iter().map(|c| c.1.seconds).sum();
+        let sim = job.sim.map(|sj| self.job_sim(prep, schedule, sj));
+        Executed {
+            valid: schedule.valid,
+            makespan: schedule.makespan,
+            mem_usage: schedule.mean_mem_usage(),
+            procs_used: schedule.procs_used(),
+            evictions: schedule.tasks.iter().map(|t| t.evicted.len()).sum(),
+            seconds,
+            portfolio: Some(outcome),
             sim,
         }
     }
@@ -680,7 +799,7 @@ impl SchedulingService {
     /// expansion into per-point prepared jobs is exactly
     /// [`ReplaySweep::flatten`].
     fn prepare_sweeps(&self, sweeps: Vec<ReplaySweep>) -> Vec<(Job, Result<Prepared, String>)> {
-        type SweepPrep = (Arc<Workflow>, Arc<Cluster>, Fingerprint);
+        type SweepPrep = (Arc<Workflow>, Arc<Cluster>, Fingerprint, f64);
         let sweep_prepared: Vec<(ReplaySweep, Result<SweepPrep, String>)> =
             pool::run_ordered(sweeps, self.workers, |_, sweep| {
                 let prep =
@@ -701,11 +820,12 @@ impl SchedulingService {
             for job in sweep.flatten() {
                 let p = match prep {
                     Err(e) => Err(e.clone()),
-                    Ok((wf, cluster, sched_fp)) => Ok(Prepared {
+                    Ok((wf, cluster, sched_fp, lower_bound)) => Ok(Prepared {
                         wf: wf.clone(),
                         cluster: cluster.clone(),
                         sched_fp: *sched_fp,
                         job_fp: fingerprint::job_fingerprint(*sched_fp, job.sim.as_ref()),
+                        lower_bound: *lower_bound,
                         scaffold: Some(scaffold_cell.clone()),
                     }),
                 };
@@ -874,10 +994,13 @@ impl SchedulingService {
                 cache_hit: representative[&p.job_fp.0] != i || pre_cached[&p.job_fp.0],
                 valid: ex.valid,
                 makespan: ex.makespan,
+                lower_bound: p.lower_bound,
+                optimality_gap: optimality_gap(ex.makespan, p.lower_bound),
                 mem_usage: ex.mem_usage,
                 procs_used: ex.procs_used,
                 evictions: ex.evictions,
                 seconds: ex.seconds,
+                portfolio: ex.portfolio,
                 sim: ex.sim,
             }
         };
@@ -1138,7 +1261,7 @@ mod tests {
     fn streaming_emits_in_submission_order_and_matches_run_batch() {
         let cluster = Arc::new(small_cluster());
         let mut jobs = Vec::new();
-        for algo in Algorithm::all() {
+        for &algo in Algorithm::all() {
             jobs.push(spec_job("chipseq", 1, algo, &cluster));
             jobs.push(spec_job("eager", 2, algo, &cluster));
         }
@@ -1170,7 +1293,8 @@ mod tests {
         let cluster = Arc::new(small_cluster());
         let jobs = |_: ()| -> Vec<Job> {
             Algorithm::all()
-                .into_iter()
+                .iter()
+                .copied()
                 .map(|algo| spec_job("methylseq", 1, algo, &cluster))
                 .collect()
         };
@@ -1195,7 +1319,8 @@ mod tests {
         let cluster = Arc::new(small_cluster());
         let jobs = |_: ()| -> Vec<Job> {
             Algorithm::all()
-                .into_iter()
+                .iter()
+                .copied()
                 .map(|algo| spec_job("methylseq", 1, algo, &cluster))
                 .collect()
         };
@@ -1338,7 +1463,8 @@ mod tests {
         let cluster = Arc::new(small_cluster());
         let jobs = |_: ()| -> Vec<Job> {
             Algorithm::all()
-                .into_iter()
+                .iter()
+                .copied()
                 .map(|algo| spec_job("bacass", 1, algo, &cluster))
                 .collect()
         };
@@ -1346,6 +1472,44 @@ mod tests {
         let serial = SchedulingService::from_config(cfg(ScoreThreadSpec::Fixed(1))).unwrap();
         let auto = SchedulingService::from_config(cfg(ScoreThreadSpec::Auto)).unwrap();
         assert_eq!(to_jsonl(&serial.run_batch(jobs(()))), to_jsonl(&auto.run_batch(jobs(()))));
+    }
+
+    #[test]
+    fn portfolio_jobs_commit_the_best_replayed_candidate() {
+        let cluster = Arc::new(small_cluster());
+        let svc = SchedulingService::new(2);
+        let results = svc.run_batch(vec![spec_job("chipseq", 1, Algorithm::Portfolio, &cluster)]);
+        let r = &results[0];
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.algo, Algorithm::Portfolio);
+        let p = r.portfolio.as_ref().expect("portfolio rows carry the decision record");
+        assert_eq!(
+            p.candidates.iter().map(|c| c.algo).collect::<Vec<_>>(),
+            Algorithm::all().to_vec(),
+            "one candidate per standalone algorithm, in registry order"
+        );
+        let chosen = p.candidates.iter().find(|c| c.algo == p.chosen).unwrap();
+        assert!(chosen.valid && chosen.sim_makespan.is_finite());
+        for c in &p.candidates {
+            if c.sim_makespan.is_finite() {
+                assert!(
+                    chosen.sim_makespan <= c.sim_makespan,
+                    "{:?} ({}) beat the committed {:?} ({})",
+                    c.algo,
+                    c.sim_makespan,
+                    p.chosen,
+                    chosen.sim_makespan
+                );
+            }
+        }
+        // The row's payload is the winner's schedule, with a valid gap.
+        assert!(r.valid);
+        assert!(r.lower_bound > 0.0 && r.makespan + 1e-9 >= r.lower_bound);
+        assert!(r.optimality_gap >= 0.0 && r.optimality_gap.is_finite());
+        assert_eq!(svc.counters().portfolio_commits, 1);
+        // Non-portfolio rows never carry the record.
+        let plain = svc.run_batch(vec![spec_job("chipseq", 1, Algorithm::HeftmBl, &cluster)]);
+        assert!(plain[0].portfolio.is_none());
     }
 
     #[test]
@@ -1365,7 +1529,8 @@ mod tests {
         let cluster = Arc::new(small_cluster());
         let jobs = |_: ()| -> Vec<Job> {
             Algorithm::all()
-                .into_iter()
+                .iter()
+                .copied()
                 .map(|algo| spec_job("methylseq", 0, algo, &cluster))
                 .collect()
         };
@@ -1376,7 +1541,7 @@ mod tests {
         };
         let cold = SchedulingService::from_config(disk_cfg()).unwrap();
         let cold_out = to_jsonl(&cold.run_batch(jobs(())));
-        assert_eq!(cold.cache_stats().computed, 4);
+        assert_eq!(cold.cache_stats().computed, Algorithm::all().len());
         assert_eq!(cold.cache_stats().disk_hits, 0);
 
         // A fresh service ("new process") on the same directory loads
@@ -1385,13 +1550,13 @@ mod tests {
         let warm_out = to_jsonl(&warm.run_batch(jobs(())));
         assert_eq!(warm_out, cold_out, "warm disk cache must not change output bytes");
         assert_eq!(warm.cache_stats().computed, 0, "warm run computes nothing");
-        assert_eq!(warm.cache_stats().disk_hits, 4);
+        assert_eq!(warm.cache_stats().disk_hits, Algorithm::all().len());
 
         // The summary record carries the reuse counters.
-        let summary = warm.summary_json(4, 0, 0);
+        let summary = warm.summary_json(Algorithm::all().len(), 0, 0);
         let line = summary.to_string_compact();
         assert!(line.contains("\"schedules_computed\":0"), "{line}");
-        assert!(line.contains("\"disk_hits\":4"), "{line}");
+        assert!(line.contains(&format!("\"disk_hits\":{}", Algorithm::all().len())), "{line}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1428,7 +1593,8 @@ mod tests {
         let cluster = Arc::new(small_cluster());
         let jobs = |_: ()| -> Vec<Job> {
             Algorithm::all()
-                .into_iter()
+                .iter()
+                .copied()
                 .map(|algo| spec_job("chipseq", 2, algo, &cluster))
                 .collect()
         };
@@ -1536,7 +1702,8 @@ mod tests {
         let cluster = Arc::new(small_cluster());
         let jobs = |_: ()| -> Vec<Job> {
             Algorithm::all()
-                .into_iter()
+                .iter()
+                .copied()
                 .map(|algo| spec_job("bacass", 0, algo, &cluster))
                 .collect()
         };

@@ -1042,7 +1042,7 @@ impl SimRun {
 mod tests {
     use super::*;
     use crate::platform::presets::small_cluster;
-    use crate::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+    use crate::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
 
     fn sample(samples: usize, seed: u64) -> (Workflow, Cluster) {
         let model = crate::generator::models::chipseq();
@@ -1058,7 +1058,7 @@ mod tests {
     #[test]
     fn zero_deviation_follows_schedule() {
         let (wf, cluster) = sample(6, 1);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::none(1));
         let out = simulate(&wf, &cluster, &s, &cfg);
@@ -1074,7 +1074,7 @@ mod tests {
     #[test]
     fn deviations_change_makespan_deterministically() {
         let (wf, cluster) = sample(6, 2);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::new(0.1, 7));
         let a = simulate(&wf, &cluster, &s, &cfg);
         let b = simulate(&wf, &cluster, &s, &cfg);
@@ -1090,7 +1090,7 @@ mod tests {
         // Constrained memories: upward deviations break static schedules.
         let (wf, cluster) = sample(10, 3);
         let tight = cluster.scale_memory(0.12, "tight");
-        let s = compute_schedule(&wf, &tight, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &tight).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run();
         if !s.valid {
             return; // instance unschedulable even statically; not this test
         }
@@ -1103,7 +1103,7 @@ mod tests {
     #[test]
     fn recompute_triggered_by_large_deviation() {
         let (wf, cluster) = sample(6, 4);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         // 30% sigma guarantees many tasks cross the 10% threshold.
         let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.3, 5));
@@ -1116,7 +1116,7 @@ mod tests {
     fn finish_times_respect_dependencies() {
         let (wf, cluster) = sample(5, 6);
         let s =
-            compute_schedule(&wf, &cluster, Algorithm::HeftmBlc, EvictionPolicy::LargestFirst);
+            ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBlc).policy(EvictionPolicy::LargestFirst).run();
         let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.1, 13));
         let out = simulate(&wf, &cluster, &s, &cfg);
         assert!(out.completed, "{:?}", out.failure);
@@ -1131,8 +1131,8 @@ mod tests {
     #[test]
     fn all_algorithms_simulate_cleanly_small() {
         let (wf, cluster) = sample(4, 8);
-        for algo in Algorithm::all() {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        for &algo in Algorithm::all() {
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             for mode in [SimMode::FollowStatic, SimMode::Recompute] {
                 let cfg = SimConfig::new(mode, DeviationModel::new(0.05, 21));
                 let out = simulate(&wf, &cluster, &s, &cfg);
@@ -1168,7 +1168,7 @@ mod tests {
         // contract the replay engine is built on.
         let (wf, cluster) = sample(8, 9);
         for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             let scaffold = SimScaffold::new(
                 Arc::new(wf.clone()),
                 Arc::new(cluster.clone()),
@@ -1202,7 +1202,7 @@ mod tests {
         // The `recompute_triggered_by_large_deviation` instance: valid,
         // and sigma 0.3 reliably dirties the plan mid-run.
         let (wf, cluster) = sample(6, 4);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         let scaffold =
             SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(s));
@@ -1238,8 +1238,8 @@ mod tests {
         // different workflows, clusters, and schedules back to back.
         let (wf_a, cluster_a) = sample(8, 1);
         let (wf_b, cluster_b) = sample(4, 2);
-        let s_a = compute_schedule(&wf_a, &cluster_a, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
-        let s_b = compute_schedule(&wf_b, &cluster_b, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        let s_a = ScheduleRequest::new(&wf_a, &cluster_a).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
+        let s_b = ScheduleRequest::new(&wf_b, &cluster_b).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run();
         let sc_a = SimScaffold::new(
             Arc::new(wf_a.clone()),
             Arc::new(cluster_a.clone()),
@@ -1270,7 +1270,7 @@ mod tests {
         b.edge(a, c, 1.0);
         let wf = b.build().unwrap();
         let cluster = small_cluster();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(!s.valid);
         let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::none(1));
         let out = simulate(&wf, &cluster, &s, &cfg);
@@ -1285,7 +1285,7 @@ mod tests {
         // Completed tasks report a real time through the accessor (the
         // `zero_deviation_follows_schedule` instance, known valid).
         let (wf2, cluster2) = sample(6, 1);
-        let s2 = compute_schedule(&wf2, &cluster2, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s2 = ScheduleRequest::new(&wf2, &cluster2).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s2.valid);
         let done = simulate(&wf2, &cluster2, &s2, &SimConfig::new(SimMode::FollowStatic, DeviationModel::none(1)));
         assert!(done.completed);
@@ -1305,7 +1305,7 @@ mod tests {
         // the scaffold's hoisted partitions — zero `wf.edge()` touches
         // in the start/finish hot loop.
         let (wf, cluster) = sample(8, 9);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         let scaffold = SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(s));
         let mut run = SimRun::new();
         for sigma in [0.0, 0.1, 0.3] {
@@ -1324,7 +1324,7 @@ mod tests {
         // it. Every `wf.edge()` touch must be accounted to a declared
         // walk; a second derivation site breaks the equality.
         let (wf, cluster) = sample(6, 4);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         let scaffold = SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(s));
         let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.3, 5));
@@ -1342,7 +1342,7 @@ mod tests {
         // partitions — zero edge touches and bit-parity with a fresh
         // run.
         let (wf, cluster) = sample(6, 4);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         let scaffold = SimScaffold::new(
             Arc::new(wf.clone()),
@@ -1371,7 +1371,7 @@ mod tests {
         // modes.
         let (wf, cluster) = sample(8, 9);
         for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             let scaffold = SimScaffold::new(
                 Arc::new(wf.clone()),
                 Arc::new(cluster.clone()),
@@ -1399,7 +1399,7 @@ mod tests {
         // Structural check on the scaffold build: partitions, remote
         // sums, out-triples, and in-degrees agree with a direct walk.
         let (wf, cluster) = sample(8, 3);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         let sc = SimScaffold::new(Arc::new(wf.clone()), Arc::new(cluster), Arc::new(s.clone()));
         for v in 0..wf.num_tasks() {
             let j = s.tasks[v].proc;

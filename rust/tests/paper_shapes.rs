@@ -11,7 +11,7 @@
 
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::{default_cluster, memory_constrained_cluster};
-use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 
 fn workload(family: &str, size: usize, input: usize) -> memsched::workflow::Workflow {
@@ -24,14 +24,14 @@ fn workload(family: &str, size: usize, input: usize) -> memsched::workflow::Work
 fn heft_fails_on_default_cluster_at_scale() {
     let wf = workload("chipseq", 20000, 3);
     let cluster = default_cluster();
-    let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
+    let heft = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::Heft).policy(EvictionPolicy::LargestFirst).run();
     assert!(!heft.valid, "HEFT should overcommit at 20k tasks");
     assert!(
         heft.mem_peak_frac.iter().cloned().fold(0.0, f64::max) > 1.0,
         "HEFT peak usage must exceed 100%"
     );
     for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm] {
-        let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid, "{algo:?} must schedule the default cluster at 20k");
         // Makespan within a sane band of the (invalid) HEFT bound.
         assert!(s.makespan >= heft.makespan * 0.999);
@@ -44,8 +44,8 @@ fn constrained_cluster_separates_the_heuristics() {
     // chipseq @ 10k, large input: BL fails, MM succeeds (paper Fig 5).
     let wf = workload("chipseq", 10000, 4);
     let cluster = memory_constrained_cluster();
-    let bl = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
-    let mm = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+    let bl = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
+    let mm = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run();
     assert!(!bl.valid, "HEFTM-BL should fail on chipseq@10k input4 constrained");
     assert!(mm.valid, "HEFTM-MM must always succeed (paper: 100%)");
     // MM's memory-minimizing order uses less memory than BL's (Fig 7).
@@ -64,7 +64,7 @@ fn mm_memory_usage_insensitive_to_size() {
     let mut usages = Vec::new();
     for size in [1000, 4000, 10000] {
         let wf = workload("chipseq", size, 3);
-        let mm = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        let mm = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run();
         assert!(mm.valid);
         usages.push(mm.mean_mem_usage());
     }
@@ -78,7 +78,7 @@ fn mm_memory_usage_insensitive_to_size() {
 fn dynamic_recompute_rescues_constrained_executions() {
     let wf = workload("methylseq", 1000, 3);
     let cluster = memory_constrained_cluster();
-    let s = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+    let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run();
     assert!(s.valid);
     let dev = DeviationModel::new(0.1, 1234);
     let stat = simulate(&wf, &cluster, &s, &SimConfig::new(SimMode::FollowStatic, dev));
@@ -97,8 +97,8 @@ fn relative_makespans_in_paper_band_small() {
     // Fig 2 band at small scale: HEFTM-BL within ~1.0–1.6× of HEFT.
     let wf = workload("atacseq", 2000, 2);
     let cluster = default_cluster();
-    let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
-    let bl = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+    let heft = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::Heft).policy(EvictionPolicy::LargestFirst).run();
+    let bl = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
     assert!(bl.valid);
     let rel = bl.makespan / heft.makespan;
     assert!((0.999..=1.6).contains(&rel), "relative makespan {rel}");

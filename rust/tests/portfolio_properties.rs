@@ -1,0 +1,246 @@
+//! Portfolio meta-scheduler and lower-bound properties, end to end
+//! through the scheduling service:
+//!
+//!  1. memory feasibility: on memory-tight clusters, every memory-aware
+//!     algorithm's *valid* schedule respects every processor's memory;
+//!  2. the portfolio's committed makespan is ≤ every candidate's σ=0
+//!     simulated makespan (it is the argmin by construction — this
+//!     pins the commit rule through the public batch API);
+//!  3. the makespan lower bound is ≤ every algorithm's simulated
+//!     makespan (the bound is sound against executions, not just
+//!     against the analytic schedule);
+//!  4. portfolio batches are byte-identical for any worker count and
+//!     any score-thread count (the decision is replay-scored, so this
+//!     pins that scoring happens off the parallel axes).
+
+use std::sync::Arc;
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::{memory_constrained_cluster, small_cluster};
+use memsched::scheduler::lower_bound::makespan_lower_bound;
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
+use memsched::service::{
+    self, ClusterSpec, Job, JobSource, SchedulingService, ScoreThreadSpec, ServiceConfig,
+};
+use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
+use memsched::testing::{check, random_cluster, random_dag};
+use memsched::workflow::Workflow;
+
+fn build(family: &str, input: usize, seed: u64) -> Workflow {
+    WorkloadSpec { family: family.into(), size: None, input, seed }.build().unwrap()
+}
+
+/// σ=0 FollowStatic replay makespan of a schedule (NaN when invalid or
+/// the execution does not complete).
+fn replay_makespan(
+    wf: &Workflow,
+    cluster: &memsched::platform::Cluster,
+    s: &memsched::scheduler::Schedule,
+) -> f64 {
+    if !s.valid {
+        return f64::NAN;
+    }
+    let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::new(0.0, 0));
+    let out = simulate(wf, cluster, s, &cfg);
+    if out.completed {
+        out.makespan
+    } else {
+        f64::NAN
+    }
+}
+
+#[test]
+fn all_memory_aware_algorithms_feasible_on_tight_clusters() {
+    // Deterministic workloads on the paper's memory-constrained preset …
+    let cluster = memory_constrained_cluster();
+    for family in ["chipseq", "eager", "bacass"] {
+        let wf = build(family, 1, 7);
+        for algo in Algorithm::all().iter().copied().filter(|a| a.memory_aware()) {
+            let s = ScheduleRequest::new(&wf, &cluster)
+                .algo(algo)
+                .policy(EvictionPolicy::LargestFirst)
+                .run();
+            if !s.valid {
+                continue; // infeasible instances fall back to overcommit
+            }
+            for (j, &frac) in s.mem_peak_frac.iter().enumerate() {
+                assert!(
+                    frac <= 1.0 + 1e-9,
+                    "{family}/{algo:?}: proc {j} peak {frac} exceeds memory on a valid schedule"
+                );
+            }
+        }
+    }
+    // … and random DAGs on randomly tightened clusters.
+    check(25, 0x7151, |rng| {
+        let wf = random_dag(rng, 50);
+        let cluster = random_cluster(rng).scale_memory(0.25, "tight-rand");
+        for algo in Algorithm::all().iter().copied().filter(|a| a.memory_aware()) {
+            let s = ScheduleRequest::new(&wf, &cluster)
+                .algo(algo)
+                .policy(EvictionPolicy::LargestFirst)
+                .run();
+            if !s.valid {
+                continue;
+            }
+            for (j, &frac) in s.mem_peak_frac.iter().enumerate() {
+                if frac > 1.0 + 1e-9 {
+                    return Err(format!("{algo:?}: proc {j} peak {frac} on a valid schedule"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn portfolio_commits_the_minimum_simulated_makespan() {
+    let cluster = Arc::new(small_cluster());
+    let svc = SchedulingService::new(2);
+    for (family, input, seed) in [("chipseq", 1, 3u64), ("eager", 2, 4), ("methylseq", 1, 6)] {
+        let job = Job::new(
+            JobSource::Generated(WorkloadSpec {
+                family: family.into(),
+                size: None,
+                input,
+                seed,
+            }),
+            ClusterSpec::Inline(cluster.clone()),
+        )
+        .with_algo(Algorithm::Portfolio);
+        let r = &svc.run_batch(vec![job])[0];
+        assert!(r.error.is_none(), "{family}: {:?}", r.error);
+        let p = r.portfolio.as_ref().expect("portfolio rows carry the decision record");
+
+        // Candidate scores match an independent out-of-service replay …
+        let wf = build(family, input, seed);
+        for c in &p.candidates {
+            let s = ScheduleRequest::new(&wf, &cluster)
+                .algo(c.algo)
+                .policy(EvictionPolicy::LargestFirst)
+                .run();
+            assert_eq!(c.valid, s.valid, "{family}/{:?}: validity disagrees", c.algo);
+            let expect = replay_makespan(&wf, &cluster, &s);
+            assert!(
+                (c.sim_makespan == expect) || (c.sim_makespan.is_nan() && expect.is_nan()),
+                "{family}/{:?}: reported score {} != replay {expect}",
+                c.algo,
+                c.sim_makespan
+            );
+        }
+
+        // … and the committed candidate is the argmin of those scores
+        // (first wins on ties: no finite score strictly beats it, and no
+        // earlier candidate matches it).
+        let chosen_idx = p.candidates.iter().position(|c| c.algo == p.chosen).unwrap();
+        let chosen = &p.candidates[chosen_idx];
+        assert!(chosen.sim_makespan.is_finite(), "{family}: winner must have completed");
+        for (i, c) in p.candidates.iter().enumerate() {
+            if c.sim_makespan.is_finite() {
+                assert!(
+                    chosen.sim_makespan <= c.sim_makespan,
+                    "{family}: candidate {:?} ({}) beats the committed {:?} ({})",
+                    c.algo,
+                    c.sim_makespan,
+                    p.chosen,
+                    chosen.sim_makespan
+                );
+                if i < chosen_idx {
+                    assert!(
+                        c.sim_makespan > chosen.sim_makespan,
+                        "{family}: tie must break to the earlier candidate {:?}",
+                        c.algo
+                    );
+                }
+            }
+        }
+        assert_eq!(r.algo, Algorithm::Portfolio);
+        assert!(r.valid && r.makespan.is_finite());
+    }
+}
+
+#[test]
+fn lower_bound_is_sound_against_simulated_executions() {
+    for (family, input, seed) in [("chipseq", 1, 3u64), ("bacass", 0, 5), ("eager", 2, 4)] {
+        let wf = build(family, input, seed);
+        for cluster in [small_cluster(), memory_constrained_cluster()] {
+            let lb = makespan_lower_bound(&wf, &cluster);
+            assert!(lb > 0.0 && lb.is_finite(), "{family}/{}: bound {lb}", cluster.name);
+            for &algo in Algorithm::all() {
+                let s = ScheduleRequest::new(&wf, &cluster)
+                    .algo(algo)
+                    .policy(EvictionPolicy::LargestFirst)
+                    .run();
+                assert!(
+                    s.makespan + 1e-9 >= lb,
+                    "{family}/{}/{algo:?}: analytic makespan {} < bound {lb}",
+                    cluster.name,
+                    s.makespan
+                );
+                let sim = replay_makespan(&wf, &cluster, &s);
+                if sim.is_finite() {
+                    assert!(
+                        sim + 1e-9 >= lb,
+                        "{family}/{}/{algo:?}: simulated makespan {sim} < bound {lb}",
+                        cluster.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn portfolio_batches_are_byte_identical_across_parallelism_axes() {
+    let cluster = ClusterSpec::Inline(Arc::new(small_cluster()));
+    let jobs = |_: ()| -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for (family, input, seed) in
+            [("chipseq", 1, 3u64), ("eager", 2, 4), ("bacass", 0, 5), ("methylseq", 1, 6)]
+        {
+            let source = JobSource::Generated(WorkloadSpec {
+                family: family.into(),
+                size: None,
+                input,
+                seed,
+            });
+            jobs.push(
+                Job::new(source.clone(), cluster.clone()).with_algo(Algorithm::Portfolio),
+            );
+            // A plain job on the same workload shares candidate schedules
+            // through the cache without perturbing either row's bytes.
+            jobs.push(Job::new(source, cluster.clone()).with_algo(Algorithm::HeftmBl));
+        }
+        // An exact duplicate: portfolio rows dedupe like any other job.
+        let dup = jobs[0].clone();
+        jobs.push(dup);
+        jobs
+    };
+
+    let baseline = service::to_jsonl(&SchedulingService::new(1).run_batch(jobs(())));
+    assert!(baseline.contains("\"portfolio\":{\"chosen\":"), "{baseline}");
+    assert!(baseline.contains("\"optimality_gap\":"), "{baseline}");
+    for workers in [4usize, 8] {
+        let out = service::to_jsonl(&SchedulingService::new(workers).run_batch(jobs(())));
+        assert_eq!(baseline, out, "portfolio JSONL diverged at --jobs {workers}");
+    }
+    for score_threads in [1usize, 8] {
+        let svc = SchedulingService::from_config(ServiceConfig {
+            workers: 4,
+            score: ScoreThreadSpec::Fixed(score_threads),
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let out = service::to_jsonl(&svc.run_batch(jobs(())));
+        assert_eq!(
+            baseline, out,
+            "portfolio JSONL diverged at --score-threads {score_threads}"
+        );
+    }
+    // The duplicate committed identical bytes apart from id/cache_hit.
+    let lines: Vec<&str> = baseline.lines().collect();
+    let first = lines[0];
+    let dup = lines[lines.len() - 1];
+    let payload = |l: &str| l.split_once("\"valid\"").unwrap().1.to_string();
+    assert_eq!(payload(first), payload(dup), "deduped portfolio rows must agree");
+}

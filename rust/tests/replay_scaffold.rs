@@ -13,7 +13,7 @@
 
 use memsched::experiments::WorkloadSpec;
 use memsched::platform::presets::small_cluster;
-use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
 use memsched::service::{
     to_jsonl, ClusterSpec, Job, JobSource, ReplaySweep, SchedulingService, ScoreThreadSpec,
     ServiceConfig, SimJob,
@@ -59,7 +59,7 @@ fn scaffold_outcomes_bit_equal_point_by_point_simulate() {
     let wf = spec().build().unwrap();
     let cluster = small_cluster();
     for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
-        let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid, "{algo:?} schedule must be valid for this parity test");
         let scaffold = SimScaffold::new(
             Arc::new(wf.clone()),
@@ -89,7 +89,7 @@ fn calendar_event_queue_bit_equal_across_modes_and_sigmas() {
     let wf = spec().build().unwrap();
     let cluster = small_cluster();
     for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
-        let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         let scaffold = SimScaffold::new(
             Arc::new(wf.clone()),
@@ -178,7 +178,7 @@ fn sweep_sim_fields_bit_equal_direct_simulate_ground_truth() {
     let wf = spec().build().unwrap();
     let mut it = results.iter();
     for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
-        let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
         assert!(s.valid);
         for point in points() {
             let r = it.next().expect("one result per point");

@@ -12,7 +12,7 @@
 //!  5. the independent retrace oracle agrees that valid schedules are
 //!     valid under unchanged parameters, and reproduces finish times.
 
-use memsched::scheduler::{compute_schedule, retrace, Algorithm, EvictionPolicy};
+use memsched::scheduler::{retrace, Algorithm, EvictionPolicy, ScheduleRequest};
 use memsched::testing::{check, random_cluster, random_dag};
 
 const CASES: usize = 60;
@@ -22,8 +22,8 @@ fn schedules_are_complete_and_precedence_safe() {
     check(CASES, 0xA11CE, |rng| {
         let wf = random_dag(rng, 80);
         let cluster = random_cluster(rng);
-        for algo in Algorithm::all() {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        for &algo in Algorithm::all() {
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             if s.tasks.len() != wf.num_tasks() {
                 return Err(format!("{algo:?}: incomplete schedule"));
             }
@@ -47,8 +47,8 @@ fn processor_exclusivity() {
     check(CASES, 0xB0B, |rng| {
         let wf = random_dag(rng, 60);
         let cluster = random_cluster(rng);
-        for algo in Algorithm::all() {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        for &algo in Algorithm::all() {
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             let mut by_proc: std::collections::HashMap<usize, Vec<(f64, f64)>> =
                 Default::default();
             for t in &s.tasks {
@@ -75,8 +75,10 @@ fn valid_memory_aware_schedules_never_exceed_memory() {
     check(CASES, 0xCAFE, |rng| {
         let wf = random_dag(rng, 60);
         let cluster = random_cluster(rng);
-        for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm] {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        // Every memory-aware algorithm, PEFT/Lookahead/DLS included —
+        // a new variant cannot silently skip this invariant.
+        for algo in Algorithm::all().iter().copied().filter(|a| a.memory_aware()) {
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             if !s.valid {
                 continue; // invalid schedules may overcommit via fallback
             }
@@ -98,7 +100,7 @@ fn retrace_oracle_confirms_valid_schedules() {
         let wf = random_dag(rng, 50);
         let cluster = random_cluster(rng);
         for algo in [Algorithm::HeftmBl, Algorithm::HeftmMm] {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             if !s.valid {
                 continue;
             }
@@ -130,8 +132,8 @@ fn heft_never_beats_itself_with_memory_awareness_disabled_check() {
     check(CASES, 0xFEED, |rng| {
         let wf = random_dag(rng, 60);
         let cluster = random_cluster(rng);
-        let heft = compute_schedule(&wf, &cluster, Algorithm::Heft, EvictionPolicy::LargestFirst);
-        let bl = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let heft = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::Heft).policy(EvictionPolicy::LargestFirst).run();
+        let bl = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         if bl.valid && heft.valid && bl.makespan < heft.makespan * 0.9 {
             return Err(format!(
                 "HEFTM-BL {} dramatically beats HEFT {} — suspicious",
@@ -147,8 +149,8 @@ fn eviction_policies_both_produce_valid_schedules() {
     check(CASES, 0x5EED, |rng| {
         let wf = random_dag(rng, 50);
         let cluster = random_cluster(rng);
-        let a = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
-        let b = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::SmallestFirst);
+        let a = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
+        let b = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::SmallestFirst).run();
         // The paper reports comparable results; at minimum validity must
         // agree in the vast majority of cases. We only require: if one is
         // valid, makespans stay within 2x of each other when both valid.
@@ -167,9 +169,9 @@ fn schedules_deterministic() {
     check(20, 0xDEAD, |rng| {
         let wf = random_dag(rng, 40);
         let cluster = random_cluster(rng);
-        for algo in Algorithm::all() {
-            let a = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
-            let b = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        for &algo in Algorithm::all() {
+            let a = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
+            let b = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             if a.makespan != b.makespan || a.valid != b.valid {
                 return Err(format!("{algo:?} nondeterministic"));
             }

@@ -75,14 +75,14 @@ fn parallel_scoring_parity_on_eviction_heavy_1k_dags() {
     // out-of-memory fallbacks — the paths where nondeterminism would hide.
     let cluster = small_cluster().scale_memory(0.03, "tight-small");
     let wf = workload("chipseq", 1000, 3, 11);
-    assert_parity(&wf, &cluster, &Algorithm::all(), "chipseq-1k/tight");
+    assert_parity(&wf, &cluster, Algorithm::all(), "chipseq-1k/tight");
 }
 
 #[test]
 fn parallel_scoring_parity_on_second_family() {
     let cluster = small_cluster().scale_memory(0.05, "tight-small-2");
     let wf = workload("eager", 1000, 2, 23);
-    assert_parity(&wf, &cluster, &Algorithm::all(), "eager-1k/tight");
+    assert_parity(&wf, &cluster, Algorithm::all(), "eager-1k/tight");
 }
 
 #[test]

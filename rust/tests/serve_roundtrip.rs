@@ -229,7 +229,7 @@ fn stats_request_reports_counters_and_sessions() {
     assert_eq!(frames, LINES_A.len(), "stats reply must queue behind the submissions");
     let reply = Value::parse(&stats_frame.unwrap()).expect("stats reply must be JSON");
     let stats = reply.get("stats").expect("reply wraps a stats object");
-    assert_eq!(stats.get("schema"), Some(&Value::Number(1.0)));
+    assert_eq!(stats.get("schema"), Some(&Value::Number(2.0)));
     assert!(stats.get("tracing").is_some());
     let counters = stats.get("counters").expect("global counters object");
     // Three submissions, one duplicate: two schedules computed, one reuse.

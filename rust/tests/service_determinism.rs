@@ -24,7 +24,7 @@ fn batch() -> Vec<Job> {
     for (family, input, seed) in
         [("chipseq", 1, 3u64), ("eager", 2, 4), ("bacass", 0, 5), ("methylseq", 1, 6)]
     {
-        for algo in Algorithm::all() {
+        for &algo in Algorithm::all() {
             jobs.push(Job::new(spec(family, input, seed), cluster.clone()).with_algo(algo));
         }
     }
@@ -147,5 +147,9 @@ fn suite_grid_byte_deterministic_through_the_service() {
     let s4 = SchedulingService::new(4);
     let r4 = s4.run_batch(jobs(()));
     assert_eq!(service::to_jsonl(&r1), service::to_jsonl(&r4));
-    assert_eq!(r1.len(), 40, "smoke grid: 10 workloads × 4 algorithms");
+    assert_eq!(
+        r1.len(),
+        10 * Algorithm::all().len(),
+        "smoke grid: 10 workloads × every standalone algorithm"
+    );
 }

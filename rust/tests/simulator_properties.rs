@@ -9,7 +9,7 @@
 //!  5. zero deviation in follow-static mode completes every valid
 //!     schedule.
 
-use memsched::scheduler::{compute_schedule, Algorithm, EvictionPolicy};
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
 use memsched::simulator::{simulate, DeviationModel, SimConfig, SimMode};
 use memsched::testing::{check, random_cluster, random_dag};
 
@@ -21,8 +21,8 @@ fn simulations_always_terminate_coherently() {
         let wf = random_dag(rng, 60);
         let cluster = random_cluster(rng);
         let seed = rng.next_u64();
-        for algo in Algorithm::all() {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+        for &algo in Algorithm::all() {
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             for mode in [SimMode::FollowStatic, SimMode::Recompute] {
                 let cfg = SimConfig::new(mode, DeviationModel::new(0.1, seed));
                 let out = simulate(&wf, &cluster, &s, &cfg);
@@ -44,7 +44,7 @@ fn completed_runs_respect_dependencies() {
     check(CASES, 0x52B2, |rng| {
         let wf = random_dag(rng, 50);
         let cluster = random_cluster(rng);
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBl, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
         let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.1, rng.next_u64()));
         let out = simulate(&wf, &cluster, &s, &cfg);
         if out.completed {
@@ -64,7 +64,7 @@ fn identical_seeds_identical_outcomes() {
         let wf = random_dag(rng, 40);
         let cluster = random_cluster(rng);
         let seed = rng.next_u64();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmBlc, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBlc).policy(EvictionPolicy::LargestFirst).run();
         for mode in [SimMode::FollowStatic, SimMode::Recompute] {
             let cfg = SimConfig::new(mode, DeviationModel::new(0.1, seed));
             let a = simulate(&wf, &cluster, &s, &cfg);
@@ -83,7 +83,7 @@ fn recompute_dominates_follow_static_on_completion() {
         let wf = random_dag(rng, 50);
         let cluster = random_cluster(rng);
         let seed = rng.next_u64();
-        let s = compute_schedule(&wf, &cluster, Algorithm::HeftmMm, EvictionPolicy::LargestFirst);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmMm).policy(EvictionPolicy::LargestFirst).run();
         if !s.valid {
             return Ok(());
         }
@@ -106,7 +106,7 @@ fn zero_deviation_completes_all_valid_schedules() {
         let wf = random_dag(rng, 50);
         let cluster = random_cluster(rng);
         for algo in [Algorithm::HeftmBl, Algorithm::HeftmBlc, Algorithm::HeftmMm] {
-            let s = compute_schedule(&wf, &cluster, algo, EvictionPolicy::LargestFirst);
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
             if !s.valid {
                 continue;
             }
