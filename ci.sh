@@ -11,13 +11,15 @@
 #   ./ci.sh --smoke     service/parity smokes + the replay-parity smoke
 #                       (multi-sigma vs per-sigma, sweep vs flat, scaffold
 #                       sweep vs per-point `memsched simulate`, warm/cold
-#                       --cache-dir with schedules_computed=0) + the serve
+#                       --cache-dir with schedules_computed=0, Recompute
+#                       sweep bytes across --score-threads) + the serve
 #                       round-trip smoke (daemon responses byte-identical
 #                       to `memsched batch`, warm second client computes
 #                       0 schedules, SIGTERM drains and exits 0)
-#   ./ci.sh --bench     bench_engine + bench_service + bench_replay at
-#                       tiny scale, emit BENCH_ci.json, and gate >2x
-#                       regressions against rust/benches/BENCH_baseline.json
+#   ./ci.sh --bench     bench_engine + bench_service + bench_replay +
+#                       bench_recompute at tiny scale, emit BENCH_ci.json,
+#                       and gate >2x regressions against
+#                       rust/benches/BENCH_baseline.json
 #                       when that baseline exists
 #   ./ci.sh --bench --seed-baseline
 #                       additionally copy the fresh BENCH_ci.json to
@@ -109,6 +111,19 @@ tier_smoke() {
   cmp "$TMP/s1.jsonl" "$TMP/sa.jsonl"
   echo "batch output byte-identical across score-thread counts (incl. auto)"
 
+  echo "== simulator: Recompute sweep parity (score-threads=1 vs 4) =="
+  # Recompute-mode points reschedule mid-run through Engine::resume;
+  # with score-threads > 1 those passes score on the worker's pool, and
+  # the deterministic reduction must keep every outcome byte identical.
+  "$BIN" batch --suite smoke --sigmas 0.3 --jobs 2 --score-threads 1 \
+    --out "$TMP/rc1.jsonl" 2>/dev/null
+  "$BIN" batch --suite smoke --sigmas 0.3 --jobs 2 --score-threads 4 \
+    --out "$TMP/rc4.jsonl" 2>/dev/null
+  cmp "$TMP/rc1.jsonl" "$TMP/rc4.jsonl"
+  grep -q '"mode":"recompute"' "$TMP/rc1.jsonl" \
+    || { echo "Recompute sweep emitted no recompute rows:"; head "$TMP/rc1.jsonl"; exit 1; }
+  echo "Recompute-mode sweep byte-identical across score-thread counts"
+
   echo "== experiments: fig1 smoke through the pool =="
   "$BIN" experiment --figure fig1 --scale smoke --jobs 4 > /dev/null 2>"$TMP/fig1.err"
 
@@ -197,8 +212,8 @@ EOF
   # --metrics-json enables tracing for the run (the byte-compare above
   # therefore also exercises the traced==untraced invariant) and writes
   # versioned counter + span-histogram records.
-  grep -Eq '"schema":2[,}]' "$TMP/metrics.jsonl" \
-    || { echo "metrics JSONL missing schema-2 field:"; cat "$TMP/metrics.jsonl"; exit 1; }
+  grep -Eq '"schema":3[,}]' "$TMP/metrics.jsonl" \
+    || { echo "metrics JSONL missing schema-3 field:"; cat "$TMP/metrics.jsonl"; exit 1; }
   grep -q '"span"' "$TMP/metrics.jsonl" \
     || { echo "metrics JSONL has no span histograms:"; cat "$TMP/metrics.jsonl"; exit 1; }
   echo "multi-sigma batch byte-identical across jobs and warm/cold cache-dir (warm run traced); warm run computed 0 schedules; metrics JSONL well-formed"
@@ -288,7 +303,7 @@ EOF
 
 tier_bench() {
   ensure_bin
-  echo "== bench: tiny-scale bench_engine + bench_service + bench_replay -> BENCH_ci.json =="
+  echo "== bench: tiny-scale bench_engine + bench_service + bench_replay + bench_recompute -> BENCH_ci.json =="
   rm -f BENCH_ci.json
   # Pinned knobs so entry ids are stable across machines/runs.
   MEMSCHED_BENCH_FAST=1 MEMSCHED_SCORE_THREADS=4 \
@@ -300,6 +315,9 @@ tier_bench() {
   MEMSCHED_BENCH_FAST=1 \
     MEMSCHED_BENCH_JSON="$PWD/BENCH_ci.json" \
     cargo bench --bench bench_replay
+  MEMSCHED_BENCH_FAST=1 \
+    MEMSCHED_BENCH_JSON="$PWD/BENCH_ci.json" \
+    cargo bench --bench bench_recompute
   echo "bench entries:"
   cat BENCH_ci.json
   BASELINE=rust/benches/BENCH_baseline.json

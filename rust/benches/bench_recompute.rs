@@ -1,0 +1,130 @@
+//! Adaptive-recompute benchmark: wall time of Recompute-mode replays,
+//! where most of the cost is the mid-run rescheduling passes
+//! (`SimRun::recompute` → `Engine::resume`), not the replay core.
+//!
+//! Three variants over the same sigma × seed grid, all asserted
+//! bit-identical:
+//! - `rebuild`: a fresh `SelectorState` (PEFT OCT table / Lookahead and
+//!   DLS rank inputs) built on every trigger — the pre-fast-path shape;
+//! - `hoisted`: the scaffold's lazily built selector state shared by
+//!   every trigger (the default), plus the persistent `ResumeArena`;
+//! - `pooled`: hoisted + a 4-thread `ScorePool` in the resume scoring
+//!   loop (the deterministic min-ft/lowest-ProcId reduction).
+//!
+//! Workload: a generated chipseq instance on the default cluster under
+//! PEFT when its schedule is valid (the OCT table makes selector
+//! rebuilding maximally expensive), else the first valid memory-aware
+//! fallback. Knobs: `MEMSCHED_BENCH_TASKS` (default 5000),
+//! `MEMSCHED_BENCH_FAST=1` shrinks the instance and the grid.
+
+mod common;
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::default_cluster;
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
+use memsched::service::ScorePool;
+use memsched::simulator::{DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold};
+use std::sync::Arc;
+
+fn outcome_digest(out: &SimOutcome) -> (bool, u64, usize, usize) {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &f in &out.finish_times {
+        h = (h ^ f.to_bits()).wrapping_mul(0x1000_0000_01b3);
+    }
+    h = (h ^ out.makespan.to_bits()).wrapping_mul(0x1000_0000_01b3);
+    (out.completed, h, out.recomputations, out.started)
+}
+
+fn main() {
+    let fast = std::env::var("MEMSCHED_BENCH_FAST").ok().is_some_and(|v| v != "0");
+    let tasks: usize = std::env::var("MEMSCHED_BENCH_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 800 } else { 5000 });
+    let seeds: u64 = if fast { 2 } else { 6 };
+    let sigma = 0.3;
+
+    let spec = WorkloadSpec { family: "chipseq".into(), size: Some(tasks), input: 2, seed: common::SEED };
+    let wf = spec.build().expect("workload builds");
+    let cluster = default_cluster();
+    // PEFT first: its OCT table is the selector state whose per-trigger
+    // rebuild the hoisting amortizes. Memory-aware fallbacks keep the
+    // bench meaningful if PEFT's schedule is invalid at this size.
+    let (algo, schedule) = [Algorithm::Peft, Algorithm::HeftmBl, Algorithm::HeftmMm]
+        .into_iter()
+        .map(|algo| {
+            (algo, ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run())
+        })
+        .find(|(_, s)| s.valid)
+        .expect("some schedule is valid on the default cluster");
+
+    let points: Vec<SimConfig> = (0..seeds)
+        .map(|seed| SimConfig::new(SimMode::Recompute, DeviationModel::new(sigma, seed)))
+        .collect();
+    let scaffold = SimScaffold::new(
+        Arc::new(wf.clone()),
+        Arc::new(cluster.clone()),
+        Arc::new(schedule.clone()),
+    );
+    println!(
+        "== bench_recompute: {} tasks on `{}` under {:?}, {} Recompute points at sigma={} ==",
+        wf.num_tasks(),
+        cluster.name,
+        algo,
+        points.len(),
+        sigma
+    );
+
+    // Per-trigger selector rebuild: every recomputation reconstructs
+    // the ranking inputs from scratch before resuming the engine.
+    let mut run = SimRun::new();
+    run.set_rebuild_selector(true);
+    let t0 = std::time::Instant::now();
+    let rebuilt: Vec<_> =
+        points.iter().map(|cfg| outcome_digest(&run.simulate_with(&scaffold, cfg, None))).collect();
+    let rebuild_secs = t0.elapsed().as_secs_f64();
+
+    // Hoisted: the scaffold's selector state, built once, borrowed by
+    // every trigger of every point.
+    let mut run = SimRun::new();
+    let t0 = std::time::Instant::now();
+    let hoisted: Vec<_> =
+        points.iter().map(|cfg| outcome_digest(&run.simulate_with(&scaffold, cfg, None))).collect();
+    let hoisted_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(rebuilt, hoisted, "hoisted selector state must be bit-identical to rebuild");
+
+    // Pooled: hoisted + parallel resume scoring.
+    let pool = ScorePool::new(4);
+    let t0 = std::time::Instant::now();
+    let pooled: Vec<_> = points
+        .iter()
+        .map(|cfg| outcome_digest(&run.simulate_with(&scaffold, cfg, Some(&pool))))
+        .collect();
+    let pooled_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(rebuilt, pooled, "pooled resume scoring must be bit-identical to serial");
+
+    let recomputes: usize = rebuilt.iter().map(|d| d.2).sum();
+    let n = points.len() as f64;
+    println!("   ({recomputes} recomputations across the grid)");
+    println!(
+        "{:>10}  {:>10.3}s  ({:>8.2} points/s)",
+        "rebuild", rebuild_secs, n / rebuild_secs
+    );
+    println!(
+        "{:>10}  {:>10.3}s  ({:>8.2} points/s)   speedup {:.2}x, identical outcomes",
+        "hoisted",
+        hoisted_secs,
+        n / hoisted_secs,
+        rebuild_secs / hoisted_secs
+    );
+    println!(
+        "{:>10}  {:>10.3}s  ({:>8.2} points/s)   speedup {:.2}x, identical outcomes",
+        "pooled",
+        pooled_secs,
+        n / pooled_secs,
+        rebuild_secs / pooled_secs
+    );
+    common::emit_bench_entry(&format!("recompute/tasks={tasks}/rebuild"), n / rebuild_secs, rebuild_secs);
+    common::emit_bench_entry(&format!("recompute/tasks={tasks}/hoisted"), n / hoisted_secs, hoisted_secs);
+    common::emit_bench_entry(&format!("recompute/tasks={tasks}/pooled"), n / pooled_secs, pooled_secs);
+}

@@ -15,7 +15,8 @@ use crate::generator::{self, models};
 use crate::platform::Cluster;
 use crate::scheduler::{Algorithm, EvictionPolicy, Schedule, ScheduleRequest};
 use crate::service::{
-    ClusterSpec, Job, JobResult, JobSource, ReplaySweep, SchedulingService, ServiceConfig, SimJob,
+    ClusterSpec, Job, JobResult, JobSource, ReplaySweep, SchedulingService, ScorePool,
+    ServiceConfig, SimJob,
 };
 use crate::simulator::{DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold};
 use crate::traces::{self, HistoricalData, TraceConfig};
@@ -210,18 +211,41 @@ impl DynamicResult {
 }
 
 /// Run the dynamic evaluation (paper §VI-C): both execution modes under
-/// the 10% deviation model. The two executions replay one static
-/// schedule, so they share one [`SimScaffold`] and one [`SimRun`] arena
-/// (bit-identical to two standalone `simulate` calls).
+/// the 10% deviation model. Serial shim over [`run_dynamic_pooled`] —
+/// the two are bit-identical for any pool, so this stays the baseline
+/// the parity tests compare against.
 pub fn run_dynamic(
     spec: &WorkloadSpec,
     cluster: &Cluster,
     algo: Algorithm,
     sigma: f64,
 ) -> anyhow::Result<DynamicResult> {
+    run_dynamic_pooled(spec, cluster, algo, sigma, None)
+}
+
+/// [`run_dynamic`] with an optional scoring pool applied to both the
+/// static schedule computation and every Recompute-mode mid-run
+/// rescheduling pass. The pooled per-task reduction is deterministic
+/// (min finish time, lowest `ProcId` on ties — exactly the serial
+/// order), so outcomes are bit-identical for any pool size. The two
+/// executions replay one static schedule, so they share one
+/// [`SimScaffold`] (including its lazily hoisted selector state) and
+/// one [`SimRun`] arena (bit-identical to two standalone `simulate`
+/// calls).
+pub fn run_dynamic_pooled(
+    spec: &WorkloadSpec,
+    cluster: &Cluster,
+    algo: Algorithm,
+    sigma: f64,
+    pool: Option<&ScorePool>,
+) -> anyhow::Result<DynamicResult> {
     let wf = spec.build()?;
     let group = SizeGroup::of(wf.num_tasks());
-    let schedule: Schedule = ScheduleRequest::new(&wf, cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
+    let schedule: Schedule = ScheduleRequest::new(&wf, cluster)
+        .algo(algo)
+        .policy(EvictionPolicy::LargestFirst)
+        .score_pool(pool)
+        .run();
     let initially_valid = schedule.valid;
     let dev = DeviationModel::new(sigma, spec.seed ^ 0xdeu64);
     let (rec, stat): (SimOutcome, SimOutcome) = if initially_valid {
@@ -230,8 +254,8 @@ pub fn run_dynamic(
         let mut run = SimRun::new();
         // Summary variant: DynamicResult never reads finish_times.
         (
-            run.simulate_summary(&scaffold, &SimConfig::new(SimMode::Recompute, dev)),
-            run.simulate_summary(&scaffold, &SimConfig::new(SimMode::FollowStatic, dev)),
+            run.simulate_summary_with(&scaffold, &SimConfig::new(SimMode::Recompute, dev), pool),
+            run.simulate_summary_with(&scaffold, &SimConfig::new(SimMode::FollowStatic, dev), pool),
         )
     } else {
         // Invalid initial schedule: executions are not attempted.
@@ -555,6 +579,21 @@ mod tests {
         assert!(r.recompute_ok);
         if let Some(imp) = r.improvement() {
             assert!(imp.abs() < 100.0);
+        }
+    }
+
+    #[test]
+    fn pooled_dynamic_run_matches_serial_bit_exactly() {
+        let spec = WorkloadSpec { family: "chipseq".into(), size: None, input: 0, seed: 3 };
+        let cluster = presets::small_cluster();
+        let pool = ScorePool::new(4);
+        for algo in [Algorithm::HeftmBl, Algorithm::Peft, Algorithm::Dls] {
+            let serial = run_dynamic(&spec, &cluster, algo, 0.3).unwrap();
+            let pooled = run_dynamic_pooled(&spec, &cluster, algo, 0.3, Some(&pool)).unwrap();
+            assert_eq!(serial.recompute_makespan.to_bits(), pooled.recompute_makespan.to_bits());
+            assert_eq!(serial.static_makespan.to_bits(), pooled.static_makespan.to_bits());
+            assert_eq!(serial.recomputations, pooled.recomputations);
+            assert_eq!(serial.recompute_ok, pooled.recompute_ok);
         }
     }
 

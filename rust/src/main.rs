@@ -65,7 +65,7 @@ COMMANDS:
   batch         --input jobs.jsonl | --suite smoke|quick|full  [--jobs N]
                 [--sigmas 0.1,0.2,...] [--score-threads N|auto] [--score-pools P]
                 [--cache-bytes B] [--cache-dir DIR] [--cache-dir-bytes B]
-                [--repeat K] [--seed S]
+                [--repeat K] [--seed S] [--no-portfolio-prune]
                 [--cluster C] [--out results.jsonl] [--metrics-json PATH]
                 run a job batch on the multi-threaded scheduling service;
                 results stream incrementally as JSONL (in job order, as
@@ -524,6 +524,8 @@ fn score_threads_arg(args: &mut Args) -> Result<ScoreThreadSpec> {
 /// `--cache-dir`, `--cache-dir-bytes`. `--score-pools N` spreads the
 /// batch workers round-robin over `N` independent score pools (0/1 =
 /// one shared pool) — output bytes are identical either way.
+/// `--no-portfolio-prune` replays every portfolio candidate even when
+/// the analytic bound already rules it out (the prune is on by default).
 fn service_config_args(args: &mut Args) -> Result<ServiceConfig> {
     Ok(ServiceConfig {
         workers: workers_arg(args)?,
@@ -532,6 +534,7 @@ fn service_config_args(args: &mut Args) -> Result<ServiceConfig> {
         cache_bytes: args.opt("cache-bytes")?,
         cache_dir: args.opt_val("cache-dir")?.map(std::path::PathBuf::from),
         cache_dir_bytes: args.opt("cache-dir-bytes")?,
+        portfolio_prune: !args.flag("no-portfolio-prune"),
     })
 }
 

@@ -27,11 +27,14 @@ pub enum SpanKind {
     WorkerJob,
     /// One dispatched queue item in the serve daemon.
     Dispatch,
+    /// One mid-run schedule recomputation (`SimRun::recompute`): platform
+    /// snapshot + engine resume + queue rebuild.
+    Recompute,
 }
 
 impl SpanKind {
     /// Every kind, in the stable order metrics records are emitted in.
-    pub const ALL: [SpanKind; 7] = [
+    pub const ALL: [SpanKind; 8] = [
         SpanKind::ScheduleCompute,
         SpanKind::Materialize,
         SpanKind::Stream,
@@ -39,6 +42,7 @@ impl SpanKind {
         SpanKind::Simulate,
         SpanKind::WorkerJob,
         SpanKind::Dispatch,
+        SpanKind::Recompute,
     ];
 
     pub fn name(self) -> &'static str {
@@ -50,6 +54,7 @@ impl SpanKind {
             SpanKind::Simulate => "simulate",
             SpanKind::WorkerJob => "worker_job",
             SpanKind::Dispatch => "dispatch",
+            SpanKind::Recompute => "recompute",
         }
     }
 }

@@ -28,7 +28,12 @@ use crate::ser::json::{obj, Value};
 ///
 /// v2: `counters` gained `portfolio_commits`; result rows gained
 /// `lower_bound` / `optimality_gap` (and `portfolio` on portfolio jobs).
-pub const SCHEMA_VERSION: u64 = 2;
+///
+/// v3: `counters` gained `replays_pruned` (portfolio replays skipped by
+/// the analytic-bound prune); span records may carry the new `recompute`
+/// kind (mid-run rescheduling latency); portfolio candidate rows gained
+/// `pruned`.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// Per-thread ring capacity (records). A smoke-scale trace is a few
 /// thousand records; production sweeps that overflow this drop the
@@ -161,6 +166,9 @@ pub struct Counters {
     pub scaffolds_built: u64,
     /// Portfolio decisions committed (`--algo portfolio` jobs executed).
     pub portfolio_commits: u64,
+    /// Portfolio candidate replays skipped because the candidate's
+    /// analytic makespan already exceeded the incumbent's simulated one.
+    pub replays_pruned: u64,
 }
 
 impl Counters {
@@ -174,6 +182,7 @@ impl Counters {
             ("disk_hits", self.disk_hits.into()),
             ("scaffolds_built", self.scaffolds_built.into()),
             ("portfolio_commits", self.portfolio_commits.into()),
+            ("replays_pruned", self.replays_pruned.into()),
         ])
     }
 }
@@ -277,7 +286,7 @@ mod tests {
             .map(Value::to_string_compact)
             .find(|l| l.contains("\"name\":\"execute\""))
             .expect("execute span record");
-        assert!(span_line.contains("\"schema\":2"), "{span_line}");
+        assert!(span_line.contains("\"schema\":3"), "{span_line}");
         assert!(span_line.contains("\"min_us\":10"), "{span_line}");
         assert!(span_line.contains("\"max_us\":30"), "{span_line}");
     }
@@ -291,12 +300,13 @@ mod tests {
             disk_hits: 2,
             scaffolds_built: 1,
             portfolio_commits: 4,
+            replays_pruned: 5,
         };
         assert_eq!(
             c.to_json().to_string_compact(),
             "{\"schedule_requests\":9,\"schedules_computed\":3,\
              \"schedule_reuse_hits\":6,\"disk_hits\":2,\"scaffolds_built\":1,\
-             \"portfolio_commits\":4}"
+             \"portfolio_commits\":4,\"replays_pruned\":5}"
         );
     }
 }

@@ -166,6 +166,25 @@ pub enum Failure {
     /// Memory constraint violated on the chosen processor (baseline HEFT
     /// tracking: `Res < 0` at `task` on `proc`).
     Overcommit { task: TaskId, proc: ProcId },
+    /// `task` was committed to `proc`, which has since been lost
+    /// (schedule retracing, §V).
+    ProcessorLost { task: TaskId, proc: ProcId },
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Failure::OutOfMemory { task } => {
+                write!(f, "out of memory: no processor fits task {task}")
+            }
+            Failure::Overcommit { task, proc } => {
+                write!(f, "overcommit: task {task} exceeds memory on processor {proc}")
+            }
+            Failure::ProcessorLost { task, proc } => {
+                write!(f, "processor lost: task {task} was placed on lost processor {proc}")
+            }
+        }
+    }
 }
 
 /// A complete (possibly invalid) schedule.
@@ -444,30 +463,80 @@ impl<'a> ScoringCtx<'a> {
     }
 }
 
-/// Processor-selection rule applied in [`Engine::assign`]'s reduction
-/// over feasible tentatives. Built once per engine from the algorithm —
-/// including on the [`Engine::resume`] path, so dynamic rescheduling
-/// reconstructs PEFT's OCT table from the schedule's algorithm tag.
-enum Selector {
-    /// Minimize the tentative finish time (HEFT/HEFTM family; also what
-    /// the DLS driver uses once it has fixed the task).
-    MinFinish,
-    /// PEFT: minimize `finish + OCT[v·k + j]` (row-major `n × k` table,
-    /// see [`ranking::oct_table`]).
-    OctAdjusted(Vec<f64>),
-    /// Lookahead: minimize the worst estimated child EFT
-    /// ([`ScoringCtx::lookahead_key`]).
-    Lookahead,
+/// Immutable per-(workflow, cluster, algorithm) selector inputs: PEFT's
+/// `n × k` optimistic cost table and DLS's static levels. Built once via
+/// [`SelectorState::build`] and *borrowed* by every engine that shares
+/// the triple — most importantly the adaptive-recompute path, where
+/// `SimScaffold` hoists one `SelectorState` over all recompute triggers
+/// instead of rebuilding the table per trigger (the dominant per-trigger
+/// cost for PEFT at scale).
+///
+/// Hoisting is bit-identical by construction: a resumed engine consults
+/// selector rows only for *unstarted* tasks, whose every strict
+/// descendant is also unstarted (a task arrives only after all parents
+/// finished) and therefore still carries its estimated parameters — so
+/// the estimate-built OCT rows equal the rows a per-trigger rebuild
+/// would produce. DLS static levels are defined over the scaffold's
+/// estimates as the algorithm's fixed priority baseline.
+#[derive(Debug, Default)]
+pub struct SelectorState {
+    /// PEFT: row-major `n × k` OCT table ([`ranking::oct_table`]).
+    oct: Option<Vec<f64>>,
+    /// DLS: static levels `SL(v)` ([`ranking::static_levels`]).
+    static_levels: Option<Vec<f64>>,
 }
 
-impl Selector {
-    fn for_algorithm(algo: Algorithm, wf: &Workflow, cluster: &Cluster) -> Selector {
+impl SelectorState {
+    /// Build the selector inputs `algo` needs (empty for the min-finish
+    /// family — HEFT/HEFTM and Lookahead carry no precomputed tables).
+    pub fn build(algo: Algorithm, wf: &Workflow, cluster: &Cluster) -> SelectorState {
         match algo {
-            Algorithm::Peft => Selector::OctAdjusted(ranking::oct_table(wf, cluster)),
-            Algorithm::Lookahead => Selector::Lookahead,
-            _ => Selector::MinFinish,
+            Algorithm::Peft => SelectorState {
+                oct: Some(ranking::oct_table(wf, cluster)),
+                static_levels: None,
+            },
+            Algorithm::Dls => SelectorState {
+                oct: None,
+                static_levels: Some(ranking::static_levels(wf, cluster)),
+            },
+            _ => SelectorState::default(),
         }
     }
+
+    fn oct(&self) -> &[f64] {
+        self.oct.as_deref().expect("PEFT selector state carries the OCT table")
+    }
+
+    fn static_levels(&self) -> &[f64] {
+        self.static_levels.as_deref().expect("DLS selector state carries static levels")
+    }
+}
+
+/// An engine's view of its [`SelectorState`]: owned on the fresh-build
+/// constructors, borrowed on the hoisted resume path.
+enum SelectorSource<'a> {
+    Owned(SelectorState),
+    Shared(&'a SelectorState),
+}
+
+impl SelectorSource<'_> {
+    fn get(&self) -> &SelectorState {
+        match self {
+            SelectorSource::Owned(s) => s,
+            SelectorSource::Shared(s) => s,
+        }
+    }
+}
+
+/// Reusable resources handed back by [`Engine::run_into_plan`]: the
+/// platform snapshot, the fixed-placement buffer (now all `Some`), and
+/// the scoring arena. The simulator's `ResumeArena` carries them across
+/// recompute triggers so each resume resets in place instead of
+/// reallocating.
+pub struct ResumeParts {
+    pub state: PlatformState,
+    pub fixed: Vec<Option<TaskSchedule>>,
+    pub buffers: ScoreBuffers,
 }
 
 /// The assignment engine. See module docs.
@@ -494,8 +563,12 @@ pub struct Engine<'a> {
     /// Per-processor result slots for the parallel scoring phase (reused
     /// across tasks; reduced serially for determinism).
     slots: Vec<Mutex<Option<Tentative>>>,
-    /// Processor-selection rule (PEFT's OCT table lives here).
-    selector: Selector,
+    /// Selector inputs (PEFT's OCT table, DLS's static levels) — owned
+    /// by fresh engines, borrowed on the hoisted resume path.
+    selector: SelectorSource<'a>,
+    /// First index of `run`'s order that can still be unplaced; resumed
+    /// engines skip the fixed prefix ([`Engine::with_fixed_prefix`]).
+    resume_from: usize,
 }
 
 impl<'a> Engine<'a> {
@@ -520,7 +593,8 @@ impl<'a> Engine<'a> {
             evict_cache: EvictCache::new(cluster.len()),
             buffers: ScoreBuffers::default(),
             slots: (0..cluster.len()).map(|_| Mutex::new(None)).collect(),
-            selector: Selector::for_algorithm(algorithm, wf, cluster),
+            selector: SelectorSource::Owned(SelectorState::build(algorithm, wf, cluster)),
+            resume_from: 0,
         }
     }
 
@@ -543,6 +617,9 @@ impl<'a> Engine<'a> {
 
     /// Resume from a mid-execution platform state with some tasks already
     /// placed (dynamic rescheduling, §V). `fixed` entries are kept as-is.
+    ///
+    /// Builds the selector state fresh from `wf`; the adaptive fast path
+    /// uses [`Engine::resume_with`] to borrow a hoisted one instead.
     pub fn resume(
         wf: &'a Workflow,
         cluster: &'a Cluster,
@@ -550,6 +627,35 @@ impl<'a> Engine<'a> {
         policy: EvictionPolicy,
         state: PlatformState,
         fixed: Vec<Option<TaskSchedule>>,
+    ) -> Engine<'a> {
+        let selector = SelectorState::build(algorithm, wf, cluster);
+        let mut e = Engine::resume_with(
+            wf,
+            cluster,
+            algorithm,
+            policy,
+            state,
+            fixed,
+            ScoreBuffers::default(),
+        );
+        e.selector = SelectorSource::Owned(selector);
+        e
+    }
+
+    /// [`Engine::resume`] with every reusable resource supplied by the
+    /// caller: the arena-backed recompute path passes a reset
+    /// `PlatformState`, a refilled fixed-placement buffer, and a warm
+    /// [`ScoreBuffers`] arena ([`Engine::run_into_plan`] hands them
+    /// back), then swaps the default empty selector for a scaffold-
+    /// hoisted one via [`Engine::with_selector_state`].
+    pub fn resume_with(
+        wf: &'a Workflow,
+        cluster: &'a Cluster,
+        algorithm: Algorithm,
+        policy: EvictionPolicy,
+        state: PlatformState,
+        fixed: Vec<Option<TaskSchedule>>,
+        buffers: ScoreBuffers,
     ) -> Engine<'a> {
         assert_eq!(fixed.len(), wf.num_tasks());
         Engine {
@@ -564,10 +670,29 @@ impl<'a> Engine<'a> {
             scorer: None,
             score_pool: None,
             evict_cache: EvictCache::new(cluster.len()),
-            buffers: ScoreBuffers::default(),
+            buffers,
             slots: (0..cluster.len()).map(|_| Mutex::new(None)).collect(),
-            selector: Selector::for_algorithm(algorithm, wf, cluster),
+            selector: SelectorSource::Owned(SelectorState::default()),
+            resume_from: 0,
         }
+    }
+
+    /// Borrow a prebuilt [`SelectorState`] instead of the engine's own —
+    /// the hoisted-selector half of the adaptive recompute fast path.
+    /// The state must have been built for this engine's (workflow
+    /// estimates, cluster, algorithm) triple.
+    pub fn with_selector_state(mut self, selector: &'a SelectorState) -> Engine<'a> {
+        self.selector = SelectorSource::Shared(selector);
+        self
+    }
+
+    /// Declare that every task of `run`'s order before `first_unfixed`
+    /// is already placed, so the placement loop starts there instead of
+    /// re-scanning the fixed prefix. No-op for DLS (its driver scans the
+    /// ready frontier, never the order).
+    pub fn with_fixed_prefix(mut self, first_unfixed: usize) -> Engine<'a> {
+        self.resume_from = first_unfixed;
+        self
     }
 
     /// The read-only scoring view over the engine's current state.
@@ -676,10 +801,10 @@ impl<'a> Engine<'a> {
     /// workers), so parallel scoring stays byte-identical to serial for
     /// every selector.
     fn selection_key(&self, ctx: &ScoringCtx<'_>, v: TaskId, j: ProcId, t: &Tentative) -> f64 {
-        match &self.selector {
-            Selector::MinFinish => t.finish,
-            Selector::OctAdjusted(oct) => t.finish + oct[v * self.cluster.len() + j],
-            Selector::Lookahead => ctx.lookahead_key(v, j, t),
+        match self.algorithm {
+            Algorithm::Peft => t.finish + self.selector.get().oct()[v * self.cluster.len() + j],
+            Algorithm::Lookahead => ctx.lookahead_key(v, j, t),
+            _ => t.finish,
         }
     }
 
@@ -742,7 +867,9 @@ impl<'a> Engine<'a> {
         let mut best: Option<(ProcId, Tentative)> = None;
         // The batched-scorer shortcut assumes the selection key *is* the
         // finish time; PEFT/Lookahead selectors take the exact reduction.
-        let batched = self.scorer.filter(|_| matches!(self.selector, Selector::MinFinish));
+        let batched = self
+            .scorer
+            .filter(|_| !matches!(self.algorithm, Algorithm::Peft | Algorithm::Lookahead));
         if let Some(scorer) = batched {
             // Accelerated path: one batched scoring call orders the
             // processors; the exact check stops at the first feasible one
@@ -819,16 +946,48 @@ impl<'a> Engine<'a> {
     /// path (`Engine::resume(..).run(..)`) re-plans DLS schedules with
     /// DLS semantics too.
     pub fn run(mut self, order: &[TaskId]) -> Schedule {
+        let rank_order = self.place_all(order).unwrap_or_else(|| order.to_vec());
+        self.into_schedule(rank_order)
+    }
+
+    /// The placement driver shared by [`Engine::run`] and
+    /// [`Engine::run_into_plan`]. Returns `Some(rank order)` when the
+    /// algorithm derives its own (DLS), `None` when the caller's order
+    /// is the schedule's.
+    fn place_all(&mut self, order: &[TaskId]) -> Option<Vec<TaskId>> {
         debug_assert!(self.wf.is_topological_order(order));
         if self.algorithm == Algorithm::Dls {
-            return self.run_dynamic_level(order);
+            return Some(self.run_dynamic_level(order));
         }
-        for &v in order {
+        debug_assert!(
+            order[..self.resume_from].iter().all(|&v| self.placed[v].is_some()),
+            "fixed prefix must already be placed"
+        );
+        for &v in &order[self.resume_from..] {
             if self.placed[v].is_none() {
                 self.assign(v);
             }
         }
-        self.into_schedule(order.to_vec())
+        None
+    }
+
+    /// Run placement and write the resulting plan into `plan` in place
+    /// (same placements as `run(order).tasks`, bit for bit), handing the
+    /// engine's reusable resources back for the next resume. `plan`'s
+    /// eviction buffers are recycled by swapping rather than cloning —
+    /// the adaptive fast path allocates nothing here once warm.
+    pub fn run_into_plan(mut self, order: &[TaskId], plan: &mut [TaskSchedule]) -> ResumeParts {
+        let _ = self.place_all(order);
+        assert_eq!(plan.len(), self.placed.len());
+        for (d, p) in plan.iter_mut().zip(self.placed.iter_mut()) {
+            let s = p.as_mut().expect("all tasks placed");
+            d.proc = s.proc;
+            d.start = s.start;
+            d.finish = s.finish;
+            d.res_nonneg = s.res_nonneg;
+            std::mem::swap(&mut d.evicted, &mut s.evicted);
+        }
+        ResumeParts { state: self.state, fixed: self.placed, buffers: self.buffers }
     }
 
     /// DLS (Sih & Lee): every step commits the feasible (ready task,
@@ -844,12 +1003,16 @@ impl<'a> Engine<'a> {
     /// the out-of-memory failure exactly like the static algorithms.
     ///
     /// Fresh runs record the actual commit order as the schedule's
-    /// `rank_order`; resumed runs (some tasks pre-placed) keep the
-    /// caller's full order, since a partial commit order is not a
-    /// complete task permutation.
-    fn run_dynamic_level(mut self, order: &[TaskId]) -> Schedule {
+    /// `rank_order` (returned here); resumed runs (some tasks pre-placed)
+    /// keep the caller's full order, since a partial commit order is not
+    /// a complete task permutation.
+    fn run_dynamic_level(&mut self, order: &[TaskId]) -> Vec<TaskId> {
         let n = self.wf.num_tasks();
-        let sl = ranking::static_levels(self.wf, self.cluster);
+        // Borrow the static levels from the (possibly hoisted) selector
+        // state; moved out for the loop so commits can take `&mut self`.
+        let selector =
+            std::mem::replace(&mut self.selector, SelectorSource::Owned(SelectorState::default()));
+        let sl = selector.get().static_levels();
         let s_mean = self.cluster.mean_speed();
         let resumed = self.placed.iter().any(|p| p.is_some());
         // Unplaced-parent counts; pre-placed tasks (resume) count as done.
@@ -920,8 +1083,12 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        let rank_order = if resumed { order.to_vec() } else { committed };
-        self.into_schedule(rank_order)
+        self.selector = selector;
+        if resumed {
+            order.to_vec()
+        } else {
+            committed
+        }
     }
 
     /// Finalize into a [`Schedule`].
@@ -1194,6 +1361,71 @@ mod tests {
                     "{algo:?}/{policy:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn shared_selector_state_matches_owned() {
+        // A hoisted (borrowed) SelectorState must be observationally
+        // identical to the one each engine builds for itself — the
+        // bit-identity contract of the adaptive recompute fast path.
+        let (wf, cluster) = eviction_heavy_instance();
+        let policy = EvictionPolicy::LargestFirst;
+        for algo in [Algorithm::Peft, Algorithm::Dls, Algorithm::HeftmBl, Algorithm::Lookahead] {
+            let order = algo.rank_order(&wf, &cluster);
+            let owned = Engine::new(&wf, &cluster, algo, policy).run(&order);
+            let hoisted = SelectorState::build(algo, &wf, &cluster);
+            let shared = Engine::resume_with(
+                &wf,
+                &cluster,
+                algo,
+                policy,
+                PlatformState::new(&cluster),
+                vec![None; wf.num_tasks()],
+                ScoreBuffers::default(),
+            )
+            .with_selector_state(&hoisted)
+            .run(&order);
+            assert_eq!(owned.tasks, shared.tasks, "{algo:?}");
+            assert_eq!(owned.failures, shared.failures, "{algo:?}");
+            assert_eq!(owned.makespan.to_bits(), shared.makespan.to_bits(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn run_into_plan_matches_run() {
+        // The arena-returning finisher must write the same placements
+        // `run` would return, recycle the caller's eviction buffers, and
+        // hand back a fully-placed fixed buffer.
+        let (wf, cluster) = eviction_heavy_instance();
+        let policy = EvictionPolicy::LargestFirst;
+        for algo in [Algorithm::HeftmBl, Algorithm::Peft, Algorithm::Dls] {
+            let order = algo.rank_order(&wf, &cluster);
+            let byrun = Engine::new(&wf, &cluster, algo, policy).run(&order);
+            let hoisted = SelectorState::build(algo, &wf, &cluster);
+            let mut plan: Vec<TaskSchedule> = (0..wf.num_tasks())
+                .map(|_| TaskSchedule {
+                    proc: 0,
+                    start: 0.0,
+                    finish: 0.0,
+                    evicted: Vec::new(),
+                    res_nonneg: false,
+                })
+                .collect();
+            let parts = Engine::resume_with(
+                &wf,
+                &cluster,
+                algo,
+                policy,
+                PlatformState::new(&cluster),
+                vec![None; wf.num_tasks()],
+                ScoreBuffers::default(),
+            )
+            .with_selector_state(&hoisted)
+            .with_fixed_prefix(0)
+            .run_into_plan(&order, &mut plan);
+            assert_eq!(plan, byrun.tasks, "{algo:?}");
+            assert!(parts.fixed.iter().all(|p| p.is_some()), "{algo:?}");
         }
     }
 

@@ -34,7 +34,9 @@ pub mod ranking;
 pub mod retrace;
 pub mod state;
 
-pub use engine::{Engine, Failure, Schedule, ScoreBuffers, ScoringCtx, TaskSchedule};
+pub use engine::{
+    Engine, Failure, ResumeParts, Schedule, ScoreBuffers, ScoringCtx, SelectorState, TaskSchedule,
+};
 pub use state::{EvictCache, EvictionPolicy, PlatformState};
 
 use crate::platform::Cluster;

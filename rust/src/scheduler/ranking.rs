@@ -17,6 +17,15 @@
 use crate::platform::Cluster;
 use crate::workflow::{TaskId, Workflow};
 
+#[cfg(test)]
+thread_local! {
+    /// Per-thread count of [`oct_table`] builds. Thread-local (not a
+    /// global atomic) so concurrently running tests cannot perturb each
+    /// other's deltas; the recompute fast-path tests pin that a scaffold
+    /// builds PEFT's table exactly once however many triggers it serves.
+    pub static OCT_BUILDS: std::cell::Cell<usize> = std::cell::Cell::new(0);
+}
+
 /// Bottom levels `bl(u)` in time units.
 pub fn bottom_levels(wf: &Workflow, cluster: &Cluster) -> Vec<f64> {
     let s = cluster.mean_speed();
@@ -125,6 +134,8 @@ pub fn priority_topo_order(wf: &Workflow, key: &[f64]) -> Vec<TaskId> {
 /// recursing to 0 at sinks. Dense row-major layout so the engine's
 /// per-processor selection key reads `oct[v*k + j]` with unit stride.
 pub fn oct_table(wf: &Workflow, cluster: &Cluster) -> Vec<f64> {
+    #[cfg(test)]
+    OCT_BUILDS.with(|c| c.set(c.get() + 1));
     let n = wf.num_tasks();
     let k = cluster.len();
     let beta = cluster.bandwidth;

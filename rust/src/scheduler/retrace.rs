@@ -54,7 +54,7 @@ pub fn retrace(
             if lost_procs.contains(&t.proc) {
                 return RetraceResult {
                     valid: false,
-                    failure: Some(Failure::OutOfMemory { task: v }),
+                    failure: Some(Failure::ProcessorLost { task: v, proc: t.proc }),
                     failed_task: Some(v),
                     tasks: vec![None; wf.num_tasks()],
                     makespan: 0.0,
@@ -183,6 +183,13 @@ mod tests {
         let used_proc = s.tasks[0].proc;
         let r = retrace(&wf, &cluster, &s, EvictionPolicy::LargestFirst, &[used_proc]);
         assert!(!r.valid);
+        // The loss is reported as such, not misfiled as an OOM, and the
+        // failure names the lost processor.
+        assert!(
+            matches!(r.failure, Some(Failure::ProcessorLost { proc, .. }) if proc == used_proc),
+            "{:?}",
+            r.failure
+        );
         // A processor nobody uses does not invalidate.
         let unused: Vec<usize> =
             (0..cluster.len()).filter(|j| s.tasks.iter().all(|t| t.proc != *j)).collect();

@@ -81,6 +81,17 @@ impl PendingSet {
         self.total = 0.0;
     }
 
+    /// Overwrite this set with `other`'s contents, reusing the map
+    /// allocation (`HashMap::clone_from` keeps capacity). The adaptive
+    /// recompute path refills platform snapshots in place per trigger;
+    /// iteration order may differ from a fresh clone, but every
+    /// consumer sorts before use (see [`EdgeIdHasher`]), so outcomes
+    /// are byte-identical.
+    pub fn clone_from_set(&mut self, other: &PendingSet) {
+        self.files.clone_from(&other.files);
+        self.total = other.total;
+    }
+
     /// Remove a file; returns its size if present.
     pub fn remove(&mut self, e: EdgeId) -> Option<f64> {
         let size = self.files.remove(&e)?;
@@ -222,6 +233,26 @@ impl PlatformState {
         PlatformState { procs, comm_rt: vec![0.0; k * k], k }
     }
 
+    /// Restore the fresh state of [`PlatformState::new`] in place,
+    /// reusing every allocation (per-proc pending/buffered maps, the
+    /// channel matrix). Falls back to a rebuild when the cluster shape
+    /// changed — one arena serves heterogeneous sweeps.
+    pub fn reset(&mut self, cluster: &Cluster) {
+        if self.k != cluster.len() || self.procs.len() != cluster.len() {
+            *self = PlatformState::new(cluster);
+            return;
+        }
+        for (ps, p) in self.procs.iter_mut().zip(&cluster.processors) {
+            ps.ready_time = 0.0;
+            ps.avail_mem = p.memory;
+            ps.avail_buf = p.comm_buffer;
+            ps.pending.clear();
+            ps.buffered.clear();
+            ps.peak_used = 0.0;
+        }
+        self.comm_rt.iter_mut().for_each(|x| *x = 0.0);
+    }
+
     pub fn num_procs(&self) -> usize {
         self.k
     }
@@ -347,6 +378,59 @@ mod tests {
         assert_eq!(cache.sorted(1, &pd, EvictionPolicy::LargestFirst).len(), 3);
         cache.invalidate(0);
         assert_eq!(cache.sorted(0, &pd, EvictionPolicy::LargestFirst).len(), 3);
+    }
+
+    #[test]
+    fn clone_from_set_matches_contents_and_reuses_allocation() {
+        let mut src = PendingSet::default();
+        src.insert(0, 10.0);
+        src.insert(4, 30.0);
+        let mut dst = PendingSet::default();
+        for e in 0..64 {
+            dst.insert(e + 100, 1.0); // force a grown allocation
+        }
+        dst.clone_from_set(&src);
+        assert_eq!(dst.len(), 2);
+        assert_eq!(dst.total_size(), 40.0);
+        assert_eq!(dst.get(0), Some(10.0));
+        assert_eq!(dst.get(4), Some(30.0));
+        assert!(!dst.contains(100));
+        // Observable behavior (the sorted candidate view) matches a
+        // fresh clone exactly.
+        assert_eq!(
+            dst.candidates(EvictionPolicy::LargestFirst),
+            src.clone().candidates(EvictionPolicy::LargestFirst)
+        );
+    }
+
+    #[test]
+    fn platform_state_reset_matches_new() {
+        let cluster = small_cluster();
+        let mut st = PlatformState::new(&cluster);
+        st.procs[0].ready_time = 5.0;
+        st.procs[0].avail_mem -= 100.0;
+        st.procs[0].pending.insert(3, 100.0);
+        st.procs[1].buffered.insert(4, 7.0);
+        st.note_usage(2, 123.0);
+        st.push_comm(0, 1, 2.0);
+        st.reset(&cluster);
+        let fresh = PlatformState::new(&cluster);
+        assert_eq!(st.num_procs(), fresh.num_procs());
+        for j in 0..cluster.len() {
+            assert_eq!(st.procs[j].ready_time, fresh.procs[j].ready_time);
+            assert_eq!(st.procs[j].avail_mem, fresh.procs[j].avail_mem);
+            assert_eq!(st.procs[j].avail_buf, fresh.procs[j].avail_buf);
+            assert_eq!(st.procs[j].peak_used, 0.0);
+            assert!(st.procs[j].pending.is_empty());
+            assert!(st.procs[j].buffered.is_empty());
+            for to in 0..cluster.len() {
+                assert_eq!(st.comm_ready(j, to), 0.0);
+            }
+        }
+        // Shape change: rebuilds instead of leaving a stale layout.
+        let bigger = crate::platform::presets::default_cluster();
+        st.reset(&bigger);
+        assert_eq!(st.num_procs(), bigger.len());
     }
 
     #[test]

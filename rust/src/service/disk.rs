@@ -305,6 +305,11 @@ fn encode_schedule(s: &Schedule) -> Vec<u8> {
                 out.extend_from_slice(&(*task as u64).to_le_bytes());
                 out.extend_from_slice(&(*proc as u64).to_le_bytes());
             }
+            Failure::ProcessorLost { task, proc } => {
+                out.push(2);
+                out.extend_from_slice(&(*task as u64).to_le_bytes());
+                out.extend_from_slice(&(*proc as u64).to_le_bytes());
+            }
         }
     }
     out.extend_from_slice(&(s.mem_peak_frac.len() as u64).to_le_bytes());
@@ -348,6 +353,7 @@ fn decode_schedule(payload: &[u8]) -> Option<Schedule> {
         failures.push(match tag {
             0 => Failure::OutOfMemory { task },
             1 => Failure::Overcommit { task, proc },
+            2 => Failure::ProcessorLost { task, proc },
             _ => return None,
         });
     }

@@ -401,6 +401,10 @@ pub struct PortfolioCandidate {
     pub algo: Algorithm,
     pub valid: bool,
     pub sim_makespan: f64,
+    /// True iff the σ=0 replay was skipped because this candidate's
+    /// analytic makespan already exceeded the incumbent's simulated one
+    /// (`sim_makespan` is then `NaN`/`null`).
+    pub pruned: bool,
 }
 
 /// The deterministic record of one portfolio decision: every candidate
@@ -428,6 +432,7 @@ impl PortfolioOutcome {
                                 ("algorithm", c.algo.as_str().into()),
                                 ("valid", c.valid.into()),
                                 ("sim_makespan", c.sim_makespan.into()),
+                                ("pruned", c.pruned.into()),
                             ])
                         })
                         .collect(),
@@ -622,8 +627,18 @@ mod tests {
         let p = PortfolioOutcome {
             chosen: Algorithm::HeftmMm,
             candidates: vec![
-                PortfolioCandidate { algo: Algorithm::Heft, valid: false, sim_makespan: f64::NAN },
-                PortfolioCandidate { algo: Algorithm::HeftmMm, valid: true, sim_makespan: 9.5 },
+                PortfolioCandidate {
+                    algo: Algorithm::Heft,
+                    valid: false,
+                    sim_makespan: f64::NAN,
+                    pruned: false,
+                },
+                PortfolioCandidate {
+                    algo: Algorithm::HeftmMm,
+                    valid: true,
+                    sim_makespan: 9.5,
+                    pruned: false,
+                },
             ],
         };
         let line = p.to_json().to_string_compact();
@@ -632,6 +647,7 @@ mod tests {
         // invalid JSON.
         assert!(line.contains("\"sim_makespan\":null"), "{line}");
         assert!(line.contains("\"sim_makespan\":9.5"), "{line}");
+        assert!(line.contains("\"pruned\":false"), "{line}");
         let heft = line.find("\"heft\"").unwrap();
         let mm = line.rfind("\"heftm-mm\"").unwrap();
         assert!(heft < mm, "candidates keep Algorithm::all() order: {line}");

@@ -132,7 +132,8 @@ impl std::str::FromStr for ScoreThreadSpec {
 
 /// Declarative service configuration shared by the CLI commands and the
 /// suite runners: worker count, scoring threads, and cache layers.
-#[derive(Debug, Clone, Default)]
+/// `Default` is manual: `portfolio_prune` defaults to **on**.
+#[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Batch worker threads (0 ⇒ all cores).
     pub workers: usize,
@@ -154,6 +155,27 @@ pub struct ServiceConfig {
     /// LRU-by-mtime byte cap on the disk cache (`--cache-dir-bytes`;
     /// `None` = unbounded). Requires `cache_dir`.
     pub cache_dir_bytes: Option<u64>,
+    /// Skip a portfolio candidate's σ=0 replay once its *analytic*
+    /// makespan already exceeds the incumbent's *simulated* one (on, the
+    /// default). The heuristic is near-exact — the σ=0 replay tracks the
+    /// analytic makespan closely but not provably from above (see
+    /// DESIGN.md §Portfolio) — so this knob keeps the exhaustive replay
+    /// available for verification.
+    pub portfolio_prune: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 0,
+            score: ScoreThreadSpec::default(),
+            score_pools: 0,
+            cache_bytes: None,
+            cache_dir: None,
+            cache_dir_bytes: None,
+            portfolio_prune: true,
+        }
+    }
 }
 
 impl ServiceConfig {
@@ -231,6 +253,11 @@ pub struct SchedulingService {
     /// Portfolio decisions committed (one per executed `--algo
     /// portfolio` job; deduped portfolio jobs reuse the original's).
     portfolio_commits: AtomicUsize,
+    /// Whether portfolio candidate replays are pruned by the analytic
+    /// bound ([`ServiceConfig::portfolio_prune`]).
+    portfolio_prune: bool,
+    /// Portfolio candidate replays skipped by the prune.
+    replays_pruned: AtomicUsize,
 }
 
 impl Default for SchedulingService {
@@ -289,6 +316,8 @@ impl SchedulingService {
             clusters: Memo::default(),
             scaffolds_built: AtomicUsize::new(0),
             portfolio_commits: AtomicUsize::new(0),
+            portfolio_prune: true,
+            replays_pruned: AtomicUsize::new(0),
         }
     }
 
@@ -319,6 +348,7 @@ impl SchedulingService {
         let mut svc = SchedulingService::new(workers);
         svc.set_score_spec(cfg.score, cfg.score_pools);
         svc.cache_bytes = cfg.cache_bytes;
+        svc.portfolio_prune = cfg.portfolio_prune;
         match (&cfg.cache_dir, cfg.cache_dir_bytes) {
             (Some(dir), cap) => {
                 svc.cache_disk = Some(Arc::new(DiskStore::open_capped(dir, cap)?));
@@ -426,6 +456,7 @@ impl SchedulingService {
             disk_hits: stats.disk_hits as u64,
             scaffolds_built: self.scaffolds_built() as u64,
             portfolio_commits: self.portfolio_commits.load(Ordering::Relaxed) as u64,
+            replays_pruned: self.replays_pruned.load(Ordering::Relaxed) as u64,
         }
     }
 
@@ -549,8 +580,12 @@ impl SchedulingService {
             obs::record(obs::Event::PointReplayed);
         }
         // Summary variant: `SimResult` never carries finish_times, so
-        // skip the O(n) per-point clone of them.
-        SIM_ARENA.with(|arena| arena.borrow_mut().simulate_summary(&scaffold, cfg))
+        // skip the O(n) per-point clone of them. Recompute-mode points
+        // score mid-run reschedules on this worker's pool; the pooled
+        // reduction is bit-identical to serial, so outcomes don't depend
+        // on `--score-threads`.
+        let pool = self.score_pool_for(prep);
+        SIM_ARENA.with(|arena| arena.borrow_mut().simulate_summary_with(&scaffold, cfg, pool))
     }
 
     /// The scoring pool this execution should apply, with the auto-mode
@@ -645,6 +680,16 @@ impl SchedulingService {
     /// the scoring pool inside each candidate computation and across
     /// jobs on the batch pool — so the decision is independent of
     /// worker count by construction.
+    ///
+    /// With `portfolio_prune` on (the default), a candidate's σ=0
+    /// replay is skipped when its *analytic* makespan already exceeds
+    /// the best simulated makespan seen so far: for the σ=0 replays in
+    /// scope here the analytic value tracks the simulated one closely,
+    /// so such a candidate cannot win. Pruned candidates report
+    /// `sim_makespan: null` with `pruned: true` and count into
+    /// [`Counters::replays_pruned`](crate::obs::Counters). Candidates
+    /// are visited in [`Algorithm::all`] order, so the prune decision —
+    /// like the winner — is independent of worker count.
     fn execute_portfolio(&self, job: &Job, prep: &Prepared) -> Executed {
         let _exec_span = obs::span(obs::SpanKind::Execute);
         let score_pool = self.score_pool_for(prep);
@@ -652,23 +697,32 @@ impl SchedulingService {
         // cell — that belongs to the winner's replay points. Score
         // through a cell-less view of the same preparation.
         let cand_prep = Prepared { scaffold: None, ..prep.clone() };
-        let mut cands: Vec<(Algorithm, CachedSchedule, f64)> =
+        let mut cands: Vec<(Algorithm, CachedSchedule, f64, bool)> =
             Vec::with_capacity(Algorithm::all().len());
+        // Incumbent: best (lowest) simulated makespan replayed so far.
+        let mut best_sim = f64::INFINITY;
         for &algo in Algorithm::all() {
             let fp = fingerprint::schedule_fingerprint(&prep.wf, &prep.cluster, algo, job.policy);
             let cached = self.compute_cached(fp, algo, job.policy, prep, score_pool);
-            let sim_makespan = if cached.schedule.valid {
+            let mut pruned = false;
+            let sim_makespan = if !cached.schedule.valid {
+                f64::NAN
+            } else if self.portfolio_prune && cached.schedule.makespan > best_sim {
+                // Analytic bound already loses to the incumbent's
+                // simulated result — skip the replay entirely.
+                pruned = true;
+                self.replays_pruned.fetch_add(1, Ordering::Relaxed);
+                f64::NAN
+            } else {
                 let cfg = SimConfig::new(SimMode::FollowStatic, DeviationModel::new(0.0, 0));
                 let out = self.run_point(&cand_prep, &cached.schedule, &cfg);
-                if out.completed {
-                    out.makespan
-                } else {
-                    f64::NAN
+                let sim = if out.completed { out.makespan } else { f64::NAN };
+                if sim.is_finite() && sim < best_sim {
+                    best_sim = sim;
                 }
-            } else {
-                f64::NAN
+                sim
             };
-            cands.push((algo, cached, sim_makespan));
+            cands.push((algo, cached, sim_makespan, pruned));
         }
         // Argmin simulated makespan; strict `<` keeps the lowest index
         // on ties.
@@ -698,10 +752,11 @@ impl SchedulingService {
             chosen: cands[winner].0,
             candidates: cands
                 .iter()
-                .map(|&(algo, ref c, sim_makespan)| PortfolioCandidate {
+                .map(|&(algo, ref c, sim_makespan, pruned)| PortfolioCandidate {
                     algo,
                     valid: c.schedule.valid,
                     sim_makespan,
+                    pruned,
                 })
                 .collect(),
         };
@@ -1510,6 +1565,52 @@ mod tests {
         // Non-portfolio rows never carry the record.
         let plain = svc.run_batch(vec![spec_job("chipseq", 1, Algorithm::HeftmBl, &cluster)]);
         assert!(plain[0].portfolio.is_none());
+    }
+
+    /// The analytic-bound replay prune must never change the committed
+    /// decision: prune on (the default) and prune off agree on the
+    /// chosen algorithm and on every replay both runs performed, and
+    /// pruned candidates are exactly the rows reporting no simulated
+    /// makespan.
+    #[test]
+    fn portfolio_prune_preserves_the_decision() {
+        let cluster = Arc::new(small_cluster());
+        let job = |_: ()| spec_job("chipseq", 1, Algorithm::Portfolio, &cluster);
+        let pruned_svc = SchedulingService::new(1);
+        let plain_svc = SchedulingService::from_config(ServiceConfig {
+            workers: 1,
+            portfolio_prune: false,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let pr = &pruned_svc.run_batch(vec![job(())])[0];
+        let pl = &plain_svc.run_batch(vec![job(())])[0];
+        let pp = pr.portfolio.as_ref().unwrap();
+        let np = pl.portfolio.as_ref().unwrap();
+        assert_eq!(pp.chosen, np.chosen, "pruning changed the committed algorithm");
+        assert_eq!(pr.makespan.to_bits(), pl.makespan.to_bits());
+        assert_eq!(pp.candidates.len(), np.candidates.len());
+        let mut pruned_rows = 0;
+        for (a, b) in pp.candidates.iter().zip(&np.candidates) {
+            assert_eq!(a.algo, b.algo);
+            assert_eq!(a.valid, b.valid);
+            assert!(!b.pruned, "prune-off run must replay every valid candidate");
+            if a.pruned {
+                pruned_rows += 1;
+                assert!(a.sim_makespan.is_nan(), "pruned rows report no simulated makespan");
+                assert!(a.valid, "only valid candidates are ever pruned");
+            } else {
+                assert_eq!(
+                    a.sim_makespan.to_bits(),
+                    b.sim_makespan.to_bits(),
+                    "replays the pruned run did perform must match bit-exactly"
+                );
+            }
+        }
+        assert_eq!(pruned_svc.counters().replays_pruned, pruned_rows);
+        assert_eq!(plain_svc.counters().replays_pruned, 0);
+        // A pruned σ=0 replay also skips its scaffold build.
+        assert!(pruned_svc.scaffolds_built() + pruned_rows as usize == plain_svc.scaffolds_built());
     }
 
     #[test]

@@ -69,10 +69,11 @@ pub use events::{EventQueue, EventQueueKind};
 
 use crate::obs;
 use crate::platform::{Cluster, ProcId};
-use crate::scheduler::engine::{Engine, Schedule, TaskSchedule};
+use crate::scheduler::engine::{Engine, ResumeParts, Schedule, ScoreBuffers, SelectorState, TaskSchedule};
 use crate::scheduler::state::{PendingSet, PlatformState};
+use crate::service::pool::ScorePool;
 use crate::workflow::{EdgeId, TaskId, Workflow};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Execution mode of the runtime system.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -239,6 +240,13 @@ pub struct SimScaffold {
     out_start: Vec<usize>,
     /// Static in-degrees seeding each run's ready counters.
     in_deg: Vec<u32>,
+    /// Algorithm-specific selector state (PEFT's OCT table, DLS's static
+    /// levels) built lazily from the scaffold's *estimates* — a pure
+    /// function of `(workflow, cluster, algorithm)`, so it is computed at
+    /// most once per scaffold and shared by every resumed engine instead
+    /// of being rebuilt per recompute trigger. FollowStatic sweeps (and
+    /// algorithms without selector state) never pay for it.
+    selector: OnceLock<SelectorState>,
 }
 
 impl SimScaffold {
@@ -319,6 +327,7 @@ impl SimScaffold {
             out_tri,
             out_start,
             in_deg,
+            selector: OnceLock::new(),
         }
     }
 
@@ -347,6 +356,22 @@ impl SimScaffold {
     /// Out-edges of `v` as `(edge, child, size)` (plan-independent).
     fn out_tri(&self, v: TaskId) -> &[(EdgeId, TaskId, f64)] {
         &self.out_tri[self.out_start[v]..self.out_start[v + 1]]
+    }
+
+    /// The hoisted selector state for this schedule's algorithm, built on
+    /// first use from the scaffold's estimated weights.
+    ///
+    /// Bit-identity: a resumed engine consults PEFT's OCT rows only for
+    /// *unstarted* tasks, and every strict descendant of an unstarted task
+    /// is itself unstarted (a task arrives only after all its parents
+    /// finished) — so those rows, which depend only on descendant work,
+    /// are identical whether built from estimates or from the partially
+    /// revealed `known` weights. DLS static levels are defined over the
+    /// estimates by contract (see DESIGN.md).
+    pub fn selector(&self) -> &SelectorState {
+        self.selector.get_or_init(|| {
+            SelectorState::build(self.schedule.algorithm, &self.wf, &self.cluster)
+        })
     }
 }
 
@@ -421,12 +446,32 @@ pub struct SimRun {
     scratch_local: Vec<(EdgeId, f64)>,
     scratch_remote: Vec<(EdgeId, TaskId, f64)>,
     scratch_evict: Vec<(EdgeId, f64)>,
+    /// Arena backing `recompute`'s engine resume: the platform snapshot,
+    /// fixed-placement buffer, and scoring arena circulate between the
+    /// run and the engine instead of being rebuilt per trigger.
+    resume: ResumeArena,
+    /// Parity/bench knob: rebuild the selector state from the scaffold's
+    /// estimates on every recompute instead of borrowing the hoisted
+    /// copy. Identical outcomes by construction (same inputs); exists so
+    /// tests and `bench_recompute` can pin/measure that claim.
+    rebuild_selector: bool,
     // Hot-loop contract counters (tests only): every `wf.edge()` touch
     // must be accounted to exactly one declared partition walk.
     #[cfg(test)]
     edge_touches: usize,
     #[cfg(test)]
     walked_in_edges: usize,
+}
+
+/// Reusable resources for [`SimRun::recompute`]'s engine resume. `state`
+/// and `fixed` are refilled in place from the run's live bookkeeping at
+/// each trigger; `buffers` is the engine's scoring arena, handed back by
+/// [`Engine::run_into_plan`] after every run.
+#[derive(Debug, Default)]
+struct ResumeArena {
+    state: Option<PlatformState>,
+    fixed: Vec<Option<TaskSchedule>>,
+    buffers: ScoreBuffers,
 }
 
 /// Total-order bits for a non-negative f64 (times are ≥ 0).
@@ -482,12 +527,32 @@ impl SimRun {
         self.events.kind()
     }
 
+    /// Rebuild the selector state per recompute trigger instead of
+    /// borrowing the scaffold's hoisted copy (see the field doc).
+    pub fn set_rebuild_selector(&mut self, rebuild: bool) {
+        self.rebuild_selector = rebuild;
+    }
+
     /// Execute one replay point of `sc` under `cfg`, resetting the arena
     /// in place first. Bit-identical to the [`simulate`] shim for the
     /// same inputs, whatever ran in this arena before.
     pub fn simulate(&mut self, sc: &SimScaffold, cfg: &SimConfig) -> SimOutcome {
+        self.simulate_with(sc, cfg, None)
+    }
+
+    /// [`simulate`](SimRun::simulate) with an optional [`ScorePool`]
+    /// accelerating the scoring loops of any recompute-triggered engine
+    /// resumes. The pooled reduction is deterministic (min finish, ties
+    /// to the lowest processor id — see [`Engine::with_parallel_scoring`]),
+    /// so outcomes are bit-identical for any pool size, including `None`.
+    pub fn simulate_with(
+        &mut self,
+        sc: &SimScaffold,
+        cfg: &SimConfig,
+        pool: Option<&ScorePool>,
+    ) -> SimOutcome {
         self.reset(sc, cfg);
-        let (completed, failure) = self.exec(sc, cfg);
+        let (completed, failure) = self.exec(sc, cfg, pool);
         self.outcome(completed, failure, true)
     }
 
@@ -497,8 +562,20 @@ impl SimRun {
     /// sweep path — that only consume the summary fields, this skips an
     /// O(n) clone per point.
     pub fn simulate_summary(&mut self, sc: &SimScaffold, cfg: &SimConfig) -> SimOutcome {
+        self.simulate_summary_with(sc, cfg, None)
+    }
+
+    /// [`simulate_summary`](SimRun::simulate_summary) with an optional
+    /// [`ScorePool`] for recompute-triggered engine resumes (see
+    /// [`simulate_with`](SimRun::simulate_with)).
+    pub fn simulate_summary_with(
+        &mut self,
+        sc: &SimScaffold,
+        cfg: &SimConfig,
+        pool: Option<&ScorePool>,
+    ) -> SimOutcome {
         self.reset(sc, cfg);
-        let (completed, failure) = self.exec(sc, cfg);
+        let (completed, failure) = self.exec(sc, cfg, pool);
         self.outcome(completed, failure, false)
     }
 
@@ -607,7 +684,13 @@ impl SimRun {
     /// - `Ok(true)`  — started;
     /// - `Ok(false)` — recomputation happened instead (Recompute mode);
     /// - `Err(f)`    — execution failed.
-    fn try_start(&mut self, v: TaskId, sc: &SimScaffold, cfg: &SimConfig) -> Result<bool, SimFailure> {
+    fn try_start(
+        &mut self,
+        v: TaskId,
+        sc: &SimScaffold,
+        cfg: &SimConfig,
+        pool: Option<&ScorePool>,
+    ) -> Result<bool, SimFailure> {
         let j = self.plan[v].proc;
         // Reveal actual parameters (the task "arrives in the system").
         let (est_work, est_mem) = (sc.est_work[v], sc.est_mem[v]);
@@ -705,7 +788,7 @@ impl SimRun {
             self.scratch_local = local_buf;
             self.scratch_remote = remote_buf;
             self.scratch_evict = evict;
-            return self.memory_problem(v, j, buffer, sc, cfg);
+            return self.memory_problem(v, j, buffer, sc, cfg, pool);
         }
 
         // Commit the start. -------------------------------------------------
@@ -777,7 +860,7 @@ impl SimRun {
             let rel = (w_act - est_work).abs() / est_work.max(1e-12);
             let mel = (m_act - est_mem).abs() / est_mem.max(1e-12);
             if rel > cfg.recompute_threshold || mel > cfg.recompute_threshold {
-                self.recompute(sc);
+                self.recompute(sc, pool);
             }
         }
         Ok(true)
@@ -799,10 +882,11 @@ impl SimRun {
         buffer: bool,
         sc: &SimScaffold,
         cfg: &SimConfig,
+        pool: Option<&ScorePool>,
     ) -> Result<bool, SimFailure> {
         if cfg.mode == SimMode::Recompute && !self.recompute_tried[v] {
             self.recompute_tried[v] = true;
-            self.recompute(sc);
+            self.recompute(sc, pool);
             return Ok(false);
         }
         if !self.events.is_empty() {
@@ -825,22 +909,38 @@ impl SimRun {
 
     /// Recompute the placements of all unstarted tasks from the current
     /// platform state (paper §V).
-    fn recompute(&mut self, sc: &SimScaffold) {
+    ///
+    /// The adaptive fast path: the platform snapshot, the fixed-placement
+    /// buffer, and the engine's scoring arena come out of [`ResumeArena`]
+    /// and are refilled in place (no per-trigger clones of the pending/
+    /// buffered sets beyond `clone_from`'s reuse); the selector state is
+    /// borrowed from the scaffold; the scoring loop optionally fans out
+    /// over `pool`. All of it is bit-identical to the naive rebuild.
+    fn recompute(&mut self, sc: &SimScaffold, pool: Option<&ScorePool>) {
+        let _span = obs::span(obs::SpanKind::Recompute);
         let k = self.queues.len();
-        // Snapshot the platform.
-        let mut state = PlatformState::new(&sc.cluster);
+        let n = self.plan.len();
+        // Snapshot the platform into the arena-backed state.
+        let mut state = match self.resume.state.take() {
+            Some(mut st) => {
+                st.reset(&sc.cluster);
+                st
+            }
+            None => PlatformState::new(&sc.cluster),
+        };
         for j in 0..k {
-            state.procs[j].ready_time = self.proc_free[j].max(self.time);
-            state.procs[j].avail_mem = self.avail_mem[j];
-            state.procs[j].avail_buf = self.avail_buf[j];
-            state.procs[j].pending = self.pending[j].clone();
-            state.procs[j].buffered = self.buffered[j].clone();
+            let ps = &mut state.procs[j];
+            ps.ready_time = self.proc_free[j].max(self.time);
+            ps.avail_mem = self.avail_mem[j];
+            ps.avail_buf = self.avail_buf[j];
+            ps.pending.clone_from_set(&self.pending[j]);
+            ps.buffered.clone_from_set(&self.buffered[j]);
             // Outputs of running tasks are already reserved in avail_mem
             // but not yet in the pending set; pre-insert them so Step 1
             // sees them when placing their children.
             if let Some(r) = self.running[j] {
                 for &(e, _, data) in sc.out_tri(r) {
-                    state.procs[j].pending.insert(e, data);
+                    ps.pending.insert(e, data);
                 }
             }
             for to in 0..k {
@@ -851,28 +951,64 @@ impl SimRun {
             }
         }
         // Fixed placements: everything started keeps its actual times.
-        let fixed: Vec<Option<TaskSchedule>> = (0..self.plan.len())
-            .map(|v| match self.state_of[v] {
-                TState::NotStarted => None,
-                _ => Some(TaskSchedule {
-                    proc: self.plan[v].proc,
-                    start: self.st_act[v],
-                    finish: self.ft_act[v],
-                    evicted: self.plan[v].evicted.clone(),
-                    res_nonneg: self.plan[v].res_nonneg,
-                }),
-            })
-            .collect();
-        let engine = Engine::resume(
+        // Refill the arena buffer in place, reusing each slot's eviction
+        // list; track the earliest rank position among unstarted tasks so
+        // the engine can skip straight past the fixed prefix.
+        let mut fixed = std::mem::take(&mut self.resume.fixed);
+        fixed.resize(n, None);
+        let mut first_unfixed = n;
+        for v in 0..n {
+            if self.state_of[v] == TState::NotStarted {
+                fixed[v] = None;
+                first_unfixed = first_unfixed.min(sc.rank_pos[v]);
+            } else {
+                let src = &self.plan[v];
+                match &mut fixed[v] {
+                    Some(d) => {
+                        d.proc = src.proc;
+                        d.start = self.st_act[v];
+                        d.finish = self.ft_act[v];
+                        d.res_nonneg = src.res_nonneg;
+                        d.evicted.clone_from(&src.evicted);
+                    }
+                    slot => {
+                        *slot = Some(TaskSchedule {
+                            proc: src.proc,
+                            start: self.st_act[v],
+                            finish: self.ft_act[v],
+                            evicted: src.evicted.clone(),
+                            res_nonneg: src.res_nonneg,
+                        });
+                    }
+                }
+            }
+        }
+        let rebuilt;
+        let selector: &SelectorState = if self.rebuild_selector {
+            rebuilt = SelectorState::build(sc.schedule.algorithm, &sc.wf, &sc.cluster);
+            &rebuilt
+        } else {
+            sc.selector()
+        };
+        let buffers = std::mem::take(&mut self.resume.buffers);
+        let mut engine = Engine::resume_with(
             self.known.as_ref().expect("Recompute mode maintains `known`"),
             sc.cluster.as_ref(),
             sc.schedule.algorithm,
             sc.schedule.policy,
             state,
             fixed,
-        );
-        let new = engine.run(&sc.schedule.rank_order);
-        self.plan = new.tasks;
+            buffers,
+        )
+        .with_selector_state(selector)
+        .with_fixed_prefix(first_unfixed);
+        if let Some(pool) = pool {
+            engine = engine.with_parallel_scoring(pool);
+        }
+        let parts = engine.run_into_plan(&sc.schedule.rank_order, &mut self.plan);
+        self.resume.state = Some(parts.state);
+        self.resume.fixed = parts.fixed;
+        self.resume.buffers = parts.buffers;
         self.plan_dirty = true;
         self.rebuild_queues(sc);
         self.refresh_partition_overlay(sc);
@@ -903,7 +1039,12 @@ impl SimRun {
     }
 
     /// Sweep all idle processors; start whatever is startable.
-    fn try_starts(&mut self, sc: &SimScaffold, cfg: &SimConfig) -> Result<(), SimFailure> {
+    fn try_starts(
+        &mut self,
+        sc: &SimScaffold,
+        cfg: &SimConfig,
+        pool: Option<&ScorePool>,
+    ) -> Result<(), SimFailure> {
         let k = self.queues.len();
         let mut progress = true;
         while progress {
@@ -931,7 +1072,7 @@ impl SimRun {
                 // rebuilds the queues from scratch (and re-inserts v if it
                 // did not start), so the stale entry must be gone first.
                 self.queues[j].pop();
-                match self.try_start(v, sc, cfg)? {
+                match self.try_start(v, sc, cfg, pool)? {
                     true => {
                         progress = true;
                     }
@@ -997,11 +1138,16 @@ impl SimRun {
         }
     }
 
-    fn exec(&mut self, sc: &SimScaffold, cfg: &SimConfig) -> (bool, Option<SimFailure>) {
+    fn exec(
+        &mut self,
+        sc: &SimScaffold,
+        cfg: &SimConfig,
+        pool: Option<&ScorePool>,
+    ) -> (bool, Option<SimFailure>) {
         let n = sc.wf.num_tasks();
         let mut done = 0usize;
         loop {
-            if let Err(f) = self.try_starts(sc, cfg) {
+            if let Err(f) = self.try_starts(sc, cfg, pool) {
                 return (false, Some(f));
             }
             let Some((tk, v)) = self.events.pop() else {
@@ -1362,6 +1508,109 @@ mod tests {
         // And a Recompute point after a Recompute point resets cleanly
         // too (the overlay is per-point state, not per-arena).
         outcomes_bit_equal(&run.simulate(&scaffold, &dirtying), &first);
+    }
+
+    #[test]
+    fn pooled_recompute_matches_serial_bit_exactly() {
+        // The tentpole determinism contract: threading a ScorePool into
+        // the recompute-triggered engine resumes changes wall-clock, not
+        // outcomes — bit-identical for any pool size, across algorithms
+        // and sigmas.
+        let (wf, cluster) = sample(6, 4);
+        let pools = [ScorePool::new(2), ScorePool::new(4)];
+        for &algo in crate::scheduler::Algorithm::all() {
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
+            if !s.valid {
+                continue;
+            }
+            let scaffold = SimScaffold::new(
+                Arc::new(wf.clone()),
+                Arc::new(cluster.clone()),
+                Arc::new(s),
+            );
+            let mut serial = SimRun::new();
+            let mut pooled = SimRun::new();
+            for sigma in [0.1, 0.3] {
+                let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(sigma, 5));
+                let base = serial.simulate(&scaffold, &cfg);
+                for pool in &pools {
+                    let out = pooled.simulate_with(&scaffold, &cfg, Some(pool));
+                    outcomes_bit_equal(&base, &out);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hoisted_selector_matches_per_trigger_rebuild() {
+        // Borrowing the scaffold's hoisted selector state (PEFT's OCT
+        // table, DLS's static levels) must be indistinguishable from
+        // rebuilding it on every recompute trigger — both are pure
+        // functions of the scaffold's estimates.
+        let (wf, cluster) = sample(6, 4);
+        for algo in [Algorithm::Peft, Algorithm::Dls, Algorithm::Lookahead, Algorithm::HeftmBl] {
+            let s = ScheduleRequest::new(&wf, &cluster).algo(algo).policy(EvictionPolicy::LargestFirst).run();
+            if !s.valid {
+                continue;
+            }
+            let scaffold = SimScaffold::new(
+                Arc::new(wf.clone()),
+                Arc::new(cluster.clone()),
+                Arc::new(s),
+            );
+            let mut hoisted = SimRun::new();
+            let mut rebuilt = SimRun::new();
+            rebuilt.set_rebuild_selector(true);
+            for sigma in [0.1, 0.3] {
+                let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(sigma, 5));
+                let a = hoisted.simulate(&scaffold, &cfg);
+                let b = rebuilt.simulate(&scaffold, &cfg);
+                outcomes_bit_equal(&a, &b);
+            }
+        }
+    }
+
+    #[test]
+    fn oct_table_built_once_per_scaffold() {
+        // The hoisting claim, pinned: however many recompute triggers a
+        // sweep produces, the PEFT OCT table is computed exactly once per
+        // scaffold (lazily, on the first trigger).
+        let (wf, cluster) = sample(6, 4);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::Peft).policy(EvictionPolicy::LargestFirst).run();
+        assert!(s.valid);
+        let scaffold = SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(s));
+        let mut run = SimRun::new();
+        let before = crate::scheduler::ranking::OCT_BUILDS.with(|c| c.get());
+        let mut recomputes = 0usize;
+        for seed in [5, 7, 11] {
+            let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.3, seed));
+            recomputes += run.simulate(&scaffold, &cfg).recomputations;
+        }
+        assert!(recomputes > 1, "test wants several triggers across the sweep");
+        let after = crate::scheduler::ranking::OCT_BUILDS.with(|c| c.get());
+        assert_eq!(after - before, 1, "OCT table must be built once per scaffold");
+    }
+
+    #[test]
+    fn resume_arena_is_reused_across_triggers() {
+        // The ResumeArena actually carries its buffers across points:
+        // after a recompute-heavy run, the arena holds a platform state
+        // and a full fixed buffer, and a second run reuses them while
+        // staying bit-identical.
+        let (wf, cluster) = sample(6, 4);
+        let s = ScheduleRequest::new(&wf, &cluster).algo(Algorithm::HeftmBl).policy(EvictionPolicy::LargestFirst).run();
+        assert!(s.valid);
+        let scaffold = SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(s));
+        let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.3, 5));
+        let mut run = SimRun::new();
+        let first = run.simulate(&scaffold, &cfg);
+        assert!(first.recomputations > 0, "test wants the resume path exercised");
+        assert!(run.resume.state.is_some(), "arena must retain the platform snapshot");
+        assert_eq!(run.resume.fixed.len(), scaffold.wf.num_tasks());
+        let fixed_ptr = run.resume.fixed.as_ptr() as usize;
+        let second = run.simulate(&scaffold, &cfg);
+        outcomes_bit_equal(&first, &second);
+        assert_eq!(run.resume.fixed.as_ptr() as usize, fixed_ptr, "fixed buffer reallocated");
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Bit-level parity of the adaptive-recompute fast path: pooled
+//! mid-run rescheduling and scaffold-hoisted selector state must leave
+//! every Recompute-mode outcome byte-identical to the serial,
+//! per-trigger-rebuild baseline.
+//!
+//! Three layers, mirroring `scoring_parity.rs` for the static engine:
+//! 1. `SimRun::simulate_with` — serial vs `ScorePool` of 2/4/8 threads,
+//!    per algorithm × sigma;
+//! 2. hoisted selector state (`SimScaffold::selector`, built once per
+//!    scaffold from estimates) vs a fresh `SelectorState` per trigger;
+//! 3. the service batch JSONL — whole-stream byte compare across
+//!    `--score-threads` values (the `ci.sh --smoke` check, in-process).
+
+use memsched::experiments::WorkloadSpec;
+use memsched::platform::presets::small_cluster;
+use memsched::scheduler::{Algorithm, EvictionPolicy, ScheduleRequest};
+use memsched::service::{
+    ClusterSpec, Job, JobSource, ScoreThreadSpec, ScorePool, SchedulingService, ServiceConfig,
+    SimJob,
+};
+use memsched::simulator::{DeviationModel, SimConfig, SimMode, SimOutcome, SimRun, SimScaffold};
+use std::sync::Arc;
+
+/// Full-outcome bit digest: every per-task finish time, the makespan,
+/// and the integer counters.
+fn outcome_bits(out: &SimOutcome) -> (bool, Vec<u64>, u64, usize, usize) {
+    (
+        out.completed,
+        out.finish_times.iter().map(|f| f.to_bits()).collect(),
+        out.makespan.to_bits(),
+        out.recomputations,
+        out.started,
+    )
+}
+
+fn scaffold_for(algo: Algorithm, tasks: usize) -> Option<SimScaffold> {
+    let spec = WorkloadSpec { family: "chipseq".into(), size: Some(tasks), input: 2, seed: 7 };
+    let wf = spec.build().expect("generated workload builds");
+    let cluster = small_cluster();
+    let schedule = ScheduleRequest::new(&wf, &cluster)
+        .algo(algo)
+        .policy(EvictionPolicy::LargestFirst)
+        .run();
+    if !schedule.valid {
+        return None;
+    }
+    Some(SimScaffold::new(Arc::new(wf), Arc::new(cluster), Arc::new(schedule)))
+}
+
+#[test]
+fn pooled_recompute_parity_across_thread_counts() {
+    for &algo in Algorithm::all() {
+        let Some(scaffold) = scaffold_for(algo, 300) else { continue };
+        for sigma in [0.1, 0.3] {
+            let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(sigma, 9));
+            let mut run = SimRun::new();
+            let base = outcome_bits(&run.simulate_with(&scaffold, &cfg, None));
+            for threads in [2usize, 4, 8] {
+                let pool = ScorePool::new(threads);
+                let mut run = SimRun::new();
+                let pooled = outcome_bits(&run.simulate_with(&scaffold, &cfg, Some(&pool)));
+                assert_eq!(
+                    base, pooled,
+                    "{algo:?}/sigma={sigma} diverged at --score-threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hoisted_selector_parity_with_per_trigger_rebuild() {
+    // The selector-heavy algorithms: PEFT's OCT table, Lookahead's and
+    // DLS's rank inputs are what the scaffold hoists.
+    for algo in [Algorithm::Peft, Algorithm::Lookahead, Algorithm::Dls, Algorithm::HeftmBl] {
+        let Some(scaffold) = scaffold_for(algo, 300) else { continue };
+        let cfg = SimConfig::new(SimMode::Recompute, DeviationModel::new(0.3, 9));
+        let mut hoisted_run = SimRun::new();
+        let hoisted = outcome_bits(&hoisted_run.simulate_with(&scaffold, &cfg, None));
+        let mut rebuilt_run = SimRun::new();
+        rebuilt_run.set_rebuild_selector(true);
+        let rebuilt = outcome_bits(&rebuilt_run.simulate_with(&scaffold, &cfg, None));
+        assert_eq!(hoisted, rebuilt, "{algo:?}: hoisted selector state changed the outcome");
+    }
+}
+
+#[test]
+fn recompute_batch_bytes_identical_across_score_threads() {
+    let cluster = Arc::new(small_cluster());
+    let jobs = || -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for &algo in Algorithm::all() {
+            for sigma in [0.1, 0.3] {
+                let spec = WorkloadSpec { family: "chipseq".into(), size: None, input: 1, seed: 5 };
+                jobs.push(
+                    Job::new(JobSource::Generated(spec), ClusterSpec::Inline(cluster.clone()))
+                        .with_algo(algo)
+                        .with_sim(SimJob { mode: SimMode::Recompute, sigma, seed: 9 }),
+                );
+            }
+        }
+        jobs
+    };
+    let batch_bytes = |threads: usize| -> String {
+        let svc = SchedulingService::from_config(ServiceConfig {
+            workers: 2,
+            score: ScoreThreadSpec::Fixed(threads),
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        svc.run_batch(jobs()).iter().map(|r| r.to_jsonl() + "\n").collect()
+    };
+    let serial = batch_bytes(1);
+    for threads in [2usize, 4] {
+        assert_eq!(
+            serial,
+            batch_bytes(threads),
+            "batch JSONL diverged at --score-threads {threads}"
+        );
+    }
+}
